@@ -1,0 +1,33 @@
+//! Experiment-harness bench target: regenerates every paper table and
+//! figure in `--quick` mode and times each. Requires `make artifacts`;
+//! prints a skip notice otherwise (so `cargo bench` stays green on a
+//! fresh clone).
+
+use grail::coordinator::Artifacts;
+use grail::exp::{ExpOptions, EXPERIMENTS};
+use std::time::Instant;
+
+fn main() {
+    let artifacts = Artifacts::default_root();
+    if artifacts.ensure_ready().is_err() {
+        println!(
+            "experiments bench: artifacts not built (run `make artifacts`) — skipping"
+        );
+        return;
+    }
+    let opts = ExpOptions {
+        out_dir: "results/bench".into(),
+        artifacts,
+        quick: true,
+        seed: 0,
+    };
+    println!("== regenerating all paper tables/figures (quick grids) ==\n");
+    for (name, f) in EXPERIMENTS {
+        let t0 = Instant::now();
+        println!("---- {name} ----");
+        match f(&opts) {
+            Ok(()) => println!("{name}: {:.1}s\n", t0.elapsed().as_secs_f64()),
+            Err(e) => println!("{name}: FAILED: {e:#}\n"),
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Hot-path microbenchmarks (custom harness — no criterion offline).
+//!
+//! Covers the kernels on the GRAIL critical path: Gram accumulation
+//! (SYRK), the ridge solve, GEMM variants, conv-block forward,
+//! attention forward, and the end-to-end compensation pipeline on an
+//! in-memory model. Perf targets and before/after history live in
+//! EXPERIMENTS.md §Perf.
+
+use grail::bench_util::{bench, report_gflops};
+use grail::compress::{Reducer, Selector};
+use grail::grail::{compress_model, reconstruction, ActStats, Method, PipelineConfig};
+use grail::nn::models::{LmBatch, LmConfig, MlpNet, TinyLm};
+use grail::rng::Pcg64;
+use grail::tensor::{ops, Tensor};
+
+fn randn(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+fn main() {
+    let mut rng = Pcg64::seed(42);
+    println!("== grail hotpath benchmarks ==\n");
+
+    // --- Gram accumulation (the paper's O(N·H²) calibration step)
+    for &(n, h) in &[(1024usize, 64usize), (1024, 192), (4096, 256)] {
+        let x = randn(&mut rng, &[n, h]);
+        let r = bench(&format!("gram_syrk n={n} h={h}"), 300, || {
+            let mut g = Tensor::zeros(&[h, h]);
+            ops::syrk_upper_acc(&x, &mut g);
+            ops::symmetrize_from_upper(&mut g);
+            g
+        });
+        // SYRK flops: n·h·(h+1) (half matrix, fma=2 flops).
+        report_gflops(&r, (n * h * (h + 1)) as f64);
+    }
+
+    // --- GEMM variants
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512)] {
+        let a = randn(&mut rng, &[m, k]);
+        let b = randn(&mut rng, &[k, n]);
+        let r = bench(&format!("gemm {m}x{k}x{n}"), 400, || ops::matmul(&a, &b));
+        report_gflops(&r, (2 * m * k * n) as f64);
+        let bt = randn(&mut rng, &[n, k]);
+        let r = bench(&format!("gemm_nt {m}x{k}x{n}"), 400, || ops::matmul_nt(&a, &bt));
+        report_gflops(&r, (2 * m * k * n) as f64);
+    }
+
+    // --- Ridge reconstruction solve (B = G_PH^T (G_PP+λI)^-1)
+    for &(h, kk) in &[(192usize, 96usize), (256, 64)] {
+        let x = randn(&mut rng, &[512, h]);
+        let stats = ActStats::from_acts(&x);
+        let reducer = Reducer::Select((0..kk).collect());
+        bench(&format!("ridge_reconstruction h={h} k={kk}"), 300, || {
+            reconstruction(&stats.gram, &reducer, 1, 1e-3)
+        });
+    }
+
+    // --- Conv block forward (MiniResNet block1 geometry)
+    {
+        let conv = grail::nn::Conv2d::init(32, 32, 3, 1, 1, &mut rng);
+        let x = randn(&mut rng, &[32, 32 * 16 * 16]);
+        let r = bench("conv2d 32x32x16x16 k3", 400, || conv.forward(&x, 16, 16));
+        // 2 * N * O * C * kh * kw * OH * OW
+        report_gflops(&r, 2.0 * 32.0 * 32.0 * 32.0 * 9.0 * 256.0);
+    }
+
+    // --- Attention forward (TinyLm block geometry)
+    {
+        let attn = grail::nn::MultiHeadAttention::init(64, 8, 8, 8, true, &mut rng);
+        let x = randn(&mut rng, &[16 * 32, 64]);
+        bench("attention b=16 t=32 h=8 dh=8", 400, || attn.forward(&x, 16, 32));
+    }
+
+    // --- End-to-end compensation pipeline (MLP, both sites)
+    {
+        let model = MlpNet::init(768, 256, 10, &mut rng);
+        let calib = randn(&mut rng, &[128, 768]);
+        bench("pipeline mlp wanda+grail r=0.5", 500, || {
+            let mut m = model.clone();
+            let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+            compress_model(&mut m, &calib, &cfg)
+        });
+    }
+
+    // --- TinyLm forward (the eval hot path)
+    {
+        let lm = TinyLm::init(LmConfig::default(), &mut rng);
+        let toks: Vec<u16> = (0..16 * 33).map(|i| (i % 64) as u16).collect();
+        let ts = grail::data::TokenSet { tokens: toks, vocab: 64 };
+        let batch = LmBatch::from_tokens(&ts, 32, 16);
+        bench("tinylm_forward b=16 t=32", 500, || lm.forward(&batch));
+    }
+    println!("\ndone");
+}

@@ -1,0 +1,90 @@
+//! End-to-end driver (DESIGN.md: the full-system validation run).
+//!
+//! Loads the trained TinyLm checkpoint, serves batched evaluation
+//! requests through the PJRT runtime at full width (the fixed-shape
+//! AOT hot path), then runs the complete GRAIL pipeline — baseline
+//! structured pruning at head+MLP level with closed-loop Gram
+//! compensation — and reports perplexity on all three eval splits plus
+//! latency/throughput of both paths. The run is recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! cargo run --release --example llm_compression
+//! ```
+
+use anyhow::Result;
+use grail::compress::baselines::Baseline;
+use grail::coordinator::{Artifacts, Zoo};
+use grail::data::io::read_tokens;
+use grail::data::TextSplit;
+use grail::eval::lm_perplexity;
+use grail::grail::{compress_model, Method, PipelineConfig};
+use grail::nn::models::LmBatch;
+use grail::runtime::Runtime;
+use std::time::Instant;
+
+const SEQ: usize = 32;
+
+fn main() -> Result<()> {
+    let art = Artifacts::default_root();
+    let zoo = Zoo::open(art.clone())?;
+    let model = zoo.lm("tinylm_mha")?;
+
+    // ---- 1. PJRT hot path: the AOT-compiled full-width forward.
+    let mut rt = Runtime::cpu(art.clone())?;
+    let calib_toks = read_tokens(&art.data("text_calib.tokens"))?;
+    let batch = LmBatch::from_tokens(&calib_toks, SEQ, 8);
+    let t0 = Instant::now();
+    let outs = rt.run_tokens("tinylm_mha_fwd", &batch.inputs, batch.b, batch.t)?;
+    let pjrt_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "PJRT ({}) tinylm_mha_fwd: logits {:?} in {:.1} ms ({:.0} tok/s incl. compile)",
+        rt.platform(),
+        outs[0].shape(),
+        pjrt_ms,
+        (batch.b * batch.t) as f64 / (pjrt_ms / 1e3),
+    );
+    // Steady-state latency (compiled executable is cached).
+    let t0 = Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        rt.run_tokens("tinylm_mha_fwd", &batch.inputs, batch.b, batch.t)?;
+    }
+    let steady = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    println!(
+        "PJRT steady-state: {:.1} ms/batch ({:.0} tok/s)",
+        steady,
+        (batch.b * batch.t) as f64 / (steady / 1e3)
+    );
+
+    // ---- 2. Dense perplexity on the three eval splits.
+    let splits = [TextSplit::C4s, TextSplit::Wt2s, TextSplit::Ptbs];
+    let mut eval_toks = Vec::new();
+    for s in splits {
+        eval_toks.push(read_tokens(&art.data(&format!("text_{}.tokens", s.name())))?);
+    }
+    print!("dense ppl:   ");
+    for (s, t) in splits.iter().zip(&eval_toks) {
+        print!("{}={:.2}  ", s.name(), lm_perplexity(&model, t, SEQ, 96, 16));
+    }
+    println!();
+
+    // ---- 3. GRAIL pipeline at 40% structured sparsity (heads + MLP).
+    let calib = LmBatch::from_tokens(&calib_toks, SEQ, 128);
+    for (label, grail) in [("wanda 40%", false), ("wanda 40% + GRAIL", true)] {
+        let mut m = model.clone();
+        let cfg = PipelineConfig::new(Method::Baseline(Baseline::Wanda), 0.4, grail);
+        let t0 = Instant::now();
+        let rep = compress_model(&mut m, &calib, &cfg);
+        let secs = t0.elapsed().as_secs_f64();
+        print!("{label:<22} ");
+        for (s, t) in splits.iter().zip(&eval_toks) {
+            print!("{}={:.2}  ", s.name(), lm_perplexity(&m, t, SEQ, 96, 16));
+        }
+        println!(
+            "(pipeline {secs:.1}s: calib {:.1}s + comp {:.1}s)",
+            rep.calib_seconds, rep.comp_seconds
+        );
+    }
+    Ok(())
+}

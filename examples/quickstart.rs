@@ -1,0 +1,60 @@
+//! Quickstart: compress a trained model with any selector and restore
+//! its behaviour with GRAIL — no labels, no gradients, one linear
+//! solve per block.
+//!
+//! ```bash
+//! make artifacts            # once: data, training, AOT export
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use grail::compress::Selector;
+use grail::coordinator::{Artifacts, Zoo};
+use grail::data::io::read_images;
+use grail::eval::vision_accuracy;
+use grail::grail::{compress_model, Method, PipelineConfig};
+
+fn main() -> Result<()> {
+    let art = Artifacts::default_root();
+    let zoo = Zoo::open(art.clone())?;
+
+    // A checkpoint trained by the build step, plus unlabeled
+    // calibration images and a held-out test set.
+    let model = zoo.mlp("mlp_seed0")?;
+    let calib = read_images(&art.data("vision_calib.imgs"))?.slice(0, 256);
+    let test = read_images(&art.data("vision_test.imgs"))?;
+
+    let dense_acc = vision_accuracy(|x| model.forward(x), &test, 128);
+    println!("dense accuracy:              {dense_acc:.4}");
+
+    // Prune 50% of every hidden layer with magnitude-L2 — no recovery.
+    let mut pruned = model.clone();
+    let cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.5, false);
+    compress_model(&mut pruned, &calib.x, &cfg);
+    let pruned_acc = vision_accuracy(|x| pruned.forward(x), &test, 128);
+    println!("pruned 50% (no recovery):    {pruned_acc:.4}");
+
+    // Same selection + GRAIL: Gram statistics from 128 unlabeled
+    // images, ridge reconstruction, merged into the consumer weights.
+    let mut compensated = model.clone();
+    let cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.5, true);
+    let report = compress_model(&mut compensated, &calib.x, &cfg);
+    let grail_acc = vision_accuracy(|x| compensated.forward(x), &test, 128);
+    println!("pruned 50% + GRAIL:          {grail_acc:.4}");
+    println!(
+        "\nGRAIL recovered {:+.1} points using {} calibration images",
+        100.0 * (grail_acc - pruned_acc),
+        calib.len()
+    );
+    for s in &report.sites {
+        println!(
+            "  site {}: {} -> {} units, relative reconstruction error {:.3}",
+            s.id, s.units_before, s.units_after, s.recon_err
+        );
+    }
+    println!(
+        "  calibration {:.3}s, compensation {:.3}s (no labels, no gradients)",
+        report.calib_seconds, report.comp_seconds
+    );
+    Ok(())
+}

@@ -1,0 +1,186 @@
+"""AOT export: lower the L2/L1 graphs to HLO *text* artifacts and train
+the checkpoint zoo.
+
+HLO text (NOT `lowered.compiler_ir("hlo").as_hlo_text()` via serialized
+protos) is the interchange format: jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids that the image's xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts [--quick]
+
+Inputs (written earlier in the Makefile by `grail datagen`):
+    artifacts/data/*.imgs, *.tokens
+Outputs:
+    artifacts/checkpoints/*.wbin      trained weights (GRWB)
+    artifacts/hlo/*.hlo.txt           PJRT-loadable computations
+    artifacts/MANIFEST.txt            inventory + training metrics
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import io_formats, model, train
+from .kernels.gram import gram_padded
+
+# Gram widths the coordinator needs: LM attention feat (64), TinyViT
+# MLP (128), TinyLm MLP (192), MLP hidden (256).
+GRAM_WIDTHS = (64, 128, 192, 256)
+GRAM_ROWS = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_gram_kernels(hlo_dir, log):
+    """One Gram-accumulation computation per calibration width."""
+    for h in GRAM_WIDTHS:
+        def fn(x):
+            return (gram_padded(x),)
+
+        spec = jax.ShapeDtypeStruct((GRAM_ROWS, h), jnp.float32)
+        text = to_hlo_text(jax.jit(fn).lower(spec))
+        path = os.path.join(hlo_dir, f"gram_h{h}_n{GRAM_ROWS}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        log(f"  wrote {path} ({len(text)} chars)")
+
+
+def _load_ckpt(ckpt_dir, name):
+    return {
+        k: jnp.array(v)
+        for k, v in io_formats.read_weights(os.path.join(ckpt_dir, f"{name}.wbin")).items()
+    }
+
+
+def export_model_forwards(ckpt_dir, hlo_dir, log):
+    """Full-width eval forwards with weights baked as constants — the
+    fixed-shape hot path the Rust runtime executes via PJRT."""
+    exports = []
+
+    p = _load_ckpt(ckpt_dir, "mlp_seed0")
+    exports.append(
+        (
+            "mlp_seed0_fwd",
+            functools.partial(lambda params, x: (model.mlp_forward(params, x)[0],), p),
+            [jax.ShapeDtypeStruct((128, 768), jnp.float32)],
+        )
+    )
+
+    p = _load_ckpt(ckpt_dir, "resnet_seed0")
+    exports.append(
+        (
+            "resnet_seed0_fwd",
+            functools.partial(lambda params, x: (model.resnet_forward(params, x)[0],), p),
+            [jax.ShapeDtypeStruct((64, 3, 16, 16), jnp.float32)],
+        )
+    )
+
+    p = _load_ckpt(ckpt_dir, "vit_seed0")
+    exports.append(
+        (
+            "vit_seed0_fwd",
+            functools.partial(
+                lambda params, x: (model.vit_forward(params, x, model.VIT_CFG, use_kernels=True)[0],),
+                p,
+            ),
+            [jax.ShapeDtypeStruct((64, 3, 16, 16), jnp.float32)],
+        )
+    )
+
+    for tag, cfg in [("mha", model.LM_CFG), ("gqa", model.LM_CFG_GQA)]:
+        p = _load_ckpt(ckpt_dir, f"tinylm_{tag}")
+        exports.append(
+            (
+                f"tinylm_{tag}_fwd",
+                functools.partial(
+                    lambda params, c, toks: (model.lm_forward(params, toks, c, use_kernels=True)[0],),
+                    p,
+                    cfg,
+                ),
+                [jax.ShapeDtypeStruct((8, 32), jnp.int32)],
+            )
+        )
+
+    # Calibration variant: logits + every consumer-input tap, so the
+    # runtime can drive Gram accumulation from a single PJRT call.
+    p = _load_ckpt(ckpt_dir, "tinylm_mha")
+    def lm_calib(toks, params=p):
+        logits, taps = model.lm_forward(params, toks, model.LM_CFG, use_kernels=True)
+        return tuple([logits] + taps)
+
+    exports.append(("tinylm_mha_calib", lm_calib, [jax.ShapeDtypeStruct((8, 32), jnp.int32)]))
+
+    for name, fn, specs in exports:
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        path = os.path.join(hlo_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        log(f"  wrote {path} ({len(text)} chars)")
+    return [e[0] for e in exports]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--quick", action="store_true", help="reduced training (smoke runs)")
+    ap.add_argument(
+        "--retrain",
+        action="store_true",
+        help="retrain even when checkpoints already exist (default: reuse)",
+    )
+    args = ap.parse_args(argv)
+
+    out = os.path.abspath(args.out)
+    data_dir = os.path.join(out, "data")
+    ckpt_dir = os.path.join(out, "checkpoints")
+    hlo_dir = os.path.join(out, "hlo")
+    if not os.path.exists(os.path.join(data_dir, "vision_train.imgs")):
+        sys.exit(
+            f"missing {data_dir}/vision_train.imgs — run `cargo run --release "
+            "--bin grail -- datagen` first (the Makefile `artifacts` target does this)"
+        )
+    os.makedirs(ckpt_dir, exist_ok=True)
+    os.makedirs(hlo_dir, exist_ok=True)
+
+    log = print
+    summary = {}
+    if not args.retrain and os.path.exists(os.path.join(ckpt_dir, "tinylm_mha.wbin")):
+        log("checkpoints exist, reusing (pass --retrain to force)")
+    else:
+        log("training checkpoint zoo (this is the slow step)...")
+        summary = train.train_zoo(data_dir, ckpt_dir, log=log, quick=args.quick)
+
+    log("exporting gram kernels...")
+    export_gram_kernels(hlo_dir, log)
+    log("exporting model forwards...")
+    names = export_model_forwards(ckpt_dir, hlo_dir, log)
+
+    with open(os.path.join(out, "MANIFEST.txt"), "w") as f:
+        f.write("# GRAIL artifacts manifest\n")
+        for k, v in sorted(summary.items()):
+            f.write(f"ckpt {k} metric {v:.4f}\n")
+        for h in GRAM_WIDTHS:
+            f.write(f"hlo gram_h{h}_n{GRAM_ROWS}\n")
+        for n in names:
+            f.write(f"hlo {n}\n")
+    log("aot export complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Binary interchange with the Rust coordinator.
+
+Rust is the source of truth for data (GRTK tokens / GRIM images, written
+by `grail datagen`); Python reads them for build-time training and
+writes checkpoints back as GRWB weight bundles. Layouts are documented
+in `rust/src/data/io.rs` and `rust/src/nn/weights.rs`.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC_TOKENS = 0x4752544B  # "GRTK"
+MAGIC_IMAGES = 0x4752494D  # "GRIM"
+MAGIC_WEIGHTS = 0x47525742  # "GRWB"
+WEIGHTS_VERSION = 1
+
+
+def read_tokens(path: str) -> tuple[np.ndarray, int]:
+    """Read a GRTK token stream -> (tokens u16[N], vocab)."""
+    with open(path, "rb") as f:
+        magic, vocab = struct.unpack("<II", f.read(8))
+        if magic != MAGIC_TOKENS:
+            raise ValueError(f"{path}: not a GRTK file")
+        (n,) = struct.unpack("<Q", f.read(8))
+        tokens = np.frombuffer(f.read(2 * n), dtype="<u2")
+        if tokens.size != n:
+            raise ValueError(f"{path}: truncated")
+    return tokens.copy(), vocab
+
+
+def read_images(path: str) -> tuple[np.ndarray, np.ndarray, tuple[int, int, int]]:
+    """Read a GRIM image set -> (x f32[N, C*H*W], y u16[N], (c, h, w))."""
+    with open(path, "rb") as f:
+        magic, n, c, h, w = struct.unpack("<IIIII", f.read(20))
+        if magic != MAGIC_IMAGES:
+            raise ValueError(f"{path}: not a GRIM file")
+        d = c * h * w
+        x = np.frombuffer(f.read(4 * n * d), dtype="<f4").reshape(n, d)
+        y = np.frombuffer(f.read(2 * n), dtype="<u2")
+        if x.shape[0] != n or y.size != n:
+            raise ValueError(f"{path}: truncated")
+    return x.copy(), y.copy(), (c, h, w)
+
+
+def write_weights(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write a GRWB weight bundle (sorted by name, f32)."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC_WEIGHTS, WEIGHTS_VERSION, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name], dtype="<f4")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_weights(path: str) -> dict[str, np.ndarray]:
+    """Read a GRWB weight bundle -> {name: f32 array}."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        header = f.read(12)
+        if len(header) < 12:
+            raise ValueError(f"{path}: truncated GRWB header")
+        magic, version, count = struct.unpack("<III", header)
+        if magic != MAGIC_WEIGHTS:
+            raise ValueError(f"{path}: not a GRWB file")
+        if version != WEIGHTS_VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            size = int(np.prod(shape)) if ndim else 1
+            arr = np.frombuffer(f.read(4 * size), dtype="<f4").reshape(shape)
+            out[name] = arr.copy()
+    return out

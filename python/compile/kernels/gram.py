@@ -1,0 +1,87 @@
+"""Pallas kernel: tiled Gram-matrix accumulation `G = XᵀX`.
+
+This is the paper's calibration hot spot (§3 Complexity: O(N·H²)). The
+TPU formulation tiles `X: [N, H]` into `[BN, BH]` VMEM blocks on a 3-D
+grid `(i, j, n)`; each step multiplies an `[BN, BHi]` block transposed
+against an `[BN, BHj]` block on the MXU and accumulates into the
+`(i, j)` output tile across the reduction axis `n` (grid-carried
+revisiting, the standard Pallas reduction idiom).
+
+Hardware adaptation (DESIGN.md §3): the paper ran on A100s where this
+is a cuBLAS syrk; on TPU the same computation is expressed as an
+MXU-tiled matmul with the HBM↔VMEM schedule in the BlockSpecs below.
+`interpret=True` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated from the block geometry in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes: 128 matches the MXU systolic array edge; the
+# working set per step is 2·BN·BH + BH·BH floats = 3·128·128·4B ≈ 196 KiB,
+# comfortably inside a TPU core's ~16 MiB VMEM with room for
+# double-buffering.
+BLOCK_N = 128
+BLOCK_H = 128
+
+
+def _gram_kernel(x_i_ref, x_j_ref, g_ref):
+    """One grid step: accumulate `x_iᵀ · x_j` into the (i, j) tile."""
+    n_step = pl.program_id(2)
+
+    @pl.when(n_step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    xi = x_i_ref[...]  # [BN, BHi]
+    xj = x_j_ref[...]  # [BN, BHj]
+    g_ref[...] += jax.lax.dot_general(
+        xi,
+        xj,
+        dimension_numbers=(((0,), (0,)), ((), ())),  # contract over rows
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_h"))
+def gram(x, *, block_n: int = BLOCK_N, block_h: int = BLOCK_H):
+    """`XᵀX` for `x: [n, h]` via the tiled Pallas kernel.
+
+    Shapes must tile evenly; `gram_padded` handles the general case.
+    """
+    n, h = x.shape
+    bn = min(block_n, n)
+    bh = min(block_h, h)
+    if n % bn or h % bh:
+        raise ValueError(f"gram: ({n},{h}) not divisible by blocks ({bn},{bh})")
+    grid = (h // bh, h // bh, n // bn)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bh), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bn, bh), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bh, bh), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, h), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(x, x)
+
+
+def gram_padded(x, *, block_n: int = BLOCK_N, block_h: int = BLOCK_H):
+    """`XᵀX` for arbitrary shapes: zero-pad rows/cols to the block grid
+    (zero rows contribute nothing to the Gram; padded columns are
+    sliced away)."""
+    n, h = x.shape
+    bn = min(block_n, max(n, 1))
+    bh = min(block_h, max(h, 1))
+    n_pad = (-n) % bn
+    h_pad = (-h) % bh
+    if n_pad or h_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, h_pad)))
+    g = gram(x, block_n=bn, block_h=bh)
+    return g[:h, :h]

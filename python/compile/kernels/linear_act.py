@@ -1,0 +1,87 @@
+"""Pallas kernel: fused producer forward `gelu(x·Wᵀ + b)`.
+
+The producer layer's matmul, bias and activation execute in one VMEM
+round trip — the fusion the paper's calibration pass relies on (the
+consumer-input activations are exactly this kernel's output). Grid
+`(i, j, k)`; bias-add and GELU run on the final reduction step only.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def _linear_gelu_kernel(x_ref, wt_ref, b_ref, o_ref, *, k_steps):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], wt_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_step == k_steps - 1)
+    def _finish():
+        y = o_ref[...] + b_ref[...]
+        o_ref[...] = 0.5 * y * (1.0 + jnp.tanh(_GELU_C * (y + 0.044715 * y**3)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def linear_gelu(x, w, b, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """`gelu(x Wᵀ + b)` for `x: [m, k]`, `w: [n, k]`, `b: [n]`.
+
+    Shapes must tile evenly; `linear_gelu_padded` pads otherwise.
+    """
+    m, k = x.shape
+    n, k2 = w.shape
+    if k != k2:
+        raise ValueError(f"linear_gelu: inner dims {k} vs {k2}")
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"linear_gelu: ({m},{k},{n}) not divisible")
+    wt = w.T  # [k, n]
+    b2 = b.reshape(1, n)
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_linear_gelu_kernel, k_steps=k // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, bn), lambda i, j, s: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, wt, b2)
+
+
+def linear_gelu_padded(x, w, b, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """`gelu(x Wᵀ + b)` for arbitrary shapes via zero padding."""
+    m, k = x.shape
+    n, _ = w.shape
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    bk = min(bk, max(k, 1))
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        x = jnp.pad(x, ((0, mp), (0, kp)))
+    if np_ or kp:
+        w = jnp.pad(w, ((0, np_), (0, kp)))
+    if np_:
+        b = jnp.pad(b, (0, np_))
+    y = linear_gelu(x, w, b, bm=bm, bn=bn, bk=bk)
+    return y[:m, :n]

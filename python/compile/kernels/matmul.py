@@ -1,0 +1,72 @@
+"""Pallas kernel: blocked matmul `C = A·B` (MXU-tiled).
+
+Used by the L2 model graphs for their dense projections so the whole
+forward lowers through the same kernel machinery as the Gram
+accumulation. Grid `(i, j, k)` with the `k` axis reducing into a
+grid-carried accumulator tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, c_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """`a @ b` for `a: [m, k]`, `b: [k, n]`; shapes must tile evenly
+    (`matmul_padded` pads otherwise)."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"matmul: inner dims {k} vs {k2}")
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"matmul: ({m},{k},{n}) not divisible by ({bm},{bk},{bn})")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def matmul_padded(a, b, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """`a @ b` for arbitrary shapes via zero padding to the block grid."""
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    bk = min(bk, max(k, 1))
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        a = jnp.pad(a, ((0, mp), (0, kp)))
+    if kp or np_:
+        b = jnp.pad(b, ((0, kp), (0, np_)))
+    c = matmul(a, b, bm=bm, bn=bn, bk=bk)
+    return c[:m, :n]

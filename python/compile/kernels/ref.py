@@ -1,0 +1,38 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package is checked against its `ref_*` twin by `python/tests/` (exact
+shapes via pytest, randomized shape/value sweeps via hypothesis).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_gram(x):
+    """Uncentered second moment `XᵀX` of `x: [n, h]` (paper §3.2,
+    `G = Σ x xᵀ`)."""
+    return x.T @ x
+
+
+def ref_matmul(a, b):
+    """Plain matmul `a @ b`."""
+    return a @ b
+
+
+def ref_linear_gelu(x, w, b):
+    """Fused producer forward `gelu(x Wᵀ + b)` with the tanh GELU
+    (matches `jax.nn.gelu(approximate=True)` and the Rust
+    `nn::gelu_scalar`)."""
+    y = x @ w.T + b
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y**3)))
+
+
+def ref_ridge_reconstruction(gram, keep, lam):
+    """GRAIL pruning reconstruction `B = G[:,P] (G[P,P] + λI)⁻¹` — used
+    to cross-check the Rust Cholesky path end-to-end."""
+    g_ph = gram[keep, :]  # [K, H]
+    g_pp = g_ph[:, keep]  # [K, K]
+    k = g_pp.shape[0]
+    sol = jnp.linalg.solve(g_pp + lam * jnp.eye(k, dtype=gram.dtype), g_ph)
+    return sol.T  # [H, K]

@@ -1,0 +1,335 @@
+"""L2: the model forward graphs in JAX.
+
+These mirror the Rust `nn::models` *exactly* (same parameter names, same
+tanh-GELU, same layer-norm epsilon, same attention layout) — the
+`rust/tests/runtime_pjrt.rs` integration test loads a checkpoint into
+both implementations and asserts elementwise agreement.
+
+Parameters are flat `{name: array}` dicts using the GRWB names. The
+`use_kernels` flag routes dense hot spots through the L1 Pallas kernels
+(used for the AOT-exported graphs); training uses the plain-jnp path
+for speed (both are pytest-verified equal).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.linear_act import linear_gelu_padded
+
+NORM_EPS = 1e-5
+_GELU_C = 0.7978845608028654
+
+
+def gelu(x):
+    """tanh-approximate GELU (matches Rust `nn::gelu_scalar`)."""
+    return 0.5 * x * (1.0 + jnp.tanh(_GELU_C * (x + 0.044715 * x**3)))
+
+
+def layernorm(x, gamma, beta):
+    """LayerNorm over the last axis with the shared epsilon."""
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + NORM_EPS) * gamma + beta
+
+
+def linear(x, w, b):
+    """`x Wᵀ + b` with `w: [out, in]`."""
+    return x @ w.T + b
+
+
+def batchnorm_eval(x, gamma, beta, mean, var):
+    """Eval-mode BN on `[n, c, h, w]`."""
+    g = gamma.reshape(1, -1, 1, 1)
+    b = beta.reshape(1, -1, 1, 1)
+    m = mean.reshape(1, -1, 1, 1)
+    v = var.reshape(1, -1, 1, 1)
+    return (x - m) / jnp.sqrt(v + NORM_EPS) * g + b
+
+
+# ------------------------------------------------------------------ MLP
+
+
+def mlp_forward(params, x, use_kernels: bool = False):
+    """`relu(fc1) -> relu(fc2) -> head`; returns (logits, [h1, h2])."""
+    h1 = jax.nn.relu(linear(x, params["fc1.w"], params["fc1.b"]))
+    h2 = jax.nn.relu(linear(h1, params["fc2.w"], params["fc2.b"]))
+    del use_kernels  # ReLU MLP keeps the plain path; kernels cover GELU blocks
+    return linear(h2, params["head.w"], params["head.b"]), [h1, h2]
+
+
+# ------------------------------------------------------------ MiniResNet
+
+
+def conv2d(x, w, b, stride: int, pad: int):
+    """NCHW conv matching Rust `Conv2d::forward`."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b.reshape(1, -1, 1, 1)
+
+
+def _bn(params, name, x):
+    return batchnorm_eval(
+        x,
+        params[f"{name}.gamma"],
+        params[f"{name}.beta"],
+        params[f"{name}.mean"],
+        params[f"{name}.var"],
+    )
+
+
+def resnet_forward(params, x, n_blocks: int = 4):
+    """MiniResNet eval forward on `[n, 3, 16, 16]`; returns
+    (logits, [mid taps as [n, c, oh, ow]])."""
+    cur = jax.nn.relu(_bn(params, "stem.bn", conv2d(x, params["stem.conv.w"], params["stem.conv.b"], 1, 1)))
+    taps = []
+    for i in range(n_blocks):
+        p = f"block{i}"
+        has_down = f"{p}.down.conv.w" in params
+        stride = 2 if has_down else 1
+        mid = jax.nn.relu(
+            _bn(params, f"{p}.bn1", conv2d(cur, params[f"{p}.conv1.w"], params[f"{p}.conv1.b"], stride, 1))
+        )
+        taps.append(mid)
+        out = _bn(params, f"{p}.bn2", conv2d(mid, params[f"{p}.conv2.w"], params[f"{p}.conv2.b"], 1, 1))
+        if has_down:
+            skip = _bn(params, f"{p}.down.bn", conv2d(cur, params[f"{p}.down.conv.w"], params[f"{p}.down.conv.b"], stride, 0))
+        else:
+            skip = cur
+        cur = jax.nn.relu(out + skip)
+    pooled = cur.mean(axis=(2, 3))
+    return linear(pooled, params["head.w"], params["head.b"]), taps
+
+
+# ------------------------------------------------------------- attention
+
+
+def attention(params, prefix, x, b, t, n_heads, n_kv, d_head, causal):
+    """Multi-head attention on `[b*t, d]` rows; returns (out, tap)."""
+    q = linear(x, params[f"{prefix}.wq.w"], params[f"{prefix}.wq.b"])
+    k = linear(x, params[f"{prefix}.wk.w"], params[f"{prefix}.wk.b"])
+    v = linear(x, params[f"{prefix}.wv.w"], params[f"{prefix}.wv.b"])
+    q = q.reshape(b, t, n_heads, d_head)
+    k = k.reshape(b, t, n_kv, d_head)
+    v = v.reshape(b, t, n_kv, d_head)
+    gs = n_heads // n_kv
+    if gs > 1:
+        k = jnp.repeat(k, gs, axis=2)
+        v = jnp.repeat(v, gs, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d_head))
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bshd->bthd", attn, v)  # [b, t, H, dh]
+    tap = ctx.reshape(b * t, n_heads * d_head)
+    out = linear(tap, params[f"{prefix}.wo.w"], params[f"{prefix}.wo.b"])
+    return out, tap
+
+
+# --------------------------------------------------------------- TinyViT
+
+
+def patchify(x, patch: int):
+    """`[n, c, h, w] -> [n*tokens, c*p*p]` with (c, dy, dx) feature
+    order and row-major tokens (matches Rust `TinyViT::patchify`)."""
+    n, c, h, w = x.shape
+    gh, gw = h // patch, w // patch
+    x = x.reshape(n, c, gh, patch, gw, patch)
+    x = x.transpose(0, 2, 4, 1, 3, 5)  # n, gh, gw, c, dy, dx
+    return x.reshape(n * gh * gw, c * patch * patch)
+
+
+def vit_forward(params, x, cfg, use_kernels: bool = False):
+    """TinyViT forward on `[n, 3, 16, 16]`; returns (logits, [mlp taps])."""
+    n = x.shape[0]
+    patch, d, n_heads, n_layers = cfg["patch"], cfg["d_model"], cfg["n_heads"], cfg["n_layers"]
+    t = (x.shape[2] // patch) * (x.shape[3] // patch)
+    dh = d // n_heads
+    cur = linear(patchify(x, patch), params["patch.w"], params["patch.b"])
+    cur = cur + jnp.tile(params["pos"], (n, 1))
+    taps = []
+    for i in range(n_layers):
+        p = f"block{i}"
+        normed = layernorm(cur, params[f"{p}.ln1.gamma"], params[f"{p}.ln1.beta"])
+        attn_out, _ = attention(params, f"{p}.attn", normed, n, t, n_heads, n_heads, dh, False)
+        cur = cur + attn_out
+        normed = layernorm(cur, params[f"{p}.ln2.gamma"], params[f"{p}.ln2.beta"])
+        if use_kernels:
+            hid = linear_gelu_padded(normed, params[f"{p}.fc.w"], params[f"{p}.fc.b"])
+        else:
+            hid = gelu(linear(normed, params[f"{p}.fc.w"], params[f"{p}.fc.b"]))
+        taps.append(hid)
+        cur = cur + linear(hid, params[f"{p}.proj.w"], params[f"{p}.proj.b"])
+    normed = layernorm(cur, params["ln_f.gamma"], params["ln_f.beta"])
+    pooled = normed.reshape(n, t, d).mean(axis=1)
+    return linear(pooled, params["head.w"], params["head.b"]), taps
+
+
+# ---------------------------------------------------------------- TinyLm
+
+
+def lm_forward(params, tokens, cfg, use_kernels: bool = False):
+    """TinyLm forward on token ids `[b, t]`; returns
+    (logits [b*t, vocab], taps [attn0, mlp0, attn1, ...])."""
+    b, t = tokens.shape
+    d = cfg["d_model"]
+    n_heads, n_kv, n_layers = cfg["n_heads"], cfg["n_kv"], cfg["n_layers"]
+    dh = d // n_heads
+    emb = params["embed"][tokens.reshape(-1)]  # [b*t, d]
+    pos = jnp.tile(params["pos"][:t], (b, 1))
+    cur = emb + pos
+    taps = []
+    for i in range(n_layers):
+        p = f"block{i}"
+        normed = layernorm(cur, params[f"{p}.ln1.gamma"], params[f"{p}.ln1.beta"])
+        attn_out, tap = attention(params, f"{p}.attn", normed, b, t, n_heads, n_kv, dh, True)
+        taps.append(tap)
+        cur = cur + attn_out
+        normed = layernorm(cur, params[f"{p}.ln2.gamma"], params[f"{p}.ln2.beta"])
+        if use_kernels:
+            hid = linear_gelu_padded(normed, params[f"{p}.fc.w"], params[f"{p}.fc.b"])
+        else:
+            hid = gelu(linear(normed, params[f"{p}.fc.w"], params[f"{p}.fc.b"]))
+        taps.append(hid)
+        cur = cur + linear(hid, params[f"{p}.proj.w"], params[f"{p}.proj.b"])
+    normed = layernorm(cur, params["ln_f.gamma"], params["ln_f.beta"])
+    return linear(normed, params["lm_head.w"], params["lm_head.b"]), taps
+
+
+# -------------------------------------------------------- initialization
+
+
+def _he(key, out_dim, in_dim):
+    std = (2.0 / in_dim) ** 0.5
+    return jax.random.normal(key, (out_dim, in_dim), jnp.float32) * std
+
+
+def init_mlp(key, in_dim=768, hidden=256, classes=10):
+    """Random MLP parameters (GRWB names)."""
+    ks = jax.random.split(key, 3)
+    p = {}
+    for k, name, (o, i) in zip(
+        ks, ["fc1", "fc2", "head"], [(hidden, in_dim), (hidden, hidden), (classes, hidden)]
+    ):
+        p[f"{name}.w"] = _he(k, o, i)
+        p[f"{name}.b"] = jnp.zeros((o,), jnp.float32)
+    return p
+
+
+def _conv_init(key, o, c, kh, kw):
+    std = (2.0 / (c * kh * kw)) ** 0.5
+    return jax.random.normal(key, (o, c, kh, kw), jnp.float32) * std
+
+
+def _bn_init(c):
+    return {
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def init_resnet(key, widths=(32, 64), classes=10):
+    """Random MiniResNet parameters (stem + 4 blocks, paper topology)."""
+    w1, w2 = widths
+    keys = iter(jax.random.split(key, 16))
+    p = {"stem.conv.w": _conv_init(next(keys), w1, 3, 3, 3), "stem.conv.b": jnp.zeros((w1,))}
+    for k, v in _bn_init(w1).items():
+        p[f"stem.bn.{k}"] = v
+    specs = [(w1, w1, False), (w1, w1, False), (w1, w2, True), (w2, w2, False)]
+    for i, (cin, cout, down) in enumerate(specs):
+        p[f"block{i}.conv1.w"] = _conv_init(next(keys), cout, cin, 3, 3)
+        p[f"block{i}.conv1.b"] = jnp.zeros((cout,))
+        p[f"block{i}.conv2.w"] = _conv_init(next(keys), cout, cout, 3, 3)
+        p[f"block{i}.conv2.b"] = jnp.zeros((cout,))
+        for k, v in _bn_init(cout).items():
+            p[f"block{i}.bn1.{k}"] = v
+            p[f"block{i}.bn2.{k}"] = v
+        if down:
+            p[f"block{i}.down.conv.w"] = _conv_init(next(keys), cout, cin, 1, 1)
+            p[f"block{i}.down.conv.b"] = jnp.zeros((cout,))
+            for k, v in _bn_init(cout).items():
+                p[f"block{i}.down.bn.{k}"] = v
+    p["head.w"] = _he(next(keys), classes, w2)
+    p["head.b"] = jnp.zeros((classes,))
+    return p
+
+
+VIT_CFG = {"patch": 4, "d_model": 64, "n_heads": 4, "d_ff": 128, "n_layers": 3, "classes": 10}
+LM_CFG = {"vocab": 64, "d_model": 64, "n_heads": 8, "n_kv": 8, "d_ff": 192, "n_layers": 4, "max_seq": 64}
+LM_CFG_GQA = dict(LM_CFG, n_kv=4)
+
+
+def _attn_init(keys, d, n_heads, n_kv, dh, prefix, p):
+    p[f"{prefix}.wq.w"] = _he(next(keys), n_heads * dh, d)
+    p[f"{prefix}.wq.b"] = jnp.zeros((n_heads * dh,))
+    p[f"{prefix}.wk.w"] = _he(next(keys), n_kv * dh, d)
+    p[f"{prefix}.wk.b"] = jnp.zeros((n_kv * dh,))
+    p[f"{prefix}.wv.w"] = _he(next(keys), n_kv * dh, d)
+    p[f"{prefix}.wv.b"] = jnp.zeros((n_kv * dh,))
+    p[f"{prefix}.wo.w"] = _he(next(keys), d, n_heads * dh)
+    p[f"{prefix}.wo.b"] = jnp.zeros((d,))
+
+
+def _ln_init(prefix, d, p):
+    p[f"{prefix}.gamma"] = jnp.ones((d,), jnp.float32)
+    p[f"{prefix}.beta"] = jnp.zeros((d,), jnp.float32)
+
+
+def init_vit(key, cfg=None):
+    """Random TinyViT parameters."""
+    cfg = cfg or VIT_CFG
+    d, n_layers = cfg["d_model"], cfg["n_layers"]
+    dh = d // cfg["n_heads"]
+    tokens = (16 // cfg["patch"]) ** 2
+    keys = iter(jax.random.split(key, 8 * n_layers + 4))
+    p = {
+        "patch.w": _he(next(keys), d, 3 * cfg["patch"] ** 2),
+        "patch.b": jnp.zeros((d,)),
+        "pos": jax.random.normal(next(keys), (tokens, d), jnp.float32) * 0.02,
+    }
+    for i in range(n_layers):
+        _ln_init(f"block{i}.ln1", d, p)
+        _attn_init(keys, d, cfg["n_heads"], cfg["n_heads"], dh, f"block{i}.attn", p)
+        _ln_init(f"block{i}.ln2", d, p)
+        p[f"block{i}.fc.w"] = _he(next(keys), cfg["d_ff"], d)
+        p[f"block{i}.fc.b"] = jnp.zeros((cfg["d_ff"],))
+        p[f"block{i}.proj.w"] = _he(next(keys), d, cfg["d_ff"])
+        p[f"block{i}.proj.b"] = jnp.zeros((d,))
+    _ln_init("ln_f", d, p)
+    p["head.w"] = _he(next(keys), cfg["classes"], d)
+    p["head.b"] = jnp.zeros((cfg["classes"],))
+    return p
+
+
+def init_lm(key, cfg=None):
+    """Random TinyLm parameters."""
+    cfg = cfg or LM_CFG
+    d, n_layers = cfg["d_model"], cfg["n_layers"]
+    dh = d // cfg["n_heads"]
+    keys = iter(jax.random.split(key, 8 * n_layers + 6))
+    p = {
+        "embed": jax.random.normal(next(keys), (cfg["vocab"], d), jnp.float32) * 0.05,
+        "pos": jax.random.normal(next(keys), (cfg["max_seq"], d), jnp.float32) * 0.02,
+    }
+    for i in range(n_layers):
+        _ln_init(f"block{i}.ln1", d, p)
+        _attn_init(keys, d, cfg["n_heads"], cfg["n_kv"], dh, f"block{i}.attn", p)
+        _ln_init(f"block{i}.ln2", d, p)
+        p[f"block{i}.fc.w"] = _he(next(keys), cfg["d_ff"], d)
+        p[f"block{i}.fc.b"] = jnp.zeros((cfg["d_ff"],))
+        p[f"block{i}.proj.w"] = _he(next(keys), d, cfg["d_ff"])
+        p[f"block{i}.proj.b"] = jnp.zeros((d,))
+    _ln_init("ln_f", d, p)
+    p["lm_head.w"] = _he(next(keys), cfg["vocab"], d)
+    p["lm_head.b"] = jnp.zeros((cfg["vocab"],))
+    return p

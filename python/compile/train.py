@@ -1,0 +1,262 @@
+"""Build-time checkpoint training (the repro substitute for the paper's
+pretrained zoos — DESIGN.md §2).
+
+Runs once inside `make artifacts`; Python never executes at request
+time. Data comes from the Rust-generated binaries under
+`artifacts/data/` so both languages see identical distributions.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import io_formats, model
+
+
+def _sgd_momentum(params, grads, vel, lr, mu=0.9):
+    new_vel = {k: mu * vel[k] + grads[k] for k in grads}
+    new_params = dict(params)
+    for k in grads:
+        new_params[k] = params[k] - lr * new_vel[k]
+    return new_params, new_vel
+
+
+def _xent(logits, labels):
+    ls = jax.nn.log_softmax(logits)
+    return -ls[jnp.arange(labels.shape[0]), labels].mean()
+
+
+def _batches(n, bs, steps, seed):
+    rng = np.random.RandomState(seed)
+    for _ in range(steps):
+        yield rng.randint(0, n, size=bs)
+
+
+# ------------------------------------------------------------------ MLP
+
+
+def train_mlp(key, x, y, steps=300, bs=64, lr=0.05, log=None):
+    """Train an MLP classifier; returns (params, final train acc)."""
+    params = model.init_mlp(key)
+
+    @jax.jit
+    def step(params, vel, xb, yb, lr):
+        def loss_fn(p):
+            logits, _ = model.mlp_forward(p, xb)
+            return _xent(logits, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, vel = _sgd_momentum(params, grads, vel, lr)
+        return params, vel, loss
+
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    for i, idx in enumerate(_batches(x.shape[0], bs, steps, 0)):
+        lr_t = lr * (0.1 if i > steps * 0.8 else 1.0)
+        params, vel, loss = step(params, vel, x[idx], y[idx], lr_t)
+        if log and i % 100 == 0:
+            log(f"  mlp step {i}: loss {float(loss):.4f}")
+    logits, _ = model.mlp_forward(params, x[:512])
+    acc = float((logits.argmax(-1) == y[:512]).mean())
+    return params, acc
+
+
+# ------------------------------------------------------------ MiniResNet
+
+_BN_KEYS = ("mean", "var")
+
+
+def _resnet_forward_train(params, x, n_blocks=4):
+    """Training-mode forward: BN uses batch statistics; returns
+    (logits, {bn_name: (batch_mean, batch_var)})."""
+    stats = {}
+
+    def bn_train(name, h):
+        mu = h.mean(axis=(0, 2, 3))
+        var = h.var(axis=(0, 2, 3))
+        stats[name] = (mu, var)
+        g = params[f"{name}.gamma"].reshape(1, -1, 1, 1)
+        b = params[f"{name}.beta"].reshape(1, -1, 1, 1)
+        return (h - mu.reshape(1, -1, 1, 1)) / jnp.sqrt(
+            var.reshape(1, -1, 1, 1) + model.NORM_EPS
+        ) * g + b
+
+    cur = jax.nn.relu(bn_train("stem.bn", model.conv2d(x, params["stem.conv.w"], params["stem.conv.b"], 1, 1)))
+    for i in range(n_blocks):
+        p = f"block{i}"
+        has_down = f"{p}.down.conv.w" in params
+        stride = 2 if has_down else 1
+        mid = jax.nn.relu(bn_train(f"{p}.bn1", model.conv2d(cur, params[f"{p}.conv1.w"], params[f"{p}.conv1.b"], stride, 1)))
+        out = bn_train(f"{p}.bn2", model.conv2d(mid, params[f"{p}.conv2.w"], params[f"{p}.conv2.b"], 1, 1))
+        if has_down:
+            skip = bn_train(f"{p}.down.bn", model.conv2d(cur, params[f"{p}.down.conv.w"], params[f"{p}.down.conv.b"], stride, 0))
+        else:
+            skip = cur
+        cur = jax.nn.relu(out + skip)
+    pooled = cur.mean(axis=(2, 3))
+    return model.linear(pooled, params["head.w"], params["head.b"]), stats
+
+
+def train_resnet(key, x, y, steps=400, bs=64, lr=0.05, log=None):
+    """Train MiniResNet (tracking BN running stats); `x: [n, 3, 16, 16]`."""
+    params = model.init_resnet(key)
+    trainable = [k for k in params if not k.endswith((".mean", ".var"))]
+
+    @jax.jit
+    def step(params, vel, xb, yb, lr):
+        def loss_fn(tp):
+            p = dict(params)
+            p.update(tp)
+            logits, stats = _resnet_forward_train(p, xb)
+            return _xent(logits, yb), stats
+
+        tp = {k: params[k] for k in trainable}
+        (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(tp)
+        new_tp, vel = _sgd_momentum(tp, grads, vel, lr)
+        new_params = dict(params)
+        new_params.update(new_tp)
+        # Running-stat EMA (momentum 0.1, eval-mode convention).
+        for name, (mu, var) in stats.items():
+            new_params[f"{name}.mean"] = 0.9 * params[f"{name}.mean"] + 0.1 * mu
+            new_params[f"{name}.var"] = 0.9 * params[f"{name}.var"] + 0.1 * var
+        return new_params, vel, loss
+
+    vel = {k: jnp.zeros_like(params[k]) for k in trainable}
+    for i, idx in enumerate(_batches(x.shape[0], bs, steps, 1)):
+        lr_t = lr * (0.1 if i > steps * 0.8 else 1.0)
+        params, vel, loss = step(params, vel, x[idx], y[idx], lr_t)
+        if log and i % 100 == 0:
+            log(f"  resnet step {i}: loss {float(loss):.4f}")
+    logits, _ = model.resnet_forward(params, x[:512])
+    acc = float((logits.argmax(-1) == y[:512]).mean())
+    return params, acc
+
+
+# --------------------------------------------------------------- TinyViT
+
+
+def train_vit(key, x, y, steps=500, bs=64, lr=0.02, log=None):
+    """Train TinyViT; `x: [n, 3, 16, 16]`."""
+    params = model.init_vit(key)
+
+    @jax.jit
+    def step(params, vel, xb, yb, lr):
+        def loss_fn(p):
+            logits, _ = model.vit_forward(p, xb, model.VIT_CFG)
+            return _xent(logits, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, vel = _sgd_momentum(params, grads, vel, lr)
+        return params, vel, loss
+
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    for i, idx in enumerate(_batches(x.shape[0], bs, steps, 2)):
+        lr_t = lr * min(1.0, (i + 1) / 50) * (0.1 if i > steps * 0.8 else 1.0)
+        params, vel, loss = step(params, vel, x[idx], y[idx], lr_t)
+        if log and i % 100 == 0:
+            log(f"  vit step {i}: loss {float(loss):.4f}")
+    logits, _ = model.vit_forward(params, x[:512], model.VIT_CFG)
+    acc = float((logits.argmax(-1) == y[:512]).mean())
+    return params, acc
+
+
+# ---------------------------------------------------------------- TinyLm
+
+
+def train_lm(key, tokens, cfg, steps=800, bs=16, seq=32, lr=0.05, log=None):
+    """Train TinyLm on a token stream; returns (params, train ppl)."""
+    params = model.init_lm(key, cfg)
+
+    n_windows = (tokens.shape[0] - 1) // seq
+    inputs = tokens[: n_windows * seq].reshape(n_windows, seq)
+    targets = tokens[1 : n_windows * seq + 1].reshape(n_windows, seq)
+
+    @jax.jit
+    def step(params, vel, xb, yb, lr):
+        def loss_fn(p):
+            logits, _ = model.lm_forward(p, xb, cfg)
+            return _xent(logits, yb.reshape(-1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, vel = _sgd_momentum(params, grads, vel, lr)
+        return params, vel, loss
+
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    loss = jnp.inf
+    for i, idx in enumerate(_batches(n_windows, bs, steps, 3)):
+        lr_t = lr * min(1.0, (i + 1) / 80) * (0.1 if i > steps * 0.8 else 1.0)
+        params, vel, loss = step(params, vel, inputs[idx], targets[idx], lr_t)
+        if log and i % 200 == 0:
+            log(f"  lm step {i}: loss {float(loss):.4f}")
+    return params, float(jnp.exp(loss))
+
+
+# ------------------------------------------------------------- top level
+
+
+def load_vision(data_dir):
+    """Load the Rust-generated vision splits as NCHW arrays."""
+    x, y, (c, h, w) = io_formats.read_images(os.path.join(data_dir, "vision_train.imgs"))
+    return jnp.array(x.reshape(-1, c, h, w)), jnp.array(y.astype("i4"))
+
+
+def load_text(data_dir):
+    """Load the Rust-generated training token stream."""
+    tokens, _vocab = io_formats.read_tokens(os.path.join(data_dir, "text_train.tokens"))
+    return jnp.array(tokens.astype("i4"))
+
+
+def train_zoo(data_dir, out_dir, log=print, quick=False):
+    """Train every checkpoint the experiments need and write GRWB
+    bundles. `quick=True` trims steps for CI-style smoke runs."""
+    os.makedirs(out_dir, exist_ok=True)
+    xv, yv = load_vision(data_dir)
+    toks = load_text(data_dir)
+    scale = 0.25 if quick else 1.0
+    summary = {}
+
+    for seed in range(2 if quick else 3):
+        params, acc = train_mlp(
+            jax.random.PRNGKey(100 + seed), xv.reshape(xv.shape[0], -1), yv,
+            steps=int(400 * scale), log=log,
+        )
+        name = f"mlp_seed{seed}"
+        io_formats.write_weights(os.path.join(out_dir, f"{name}.wbin"), _np(params))
+        summary[name] = acc
+        log(f"{name}: train acc {acc:.3f}")
+
+    for seed in range(2 if quick else 4):
+        params, acc = train_resnet(
+            jax.random.PRNGKey(200 + seed), xv, yv, steps=int(500 * scale), log=log
+        )
+        name = f"resnet_seed{seed}"
+        io_formats.write_weights(os.path.join(out_dir, f"{name}.wbin"), _np(params))
+        summary[name] = acc
+        log(f"{name}: train acc {acc:.3f}")
+
+    for seed in range(2 if quick else 3):
+        params, acc = train_vit(
+            jax.random.PRNGKey(300 + seed), xv, yv, steps=int(600 * scale), log=log
+        )
+        name = f"vit_seed{seed}"
+        io_formats.write_weights(os.path.join(out_dir, f"{name}.wbin"), _np(params))
+        summary[name] = acc
+        log(f"{name}: train acc {acc:.3f}")
+
+    for tag, cfg in [("mha", model.LM_CFG), ("gqa", model.LM_CFG_GQA)]:
+        params, ppl = train_lm(
+            jax.random.PRNGKey(400), toks, cfg, steps=int(900 * scale), log=log
+        )
+        name = f"tinylm_{tag}"
+        io_formats.write_weights(os.path.join(out_dir, f"{name}.wbin"), _np(params))
+        summary[name] = ppl
+        log(f"{name}: train ppl {ppl:.2f}")
+    return summary
+
+
+def _np(params):
+    return {k: np.asarray(v) for k, v in params.items()}

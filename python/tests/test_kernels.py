@@ -1,0 +1,130 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+Exact-shape pytest cases plus hypothesis sweeps over shapes/values —
+the CORE correctness signal for the AOT-exported computations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gram import gram, gram_padded
+from compile.kernels.linear_act import linear_gelu, linear_gelu_padded
+from compile.kernels.matmul import matmul, matmul_padded
+
+RNG = np.random.RandomState(0)
+
+
+def randf(*shape):
+    return RNG.randn(*shape).astype("float32")
+
+
+# ------------------------------------------------------------------ gram
+
+
+class TestGram:
+    def test_exact_block_shapes(self):
+        x = jnp.array(randf(256, 128))
+        np.testing.assert_allclose(gram(x), ref.ref_gram(x), rtol=1e-4, atol=1e-3)
+
+    def test_padded_odd_shapes(self):
+        x = jnp.array(randf(200, 70))
+        np.testing.assert_allclose(gram_padded(x), ref.ref_gram(x), rtol=1e-4, atol=1e-3)
+
+    def test_symmetry_and_psd_diag(self):
+        x = jnp.array(randf(100, 33))
+        g = np.asarray(gram_padded(x))
+        np.testing.assert_allclose(g, g.T, atol=1e-4)
+        assert (np.diag(g) >= -1e-5).all()
+
+    def test_rejects_nondivisible(self):
+        with pytest.raises(ValueError):
+            gram(jnp.zeros((200, 70)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 300),
+        h=st.integers(1, 160),
+        scale=st.floats(0.01, 10.0),
+    )
+    def test_hypothesis_shapes(self, n, h, scale):
+        x = jnp.array(np.random.RandomState(n * 1000 + h).randn(n, h).astype("f4") * scale)
+        got = gram_padded(x)
+        want = ref.ref_gram(x)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2 * scale * scale)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+class TestMatmul:
+    def test_exact(self):
+        a, b = jnp.array(randf(128, 128)), jnp.array(randf(128, 128))
+        np.testing.assert_allclose(matmul(a, b), a @ b, rtol=1e-4, atol=1e-3)
+
+    def test_padded(self):
+        a, b = jnp.array(randf(33, 47)), jnp.array(randf(47, 21))
+        np.testing.assert_allclose(matmul_padded(a, b), a @ b, rtol=1e-4, atol=1e-3)
+
+    def test_inner_dim_mismatch(self):
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((4, 5)), jnp.zeros((6, 4)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 150), k=st.integers(1, 150), n=st.integers(1, 150))
+    def test_hypothesis_shapes(self, m, k, n):
+        r = np.random.RandomState(m * 31 + k * 7 + n)
+        a = jnp.array(r.randn(m, k).astype("f4"))
+        b = jnp.array(r.randn(k, n).astype("f4"))
+        np.testing.assert_allclose(matmul_padded(a, b), a @ b, rtol=1e-3, atol=1e-2)
+
+
+# ----------------------------------------------------------- linear+gelu
+
+
+class TestLinearGelu:
+    def test_exact(self):
+        x, w, b = jnp.array(randf(128, 128)), jnp.array(randf(128, 128)), jnp.array(randf(128))
+        np.testing.assert_allclose(
+            linear_gelu(x, w, b), ref.ref_linear_gelu(x, w, b), rtol=1e-4, atol=1e-3
+        )
+
+    def test_padded(self):
+        x, w, b = jnp.array(randf(33, 47)), jnp.array(randf(50, 47)), jnp.array(randf(50))
+        np.testing.assert_allclose(
+            linear_gelu_padded(x, w, b), ref.ref_linear_gelu(x, w, b), rtol=1e-4, atol=1e-3
+        )
+
+    def test_matches_jax_gelu(self):
+        # Our tanh constant must match jax.nn.gelu(approximate=True).
+        x, w, b = jnp.array(randf(16, 24)), jnp.array(randf(8, 24)), jnp.zeros(8)
+        got = linear_gelu_padded(x, w, b)
+        want = jax.nn.gelu(x @ w.T, approximate=True)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 100), k=st.integers(1, 100), n=st.integers(1, 100))
+    def test_hypothesis_shapes(self, m, k, n):
+        r = np.random.RandomState(m + 100 * k + 10000 * n)
+        x = jnp.array(r.randn(m, k).astype("f4"))
+        w = jnp.array(r.randn(n, k).astype("f4"))
+        b = jnp.array(r.randn(n).astype("f4"))
+        np.testing.assert_allclose(
+            linear_gelu_padded(x, w, b), ref.ref_linear_gelu(x, w, b), rtol=1e-3, atol=1e-2
+        )
+
+
+# ----------------------------------------------- ridge oracle (cross-ref)
+
+
+def test_ridge_reconstruction_identity_gram():
+    g = jnp.eye(8)
+    keep = jnp.array([1, 4, 6])
+    b = ref.ref_ridge_reconstruction(g, keep, 0.0)
+    m = np.zeros((8, 3), "f4")
+    for col, row in enumerate([1, 4, 6]):
+        m[row, col] = 1.0
+    np.testing.assert_allclose(b, m, atol=1e-5)

@@ -1,0 +1,153 @@
+"""L2 correctness: model shapes, kernel/plain-path parity, io round
+trips, and (when artifacts exist) trained-checkpoint sanity."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import io_formats, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def randf(rng, *shape):
+    return jnp.array(rng.randn(*shape).astype("float32"))
+
+
+class TestShapes:
+    def test_mlp(self):
+        p = model.init_mlp(jax.random.PRNGKey(0))
+        x = randf(np.random.RandomState(0), 4, 768)
+        logits, taps = model.mlp_forward(p, x)
+        assert logits.shape == (4, 10)
+        assert taps[0].shape == (4, 256) and taps[1].shape == (4, 256)
+
+    def test_resnet(self):
+        p = model.init_resnet(jax.random.PRNGKey(0))
+        x = randf(np.random.RandomState(1), 2, 3, 16, 16)
+        logits, taps = model.resnet_forward(p, x)
+        assert logits.shape == (2, 10)
+        assert len(taps) == 4
+        assert taps[0].shape == (2, 32, 16, 16)
+        assert taps[2].shape == (2, 64, 8, 8)
+
+    def test_vit(self):
+        p = model.init_vit(jax.random.PRNGKey(0))
+        x = randf(np.random.RandomState(2), 2, 3, 16, 16)
+        logits, taps = model.vit_forward(p, x, model.VIT_CFG)
+        assert logits.shape == (2, 10)
+        assert len(taps) == 3 and taps[0].shape == (2 * 16, 128)
+
+    @pytest.mark.parametrize("cfg", [model.LM_CFG, model.LM_CFG_GQA])
+    def test_lm(self, cfg):
+        p = model.init_lm(jax.random.PRNGKey(0), cfg)
+        toks = jnp.array(np.random.RandomState(3).randint(0, 64, (2, 16)), jnp.int32)
+        logits, taps = model.lm_forward(p, toks, cfg)
+        assert logits.shape == (32, 64)
+        assert len(taps) == 8
+        assert taps[0].shape == (32, 64)  # attn tap: heads*dh
+        assert taps[1].shape == (32, 192)  # mlp tap
+
+
+class TestKernelParity:
+    """use_kernels=True (Pallas path) equals the plain-jnp path."""
+
+    def test_vit(self):
+        p = model.init_vit(jax.random.PRNGKey(1))
+        x = randf(np.random.RandomState(4), 2, 3, 16, 16)
+        a, _ = model.vit_forward(p, x, model.VIT_CFG, use_kernels=False)
+        b, _ = model.vit_forward(p, x, model.VIT_CFG, use_kernels=True)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_lm(self):
+        p = model.init_lm(jax.random.PRNGKey(2))
+        toks = jnp.array(np.random.RandomState(5).randint(0, 64, (2, 12)), jnp.int32)
+        a, ta = model.lm_forward(p, toks, model.LM_CFG, use_kernels=False)
+        b, tb = model.lm_forward(p, toks, model.LM_CFG, use_kernels=True)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+        for x, y in zip(ta, tb):
+            np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-4)
+
+
+class TestGqa:
+    def test_gqa_matches_mha_with_duplicated_kv(self):
+        cfg = model.LM_CFG_GQA
+        p = model.init_lm(jax.random.PRNGKey(3), cfg)
+        toks = jnp.array(np.random.RandomState(6).randint(0, 64, (1, 10)), jnp.int32)
+        out_g, _ = model.lm_forward(p, toks, cfg)
+        # Duplicate each KV head group_size times -> plain MHA.
+        dup = dict(p)
+        dh = cfg["d_model"] // cfg["n_heads"]
+        gs = cfg["n_heads"] // cfg["n_kv"]
+        for i in range(cfg["n_layers"]):
+            for w in ["wk", "wv"]:
+                for suf in ["w", "b"]:
+                    key = f"block{i}.attn.{w}.{suf}"
+                    arr = p[key]
+                    blocks = arr.reshape(cfg["n_kv"], dh, *arr.shape[1:])
+                    dup[key] = jnp.repeat(blocks, gs, axis=0).reshape(
+                        cfg["n_heads"] * dh, *arr.shape[1:]
+                    )
+        out_m, _ = model.lm_forward(dup, toks, model.LM_CFG)
+        np.testing.assert_allclose(out_g, out_m, rtol=1e-4, atol=1e-4)
+
+
+class TestIo:
+    def test_weights_roundtrip(self, tmp_path):
+        p = {"a.w": np.random.randn(3, 4).astype("f4"), "b": np.zeros(7, "f4")}
+        path = str(tmp_path / "x.wbin")
+        io_formats.write_weights(path, p)
+        r = io_formats.read_weights(path)
+        assert set(r) == {"a.w", "b"}
+        np.testing.assert_array_equal(r["a.w"], p["a.w"])
+
+    def test_weights_reject_garbage(self, tmp_path):
+        path = str(tmp_path / "bad.wbin")
+        with open(path, "wb") as f:
+            f.write(b"nope")
+        with pytest.raises(ValueError):
+            io_formats.read_weights(path)
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ART, "data", "vision_train.imgs")),
+        reason="artifacts/data not generated",
+    )
+    def test_reads_rust_generated_data(self):
+        x, y, (c, h, w) = io_formats.read_images(os.path.join(ART, "data", "vision_test.imgs"))
+        assert (c, h, w) == (3, 16, 16)
+        assert x.shape[0] == y.shape[0] > 0
+        assert np.isfinite(x).all()
+        toks, vocab = io_formats.read_tokens(os.path.join(ART, "data", "text_c4s.tokens"))
+        assert vocab == 64
+        assert toks.max() < 64
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "checkpoints", "tinylm_mha.wbin")),
+    reason="checkpoints not trained",
+)
+class TestTrainedCheckpoints:
+    def test_vision_checkpoints_beat_chance(self):
+        x, y, _ = io_formats.read_images(os.path.join(ART, "data", "vision_test.imgs"))
+        x4 = jnp.array(x[:256].reshape(-1, 3, 16, 16))
+        yy = y[:256]
+        p = {k: jnp.array(v) for k, v in io_formats.read_weights(
+            os.path.join(ART, "checkpoints", "resnet_seed0.wbin")).items()}
+        logits, _ = model.resnet_forward(p, x4)
+        acc = float((np.asarray(logits).argmax(-1) == yy).mean())
+        assert acc > 0.7, acc
+
+    def test_lm_checkpoint_beats_uniform(self):
+        toks, _ = io_formats.read_tokens(os.path.join(ART, "data", "text_c4s.tokens"))
+        p = {k: jnp.array(v) for k, v in io_formats.read_weights(
+            os.path.join(ART, "checkpoints", "tinylm_mha.wbin")).items()}
+        seq = 32
+        inp = jnp.array(toks[: 8 * seq].reshape(8, seq).astype("i4"))
+        tgt = toks[1 : 8 * seq + 1].reshape(8, seq)
+        logits, _ = model.lm_forward(p, inp, model.LM_CFG)
+        ls = jax.nn.log_softmax(logits)
+        nll = -np.asarray(ls)[np.arange(8 * seq), tgt.reshape(-1)].mean()
+        assert np.exp(nll) < 30.0, np.exp(nll)

@@ -1,0 +1,109 @@
+//! Minimal benchmarking harness (no `criterion` offline).
+//!
+//! `cargo bench` runs the `[[bench]]` targets with `harness = false`;
+//! they call [`bench`] which warms up, runs timed iterations, and
+//! prints a stable `name  median  p10  p90  iters` line (plus optional
+//! throughput).
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Throughput in operations/sec given work per iteration.
+    pub fn per_second(&self, work_per_iter: f64) -> f64 {
+        work_per_iter / (self.median_ns / 1e9)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run enough iterations to spend
+/// ~`budget_ms`, reporting percentile stats over per-iteration times.
+pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let target_iters = ((budget_ms as f64 * 1e6) / once).clamp(3.0, 10_000.0) as usize;
+
+    let mut samples = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        median_ns: pct(0.5),
+        p10_ns: pct(0.1),
+        p90_ns: pct(0.9),
+        iters: samples.len(),
+    };
+    println!(
+        "{:<44} median {:>12}  p10 {:>12}  p90 {:>12}  ({} iters)",
+        r.name,
+        fmt_ns(r.median_ns),
+        fmt_ns(r.p10_ns),
+        fmt_ns(r.p90_ns),
+        r.iters
+    );
+    r
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print a GFLOP/s line for a measured kernel.
+pub fn report_gflops(r: &BenchResult, flops_per_iter: f64) {
+    println!(
+        "{:<44} {:.2} GFLOP/s",
+        format!("{} throughput", r.name),
+        r.per_second(flops_per_iter) / 1e9
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 5, || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,168 @@
+//! Hand-rolled CLI argument parsing (no `clap` offline).
+//!
+//! Grammar: `grail <command> [subcommand] [--flag value] [--switch]
+//! [positional...]`. Flags may appear anywhere after the command.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order (command word(s) first).
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument `i` or error.
+    pub fn pos(&self, i: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing {what} (positional {i})"))
+    }
+
+    /// Option value (string).
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option with default.
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    /// usize option with default; errors on malformed values.
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: not an integer: {v}")),
+        }
+    }
+
+    /// f64 option with default; errors on malformed values.
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: not a number: {v}")),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: not an integer: {v}")),
+        }
+    }
+
+    /// Whether a bare switch was given.
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Comma-separated f64 list option.
+    pub fn opt_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.opt(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad list element `{p}`"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated string list option.
+    pub fn opt_str_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.opt(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|p| p.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn commands_and_flags() {
+        // NB: a value-less switch must come last or be followed by
+        // another flag — `--verbose out.csv` would bind greedily.
+        let a = parse("exp table1 out.csv --ratios 0.1,0.5 --seed 7 --verbose");
+        assert_eq!(a.pos(0, "cmd").unwrap(), "exp");
+        assert_eq!(a.pos(1, "sub").unwrap(), "table1");
+        assert_eq!(a.positional[2], "out.csv");
+        assert_eq!(a.opt("seed"), Some("7"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.opt_f64_list("ratios", &[]).unwrap(), vec![0.1, 0.5]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --alpha=0.001 --name=x");
+        assert_eq!(a.opt_f64("alpha", 0.0).unwrap(), 0.001);
+        assert_eq!(a.opt("name"), Some("x"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("run --fast");
+        assert!(a.has("fast"));
+        assert_eq!(a.opt("fast"), None);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("run --n abc");
+        assert!(a.opt_usize("n", 1).is_err());
+        assert_eq!(a.opt_usize("m", 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        let a = parse("run");
+        assert!(a.pos(1, "sub").is_err());
+    }
+}

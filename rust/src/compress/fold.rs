@@ -1,0 +1,161 @@
+//! Model folding: cluster units and replace each cluster by its
+//! centroid (paper §3.1, following Wang et al. "model folding").
+//!
+//! Units are clustered over their *producer weight rows* (the standard
+//! folding feature space); attention heads are clustered over their
+//! flattened per-head query rows. GQA sites cluster within KV groups
+//! so the block-diagonal reducer constraint holds.
+
+use super::{Reducer, SiteInfo};
+use crate::linalg::kmeans;
+use crate::rng::Pcg64;
+use crate::tensor::{ops, Tensor};
+
+/// Build a folding reducer for a site by k-means clustering the rows
+/// of `features: [units, d]` into `k_units` clusters.
+///
+/// For grouped sites (GQA), clustering happens independently inside
+/// each group with `k_units / groups` clusters, and cluster ids are
+/// offset so each group owns a contiguous block.
+pub fn fold_reducer(
+    features: &Tensor,
+    site: &SiteInfo,
+    k_units: usize,
+    rng: &mut Pcg64,
+) -> Reducer {
+    let units = site.units;
+    assert_eq!(features.dim(0), units, "one feature row per unit");
+    assert!(k_units >= 1 && k_units <= units);
+    if site.groups <= 1 {
+        let r = kmeans(features, k_units, rng, 100);
+        return Reducer::Fold { assign: r.assign, k: k_units };
+    }
+    assert_eq!(k_units % site.groups, 0, "grouped folding needs equal per-group counts");
+    assert_eq!(units % site.groups, 0);
+    let per_group = units / site.groups;
+    let k_per_group = k_units / site.groups;
+    let mut assign = vec![0usize; units];
+    for g in 0..site.groups {
+        let rows: Vec<usize> = (g * per_group..(g + 1) * per_group).collect();
+        let feats = ops::gather_rows(features, &rows);
+        let r = kmeans(&feats, k_per_group, rng, 100);
+        for (local, &a) in r.assign.iter().enumerate() {
+            assign[g * per_group + local] = g * k_per_group + a;
+        }
+    }
+    Reducer::Fold { assign, k: k_units }
+}
+
+/// Random folding (fig. 6 baseline): uniform random assignment with
+/// every cluster non-empty.
+pub fn random_fold(site: &SiteInfo, k_units: usize, rng: &mut Pcg64) -> Reducer {
+    let units = site.units;
+    assert!(k_units >= 1 && k_units <= units);
+    if site.groups > 1 {
+        assert_eq!(k_units % site.groups, 0);
+        assert_eq!(units % site.groups, 0);
+        let per_group = units / site.groups;
+        let k_per_group = k_units / site.groups;
+        let mut assign = vec![0usize; units];
+        for g in 0..site.groups {
+            let local = random_assignment(per_group, k_per_group, rng);
+            for (i, &a) in local.iter().enumerate() {
+                assign[g * per_group + i] = g * k_per_group + a;
+            }
+        }
+        return Reducer::Fold { assign, k: k_units };
+    }
+    Reducer::Fold { assign: random_assignment(units, k_units, rng), k: k_units }
+}
+
+/// Uniform random assignment of `n` units to `k` clusters such that
+/// every cluster receives at least one unit.
+fn random_assignment(n: usize, k: usize, rng: &mut Pcg64) -> Vec<usize> {
+    let mut assign: Vec<usize> = (0..n).map(|_| rng.below(k)).collect();
+    // Guarantee non-empty clusters: claim one distinct unit per cluster.
+    let owners = rng.choose_k(n, k);
+    for (c, &u) in owners.iter().enumerate() {
+        assign[u] = c;
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SiteKind;
+
+    fn site(units: usize, groups: usize) -> SiteInfo {
+        SiteInfo {
+            id: "t".into(),
+            units,
+            unit_dim: 1,
+            groups,
+            kind: SiteKind::Dense,
+        }
+    }
+
+    fn clustered_features() -> Tensor {
+        // 6 units: rows 0-2 near (0,0), rows 3-5 near (5,5).
+        Tensor::from_vec(
+            &[6, 2],
+            vec![0., 0., 0.1, 0., 0., 0.1, 5., 5., 5.1, 5., 5., 5.1],
+        )
+    }
+
+    #[test]
+    fn folds_similar_units_together() {
+        let f = clustered_features();
+        let r = fold_reducer(&f, &site(6, 1), 2, &mut Pcg64::seed(1));
+        if let Reducer::Fold { assign, k } = r {
+            assert_eq!(k, 2);
+            assert_eq!(assign[0], assign[1]);
+            assert_eq!(assign[1], assign[2]);
+            assert_eq!(assign[3], assign[4]);
+            assert_ne!(assign[0], assign[3]);
+        } else {
+            panic!("expected fold");
+        }
+    }
+
+    #[test]
+    fn grouped_fold_stays_in_groups() {
+        let f = clustered_features();
+        // 2 groups of 3 units; 2 clusters per group.
+        let r = fold_reducer(&f, &site(6, 2), 4, &mut Pcg64::seed(2));
+        if let Reducer::Fold { assign, k } = r {
+            assert_eq!(k, 4);
+            // Group 0 units get clusters {0,1}; group 1 gets {2,3}.
+            for &a in &assign[..3] {
+                assert!(a < 2, "{assign:?}");
+            }
+            for &a in &assign[3..] {
+                assert!((2..4).contains(&a), "{assign:?}");
+            }
+        } else {
+            panic!("expected fold");
+        }
+    }
+
+    #[test]
+    fn random_fold_covers_all_clusters() {
+        for seed in 0..10 {
+            let r = random_fold(&site(10, 1), 4, &mut Pcg64::seed(seed));
+            if let Reducer::Fold { assign, k } = r {
+                let mut seen = vec![false; k];
+                for &a in &assign {
+                    seen[a] = true;
+                }
+                assert!(seen.iter().all(|&s| s), "seed {seed}: {assign:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_reducer_deterministic() {
+        let f = clustered_features();
+        let a = fold_reducer(&f, &site(6, 1), 3, &mut Pcg64::seed(9));
+        let b = fold_reducer(&f, &site(6, 1), 3, &mut Pcg64::seed(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,140 @@
+//! Head-structured reduction helpers for attention sites (paper §3.2).
+//!
+//! Attention reductions act at the *head* level and reach the feature
+//! axis only through the Kronecker lift `R ⊗ I_dh`
+//! ([`crate::compress::Reducer::lift`]). This module provides the
+//! clustering feature space for head folding and validation of head
+//! reducers against GQA constraints.
+
+use super::{Reducer, SiteInfo};
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Result};
+
+/// Per-head feature rows for folding: head `h`'s block of query weight
+/// rows `[h·dh .. (h+1)·dh)` flattened to one row of length
+/// `dh · d_model`.
+pub fn head_features(wq: &Tensor, n_heads: usize, d_head: usize) -> Tensor {
+    assert_eq!(wq.dim(0), n_heads * d_head, "query weight rows");
+    let d_model = wq.dim(1);
+    let mut out = Tensor::zeros(&[n_heads, d_head * d_model]);
+    for h in 0..n_heads {
+        let dst = out.row_mut(h);
+        for r in 0..d_head {
+            dst[r * d_model..(r + 1) * d_model].copy_from_slice(wq.row(h * d_head + r));
+        }
+    }
+    out
+}
+
+/// Validate a *head-level* reducer against a site's GQA structure:
+/// selections must keep an equal nonzero count per group; folds must
+/// not merge across groups and must keep group blocks contiguous.
+pub fn validate_head_reducer(reducer: &Reducer, site: &SiteInfo) -> Result<()> {
+    let units = site.units;
+    let groups = site.groups;
+    match reducer {
+        Reducer::Select(keep) => {
+            ensure!(!keep.is_empty(), "cannot remove all heads");
+            ensure!(
+                keep.windows(2).all(|w| w[0] < w[1]),
+                "head selection must be sorted unique"
+            );
+            for &h in keep {
+                ensure!(h < units, "head {h} out of {units}");
+            }
+            if groups > 1 {
+                let per_group = units / groups;
+                let mut counts = vec![0usize; groups];
+                for &h in keep {
+                    counts[h / per_group] += 1;
+                }
+                let k0 = counts[0];
+                ensure!(
+                    k0 > 0 && counts.iter().all(|&c| c == k0),
+                    "GQA selection must keep an equal nonzero count per group: {counts:?}"
+                );
+            }
+        }
+        Reducer::Fold { assign, k } => {
+            ensure!(assign.len() == units, "fold assignment length");
+            let mut seen = vec![false; *k];
+            for &a in assign {
+                ensure!(a < *k, "cluster {a} out of {k}");
+                seen[a] = true;
+            }
+            ensure!(seen.iter().all(|&s| s), "folding produced an empty cluster");
+            if groups > 1 {
+                ensure!(*k % groups == 0, "GQA folding needs equal cluster counts per group");
+                let per_group = units / groups;
+                let k_per_group = *k / groups;
+                for (h, &a) in assign.iter().enumerate() {
+                    let g = h / per_group;
+                    if a / k_per_group != g {
+                        bail!(
+                            "GQA folding must not merge across groups \
+                             (head {h} in group {g} assigned cluster {a})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SiteKind;
+
+    fn site(units: usize, groups: usize) -> SiteInfo {
+        SiteInfo {
+            id: "attn".into(),
+            units,
+            unit_dim: 4,
+            groups,
+            kind: SiteKind::AttnHeads,
+        }
+    }
+
+    #[test]
+    fn head_features_layout() {
+        // 2 heads, dh=2, d_model=3.
+        let wq = Tensor::from_vec(&[4, 3], (0..12).map(|i| i as f32).collect());
+        let f = head_features(&wq, 2, 2);
+        assert_eq!(f.shape(), &[2, 6]);
+        assert_eq!(f.row(0), &[0., 1., 2., 3., 4., 5.]);
+        assert_eq!(f.row(1), &[6., 7., 8., 9., 10., 11.]);
+    }
+
+    #[test]
+    fn valid_ungrouped_selection() {
+        assert!(validate_head_reducer(&Reducer::Select(vec![0, 2]), &site(4, 1)).is_ok());
+        assert!(validate_head_reducer(&Reducer::Select(vec![]), &site(4, 1)).is_err());
+        assert!(validate_head_reducer(&Reducer::Select(vec![2, 0]), &site(4, 1)).is_err());
+        assert!(validate_head_reducer(&Reducer::Select(vec![9]), &site(4, 1)).is_err());
+    }
+
+    #[test]
+    fn gqa_selection_balance() {
+        // 8 heads, 2 groups of 4.
+        assert!(validate_head_reducer(&Reducer::Select(vec![0, 1, 4, 5]), &site(8, 2)).is_ok());
+        assert!(validate_head_reducer(&Reducer::Select(vec![0, 1, 2, 4]), &site(8, 2)).is_err());
+    }
+
+    #[test]
+    fn fold_empty_cluster_rejected() {
+        let r = Reducer::Fold { assign: vec![0, 0, 0, 0], k: 2 };
+        assert!(validate_head_reducer(&r, &site(4, 1)).is_err());
+    }
+
+    #[test]
+    fn gqa_fold_group_blocks() {
+        // 4 heads, 2 groups; clusters {0,1}: ok.
+        let ok = Reducer::Fold { assign: vec![0, 0, 1, 1], k: 2 };
+        assert!(validate_head_reducer(&ok, &site(4, 2)).is_ok());
+        // Cross-group merge: head 2 (group 1) in cluster 0.
+        let bad = Reducer::Fold { assign: vec![0, 0, 0, 1], k: 2 };
+        assert!(validate_head_reducer(&bad, &site(4, 2)).is_err());
+    }
+}

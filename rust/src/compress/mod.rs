@@ -1,0 +1,291 @@
+//! Structured width reduction: reducers, selectors, folding, baselines.
+//!
+//! A *site* is one producer→consumer pair the library can compress: a
+//! dense hidden layer, a conv block's internal channels, a transformer
+//! MLP's fc/proj pair, or an attention block's heads. Models implement
+//! [`Compressible`] to expose their sites; everything else (selectors,
+//! folding, the GRAIL engine, baselines) is model-agnostic.
+
+pub mod baselines;
+pub mod fold;
+pub mod heads;
+pub mod select;
+
+pub use fold::fold_reducer;
+pub use select::{select_reducer, Selector};
+
+use crate::tensor::Tensor;
+
+/// How a producer's units (channels or heads) are reduced from `H` to
+/// `K` units.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reducer {
+    /// Structured pruning: keep these unit indices (sorted ascending).
+    Select(Vec<usize>),
+    /// Folding: `assign[h]` maps each unit to one of `k` clusters.
+    Fold { assign: Vec<usize>, k: usize },
+}
+
+impl Reducer {
+    /// Reduced unit count `K`.
+    pub fn k(&self) -> usize {
+        match self {
+            Reducer::Select(idx) => idx.len(),
+            Reducer::Fold { k, .. } => *k,
+        }
+    }
+
+    /// Original unit count `H` this reducer applies to (only known for
+    /// folds; selections return `None`).
+    pub fn h(&self) -> Option<usize> {
+        match self {
+            Reducer::Select(_) => None,
+            Reducer::Fold { assign, .. } => Some(assign.len()),
+        }
+    }
+
+    /// The width-reduction matrix `M ∈ R^{H×K}` (paper §3.1):
+    /// selection columns are standard basis vectors; folding columns
+    /// average cluster members (`1/|C_k|`).
+    pub fn matrix(&self, h: usize) -> Tensor {
+        let k = self.k();
+        let mut m = Tensor::zeros(&[h, k]);
+        match self {
+            Reducer::Select(idx) => {
+                for (col, &row) in idx.iter().enumerate() {
+                    assert!(row < h, "select index {row} out of {h}");
+                    m.set2(row, col, 1.0);
+                }
+            }
+            Reducer::Fold { assign, k } => {
+                assert_eq!(assign.len(), h, "fold assignment length");
+                let mut counts = vec![0usize; *k];
+                for &c in assign {
+                    counts[c] += 1;
+                }
+                for (row, &c) in assign.iter().enumerate() {
+                    m.set2(row, c, 1.0 / counts[c].max(1) as f32);
+                }
+            }
+        }
+        m
+    }
+
+    /// The *data-free consumer* update matrix `N ∈ R^{H×K}` — what
+    /// classic pruning/folding does to the consumer when no GRAIL
+    /// compensation is applied. For selection this equals `M`; for
+    /// folding it is the unnormalized indicator (the consumer sums the
+    /// cluster's columns because the producer emits the cluster mean).
+    pub fn consumer_matrix(&self, h: usize) -> Tensor {
+        match self {
+            Reducer::Select(_) => self.matrix(h),
+            Reducer::Fold { assign, k } => {
+                let mut n = Tensor::zeros(&[h, *k]);
+                for (row, &c) in assign.iter().enumerate() {
+                    n.set2(row, c, 1.0);
+                }
+                n
+            }
+        }
+    }
+
+    /// Kronecker lift to the feature axis: a head-level reducer acting
+    /// on `n_heads` units becomes `R ⊗ I_dh` acting on
+    /// `n_heads·dh` features (paper Eq. 2). `dh == 1` is the identity
+    /// lift for channel sites.
+    pub fn lift(&self, dh: usize) -> Reducer {
+        if dh == 1 {
+            return self.clone();
+        }
+        match self {
+            Reducer::Select(idx) => Reducer::Select(
+                idx.iter().flat_map(|&h| (h * dh)..(h + 1) * dh).collect(),
+            ),
+            Reducer::Fold { assign, k } => Reducer::Fold {
+                assign: (0..assign.len() * dh)
+                    .map(|r| assign[r / dh] * dh + (r % dh))
+                    .collect(),
+                k: k * dh,
+            },
+        }
+    }
+}
+
+/// A fully specified reduction of one site.
+#[derive(Clone, Debug)]
+pub struct ReductionPlan {
+    /// Unit-level reducer (channels or heads).
+    pub reducer: Reducer,
+    /// GRAIL reconstruction map `B: [feat_H, feat_K]`, merged into the
+    /// consumer (`W' = W·B`). `None` = the data-free consumer update.
+    pub compensation: Option<Tensor>,
+    /// FLAP-style additive consumer bias correction.
+    pub bias_delta: Option<Vec<f32>>,
+    /// SlimGPT/ZipLM write the compensated consumer directly (already
+    /// at reduced width `[O_eff, feat_K]`); overrides `compensation`.
+    pub consumer_override: Option<Tensor>,
+}
+
+impl ReductionPlan {
+    /// Plain structured reduction with the data-free consumer update.
+    pub fn bare(reducer: Reducer) -> Self {
+        ReductionPlan { reducer, compensation: None, bias_delta: None, consumer_override: None }
+    }
+
+    /// Reduction with a GRAIL compensation map.
+    pub fn compensated(reducer: Reducer, b: Tensor) -> Self {
+        ReductionPlan {
+            reducer,
+            compensation: Some(b),
+            bias_delta: None,
+            consumer_override: None,
+        }
+    }
+}
+
+/// What kind of producer→consumer pair a site is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteKind {
+    /// Dense hidden layer between two fully connected layers.
+    Dense,
+    /// Conv block internals: conv1 out-channels → conv2 in-channels.
+    Conv,
+    /// Transformer MLP: `w_fc` rows → `w_proj` columns.
+    MlpPair,
+    /// Attention heads: q/k/v head rows → `w_o` columns.
+    AttnHeads,
+}
+
+/// Static description of a compressible site.
+#[derive(Clone, Debug)]
+pub struct SiteInfo {
+    /// Stable identifier, e.g. `block2.mlp` or `block0.attn`.
+    pub id: String,
+    /// Prunable unit count (channels, or heads).
+    pub units: usize,
+    /// Per-unit feature width (`d_head` for attention, 1 otherwise).
+    pub unit_dim: usize,
+    /// KV groups (GQA) — head reduction must stay within groups and
+    /// keep equal counts. 1 for ungrouped sites.
+    pub groups: usize,
+    pub kind: SiteKind,
+}
+
+impl SiteInfo {
+    /// Feature width `H` of the Gram matrix at this site.
+    pub fn feat_width(&self) -> usize {
+        self.units * self.unit_dim
+    }
+}
+
+/// The model-side interface for structured compression.
+///
+/// All methods refer to the *current* state of the model — after
+/// earlier sites have been compressed, later sites' activations come
+/// from the already-compressed prefix (the paper's sequential
+/// closed-loop compensation).
+pub trait Compressible {
+    /// The calibration/evaluation input batch type.
+    type Input;
+
+    /// All compressible sites, in forward order.
+    fn sites(&self) -> Vec<SiteInfo>;
+
+    /// Consumer-input activations at `site` for `input`:
+    /// `[rows, feat_width]` where rows are samples, tokens, or pixels.
+    fn site_activations(&self, input: &Self::Input, site: usize) -> Tensor;
+
+    /// Per-unit producer weight-row norm (`ord` 1 or 2) — magnitude
+    /// selector scores.
+    fn producer_row_norm(&self, site: usize, ord: u8) -> Vec<f32>;
+
+    /// Per-unit producer feature rows `[units, d]` — the clustering
+    /// space for folding (weight rows for channels, flattened query
+    /// blocks for heads).
+    fn producer_features(&self, site: usize) -> Tensor;
+
+    /// Per-*feature* consumer column L2 norms (Wanda/FLAP scoring).
+    fn consumer_col_norms(&self, site: usize) -> Vec<f32>;
+
+    /// The consumer viewed as a matrix `[O_eff, feat_width]` (conv
+    /// consumers are flattened over their spatial taps).
+    fn consumer_matrix(&self, site: usize) -> Tensor;
+
+    /// Apply a reduction plan to `site`, narrowing the producer and
+    /// updating the consumer.
+    fn apply(&mut self, site: usize, plan: &ReductionPlan);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_matrix_is_basis() {
+        let r = Reducer::Select(vec![0, 3]);
+        let m = r.matrix(4);
+        assert_eq!(m.shape(), &[4, 2]);
+        assert_eq!(m.data(), &[1., 0., 0., 0., 0., 0., 0., 1.]);
+        assert_eq!(r.k(), 2);
+    }
+
+    #[test]
+    fn fold_matrix_averages() {
+        let r = Reducer::Fold { assign: vec![0, 0, 1], k: 2 };
+        let m = r.matrix(3);
+        assert_eq!(m.data(), &[0.5, 0., 0.5, 0., 0., 1.]);
+        let n = r.consumer_matrix(3);
+        assert_eq!(n.data(), &[1., 0., 1., 0., 0., 1.]);
+    }
+
+    #[test]
+    fn lift_select() {
+        let r = Reducer::Select(vec![1]);
+        let l = r.lift(3);
+        assert_eq!(l, Reducer::Select(vec![3, 4, 5]));
+    }
+
+    #[test]
+    fn lift_fold() {
+        let r = Reducer::Fold { assign: vec![0, 0], k: 1 };
+        let l = r.lift(2);
+        assert_eq!(l, Reducer::Fold { assign: vec![0, 1, 0, 1], k: 2 });
+    }
+
+    #[test]
+    fn lift_identity_when_dh1() {
+        let r = Reducer::Select(vec![0, 2]);
+        assert_eq!(r.lift(1), r);
+    }
+
+    #[test]
+    fn lifted_matrix_is_kronecker() {
+        // (R ⊗ I_dh) check on a fold.
+        let r = Reducer::Fold { assign: vec![0, 1, 0], k: 2 };
+        let dh = 2;
+        let m_units = r.matrix(3);
+        let m_feat = r.lift(dh).matrix(6);
+        for hu in 0..3 {
+            for ku in 0..2 {
+                for a in 0..dh {
+                    for b in 0..dh {
+                        let want = if a == b { m_units.at2(hu, ku) } else { 0.0 };
+                        assert_eq!(m_feat.at2(hu * dh + a, ku * dh + b), want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn site_feat_width() {
+        let s = SiteInfo {
+            id: "b0.attn".into(),
+            units: 8,
+            unit_dim: 16,
+            groups: 4,
+            kind: SiteKind::AttnHeads,
+        };
+        assert_eq!(s.feat_width(), 128);
+    }
+}

@@ -1,0 +1,246 @@
+//! Structured pruning selectors (paper §3.1: "the selection step is
+//! method-agnostic").
+//!
+//! All selectors reduce to a per-unit score; the top `K` units are
+//! kept. Scores may use producer weight norms (magnitude), calibration
+//! activation statistics (Gram diagonal), consumer weight norms, or
+//! their product (structured Wanda: `|W|·‖X‖`).
+
+use super::{Reducer, SiteInfo};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Available pruning criteria.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selector {
+    /// Producer weight-row L1 norm.
+    MagnitudeL1,
+    /// Producer weight-row L2 norm.
+    MagnitudeL2,
+    /// Structured Wanda: activation norm × consumer column norm,
+    /// aggregated per unit.
+    Wanda,
+    /// Gram-based selection: per-unit activation energy `Σ G_jj`.
+    GramDiag,
+    /// Uniform random (the fig. 6 baseline).
+    Random,
+}
+
+impl Selector {
+    /// Parse a CLI/config name.
+    pub fn from_name(s: &str) -> Option<Selector> {
+        Some(match s {
+            "mag-l1" | "l1" => Selector::MagnitudeL1,
+            "mag-l2" | "l2" => Selector::MagnitudeL2,
+            "wanda" => Selector::Wanda,
+            "gram" => Selector::GramDiag,
+            "random" => Selector::Random,
+            _ => return None,
+        })
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Selector::MagnitudeL1 => "mag-l1",
+            Selector::MagnitudeL2 => "mag-l2",
+            Selector::Wanda => "wanda",
+            Selector::GramDiag => "gram",
+            Selector::Random => "random",
+        }
+    }
+}
+
+/// Everything a selector may consult. Feature-level vectors have
+/// length `site.feat_width()`; producer norms are per unit.
+pub struct ScoreInputs<'a> {
+    pub site: &'a SiteInfo,
+    /// Producer row norms per unit (L1).
+    pub producer_l1: &'a [f32],
+    /// Producer row norms per unit (L2).
+    pub producer_l2: &'a [f32],
+    /// Gram diagonal per feature (`‖X_j‖²` over the calibration set).
+    pub gram_diag: &'a [f32],
+    /// Consumer column L2 norms per feature.
+    pub consumer_cols: &'a [f32],
+}
+
+/// Per-unit scores for a selector (higher = keep).
+pub fn unit_scores(sel: Selector, inp: &ScoreInputs, rng: &mut Pcg64) -> Vec<f32> {
+    let units = inp.site.units;
+    let dh = inp.site.unit_dim;
+    match sel {
+        Selector::MagnitudeL1 => inp.producer_l1.to_vec(),
+        Selector::MagnitudeL2 => inp.producer_l2.to_vec(),
+        Selector::Wanda => {
+            assert_eq!(inp.gram_diag.len(), units * dh, "gram diag length");
+            assert_eq!(inp.consumer_cols.len(), units * dh, "consumer col length");
+            (0..units)
+                .map(|u| {
+                    (0..dh)
+                        .map(|j| {
+                            let f = u * dh + j;
+                            inp.gram_diag[f].max(0.0).sqrt() * inp.consumer_cols[f]
+                        })
+                        .sum()
+                })
+                .collect()
+        }
+        Selector::GramDiag => {
+            assert_eq!(inp.gram_diag.len(), units * dh, "gram diag length");
+            (0..units)
+                .map(|u| (0..dh).map(|j| inp.gram_diag[u * dh + j]).sum())
+                .collect()
+        }
+        Selector::Random => (0..units).map(|_| rng.next_f32()).collect(),
+    }
+}
+
+/// Keep the `k` highest-scoring units (indices sorted ascending).
+pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    assert!(k >= 1 && k <= scores.len(), "top_k: k={k} of {}", scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    let mut keep = idx[..k].to_vec();
+    keep.sort_unstable();
+    keep
+}
+
+/// Group-aware top-k: keep `k_total / groups` units per group (the
+/// GQA block-diagonal constraint — paper §3.2). `k_total` must be a
+/// multiple of `groups`.
+pub fn top_k_grouped(scores: &[f32], groups: usize, k_total: usize) -> Vec<usize> {
+    assert_eq!(k_total % groups, 0, "grouped selection needs equal per-group counts");
+    assert_eq!(scores.len() % groups, 0, "units must split evenly into groups");
+    let per_group = scores.len() / groups;
+    let keep_per_group = k_total / groups;
+    let mut keep = Vec::with_capacity(k_total);
+    for g in 0..groups {
+        let base = g * per_group;
+        let local = top_k(&scores[base..base + per_group], keep_per_group);
+        keep.extend(local.into_iter().map(|u| base + u));
+    }
+    keep
+}
+
+/// Build a selection reducer for a site: scores units, honours GQA
+/// grouping, returns `Reducer::Select`.
+pub fn select_reducer(
+    sel: Selector,
+    inp: &ScoreInputs,
+    k_units: usize,
+    rng: &mut Pcg64,
+) -> Reducer {
+    let scores = unit_scores(sel, inp, rng);
+    let keep = if inp.site.groups > 1 {
+        top_k_grouped(&scores, inp.site.groups, k_units)
+    } else {
+        top_k(&scores, k_units)
+    };
+    Reducer::Select(keep)
+}
+
+/// The Gram diagonal of an activation statistics matrix, as a vector.
+pub fn gram_diag(g: &Tensor) -> Vec<f32> {
+    (0..g.dim(0)).map(|i| g.at2(i, i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SiteKind;
+
+    fn site(units: usize, dh: usize, groups: usize) -> SiteInfo {
+        SiteInfo { id: "t".into(), units, unit_dim: dh, groups, kind: SiteKind::Dense }
+    }
+
+    #[test]
+    fn top_k_orders_and_sorts() {
+        let s = [0.1f32, 5.0, 3.0, 4.0];
+        assert_eq!(top_k(&s, 2), vec![1, 3]);
+        assert_eq!(top_k(&s, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn top_k_ties_break_by_index() {
+        let s = [1.0f32, 1.0, 1.0];
+        assert_eq!(top_k(&s, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn grouped_respects_groups() {
+        // 2 groups of 3; best units are all in group 0, but selection
+        // must keep 1 per group.
+        let s = [9.0f32, 8.0, 7.0, 0.3, 0.1, 0.2];
+        let keep = top_k_grouped(&s, 2, 2);
+        assert_eq!(keep, vec![0, 3]);
+    }
+
+    #[test]
+    fn wanda_scores_combine_both_signals() {
+        let st = site(2, 1, 1);
+        // unit 0: big weights, tiny activations. unit 1: the reverse.
+        let inp = ScoreInputs {
+            site: &st,
+            producer_l1: &[10.0, 1.0],
+            producer_l2: &[10.0, 1.0],
+            gram_diag: &[0.01, 100.0],
+            consumer_cols: &[1.0, 1.0],
+        };
+        let mut rng = Pcg64::seed(0);
+        let mag = unit_scores(Selector::MagnitudeL1, &inp, &mut rng);
+        let wanda = unit_scores(Selector::Wanda, &inp, &mut rng);
+        assert!(mag[0] > mag[1]);
+        assert!(wanda[1] > wanda[0], "wanda must weigh activations");
+    }
+
+    #[test]
+    fn head_level_aggregation() {
+        let st = site(2, 2, 1); // 2 heads × 2 features
+        let inp = ScoreInputs {
+            site: &st,
+            producer_l1: &[0.0, 0.0],
+            producer_l2: &[0.0, 0.0],
+            gram_diag: &[1.0, 1.0, 3.0, 5.0],
+            consumer_cols: &[1.0, 1.0, 1.0, 1.0],
+        };
+        let mut rng = Pcg64::seed(0);
+        let s = unit_scores(Selector::GramDiag, &inp, &mut rng);
+        assert_eq!(s, vec![2.0, 8.0]);
+    }
+
+    #[test]
+    fn random_selection_is_seeded() {
+        let st = site(8, 1, 1);
+        let inp = ScoreInputs {
+            site: &st,
+            producer_l1: &[0.0; 8],
+            producer_l2: &[0.0; 8],
+            gram_diag: &[0.0; 8],
+            consumer_cols: &[0.0; 8],
+        };
+        let a = select_reducer(Selector::Random, &inp, 3, &mut Pcg64::seed(5));
+        let b = select_reducer(Selector::Random, &inp, 3, &mut Pcg64::seed(5));
+        assert_eq!(a, b);
+        if let Reducer::Select(keep) = a {
+            assert_eq!(keep.len(), 3);
+            assert!(keep.windows(2).all(|w| w[0] < w[1]));
+        } else {
+            panic!("expected selection");
+        }
+    }
+
+    #[test]
+    fn selector_names_roundtrip() {
+        for s in [
+            Selector::MagnitudeL1,
+            Selector::MagnitudeL2,
+            Selector::Wanda,
+            Selector::GramDiag,
+            Selector::Random,
+        ] {
+            assert_eq!(Selector::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Selector::from_name("bogus"), None);
+    }
+}

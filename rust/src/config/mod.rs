@@ -1,0 +1,335 @@
+//! TOML-subset configuration parser (no `serde`/`toml` offline).
+//!
+//! Supports the subset the launcher needs: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float
+//! / boolean / homogeneous-array values, `#` comments. Values are kept
+//! as typed [`Value`]s in a flat `section.key` map with typed accessors
+//! and helpful errors.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+            Value::Array(_) => "array",
+        }
+    }
+}
+
+/// Flat `section.key -> Value` configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            map.insert(full, val);
+        }
+        Ok(Config { map })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path}"))
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    /// All keys (sorted).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Set/override a value (used to apply CLI overrides on top).
+    pub fn set(&mut self, key: &str, v: Value) {
+        self.map.insert(key.to_string(), v);
+    }
+
+    /// Typed accessor: string.
+    pub fn str(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Ok(s),
+            Some(v) => bail!("{key}: expected string, found {}", v.type_name()),
+            None => bail!("missing config key `{key}`"),
+        }
+    }
+
+    /// Typed accessor: integer (as usize).
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        match self.get(key) {
+            Some(Value::Int(i)) if *i >= 0 => Ok(*i as usize),
+            Some(Value::Int(i)) => bail!("{key}: negative integer {i}"),
+            Some(v) => bail!("{key}: expected integer, found {}", v.type_name()),
+            None => bail!("missing config key `{key}`"),
+        }
+    }
+
+    /// Typed accessor: float (integers coerce).
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        match self.get(key) {
+            Some(Value::Float(f)) => Ok(*f),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(v) => bail!("{key}: expected float, found {}", v.type_name()),
+            None => bail!("missing config key `{key}`"),
+        }
+    }
+
+    /// Typed accessor: bool.
+    pub fn bool(&self, key: &str) -> Result<bool> {
+        match self.get(key) {
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(v) => bail!("{key}: expected boolean, found {}", v.type_name()),
+            None => bail!("missing config key `{key}`"),
+        }
+    }
+
+    /// Typed accessor: array of floats (ints coerce).
+    pub fn f64_array(&self, key: &str) -> Result<Vec<f64>> {
+        match self.get(key) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Float(f) => Ok(*f),
+                    Value::Int(i) => Ok(*i as f64),
+                    other => bail!("{key}: array element is {}", other.type_name()),
+                })
+                .collect(),
+            Some(v) => bail!("{key}: expected array, found {}", v.type_name()),
+            None => bail!("missing config key `{key}`"),
+        }
+    }
+
+    /// Typed accessor: array of strings.
+    pub fn str_array(&self, key: &str) -> Result<Vec<String>> {
+        match self.get(key) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Str(s) => Ok(s.clone()),
+                    other => bail!("{key}: array element is {}", other.type_name()),
+                })
+                .collect(),
+            Some(v) => bail!("{key}: expected array, found {}", v.type_name()),
+            None => bail!("missing config key `{key}`"),
+        }
+    }
+
+    /// Accessor with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.usize(key).unwrap_or(default)
+    }
+
+    /// Accessor with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.f64(key).unwrap_or(default)
+    }
+
+    /// Accessor with default.
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("unterminated string: {s}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array: {s}");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: `{s}`")
+}
+
+/// Split on commas that are not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+name = "grail"      # trailing comment
+threads = 4
+
+[model]
+kind = "tinylm"
+layers = 4
+dropout = 0.0
+gqa = true
+ratios = [0.1, 0.2, 0.5]
+tags = ["a", "b"]
+
+[model.attn]
+heads = 8
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name").unwrap(), "grail");
+        assert_eq!(c.usize("threads").unwrap(), 4);
+        assert_eq!(c.str("model.kind").unwrap(), "tinylm");
+        assert_eq!(c.usize("model.layers").unwrap(), 4);
+        assert_eq!(c.f64("model.dropout").unwrap(), 0.0);
+        assert!(c.bool("model.gqa").unwrap());
+        assert_eq!(c.f64_array("model.ratios").unwrap(), vec![0.1, 0.2, 0.5]);
+        assert_eq!(c.str_array("model.tags").unwrap(), vec!["a", "b"]);
+        assert_eq!(c.usize("model.attn.heads").unwrap(), 8);
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.f64("x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn missing_and_wrong_type_errors() {
+        let c = Config::parse("x = 3").unwrap();
+        assert!(c.str("x").is_err());
+        assert!(c.usize("nope").is_err());
+        assert_eq!(c.usize_or("nope", 7), 7);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse(r##"s = "a # b""##).unwrap();
+        assert_eq!(c.str("s").unwrap(), "a # b");
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = ").is_err());
+        assert!(Config::parse("x = [1, 2").is_err());
+        assert!(Config::parse("x = \"abc").is_err());
+    }
+
+    #[test]
+    fn override_set() {
+        let mut c = Config::parse("a = 1").unwrap();
+        c.set("a", Value::Int(9));
+        assert_eq!(c.usize("a").unwrap(), 9);
+    }
+}

@@ -1,0 +1,75 @@
+//! `grail datagen` — materialize the canonical synthetic datasets.
+//!
+//! Rust is the single source of truth for data; the Python training
+//! step reads these exact files, so there is no cross-language
+//! generator drift (DESIGN.md §2).
+
+use super::paths::Artifacts;
+use crate::data::{io, SynthText, SynthVision, TextSplit};
+use anyhow::{Context, Result};
+
+/// The fixed task seed: all experiments share one data distribution.
+pub const TASK_SEED: u64 = 42;
+
+/// Sizes of the generated splits.
+pub const VISION_TRAIN: usize = 4096;
+pub const VISION_TEST: usize = 1024;
+pub const VISION_CALIB: usize = 512;
+pub const TEXT_TRAIN: usize = 200_000;
+pub const TEXT_CALIB: usize = 40_000;
+pub const TEXT_EVAL: usize = 30_000;
+
+/// Write every dataset under `artifacts/data/`. Idempotent.
+pub fn generate_all(art: &Artifacts, log: &mut dyn FnMut(&str)) -> Result<()> {
+    std::fs::create_dir_all(art.data_dir()).context("creating data dir")?;
+
+    // One task (one set of class prototypes); disjoint sample streams
+    // per split.
+    let vision = SynthVision::new(TASK_SEED);
+    for (name, n, split) in [
+        ("vision_train", VISION_TRAIN, 0u64),
+        ("vision_test", VISION_TEST, 1),
+        ("vision_calib", VISION_CALIB, 2),
+    ] {
+        let set = vision.generate_split(n, split);
+        let path = art.data(&format!("{name}.imgs"));
+        io::write_images(&path, &set)?;
+        log(&format!("wrote {path} ({n} images)"));
+    }
+
+    let text = SynthText::new(TASK_SEED);
+    for split in TextSplit::ALL {
+        let n = match split {
+            TextSplit::Train => TEXT_TRAIN,
+            TextSplit::Calib => TEXT_CALIB,
+            _ => TEXT_EVAL,
+        };
+        let ts = text.generate(split, n);
+        let path = art.data(&format!("text_{}.tokens", split.name()));
+        io::write_tokens(&path, &ts)?;
+        log(&format!("wrote {path} ({n} tokens)"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_and_reloads() {
+        let dir = std::env::temp_dir().join("grail_datagen_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let art = Artifacts::at(dir.to_str().unwrap());
+        let mut msgs = Vec::new();
+        generate_all(&art, &mut |m| msgs.push(m.to_string())).unwrap();
+        assert_eq!(msgs.len(), 8);
+        let v = crate::data::io::read_images(&art.data("vision_test.imgs")).unwrap();
+        assert_eq!(v.len(), VISION_TEST);
+        let t = crate::data::io::read_tokens(&art.data("text_ptbs.tokens")).unwrap();
+        assert_eq!(t.tokens.len(), TEXT_EVAL);
+        assert!(art.has_data());
+        // Idempotent.
+        generate_all(&art, &mut |_| {}).unwrap();
+    }
+}

@@ -1,0 +1,128 @@
+//! Wall-clock and memory metrics (regenerates paper Table 3's
+//! calibration/compensation overhead numbers).
+
+use std::time::Instant;
+
+/// A named stage timer with peak-RSS deltas.
+#[derive(Debug, Clone)]
+pub struct StageMetrics {
+    pub name: String,
+    pub seconds: f64,
+    /// Peak resident set (MiB) observed at stage end.
+    pub peak_rss_mib: f64,
+}
+
+/// Current peak resident set size in MiB (`VmHWM` from
+/// `/proc/self/status`; 0.0 if unavailable).
+pub fn peak_rss_mib() -> f64 {
+    let Ok(text) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// Current resident set size in MiB (`VmRSS`).
+pub fn rss_mib() -> f64 {
+    let Ok(text) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// Time a closure, returning `(result, StageMetrics)`.
+pub fn timed<T>(name: &str, f: impl FnOnce() -> T) -> (T, StageMetrics) {
+    let t0 = Instant::now();
+    let out = f();
+    let m = StageMetrics {
+        name: name.to_string(),
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_rss_mib: peak_rss_mib(),
+    };
+    (out, m)
+}
+
+/// A registry collecting stage metrics across an experiment run.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    pub stages: Vec<StageMetrics>,
+}
+
+impl MetricsRegistry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, m) = timed(name, f);
+        self.stages.push(m);
+        out
+    }
+
+    /// Sum of seconds for stages whose name starts with `prefix`.
+    pub fn total_seconds(&self, prefix: &str) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.name.starts_with(prefix))
+            .map(|s| s.seconds)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(rss_mib() > 1.0);
+        assert!(peak_rss_mib() >= rss_mib() * 0.5);
+    }
+
+    #[test]
+    fn timed_measures() {
+        let (v, m) = timed("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(12));
+            7
+        });
+        assert_eq!(v, 7);
+        assert!(m.seconds >= 0.010, "{}", m.seconds);
+    }
+
+    #[test]
+    fn registry_accumulates() {
+        let mut r = MetricsRegistry::new();
+        r.time("calib.a", || ());
+        r.time("calib.b", || ());
+        r.time("comp.a", || ());
+        assert_eq!(r.stages.len(), 3);
+        assert!(r.total_seconds("calib") >= 0.0);
+        assert_eq!(
+            r.stages.iter().filter(|s| s.name.starts_with("comp")).count(),
+            1
+        );
+    }
+}

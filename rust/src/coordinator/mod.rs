@@ -1,0 +1,19 @@
+//! The L3 coordinator: artifact layout, data generation, checkpoint
+//! zoo loading, job scheduling, and metrics.
+//!
+//! The coordinator owns the process lifecycle: `grail datagen` writes
+//! the canonical datasets (Python trains from the same files at build
+//! time), `grail exp <id>` schedules experiment grids over worker
+//! threads, and [`metrics`] records the wall-clock/memory numbers that
+//! regenerate paper Table 3.
+
+pub mod datagen;
+pub mod metrics;
+pub mod paths;
+pub mod scheduler;
+pub mod zoo;
+
+pub use datagen::generate_all;
+pub use paths::Artifacts;
+pub use scheduler::{run_grid, GridResult};
+pub use zoo::Zoo;

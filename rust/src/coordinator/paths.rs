@@ -1,0 +1,88 @@
+//! Artifact directory layout shared with the Python build step.
+
+use anyhow::{ensure, Result};
+use std::path::{Path, PathBuf};
+
+/// Resolved locations of everything `make artifacts` produces.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub root: PathBuf,
+}
+
+impl Artifacts {
+    /// Use an explicit artifacts root.
+    pub fn at(root: &str) -> Self {
+        Artifacts { root: PathBuf::from(root) }
+    }
+
+    /// Default root: `$GRAIL_ARTIFACTS` or `./artifacts`.
+    pub fn default_root() -> Self {
+        let root = std::env::var("GRAIL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Artifacts { root: PathBuf::from(root) }
+    }
+
+    /// `artifacts/data/`.
+    pub fn data_dir(&self) -> PathBuf {
+        self.root.join("data")
+    }
+
+    /// `artifacts/checkpoints/`.
+    pub fn ckpt_dir(&self) -> PathBuf {
+        self.root.join("checkpoints")
+    }
+
+    /// `artifacts/hlo/`.
+    pub fn hlo_dir(&self) -> PathBuf {
+        self.root.join("hlo")
+    }
+
+    /// Path of a data file.
+    pub fn data(&self, name: &str) -> String {
+        self.data_dir().join(name).to_string_lossy().into_owned()
+    }
+
+    /// Path of a checkpoint bundle.
+    pub fn ckpt(&self, name: &str) -> String {
+        self.ckpt_dir().join(format!("{name}.wbin")).to_string_lossy().into_owned()
+    }
+
+    /// Path of an HLO computation.
+    pub fn hlo(&self, name: &str) -> String {
+        self.hlo_dir().join(format!("{name}.hlo.txt")).to_string_lossy().into_owned()
+    }
+
+    /// Error out with a helpful message if the build step hasn't run.
+    pub fn ensure_ready(&self) -> Result<()> {
+        ensure!(
+            Path::new(&self.ckpt("tinylm_mha")).exists(),
+            "artifacts missing at {:?} — run `make artifacts` first",
+            self.root
+        );
+        Ok(())
+    }
+
+    /// Whether the datagen outputs exist.
+    pub fn has_data(&self) -> bool {
+        Path::new(&self.data("vision_train.imgs")).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_paths() {
+        let a = Artifacts::at("/tmp/x");
+        assert_eq!(a.data("t.imgs"), "/tmp/x/data/t.imgs");
+        assert_eq!(a.ckpt("m"), "/tmp/x/checkpoints/m.wbin");
+        assert_eq!(a.hlo("f"), "/tmp/x/hlo/f.hlo.txt");
+    }
+
+    #[test]
+    fn missing_artifacts_reported() {
+        let a = Artifacts::at("/definitely/not/here");
+        let err = a.ensure_ready().unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

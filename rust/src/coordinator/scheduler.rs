@@ -1,0 +1,94 @@
+//! Work scheduling for experiment grids.
+//!
+//! Experiment sweeps (checkpoints × methods × ratios) are embarrassingly
+//! parallel; [`run_grid`] fans the job list over scoped worker threads
+//! (std::thread — no tokio in the offline build) with a shared atomic
+//! cursor, preserving input order in the output.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One grid cell result.
+#[derive(Debug, Clone)]
+pub struct GridResult<T> {
+    pub index: usize,
+    pub value: T,
+}
+
+/// Run `jobs` through `worker` on `threads` scoped threads. Results
+/// come back sorted by job index. Panics in workers propagate.
+pub fn run_grid<J, T, F>(jobs: Vec<J>, threads: usize, worker: F) -> Vec<T>
+where
+    J: Send + Sync,
+    T: Send,
+    F: Fn(usize, &J) -> T + Sync,
+{
+    let n = jobs.len();
+    let threads = threads.clamp(1, n.max(1));
+    let cursor = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    let jobs_ref = &jobs;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = worker(i, &jobs_ref[i]);
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker completed"))
+        .collect()
+}
+
+/// Worker-thread count: `GRAIL_THREADS` env or available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("GRAIL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<usize> = (0..50).collect();
+        let out = run_grid(jobs, 4, |_, &j| j * 2);
+        assert_eq!(out, (0..50).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let out = run_grid(vec![1, 2, 3], 1, |i, &j| i + j);
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let out: Vec<i32> = run_grid(Vec::<i32>::new(), 4, |_, &j| j);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_jobs() {
+        let out = run_grid(vec![7], 16, |_, &j| j);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,97 @@
+//! Checkpoint-zoo loading: the trained `.wbin` bundles written by the
+//! Python build step, instantiated as Rust models.
+
+use super::paths::Artifacts;
+use crate::nn::models::{LmConfig, MiniResNet, MlpNet, TinyLm, TinyViT, VitConfig};
+use crate::nn::weights::WeightBundle;
+use anyhow::{Context, Result};
+
+/// Lazy handle over the artifacts directory.
+pub struct Zoo {
+    art: Artifacts,
+}
+
+impl Zoo {
+    /// Open the zoo (errors if `make artifacts` has not run).
+    pub fn open(art: Artifacts) -> Result<Zoo> {
+        art.ensure_ready()?;
+        Ok(Zoo { art })
+    }
+
+    /// Checkpoint names of a family present on disk (`mlp`, `resnet`,
+    /// `vit`, `tinylm`).
+    pub fn list(&self, family: &str) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(dir) = std::fs::read_dir(self.art.ckpt_dir()) {
+            for e in dir.flatten() {
+                let f = e.file_name().to_string_lossy().into_owned();
+                if let Some(stem) = f.strip_suffix(".wbin") {
+                    if stem.starts_with(family) {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+
+    fn bundle(&self, name: &str) -> Result<WeightBundle> {
+        WeightBundle::load(&self.art.ckpt(name)).with_context(|| format!("loading {name}"))
+    }
+
+    /// Load an MLP checkpoint.
+    pub fn mlp(&self, name: &str) -> Result<MlpNet> {
+        MlpNet::from_bundle(&self.bundle(name)?)
+    }
+
+    /// Load a MiniResNet checkpoint.
+    pub fn resnet(&self, name: &str) -> Result<MiniResNet> {
+        MiniResNet::from_bundle(&self.bundle(name)?)
+    }
+
+    /// Load a TinyViT checkpoint.
+    pub fn vit(&self, name: &str) -> Result<TinyViT> {
+        TinyViT::from_bundle(&self.bundle(name)?, VitConfig::default())
+    }
+
+    /// Load a TinyLm checkpoint (`tinylm_mha` / `tinylm_gqa`).
+    pub fn lm(&self, name: &str) -> Result<TinyLm> {
+        let cfg = if name.contains("gqa") { LmConfig::gqa() } else { LmConfig::default() };
+        TinyLm::from_bundle(&self.bundle(name)?, cfg)
+    }
+
+    /// The artifacts handle.
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.art
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Zoo loading against real artifacts is exercised by
+    // rust/tests/integration.rs (requires `make artifacts`). Here we
+    // only test the no-artifacts error path and name listing logic.
+    #[test]
+    fn open_without_artifacts_errors() {
+        let art = Artifacts::at("/nonexistent/zoo");
+        assert!(Zoo::open(art).is_err());
+    }
+
+    #[test]
+    fn list_scans_wbin_files() {
+        let dir = std::env::temp_dir().join("grail_zoo_test");
+        let ck = dir.join("checkpoints");
+        std::fs::create_dir_all(&ck).unwrap();
+        std::fs::write(ck.join("mlp_seed0.wbin"), b"x").unwrap();
+        std::fs::write(ck.join("mlp_seed1.wbin"), b"x").unwrap();
+        std::fs::write(ck.join("resnet_seed0.wbin"), b"x").unwrap();
+        std::fs::write(ck.join("notes.txt"), b"x").unwrap();
+        let zoo = Zoo { art: Artifacts::at(dir.to_str().unwrap()) };
+        assert_eq!(zoo.list("mlp"), vec!["mlp_seed0", "mlp_seed1"]);
+        assert_eq!(zoo.list("resnet"), vec!["resnet_seed0"]);
+        assert!(zoo.list("vit").is_empty());
+    }
+}

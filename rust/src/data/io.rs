@@ -1,0 +1,177 @@
+//! Binary interchange formats between the Rust coordinator and the
+//! build-time Python layer. All little-endian, versioned by magic.
+//!
+//! - `GRTK` token streams (`*.tokens`): u32 magic, u32 vocab, u64 len,
+//!   u16 tokens.
+//! - `GRIM` image sets (`*.imgs`): u32 magic, u32 n/c/h/w, f32 images
+//!   (n·c·h·w, CHW), u16 labels (n).
+//! - `GRWB` weight bundles (`*.wbin`): u32 magic, u32 version, u32
+//!   count, then per tensor: u32 name_len, name bytes, u32 ndim, u32
+//!   dims…, f32 data. (Readers/writers for this live in
+//!   [`crate::nn::weights`].)
+
+use super::{TokenSet, VisionSet};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+pub const MAGIC_TOKENS: u32 = 0x4752_544B; // "GRTK"
+pub const MAGIC_IMAGES: u32 = 0x4752_494D; // "GRIM"
+
+fn w_u32(out: &mut impl Write, v: u32) -> Result<()> {
+    out.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64(out: &mut impl Write, v: u64) -> Result<()> {
+    out.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn r_u32(inp: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    inp.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(inp: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    inp.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Write a token stream.
+pub fn write_tokens(path: &str, t: &TokenSet) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
+    );
+    w_u32(&mut f, MAGIC_TOKENS)?;
+    w_u32(&mut f, t.vocab as u32)?;
+    w_u64(&mut f, t.tokens.len() as u64)?;
+    let mut buf = Vec::with_capacity(t.tokens.len() * 2);
+    for &tok in &t.tokens {
+        buf.extend_from_slice(&tok.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read a token stream.
+pub fn read_tokens(path: &str) -> Result<TokenSet> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path}"))?,
+    );
+    if r_u32(&mut f)? != MAGIC_TOKENS {
+        bail!("{path}: not a GRTK token file");
+    }
+    let vocab = r_u32(&mut f)? as usize;
+    let len = r_u64(&mut f)? as usize;
+    let mut buf = vec![0u8; len * 2];
+    f.read_exact(&mut buf).with_context(|| format!("{path}: truncated token data"))?;
+    let tokens: Vec<u16> =
+        buf.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+    for &t in &tokens {
+        if t as usize >= vocab {
+            bail!("{path}: token {t} out of vocab {vocab}");
+        }
+    }
+    Ok(TokenSet { tokens, vocab })
+}
+
+/// Write an image set.
+pub fn write_images(path: &str, v: &VisionSet) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
+    );
+    let (c, h, w) = v.chw;
+    w_u32(&mut f, MAGIC_IMAGES)?;
+    w_u32(&mut f, v.len() as u32)?;
+    w_u32(&mut f, c as u32)?;
+    w_u32(&mut f, h as u32)?;
+    w_u32(&mut f, w as u32)?;
+    let mut buf = Vec::with_capacity(v.x.len() * 4);
+    for &val in v.x.data() {
+        buf.extend_from_slice(&val.to_le_bytes());
+    }
+    for &y in &v.y {
+        buf.extend_from_slice(&y.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read an image set.
+pub fn read_images(path: &str) -> Result<VisionSet> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path}"))?,
+    );
+    if r_u32(&mut f)? != MAGIC_IMAGES {
+        bail!("{path}: not a GRIM image file");
+    }
+    let n = r_u32(&mut f)? as usize;
+    let c = r_u32(&mut f)? as usize;
+    let h = r_u32(&mut f)? as usize;
+    let w = r_u32(&mut f)? as usize;
+    let d = c * h * w;
+    let mut buf = vec![0u8; n * d * 4];
+    f.read_exact(&mut buf).with_context(|| format!("{path}: truncated image data"))?;
+    let x: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let mut lbuf = vec![0u8; n * 2];
+    f.read_exact(&mut lbuf).with_context(|| format!("{path}: truncated labels"))?;
+    let y: Vec<u16> = lbuf.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])).collect();
+    Ok(VisionSet { x: Tensor::from_vec(&[n, d], x), y, chw: (c, h, w) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthText, SynthVision, TextSplit};
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("grail_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn tokens_roundtrip() {
+        let t = SynthText::new(1).generate(TextSplit::C4s, 777);
+        let p = tmp("t.tokens");
+        write_tokens(&p, &t).unwrap();
+        let r = read_tokens(&p).unwrap();
+        assert_eq!(r.tokens, t.tokens);
+        assert_eq!(r.vocab, t.vocab);
+    }
+
+    #[test]
+    fn images_roundtrip() {
+        let v = SynthVision::new(2).generate(13);
+        let p = tmp("v.imgs");
+        write_images(&p, &v).unwrap();
+        let r = read_images(&p).unwrap();
+        assert_eq!(r.x, v.x);
+        assert_eq!(r.y, v.y);
+        assert_eq!(r.chw, v.chw);
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"XXXXYYYYZZZZ").unwrap();
+        assert!(read_tokens(&p).is_err());
+        assert!(read_images(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let t = SynthText::new(1).generate(TextSplit::C4s, 100);
+        let p = tmp("trunc.tokens");
+        write_tokens(&p, &t).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() / 2]).unwrap();
+        assert!(read_tokens(&p).is_err());
+    }
+}

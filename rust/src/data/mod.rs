@@ -1,0 +1,98 @@
+//! Synthetic datasets (the repro substitutes for CIFAR-10/ImageNet and
+//! C4/WikiText-2/PTB — see DESIGN.md §2).
+//!
+//! Rust is the *single source of truth* for data: `grail datagen`
+//! writes the corpora under `artifacts/data/`, the build-time Python
+//! training step reads the same binary files, and all experiments load
+//! them back here. This avoids any cross-language generator drift.
+
+pub mod io;
+pub mod text;
+pub mod vision;
+
+pub use text::{SynthText, TextSplit};
+pub use vision::{SynthVision, VisionBatch};
+
+use crate::tensor::Tensor;
+
+/// A labelled vision dataset held in memory.
+#[derive(Clone)]
+pub struct VisionSet {
+    /// Images, `[n, c*h*w]` flattened CHW.
+    pub x: Tensor,
+    /// Class labels.
+    pub y: Vec<u16>,
+    /// Channel/height/width.
+    pub chw: (usize, usize, usize),
+}
+
+impl VisionSet {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// A contiguous sub-range as a batch view (copies).
+    pub fn slice(&self, start: usize, n: usize) -> VisionSet {
+        let d = self.x.dim(1);
+        let end = (start + n).min(self.len());
+        let xs = self.x.data()[start * d..end * d].to_vec();
+        VisionSet {
+            x: Tensor::from_vec(&[end - start, d], xs),
+            y: self.y[start..end].to_vec(),
+            chw: self.chw,
+        }
+    }
+}
+
+/// A token stream plus its vocabulary size.
+#[derive(Clone)]
+pub struct TokenSet {
+    pub tokens: Vec<u16>,
+    pub vocab: usize,
+}
+
+impl TokenSet {
+    /// Cut the stream into `[B, T+1]` next-token prediction windows
+    /// (inputs are `[.., :T]`, targets `[.., 1:]`). Returns row-major
+    /// token ids.
+    pub fn windows(&self, seq_len: usize, max_windows: usize) -> Vec<Vec<u16>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + seq_len + 1 <= self.tokens.len() && out.len() < max_windows {
+            out.push(self.tokens[i..i + seq_len + 1].to_vec());
+            i += seq_len;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vision_slice_bounds() {
+        let v = vision::SynthVision::new(3).generate(10);
+        let s = v.slice(7, 5);
+        assert_eq!(s.len(), 3); // clamped to the end
+        assert_eq!(s.x.dim(0), 3);
+    }
+
+    #[test]
+    fn token_windows_shapes() {
+        let ts = TokenSet { tokens: (0..100u16).map(|i| i % 7).collect(), vocab: 7 };
+        let w = ts.windows(16, 100);
+        assert!(!w.is_empty());
+        for win in &w {
+            assert_eq!(win.len(), 17);
+        }
+        // Consecutive windows overlap by exactly one token.
+        assert_eq!(w[0][16], w[1][0]);
+    }
+}

@@ -1,0 +1,203 @@
+//! SynthText: a seeded stochastic-grammar corpus.
+//!
+//! Stands in for C4 / WikiText-2 / PTB (DESIGN.md §2). Token streams
+//! are sampled from a first-order Markov chain whose transition logits
+//! are drawn from a shared base (so a model trained on the train split
+//! is meaningfully evaluated on all three eval splits) plus a per-split
+//! perturbation and temperature — giving the three splits different
+//! entropies, like the paper's three corpora.
+
+use super::TokenSet;
+use crate::rng::Pcg64;
+
+/// Vocabulary size of the synthetic language.
+pub const VOCAB: usize = 64;
+
+/// The three evaluation splits (named after the corpora they replace)
+/// plus the train/calibration splits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TextSplit {
+    Train,
+    Calib,
+    /// C4 stand-in: same statistics as train.
+    C4s,
+    /// WikiText-2 stand-in: mild perturbation, colder.
+    Wt2s,
+    /// PTB stand-in: stronger perturbation, hotter.
+    Ptbs,
+}
+
+impl TextSplit {
+    /// All splits `grail datagen` materializes.
+    pub const ALL: [TextSplit; 5] =
+        [TextSplit::Train, TextSplit::Calib, TextSplit::C4s, TextSplit::Wt2s, TextSplit::Ptbs];
+
+    /// Stable file-name stem.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TextSplit::Train => "train",
+            TextSplit::Calib => "calib",
+            TextSplit::C4s => "c4s",
+            TextSplit::Wt2s => "wt2s",
+            TextSplit::Ptbs => "ptbs",
+        }
+    }
+
+    /// Parse a stem back into a split.
+    pub fn from_name(s: &str) -> Option<TextSplit> {
+        Self::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    /// (perturbation strength, inverse temperature, stream tag).
+    fn params(&self) -> (f32, f32, u64) {
+        match self {
+            TextSplit::Train => (0.0, 1.0, 1),
+            TextSplit::Calib => (0.0, 1.0, 2),
+            TextSplit::C4s => (0.0, 1.0, 3),
+            TextSplit::Wt2s => (0.15, 1.15, 4),
+            TextSplit::Ptbs => (0.35, 0.9, 5),
+        }
+    }
+}
+
+/// Deterministic generator for the SynthText language.
+pub struct SynthText {
+    seed: u64,
+    base_logits: Vec<f32>, // VOCAB × VOCAB
+}
+
+impl SynthText {
+    /// Build the shared base transition logits for a seed.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg64::seed_stream(seed, 0x7E27_0001);
+        let mut base_logits = vec![0.0f32; VOCAB * VOCAB];
+        for row in 0..VOCAB {
+            // Sparse-ish structure: a handful of preferred successors
+            // per token makes the language genuinely learnable.
+            let strong: Vec<usize> = (0..4).map(|_| rng.below(VOCAB)).collect();
+            for col in 0..VOCAB {
+                let mut l = rng.normal() * 0.4;
+                if strong.contains(&col) {
+                    l += 4.0;
+                }
+                base_logits[row * VOCAB + col] = l;
+            }
+        }
+        SynthText { seed, base_logits }
+    }
+
+    /// Transition probabilities for a split (row-stochastic
+    /// `VOCAB×VOCAB`).
+    pub fn transition(&self, split: TextSplit) -> Vec<f32> {
+        let (eps, beta, tag) = split.params();
+        let mut rng = Pcg64::seed_stream(self.seed, 0x7E27_0100 + tag);
+        let mut probs = vec![0.0f32; VOCAB * VOCAB];
+        for row in 0..VOCAB {
+            let mut mx = f32::NEG_INFINITY;
+            let mut logits = [0.0f32; VOCAB];
+            for col in 0..VOCAB {
+                let l = beta * (self.base_logits[row * VOCAB + col] + eps * rng.normal());
+                logits[col] = l;
+                mx = mx.max(l);
+            }
+            let mut z = 0.0f32;
+            for col in 0..VOCAB {
+                let e = (logits[col] - mx).exp();
+                probs[row * VOCAB + col] = e;
+                z += e;
+            }
+            for col in 0..VOCAB {
+                probs[row * VOCAB + col] /= z;
+            }
+        }
+        probs
+    }
+
+    /// Sample a token stream of length `n` for a split.
+    pub fn generate(&self, split: TextSplit, n: usize) -> TokenSet {
+        let probs = self.transition(split);
+        let (_, _, tag) = split.params();
+        let mut rng = Pcg64::seed_stream(self.seed, 0x7E27_0200 + tag);
+        let mut tokens = Vec::with_capacity(n);
+        let mut cur = rng.below(VOCAB);
+        for _ in 0..n {
+            tokens.push(cur as u16);
+            let row = &probs[cur * VOCAB..(cur + 1) * VOCAB];
+            cur = rng.categorical(row);
+        }
+        TokenSet { tokens, vocab: VOCAB }
+    }
+
+    /// True per-token cross-entropy (nats) of split `b` under the
+    /// transition model of split `a` — an oracle lower bound for model
+    /// perplexity, used by tests.
+    pub fn cross_entropy(&self, model_of: TextSplit, data_from: TextSplit, n: usize) -> f64 {
+        let p_model = self.transition(model_of);
+        let data = self.generate(data_from, n);
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        for w in data.tokens.windows(2) {
+            let (a, b) = (w[0] as usize, w[1] as usize);
+            let p = p_model[a * VOCAB + b].max(1e-12);
+            nll -= (p as f64).ln();
+            count += 1;
+        }
+        nll / count.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = SynthText::new(1).generate(TextSplit::Train, 500);
+        let b = SynthText::new(1).generate(TextSplit::Train, 500);
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn splits_differ_but_share_structure() {
+        let g = SynthText::new(2);
+        // Oracle CE of each split under its own model is below log(V)
+        // (the language is compressible) ...
+        let h_self = g.cross_entropy(TextSplit::C4s, TextSplit::C4s, 20_000);
+        assert!(h_self < (VOCAB as f64).ln() * 0.8, "h_self={h_self}");
+        // ... and the train model transfers to the perturbed splits
+        // better than a uniform model, but pays a transfer penalty
+        // relative to each split's own oracle.
+        for s in [TextSplit::Wt2s, TextSplit::Ptbs] {
+            let h = g.cross_entropy(TextSplit::Train, s, 20_000);
+            assert!(h < (VOCAB as f64).ln(), "{s:?}: {h}");
+            let oracle = g.cross_entropy(s, s, 20_000);
+            assert!(h >= oracle - 1e-9, "{s:?}: transfer {h} below oracle {oracle}");
+        }
+    }
+
+    #[test]
+    fn transition_rows_stochastic() {
+        let g = SynthText::new(3);
+        let p = g.transition(TextSplit::Ptbs);
+        for row in 0..VOCAB {
+            let s: f32 = p[row * VOCAB..(row + 1) * VOCAB].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {row} sums to {s}");
+            assert!(p[row * VOCAB..(row + 1) * VOCAB].iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let t = SynthText::new(4).generate(TextSplit::Wt2s, 1000);
+        assert!(t.tokens.iter().all(|&v| (v as usize) < VOCAB));
+        assert_eq!(t.vocab, VOCAB);
+    }
+
+    #[test]
+    fn split_roundtrip_names() {
+        for s in TextSplit::ALL {
+            assert_eq!(TextSplit::from_name(s.name()), Some(s));
+        }
+        assert_eq!(TextSplit::from_name("bogus"), None);
+    }
+}

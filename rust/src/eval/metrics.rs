@@ -1,0 +1,126 @@
+//! Core evaluation metrics: classification accuracy and language-model
+//! perplexity.
+
+use crate::data::{TokenSet, VisionSet};
+use crate::nn::models::{LmBatch, TinyLm};
+use crate::nn::{argmax_rows, log_softmax_rows};
+use crate::tensor::Tensor;
+
+/// Top-1 accuracy of logits against labels.
+pub fn accuracy_from_logits(logits: &Tensor, labels: &[u16]) -> f64 {
+    assert_eq!(logits.dim(0), labels.len(), "one row per label");
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let pred = argmax_rows(logits);
+    let correct = pred.iter().zip(labels).filter(|(p, y)| **p == **y as usize).count();
+    correct as f64 / labels.len() as f64
+}
+
+/// Accuracy of a vision model (anything exposing `forward`) on a set,
+/// evaluated in mini-batches to bound memory.
+pub fn vision_accuracy<F>(forward: F, set: &VisionSet, batch: usize) -> f64
+where
+    F: Fn(&Tensor) -> Tensor,
+{
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut start = 0;
+    while start < set.len() {
+        let chunk = set.slice(start, batch);
+        let logits = forward(&chunk.x);
+        let pred = argmax_rows(&logits);
+        correct += pred.iter().zip(&chunk.y).filter(|(p, y)| **p == **y as usize).count();
+        total += chunk.len();
+        start += batch;
+    }
+    correct as f64 / total.max(1) as f64
+}
+
+/// Mean negative log-likelihood (nats/token) of a logits matrix
+/// against target ids.
+pub fn nll_from_logits(logits: &Tensor, targets: &[u16]) -> f64 {
+    assert_eq!(logits.dim(0), targets.len());
+    let mut ls = logits.clone();
+    log_softmax_rows(&mut ls);
+    let mut total = 0.0f64;
+    for (i, &t) in targets.iter().enumerate() {
+        total -= ls.at2(i, t as usize) as f64;
+    }
+    total / targets.len().max(1) as f64
+}
+
+/// Perplexity of a TinyLm on a token stream, windowed at `seq_len`,
+/// processed `batch_windows` windows at a time.
+pub fn lm_perplexity(
+    model: &TinyLm,
+    tokens: &TokenSet,
+    seq_len: usize,
+    max_windows: usize,
+    batch_windows: usize,
+) -> f64 {
+    let windows = tokens.windows(seq_len, max_windows);
+    assert!(!windows.is_empty(), "token stream too short for seq_len {seq_len}");
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    for chunk in windows.chunks(batch_windows) {
+        let batch = LmBatch::from_windows(chunk);
+        let logits = model.forward(&batch);
+        total_nll += nll_from_logits(&logits, &batch.targets) * batch.targets.len() as f64;
+        total_tok += batch.targets.len();
+    }
+    (total_nll / total_tok.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthText, TextSplit};
+    use crate::nn::models::LmConfig;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = Tensor::from_vec(&[3, 2], vec![1., 0., 0., 1., 1., 0.]);
+        let acc = accuracy_from_logits(&logits, &[0, 1, 1]);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_accuracy_matches_full() {
+        let mut rng = Pcg64::seed(1);
+        let set = crate::data::SynthVision::new(1).generate(30);
+        let m = crate::nn::models::MlpNet::init(768, 16, 10, &mut rng);
+        let full = accuracy_from_logits(&m.forward(&set.x), &set.y);
+        let batched = vision_accuracy(|x| m.forward(x), &set, 7);
+        assert!((full - batched).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nll_of_uniform_logits_is_log_v() {
+        let logits = Tensor::zeros(&[5, 8]);
+        let nll = nll_from_logits(&logits, &[0, 1, 2, 3, 4]);
+        assert!((nll - (8.0f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn perplexity_of_untrained_lm_near_vocab() {
+        // An untrained model's ppl should be within a small factor of
+        // the vocab size (uniform ≈ 64).
+        let mut rng = Pcg64::seed(2);
+        let m = TinyLm::init(LmConfig { n_layers: 1, ..Default::default() }, &mut rng);
+        let ts = SynthText::new(1).generate(TextSplit::C4s, 600);
+        let ppl = lm_perplexity(&m, &ts, 16, 8, 4);
+        assert!(ppl > 20.0 && ppl < 220.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn perplexity_batching_invariant() {
+        let mut rng = Pcg64::seed(3);
+        let m = TinyLm::init(LmConfig { n_layers: 1, ..Default::default() }, &mut rng);
+        let ts = SynthText::new(2).generate(TextSplit::Wt2s, 600);
+        let a = lm_perplexity(&m, &ts, 16, 8, 1);
+        let b = lm_perplexity(&m, &ts, 16, 8, 8);
+        assert!((a - b).abs() / a < 1e-5, "{a} vs {b}");
+    }
+}

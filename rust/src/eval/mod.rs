@@ -1,0 +1,7 @@
+//! Evaluation: classification accuracy, LM perplexity, and the
+//! zero-shot probe-task suite (the Table 2 substitute).
+
+pub mod metrics;
+pub mod probes;
+
+pub use metrics::{accuracy_from_logits, lm_perplexity, nll_from_logits, vision_accuracy};

@@ -1,0 +1,304 @@
+//! Zero-shot probe tasks — the Table 2 substitute (DESIGN.md §2).
+//!
+//! The paper evaluates pruned LLaMA-2 on six likelihood-ranked
+//! multiple-choice suites (ARC-C/E, HellaSwag, PIQA, BoolQ,
+//! Winogrande). Those corpora don't exist for the synthetic grammar,
+//! so we build six probe tasks with the same *evaluation shape* —
+//! multiple-choice, scored by the model's conditional log-likelihood —
+//! each stressing a different capability of the trained TinyLm.
+
+use crate::data::{SynthText, TextSplit};
+use crate::nn::models::{LmBatch, TinyLm};
+use crate::nn::log_softmax_rows;
+use crate::rng::Pcg64;
+
+/// The six probe tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeTask {
+    /// 4-way next-token cloze (ARC-E analogue).
+    Cloze,
+    /// Real vs token-shuffled sequence (BoolQ-ish acceptability).
+    Accept,
+    /// Real vs resampled 8-token continuation (HellaSwag analogue).
+    Rank,
+    /// Repeated-segment induction: continue the copy (Winogrande-ish).
+    Copy,
+    /// Long-range needle retrieval (PIQA-slot analogue).
+    Retrieve,
+    /// Likely vs unlikely bigram tail (ARC-C analogue).
+    Bigram,
+}
+
+impl ProbeTask {
+    /// All tasks, in Table-2 column order.
+    pub const ALL: [ProbeTask; 6] = [
+        ProbeTask::Cloze,
+        ProbeTask::Accept,
+        ProbeTask::Rank,
+        ProbeTask::Copy,
+        ProbeTask::Retrieve,
+        ProbeTask::Bigram,
+    ];
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProbeTask::Cloze => "cloze",
+            ProbeTask::Accept => "accept",
+            ProbeTask::Rank => "rank",
+            ProbeTask::Copy => "copy",
+            ProbeTask::Retrieve => "retrieve",
+            ProbeTask::Bigram => "bigram",
+        }
+    }
+}
+
+/// One multiple-choice item: pick the candidate continuation with the
+/// highest conditional log-likelihood after `context`.
+#[derive(Clone, Debug)]
+pub struct ProbeItem {
+    pub context: Vec<u16>,
+    pub candidates: Vec<Vec<u16>>,
+    pub answer: usize,
+}
+
+/// Generate `n` items of a task from the grammar (deterministic in
+/// `seed`).
+pub fn probe_items(task: ProbeTask, text: &SynthText, n: usize, seed: u64) -> Vec<ProbeItem> {
+    let mut rng = Pcg64::seed_stream(seed, 0x9B0B + task as u64);
+    let vocab = crate::data::text::VOCAB;
+    let stream = text.generate(TextSplit::C4s, n * 96 + 256).tokens;
+    let probs = text.transition(TextSplit::C4s);
+    let mut items = Vec::with_capacity(n);
+    for i in 0..n {
+        let base = i * 96;
+        let ctx_len = 24;
+        let context: Vec<u16> = stream[base..base + ctx_len].to_vec();
+        let next = stream[base + ctx_len];
+        let item = match task {
+            ProbeTask::Cloze => {
+                // 3 distractors drawn from the *unlikely* successors.
+                let prev = context[ctx_len - 1] as usize;
+                let mut cands = vec![vec![next]];
+                while cands.len() < 4 {
+                    let d = rng.below(vocab) as u16;
+                    if d != next && probs[prev * vocab + d as usize] < 0.02 {
+                        cands.push(vec![d]);
+                    }
+                }
+                shuffle_item(cands, &mut rng)
+            }
+            ProbeTask::Accept => {
+                let real: Vec<u16> = stream[base + ctx_len..base + ctx_len + 8].to_vec();
+                let mut fake = real.clone();
+                rng.shuffle(&mut fake);
+                if fake == real {
+                    fake.rotate_left(1);
+                }
+                shuffle_item(vec![real, fake], &mut rng)
+            }
+            ProbeTask::Rank => {
+                let real: Vec<u16> = stream[base + ctx_len..base + ctx_len + 8].to_vec();
+                // Foil: a real-looking continuation of a *different*
+                // context further along the stream.
+                let foil: Vec<u16> = stream[base + 60..base + 68].to_vec();
+                shuffle_item(vec![real, foil], &mut rng)
+            }
+            ProbeTask::Copy => {
+                // context = [seg, seg[..m]] — the answer continues the
+                // copy; the foil is a grammar-plausible token instead.
+                let seg: Vec<u16> = stream[base..base + 12].to_vec();
+                let m = 6;
+                let mut context: Vec<u16> = seg.clone();
+                context.extend_from_slice(&seg[..m]);
+                let answer_tok = seg[m];
+                let prev = context[context.len() - 1] as usize;
+                let mut foil = answer_tok;
+                for cand in 0..vocab as u16 {
+                    if cand != answer_tok && probs[prev * vocab + cand as usize] > 0.05 {
+                        foil = cand;
+                        break;
+                    }
+                }
+                if foil == answer_tok {
+                    foil = (answer_tok + 1) % vocab as u16;
+                }
+                let cands = shuffle_item(vec![vec![answer_tok], vec![foil]], &mut rng);
+                items.push(ProbeItem {
+                    context,
+                    candidates: cands.0,
+                    answer: cands.1,
+                });
+                continue;
+            }
+            ProbeTask::Retrieve => {
+                // Needle token early in a long context; candidates are
+                // the needle vs a token never seen in context.
+                let needle = stream[base + 1];
+                let context: Vec<u16> = stream[base..base + 40].to_vec();
+                let mut foil = 0u16;
+                for cand in 0..vocab as u16 {
+                    if !context.contains(&cand) {
+                        foil = cand;
+                        break;
+                    }
+                }
+                let cands = shuffle_item(vec![vec![needle], vec![foil]], &mut rng);
+                items.push(ProbeItem { context, candidates: cands.0, answer: cands.1 });
+                continue;
+            }
+            ProbeTask::Bigram => {
+                // Likely bigram tail vs unlikely bigram tail.
+                let prev = context[ctx_len - 1] as usize;
+                let (mut hi, mut hi_p) = (0usize, -1.0f32);
+                let (mut lo, mut lo_p) = (0usize, 2.0f32);
+                for candidate in 0..vocab {
+                    let p = probs[prev * vocab + candidate];
+                    if p > hi_p {
+                        hi_p = p;
+                        hi = candidate;
+                    }
+                    if p < lo_p {
+                        lo_p = p;
+                        lo = candidate;
+                    }
+                }
+                let hi2 = likely_next(&probs, hi, vocab);
+                let lo2 = likely_next(&probs, lo, vocab);
+                shuffle_item(
+                    vec![vec![hi as u16, hi2 as u16], vec![lo as u16, lo2 as u16]],
+                    &mut rng,
+                )
+            }
+        };
+        items.push(ProbeItem { context, candidates: item.0, answer: item.1 });
+    }
+    items
+}
+
+fn likely_next(probs: &[f32], tok: usize, vocab: usize) -> usize {
+    (0..vocab)
+        .max_by(|&a, &b| probs[tok * vocab + a].total_cmp(&probs[tok * vocab + b]))
+        .unwrap_or(0)
+}
+
+/// Shuffle candidates, returning `(candidates, index_of_true_answer)`
+/// (the true answer enters at index 0).
+fn shuffle_item(mut cands: Vec<Vec<u16>>, rng: &mut Pcg64) -> (Vec<Vec<u16>>, usize) {
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    rng.shuffle(&mut order);
+    let answer = order.iter().position(|&o| o == 0).unwrap();
+    let mut out = Vec::with_capacity(cands.len());
+    for &o in &order {
+        out.push(std::mem::take(&mut cands[o]));
+    }
+    (out, answer)
+}
+
+/// Conditional log-likelihood of `continuation` after `context`.
+pub fn continuation_logprob(model: &TinyLm, context: &[u16], continuation: &[u16]) -> f64 {
+    let mut seq: Vec<u16> = context.to_vec();
+    seq.extend_from_slice(continuation);
+    assert!(seq.len() <= model.cfg.max_seq, "probe sequence too long");
+    let t = seq.len() - 1;
+    let batch = LmBatch {
+        inputs: seq[..t].to_vec(),
+        targets: seq[1..].to_vec(),
+        b: 1,
+        t,
+    };
+    let mut logits = model.forward(&batch);
+    log_softmax_rows(&mut logits);
+    // Sum log p of the continuation tokens only.
+    let start = context.len() - 1; // row predicting continuation[0]
+    let mut total = 0.0f64;
+    for (j, &tok) in continuation.iter().enumerate() {
+        total += logits.at2(start + j, tok as usize) as f64;
+    }
+    total
+}
+
+/// Accuracy of a model on a set of probe items.
+pub fn probe_accuracy(model: &TinyLm, items: &[ProbeItem]) -> f64 {
+    let mut correct = 0usize;
+    for item in items {
+        let scores: Vec<f64> = item
+            .candidates
+            .iter()
+            .map(|c| continuation_logprob(model, &item.context, c))
+            .collect();
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if best == item.answer {
+            correct += 1;
+        }
+    }
+    correct as f64 / items.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models::{LmConfig, TinyLm};
+
+    #[test]
+    fn items_are_wellformed_and_deterministic() {
+        let text = SynthText::new(4);
+        for task in ProbeTask::ALL {
+            let a = probe_items(task, &text, 8, 1);
+            let b = probe_items(task, &text, 8, 1);
+            assert_eq!(a.len(), 8, "{task:?}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.context, y.context);
+                assert_eq!(x.answer, y.answer);
+                assert!(x.answer < x.candidates.len());
+                assert!(!x.candidates.is_empty());
+                // All sequences fit the default model context.
+                assert!(x.context.len() + x.candidates[0].len() <= 64);
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_shuffled() {
+        let text = SynthText::new(4);
+        let items = probe_items(ProbeTask::Cloze, &text, 32, 2);
+        let first_answers: Vec<usize> = items.iter().map(|i| i.answer).collect();
+        assert!(first_answers.iter().any(|&a| a != first_answers[0]));
+    }
+
+    #[test]
+    fn continuation_logprob_is_additive() {
+        let mut rng = Pcg64::seed(1);
+        let m = TinyLm::init(LmConfig { n_layers: 1, ..Default::default() }, &mut rng);
+        let ctx = vec![1u16, 2, 3, 4];
+        // log p(a,b|ctx) = log p(a|ctx) + log p(b|ctx,a)
+        let ab = continuation_logprob(&m, &ctx, &[7, 9]);
+        let a = continuation_logprob(&m, &ctx, &[7]);
+        let mut ctx_a = ctx.clone();
+        ctx_a.push(7);
+        let b = continuation_logprob(&m, &ctx_a, &[9]);
+        assert!((ab - (a + b)).abs() < 1e-4, "{ab} vs {}", a + b);
+    }
+
+    #[test]
+    fn untrained_model_near_chance() {
+        let mut rng = Pcg64::seed(2);
+        let m = TinyLm::init(LmConfig { n_layers: 1, ..Default::default() }, &mut rng);
+        let text = SynthText::new(4);
+        let items = probe_items(ProbeTask::Cloze, &text, 24, 3);
+        let acc = probe_accuracy(&m, &items);
+        assert!(acc < 0.8, "untrained acc={acc} suspiciously high");
+    }
+
+    #[test]
+    fn task_names_unique() {
+        let names: std::collections::HashSet<_> =
+            ProbeTask::ALL.iter().map(|t| t.name()).collect();
+        assert_eq!(names.len(), 6);
+    }
+}

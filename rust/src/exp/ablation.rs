@@ -1,0 +1,84 @@
+//! Design-choice ablations (DESIGN.md §5 expected shapes):
+//!
+//! 1. **Ridge scale α** — the paper fixes α ∈ [1e-4, 5e-3]; we sweep
+//!    wider to show the stability plateau and the under/over-
+//!    regularization cliffs.
+//! 2. **Closed vs open loop** — paper §3.2 argues sequential
+//!    re-calibration "prevents error propagation"; the open-loop
+//!    variant freezes all statistics on the dense model.
+
+use super::report::{f, Table};
+use super::ExpOptions;
+use crate::compress::Selector;
+use crate::data::TextSplit;
+use crate::eval::{lm_perplexity, vision_accuracy};
+use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::nn::models::LmBatch;
+use anyhow::Result;
+
+/// Run both ablations.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let zoo = opts.zoo()?;
+    let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
+        .slice(0, 128);
+    let test = crate::data::io::read_images(&opts.artifacts.data("vision_test.imgs"))?
+        .slice(0, if opts.quick { 256 } else { 512 });
+    let resnet = zoo.resnet("resnet_seed0")?;
+    let calib_toks = crate::data::io::read_tokens(&opts.artifacts.data("text_calib.tokens"))?;
+    let lm_calib = LmBatch::from_tokens(&calib_toks, 32, if opts.quick { 64 } else { 128 });
+    let eval_toks = crate::data::io::read_tokens(
+        &opts.artifacts.data(&format!("text_{}.tokens", TextSplit::Wt2s.name())),
+    )?;
+    let lm = zoo.lm("tinylm_mha")?;
+    let eval_windows = if opts.quick { 32 } else { 96 };
+
+    // ---- 1. alpha sweep
+    let alphas: &[f32] = if opts.quick {
+        &[1e-4, 5e-3, 1e-1]
+    } else {
+        &[1e-5, 1e-4, 1e-3, 5e-3, 1e-2, 1e-1, 1.0]
+    };
+    let mut t1 = Table::new(&["alpha", "resnet@0.6 acc", "lm@0.4 ppl"]);
+    for &alpha in alphas {
+        let mut r = resnet.clone();
+        let mut cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.6, true);
+        cfg.alpha = alpha;
+        compress_model(&mut r, &calib.x, &cfg);
+        let acc = vision_accuracy(|x| r.forward(x), &test, 128);
+        let mut m = lm.clone();
+        let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.4, true);
+        cfg.alpha = alpha;
+        compress_model(&mut m, &lm_calib, &cfg);
+        let ppl = lm_perplexity(&m, &eval_toks, 32, eval_windows, 16);
+        t1.row(vec![format!("{alpha:.0e}"), format!("{acc:.4}"), f(ppl)]);
+    }
+    println!("Ablation 1 — ridge scale α:\n{}", t1.render());
+    t1.write_csv(&opts.out_path("ablation_alpha.csv")?)?;
+
+    // ---- 2. closed vs open loop
+    let ratios: &[f64] = if opts.quick { &[0.3, 0.6] } else { &[0.2, 0.4, 0.6, 0.8] };
+    let mut t2 = Table::new(&["ratio", "resnet closed", "resnet open", "lm closed", "lm open"]);
+    for &ratio in ratios {
+        let mut cells = vec![format!("{ratio:.1}")];
+        for closed in [true, false] {
+            let mut r = resnet.clone();
+            let mut cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), ratio, true);
+            cfg.closed_loop = closed;
+            compress_model(&mut r, &calib.x, &cfg);
+            cells.push(format!("{:.4}", vision_accuracy(|x| r.forward(x), &test, 128)));
+        }
+        for closed in [true, false] {
+            let mut m = lm.clone();
+            let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), ratio, true);
+            cfg.closed_loop = closed;
+            compress_model(&mut m, &lm_calib, &cfg);
+            cells.push(f(lm_perplexity(&m, &eval_toks, 32, eval_windows, 16)));
+        }
+        // Reorder: resnet closed/open then lm closed/open.
+        let row = vec![cells[0].clone(), cells[1].clone(), cells[2].clone(), cells[3].clone(), cells[4].clone()];
+        t2.row(row);
+    }
+    println!("Ablation 2 — closed vs open loop:\n{}", t2.render());
+    t2.write_csv(&opts.out_path("ablation_loop.csv")?)?;
+    Ok(())
+}

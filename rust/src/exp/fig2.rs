@@ -1,0 +1,79 @@
+//! Figure 2 — GRAIL on MiniResNet / SynthVision (the ResNet-18 /
+//! CIFAR-10 panels): (a) accuracy vs layer-wise uniform compression
+//! ratio, (b) mean accuracy vs sparsity against REPAIR (with the
+//! uncompressed-oracle line standing in for the paper's 5-epoch
+//! finetuning reference — no training exists in the Rust runtime; see
+//! DESIGN.md §2), (c) relative improvement from GRAIL.
+
+use super::report::{acc, Table};
+use super::vision::{aggregate, ratio_grid, sweep, Family, SweepSpec, Variant};
+use super::ExpOptions;
+use crate::compress::Selector;
+use crate::grail::Method;
+use anyhow::Result;
+
+/// Run the Fig. 2 sweep.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let zoo = opts.zoo()?;
+    let mut ckpts = zoo.list("resnet");
+    if opts.quick {
+        ckpts.truncate(1);
+    } else {
+        ckpts.truncate(4);
+    }
+    anyhow::ensure!(!ckpts.is_empty(), "no resnet checkpoints (run `make artifacts`)");
+
+    // Panels (a) + (c): four reduction methods × {base, grail}.
+    let spec = SweepSpec {
+        family: Family::Resnet,
+        ckpts: ckpts.clone(),
+        methods: vec![
+            Method::Prune(Selector::MagnitudeL1),
+            Method::Prune(Selector::MagnitudeL2),
+            Method::Prune(Selector::Wanda),
+            Method::Fold,
+        ],
+        ratios: ratio_grid(opts.quick),
+        variants: vec![Variant::Base, Variant::Grail],
+        calib_n: 128,
+        test_n: if opts.quick { 256 } else { 512 },
+        seed: opts.seed,
+    };
+    let rows = sweep(opts, &spec)?;
+
+    // Panel (b): REPAIR comparison on one representative selector.
+    let spec_b = SweepSpec {
+        methods: vec![Method::Prune(Selector::MagnitudeL2)],
+        variants: vec![Variant::Repair, Variant::GrailRepair],
+        ckpts,
+        ..spec
+    };
+    let rows_b = sweep(opts, &spec_b)?;
+
+    let mut table = Table::new(&["method", "ratio", "variant", "mean_acc", "oracle_acc"]);
+    let mut all = rows.clone();
+    all.extend(rows_b.clone());
+    for (m, ratio, v, a, b) in aggregate(&all) {
+        table.row(vec![m, format!("{ratio:.1}"), v.to_string(), acc(a), acc(b)]);
+    }
+    println!("{}", table.render());
+    table.write_csv(&opts.out_path("fig2.csv")?)?;
+
+    // Panel (c) summary: mean relative improvement per (method, ratio).
+    let mut improve = Table::new(&["method", "ratio", "grail_gain"]);
+    let agg = aggregate(&all);
+    for (m, ratio, v, a, _) in &agg {
+        if *v != "grail" {
+            continue;
+        }
+        if let Some((_, _, _, base, _)) = agg
+            .iter()
+            .find(|(m2, r2, v2, _, _)| m2 == m && (r2 - ratio).abs() < 1e-9 && *v2 == "base")
+        {
+            improve.row(vec![m.clone(), format!("{ratio:.1}"), acc(a - base)]);
+        }
+    }
+    println!("Relative improvement from GRAIL (panel c):\n{}", improve.render());
+    improve.write_csv(&opts.out_path("fig2_improvement.csv")?)?;
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Figures 3 & 5 — GRAIL on TinyViT / SynthVision.
+//!
+//! The paper's Fig. 3 uses 72 CLIP ViT-B/32 checkpoints (ImageNet) and
+//! Fig. 5 uses 125 ViT-B/32 checkpoints (CIFAR-10). With one TinyViT
+//! family in the zoo, the two figures run the same grid over disjoint
+//! seed subsets (DESIGN.md §2); the expected *shape* is shared: GRAIL
+//! helps pruning more than folding, and compensated folds trail
+//! compensated prunes.
+
+use super::report::{acc, Table};
+use super::vision::{aggregate, ratio_grid, sweep, Family, SweepSpec, Variant as V};
+use super::ExpOptions;
+use crate::compress::Selector;
+use crate::grail::Method;
+use anyhow::Result;
+
+/// Which paper figure this run regenerates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Fig3,
+    Fig5,
+}
+
+/// Run the Fig. 3 / Fig. 5 sweep.
+pub fn run(opts: &ExpOptions, which: Variant) -> Result<()> {
+    let zoo = opts.zoo()?;
+    let all = zoo.list("vit");
+    anyhow::ensure!(!all.is_empty(), "no vit checkpoints (run `make artifacts`)");
+    // Disjoint seed subsets per figure.
+    let ckpts: Vec<String> = match which {
+        Variant::Fig3 => all.iter().step_by(2).cloned().collect(),
+        Variant::Fig5 => all.iter().skip(1).step_by(2).cloned().collect(),
+    };
+    let ckpts = if ckpts.is_empty() { all } else { ckpts };
+    let spec = SweepSpec {
+        family: Family::Vit,
+        ckpts: if opts.quick { ckpts[..1].to_vec() } else { ckpts },
+        methods: vec![
+            Method::Prune(Selector::MagnitudeL1),
+            Method::Prune(Selector::MagnitudeL2),
+            Method::Prune(Selector::Wanda),
+            Method::Fold,
+        ],
+        ratios: ratio_grid(opts.quick),
+        variants: vec![V::Base, V::Grail],
+        calib_n: 128,
+        test_n: if opts.quick { 256 } else { 1024 },
+        seed: opts.seed,
+    };
+    let rows = sweep(opts, &spec)?;
+    let name = match which {
+        Variant::Fig3 => "fig3",
+        Variant::Fig5 => "fig5",
+    };
+    let mut table = Table::new(&["method", "ratio", "variant", "mean_acc", "oracle_acc"]);
+    for (m, ratio, v, a, b) in aggregate(&rows) {
+        table.row(vec![m, format!("{ratio:.1}"), v.to_string(), acc(a), acc(b)]);
+    }
+    println!("{}", table.render());
+    table.write_csv(&opts.out_path(&format!("{name}.csv"))?)?;
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Figure 4 — calibration-set-size ablation: accuracy/perplexity
+//! recovery vs number of calibration samples. Left panel: MiniResNet
+//! at 75% sparsity; right panel: TinyLm at 40% sparsity. Expected
+//! shape: log-like growth with fast saturation.
+
+use super::report::{f, Table};
+use super::ExpOptions;
+use crate::compress::baselines::Baseline;
+use crate::compress::Selector;
+use crate::data::TextSplit;
+use crate::eval::{lm_perplexity, vision_accuracy};
+use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::nn::models::LmBatch;
+use anyhow::Result;
+
+/// Run the Fig. 4 ablations.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let zoo = opts.zoo()?;
+    let methods = [
+        Method::Prune(Selector::MagnitudeL1),
+        Method::Prune(Selector::Wanda),
+        Method::Baseline(Baseline::Flap),
+        Method::Fold,
+    ];
+
+    // ---- left panel: MiniResNet @ 75% sparsity
+    let calib_full = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?;
+    let test = crate::data::io::read_images(&opts.artifacts.data("vision_test.imgs"))?
+        .slice(0, if opts.quick { 256 } else { 512 });
+    let sizes: &[usize] = if opts.quick { &[8, 64, 256] } else { &[4, 8, 16, 32, 64, 128, 256, 512] };
+    let base = zoo.resnet("resnet_seed0")?;
+    let base_acc = vision_accuracy(|x| base.forward(x), &test, 128);
+
+    let mut left = Table::new(&["method", "calib_n", "acc", "gain_vs_uncompensated"]);
+    for method in methods {
+        // Uncompensated reference for the gain column.
+        let mut plain = base.clone();
+        let mut cfg0 = PipelineConfig::new(method, 0.75, false);
+        cfg0.seed = opts.seed;
+        // Even "uncompensated" pipelines need calibration for
+        // data-aware selectors; give them the full set.
+        compress_model(&mut plain, &calib_full.x, &cfg0);
+        let plain_acc = vision_accuracy(|x| plain.forward(x), &test, 128);
+        for &n in sizes {
+            let mut m = base.clone();
+            let mut cfg = PipelineConfig::new(method, 0.75, true);
+            cfg.seed = opts.seed;
+            let calib = calib_full.slice(0, n);
+            compress_model(&mut m, &calib.x, &cfg);
+            let acc = vision_accuracy(|x| m.forward(x), &test, 128);
+            left.row(vec![
+                method.name(),
+                n.to_string(),
+                format!("{acc:.4}"),
+                format!("{:+.4}", acc - plain_acc),
+            ]);
+        }
+    }
+    println!("Fig.4 left — MiniResNet @75% (dense acc {base_acc:.4}):\n{}", left.render());
+    left.write_csv(&opts.out_path("fig4_resnet.csv")?)?;
+
+    // ---- right panel: TinyLm @ 40% sparsity
+    let calib_toks = crate::data::io::read_tokens(&opts.artifacts.data("text_calib.tokens"))?;
+    let eval_toks =
+        crate::data::io::read_tokens(&opts.artifacts.data(&format!("text_{}.tokens", TextSplit::Wt2s.name())))?;
+    let eval_windows = if opts.quick { 32 } else { 96 };
+    let lm = zoo.lm("tinylm_mha")?;
+    let window_counts: &[usize] = if opts.quick { &[4, 32, 128] } else { &[2, 4, 8, 16, 32, 64, 128, 256] };
+
+    let mut right = Table::new(&["method", "calib_windows", "ppl"]);
+    for method in [
+        Method::Baseline(Baseline::Wanda),
+        Method::Baseline(Baseline::SlimGPT),
+        Method::Baseline(Baseline::Flap),
+    ] {
+        for &w in window_counts {
+            let mut m = lm.clone();
+            let mut cfg = PipelineConfig::new(method, 0.4, true);
+            cfg.seed = opts.seed;
+            let calib = LmBatch::from_tokens(&calib_toks, 32, w);
+            compress_model(&mut m, &calib, &cfg);
+            let ppl = lm_perplexity(&m, &eval_toks, 32, eval_windows, 16);
+            right.row(vec![method.name(), w.to_string(), f(ppl)]);
+        }
+        println!("  done: {}", method.name());
+    }
+    println!("Fig.4 right — TinyLm @40%:\n{}", right.render());
+    right.write_csv(&opts.out_path("fig4_lm.csv")?)?;
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Figure 6 — GRAIL under *random* pruning and folding on MiniResNet
+//! and TinyViT: before/after scatter plus accuracy gains across
+//! compression ratios. Random reducers remove any selector signal, so
+//! any gain is attributable purely to the compensation.
+
+use super::report::{acc, Table};
+use super::vision::{ratio_grid, sweep, Family, SweepSpec, Variant};
+use super::ExpOptions;
+use crate::compress::Selector;
+use crate::grail::Method;
+use anyhow::Result;
+
+/// Run the Fig. 6 grids.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let zoo = opts.zoo()?;
+    let mut table = Table::new(&["family", "mode", "ckpt", "ratio", "acc_before", "acc_after", "gain"]);
+    for (family, label) in [(Family::Resnet, "resnet"), (Family::Vit, "vit")] {
+        let mut ckpts = zoo.list(family.prefix());
+        ckpts.truncate(if opts.quick { 1 } else { 2 });
+        anyhow::ensure!(!ckpts.is_empty(), "no {label} checkpoints");
+        for (mode, method) in [
+            ("random-prune", Method::Prune(Selector::Random)),
+            ("random-fold", Method::RandomFold),
+        ] {
+            let spec = SweepSpec {
+                family,
+                ckpts: ckpts.clone(),
+                methods: vec![method],
+                ratios: ratio_grid(opts.quick),
+                variants: vec![Variant::Base, Variant::Grail],
+                calib_n: 128,
+                test_n: if opts.quick { 256 } else { 512 },
+                seed: opts.seed,
+            };
+            let rows = sweep(opts, &spec)?;
+            // Pair base/grail rows (same ckpt+ratio, adjacent by construction).
+            for pair in rows.chunks(2) {
+                if pair.len() != 2 {
+                    continue;
+                }
+                let (b, g) = (&pair[0], &pair[1]);
+                table.row(vec![
+                    label.to_string(),
+                    mode.to_string(),
+                    b.ckpt.clone(),
+                    format!("{:.1}", b.ratio),
+                    acc(b.acc),
+                    acc(g.acc),
+                    format!("{:+.4}", g.acc - b.acc),
+                ]);
+            }
+            println!("  done: {label} / {mode}");
+        }
+    }
+    println!("{}", table.render());
+    table.write_csv(&opts.out_path("fig6.csv")?)?;
+    Ok(())
+}

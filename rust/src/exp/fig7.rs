@@ -1,0 +1,78 @@
+//! Figure 7 — GRAIL across pruning and folding for all three vision
+//! architectures (MiniResNet, TinyViT, and the MLP standing alongside
+//! as the third family): per-(architecture, method) before/after
+//! accuracy shift, averaged over the ratio grid.
+
+use super::report::{acc, Table};
+use super::vision::{aggregate, ratio_grid, sweep, Family, SweepSpec, Variant};
+use super::ExpOptions;
+use crate::compress::Selector;
+use crate::grail::Method;
+use anyhow::Result;
+
+/// Run the Fig. 7 grid.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let zoo = opts.zoo()?;
+    let mut table = Table::new(&["family", "method", "mean_acc_base", "mean_acc_grail", "shift"]);
+    for (family, label) in [
+        (Family::Resnet, "resnet"),
+        (Family::Vit, "vit"),
+        (Family::Mlp, "mlp"),
+    ] {
+        let mut ckpts = zoo.list(family.prefix());
+        ckpts.truncate(if opts.quick { 1 } else { 2 });
+        anyhow::ensure!(!ckpts.is_empty(), "no {label} checkpoints");
+        let spec = SweepSpec {
+            family,
+            ckpts,
+            methods: vec![
+                Method::Fold,
+                Method::Prune(Selector::MagnitudeL1),
+                Method::Prune(Selector::MagnitudeL2),
+                Method::Prune(Selector::Wanda),
+            ],
+            ratios: ratio_grid(opts.quick),
+            variants: vec![Variant::Base, Variant::Grail],
+            // MLP sites see one Gram row per image (conv/ViT sites see
+            // 256/16 rows per image), so the MLP leg gets a larger
+            // image budget to match the paper's effective row count.
+            calib_n: if family == Family::Mlp { 256 } else { 128 },
+            test_n: if opts.quick { 256 } else { 512 },
+            seed: opts.seed,
+        };
+        let rows = sweep(opts, &spec)?;
+        let agg = aggregate(&rows);
+        // Collapse over ratios per method.
+        let methods: Vec<String> = {
+            let mut m: Vec<String> = agg.iter().map(|(m, ..)| m.clone()).collect();
+            m.sort();
+            m.dedup();
+            m
+        };
+        for method in methods {
+            let base: Vec<f64> = agg
+                .iter()
+                .filter(|(m, _, v, _, _)| *m == method && *v == "base")
+                .map(|(_, _, _, a, _)| *a)
+                .collect();
+            let grail: Vec<f64> = agg
+                .iter()
+                .filter(|(m, _, v, _, _)| *m == method && *v == "grail")
+                .map(|(_, _, _, a, _)| *a)
+                .collect();
+            let mb = base.iter().sum::<f64>() / base.len().max(1) as f64;
+            let mg = grail.iter().sum::<f64>() / grail.len().max(1) as f64;
+            table.row(vec![
+                label.to_string(),
+                method,
+                acc(mb),
+                acc(mg),
+                format!("{:+.4}", mg - mb),
+            ]);
+        }
+        println!("  done: {label}");
+    }
+    println!("{}", table.render());
+    table.write_csv(&opts.out_path("fig7.csv")?)?;
+    Ok(())
+}

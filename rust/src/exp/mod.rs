@@ -1,0 +1,200 @@
+//! Experiment harnesses: one module per paper table/figure.
+//!
+//! | module   | regenerates                                            |
+//! |----------|--------------------------------------------------------|
+//! | `vision` | shared engine for Figs. 2/3/5/6/7                      |
+//! | `fig2`   | Fig. 2 — MiniResNet acc vs ratio, REPAIR comparison    |
+//! | `fig35`  | Figs. 3 & 5 — TinyViT sweeps                           |
+//! | `fig4`   | Fig. 4 — calibration-size ablation                     |
+//! | `fig6`   | Fig. 6 — random pruning/folding before/after           |
+//! | `fig7`   | Fig. 7 — per-method improvement grid                   |
+//! | `table1` | Table 1 — TinyLm perplexity grid                       |
+//! | `table2` | Table 2 — zero-shot probe accuracy                     |
+//! | `table3` | Table 3 — calibration/compensation overhead            |
+//!
+//! Every experiment prints the paper-shaped rows and writes CSV under
+//! `--out` (default `results/`). EXPERIMENTS.md records paper-vs-
+//! measured for each.
+
+pub mod ablation;
+pub mod fig2;
+pub mod fig35;
+pub mod fig4;
+pub mod fig6;
+pub mod fig7;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod vision;
+
+use crate::cli::Args;
+use crate::coordinator::{Artifacts, Zoo};
+use anyhow::{bail, Context, Result};
+
+/// Options shared by all experiments.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub out_dir: String,
+    pub artifacts: Artifacts,
+    /// Trim grids for smoke runs.
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl ExpOptions {
+    /// Parse from CLI args; `--config <file>` (TOML subset) supplies
+    /// defaults under an `[exp]` section, explicit flags win.
+    pub fn from_args(args: &Args) -> Result<ExpOptions> {
+        let file = match args.opt("config") {
+            Some(path) => crate::config::Config::load(path)?,
+            None => crate::config::Config::default(),
+        };
+        Ok(ExpOptions {
+            out_dir: args
+                .opt("out")
+                .unwrap_or(file.str_or("exp.out", "results"))
+                .to_string(),
+            artifacts: Artifacts::at(
+                args.opt("artifacts").unwrap_or(file.str_or("exp.artifacts", "artifacts")),
+            ),
+            quick: args.has("quick") || file.bool("exp.quick").unwrap_or(false),
+            seed: match args.opt("seed") {
+                Some(_) => args.opt_u64("seed", 0)?,
+                None => file.usize_or("exp.seed", 0) as u64,
+            },
+        })
+    }
+
+    /// Open the checkpoint zoo.
+    pub fn zoo(&self) -> Result<Zoo> {
+        Zoo::open(self.artifacts.clone())
+    }
+
+    /// Ensure the output directory exists; return a file path in it.
+    pub fn out_path(&self, name: &str) -> Result<String> {
+        std::fs::create_dir_all(&self.out_dir)
+            .with_context(|| format!("creating {}", self.out_dir))?;
+        Ok(format!("{}/{}", self.out_dir, name))
+    }
+}
+
+/// `grail exp <id>` entrypoint.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let id = args.pos(1, "experiment id")?.to_string();
+    let opts = ExpOptions::from_args(args)?;
+    match id.as_str() {
+        "fig2" => fig2::run(&opts),
+        "fig3" => fig35::run(&opts, fig35::Variant::Fig3),
+        "fig5" => fig35::run(&opts, fig35::Variant::Fig5),
+        "fig4" => fig4::run(&opts),
+        "fig6" => fig6::run(&opts),
+        "fig7" => fig7::run(&opts),
+        "table1" => table1::run(&opts),
+        "table2" => table2::run(&opts),
+        "table3" => table3::run(&opts),
+        "ablation" => ablation::run(&opts),
+        "all" => {
+            for (name, f) in EXPERIMENTS {
+                println!("\n================ {name} ================");
+                f(&opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment `{other}`"),
+    }
+}
+
+/// All experiments in run order.
+pub const EXPERIMENTS: &[(&str, fn(&ExpOptions) -> Result<()>)] = &[
+    ("fig2", fig2::run),
+    ("fig3", |o| fig35::run(o, fig35::Variant::Fig3)),
+    ("fig5", |o| fig35::run(o, fig35::Variant::Fig5)),
+    ("fig6", fig6::run),
+    ("fig7", fig7::run),
+    ("table1", table1::run),
+    ("table2", table2::run),
+    ("table3", table3::run),
+    ("fig4", fig4::run),
+    ("ablation", ablation::run),
+];
+
+/// `grail compress` — a one-off compression + evaluation run.
+pub fn compress_cli(args: &Args) -> Result<()> {
+    use crate::grail::{compress_model, Method, PipelineConfig};
+
+    let opts = ExpOptions::from_args(args)?;
+    let zoo = opts.zoo()?;
+    let family = args.opt("family").unwrap_or("lm");
+    let method_name = args.opt_or("method", "wanda");
+    let method = Method::from_name(method_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown method `{method_name}`"))?;
+    let ratio = args.opt_f64("ratio", 0.5)?;
+    let grail = args.has("grail");
+    let mut cfg = PipelineConfig::new(method, ratio, grail);
+    cfg.alpha = args.opt_f64("alpha", crate::grail::DEFAULT_ALPHA as f64)? as f32;
+    cfg.seed = opts.seed;
+
+    match family {
+        "mlp" | "resnet" | "vit" => {
+            let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
+                .slice(0, 128);
+            let test = crate::data::io::read_images(&opts.artifacts.data("vision_test.imgs"))?;
+            let (base, after, report) = match family {
+                "mlp" => {
+                    let name = args.opt_or("ckpt", "mlp_seed0");
+                    let mut m = zoo.mlp(name)?;
+                    let base = crate::eval::vision_accuracy(|x| m.forward(x), &test, 128);
+                    let rep = compress_model(&mut m, &calib.x, &cfg);
+                    (base, crate::eval::vision_accuracy(|x| m.forward(x), &test, 128), rep)
+                }
+                "resnet" => {
+                    let name = args.opt_or("ckpt", "resnet_seed0");
+                    let mut m = zoo.resnet(name)?;
+                    let base = crate::eval::vision_accuracy(|x| m.forward(x), &test, 128);
+                    let rep = compress_model(&mut m, &calib.x, &cfg);
+                    if args.has("repair") {
+                        m.repair(&calib);
+                    }
+                    (base, crate::eval::vision_accuracy(|x| m.forward(x), &test, 128), rep)
+                }
+                _ => {
+                    let name = args.opt_or("ckpt", "vit_seed0");
+                    let mut m = zoo.vit(name)?;
+                    let base = crate::eval::vision_accuracy(|x| m.forward(x), &test, 128);
+                    let rep = compress_model(&mut m, &calib.x, &cfg);
+                    (base, crate::eval::vision_accuracy(|x| m.forward(x), &test, 128), rep)
+                }
+            };
+            println!(
+                "{family} {method_name} ratio={ratio} grail={grail}: acc {base:.4} -> {after:.4}"
+            );
+            for s in &report.sites {
+                println!(
+                    "  {}: {} -> {} units, recon err {:.4}",
+                    s.id, s.units_before, s.units_after, s.recon_err
+                );
+            }
+        }
+        "lm" => {
+            let name = args.opt_or("ckpt", "tinylm_mha");
+            let mut m = zoo.lm(name)?;
+            let calib_toks =
+                crate::data::io::read_tokens(&opts.artifacts.data("text_calib.tokens"))?;
+            let calib = crate::nn::models::LmBatch::from_tokens(&calib_toks, 32, 64);
+            let eval_toks = crate::data::io::read_tokens(&opts.artifacts.data("text_wt2s.tokens"))?;
+            let base = crate::eval::lm_perplexity(&m, &eval_toks, 32, 64, 16);
+            let rep = compress_model(&mut m, &calib, &cfg);
+            let after = crate::eval::lm_perplexity(&m, &eval_toks, 32, 64, 16);
+            println!("lm {method_name} ratio={ratio} grail={grail}: ppl {base:.2} -> {after:.2}");
+            for s in &rep.sites {
+                println!(
+                    "  {}: {} -> {} units, recon err {:.4}",
+                    s.id, s.units_before, s.units_after, s.recon_err
+                );
+            }
+        }
+        other => bail!("unknown family `{other}`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Table 1 — perplexity on TinyLm (the LLaMA-2-7B substitute) across
+//! three SynthText splits × sparsity levels × five structured pruning
+//! baselines, with and without GRAIL (ZipLM excluded from stacking —
+//! its selection and update are inseparable, paper §4.2).
+
+use super::report::{f, Table};
+use super::ExpOptions;
+use crate::compress::baselines::Baseline;
+use crate::data::TextSplit;
+use crate::eval::lm_perplexity;
+use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::nn::models::LmBatch;
+use anyhow::Result;
+
+/// Sequence length for calibration/eval windows (the paper uses 2048
+/// for LLaMA; TinyLm's context is 64).
+pub const SEQ: usize = 32;
+/// Calibration windows (paper: 128 sequences).
+pub const CALIB_WINDOWS: usize = 128;
+/// Eval windows per split.
+pub const EVAL_WINDOWS: usize = 96;
+
+/// The method column of Table 1: `(label, baseline, grail)`.
+pub fn method_rows() -> Vec<(String, Baseline, bool)> {
+    let mut rows = Vec::new();
+    for b in [
+        Baseline::ZipLM,
+        Baseline::Wanda,
+        Baseline::WandaPP,
+        Baseline::SlimGPT,
+        Baseline::Flap,
+    ] {
+        rows.push((b.name().to_string(), b, false));
+        if b.grail_compatible() {
+            rows.push((format!("{} + GRAIL", b.name()), b, true));
+        }
+    }
+    rows
+}
+
+/// Run the Table 1 grid.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let zoo = opts.zoo()?;
+    let base = zoo.lm("tinylm_mha")?;
+    let calib_toks = crate::data::io::read_tokens(&opts.artifacts.data("text_calib.tokens"))?;
+    let calib = LmBatch::from_tokens(&calib_toks, SEQ, CALIB_WINDOWS);
+
+    let sparsities: Vec<f64> = if opts.quick {
+        vec![0.2, 0.5]
+    } else {
+        (1..=7).map(|i| i as f64 / 10.0).collect()
+    };
+    let splits = [TextSplit::C4s, TextSplit::Wt2s, TextSplit::Ptbs];
+    let eval_toks: Vec<_> = splits
+        .iter()
+        .map(|s| crate::data::io::read_tokens(&opts.artifacts.data(&format!("text_{}.tokens", s.name()))))
+        .collect::<Result<_>>()?;
+    let eval_windows = if opts.quick { 32 } else { EVAL_WINDOWS };
+
+    let mut header = vec!["dataset".to_string(), "method".to_string()];
+    header.extend(sparsities.iter().map(|s| format!("{:.0}%", s * 100.0)));
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+
+    // Dense reference per split (not in the paper table but useful).
+    let mut dense_row = vec!["(all)".to_string(), "dense".to_string()];
+    let dense: Vec<f64> = eval_toks
+        .iter()
+        .map(|t| lm_perplexity(&base, t, SEQ, eval_windows, 16))
+        .collect();
+    dense_row.extend(sparsities.iter().map(|_| {
+        format!("{}", f(dense.iter().sum::<f64>() / dense.len() as f64))
+    }));
+    table.row(dense_row);
+
+    // Compression is split-independent (calibration uses its own
+    // split), so compress once per (method, sparsity) and evaluate all
+    // three datasets from the same compressed model.
+    let methods = method_rows();
+    // ppl[method][sparsity][split]
+    let mut ppl = vec![vec![vec![0.0f64; splits.len()]; sparsities.len()]; methods.len()];
+    for (mi, (label, baseline, grail)) in methods.iter().enumerate() {
+        for (pi, &sp) in sparsities.iter().enumerate() {
+            let mut m = base.clone();
+            let mut cfg = PipelineConfig::new(Method::Baseline(*baseline), sp, *grail);
+            cfg.seed = opts.seed;
+            compress_model(&mut m, &calib, &cfg);
+            for (si, toks) in eval_toks.iter().enumerate() {
+                ppl[mi][pi][si] = lm_perplexity(&m, toks, SEQ, eval_windows, 16);
+            }
+        }
+        println!("  done: {label}");
+    }
+    for (si, split) in splits.iter().enumerate() {
+        for (mi, (label, _, _)) in methods.iter().enumerate() {
+            let mut cells = vec![split.name().to_string(), label.clone()];
+            for pi in 0..sparsities.len() {
+                cells.push(f(ppl[mi][pi][si]));
+            }
+            table.row(cells);
+        }
+    }
+    println!("{}", table.render());
+    table.write_csv(&opts.out_path("table1.csv")?)?;
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Table 2 — zero-shot probe accuracy on TinyLm at 20% / 50% sparsity
+//! for the five baselines ± GRAIL. The six probe tasks substitute for
+//! ARC-C/E, HellaSwag, PIQA, BoolQ, Winogrande (DESIGN.md §2) — same
+//! evaluation shape: likelihood-ranked multiple choice.
+
+use super::report::{acc, Table};
+use super::table1::{method_rows, CALIB_WINDOWS, SEQ};
+use super::ExpOptions;
+use crate::data::SynthText;
+use crate::eval::probes::{probe_accuracy, probe_items, ProbeTask};
+use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::nn::models::LmBatch;
+use anyhow::Result;
+
+/// Run the Table 2 grid.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let zoo = opts.zoo()?;
+    let base = zoo.lm("tinylm_mha")?;
+    let calib_toks = crate::data::io::read_tokens(&opts.artifacts.data("text_calib.tokens"))?;
+    let calib = LmBatch::from_tokens(&calib_toks, SEQ, CALIB_WINDOWS);
+    let text = SynthText::new(crate::coordinator::datagen::TASK_SEED);
+    let n_items = if opts.quick { 24 } else { 96 };
+    let items: Vec<_> = ProbeTask::ALL
+        .iter()
+        .map(|&t| probe_items(t, &text, n_items, opts.seed + 7))
+        .collect();
+
+    let mut header = vec!["sparsity".to_string(), "method".to_string()];
+    header.extend(ProbeTask::ALL.iter().map(|t| t.name().to_string()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr);
+
+    // Dense reference row.
+    let mut row = vec!["0%".to_string(), "dense".to_string()];
+    for it in &items {
+        row.push(acc(probe_accuracy(&base, it)));
+    }
+    table.row(row);
+
+    for &sp in if opts.quick { &[0.5][..] } else { &[0.2, 0.5][..] } {
+        for (label, baseline, grail) in method_rows() {
+            let mut m = base.clone();
+            let mut cfg = PipelineConfig::new(Method::Baseline(baseline), sp, grail);
+            cfg.seed = opts.seed;
+            compress_model(&mut m, &calib, &cfg);
+            let mut row = vec![format!("{:.0}%", sp * 100.0), label.clone()];
+            for it in &items {
+                row.push(acc(probe_accuracy(&m, it)));
+            }
+            table.row(row);
+            println!("  done: {:.0}% / {label}", sp * 100.0);
+        }
+    }
+    println!("{}", table.render());
+    table.write_csv(&opts.out_path("table2.csv")?)?;
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Table 3 — calibration vs compensation overhead (time + memory) for
+//! every architecture. The paper's shape: calibration dominates,
+//! compensation is lightweight.
+
+use super::report::Table;
+use super::ExpOptions;
+use crate::compress::Selector;
+use crate::coordinator::metrics::{peak_rss_mib, rss_mib};
+use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::nn::models::LmBatch;
+use anyhow::Result;
+
+/// Run the Table 3 measurements.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let zoo = opts.zoo()?;
+    let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
+        .slice(0, 128);
+    let calib_toks = crate::data::io::read_tokens(&opts.artifacts.data("text_calib.tokens"))?;
+    let lm_calib = LmBatch::from_tokens(&calib_toks, 32, if opts.quick { 32 } else { 128 });
+
+    let mut table = Table::new(&[
+        "model",
+        "calib_time_s",
+        "comp_time_s",
+        "rss_before_mib",
+        "peak_rss_mib",
+    ]);
+    let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+
+    {
+        let mut m = zoo.mlp("mlp_seed0")?;
+        let before = rss_mib();
+        let rep = compress_model(&mut m, &calib.x, &cfg);
+        table.row(vec![
+            "MLP".into(),
+            format!("{:.3}", rep.calib_seconds),
+            format!("{:.3}", rep.comp_seconds),
+            format!("{before:.1}"),
+            format!("{:.1}", peak_rss_mib()),
+        ]);
+    }
+    {
+        let mut m = zoo.resnet("resnet_seed0")?;
+        let before = rss_mib();
+        let rep = compress_model(&mut m, &calib.x, &cfg);
+        table.row(vec![
+            "MiniResNet".into(),
+            format!("{:.3}", rep.calib_seconds),
+            format!("{:.3}", rep.comp_seconds),
+            format!("{before:.1}"),
+            format!("{:.1}", peak_rss_mib()),
+        ]);
+    }
+    {
+        let mut m = zoo.vit("vit_seed0")?;
+        let before = rss_mib();
+        let rep = compress_model(&mut m, &calib.x, &cfg);
+        table.row(vec![
+            "TinyViT".into(),
+            format!("{:.3}", rep.calib_seconds),
+            format!("{:.3}", rep.comp_seconds),
+            format!("{before:.1}"),
+            format!("{:.1}", peak_rss_mib()),
+        ]);
+    }
+    {
+        let mut m = zoo.lm("tinylm_mha")?;
+        let before = rss_mib();
+        let rep = compress_model(&mut m, &lm_calib, &cfg);
+        table.row(vec![
+            "TinyLm".into(),
+            format!("{:.3}", rep.calib_seconds),
+            format!("{:.3}", rep.comp_seconds),
+            format!("{before:.1}"),
+            format!("{:.1}", peak_rss_mib()),
+        ]);
+    }
+    println!("{}", table.render());
+    table.write_csv(&opts.out_path("table3.csv")?)?;
+    Ok(())
+}

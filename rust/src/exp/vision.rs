@@ -1,0 +1,236 @@
+//! Shared sweep engine for the vision experiments (Figs. 2/3/5/6/7):
+//! checkpoints × methods × ratios × {base, +GRAIL, +REPAIR, …} grids.
+
+use super::ExpOptions;
+use crate::coordinator::Zoo;
+use crate::data::VisionSet;
+use crate::eval::vision_accuracy;
+use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::nn::models::{MiniResNet, MlpNet, TinyViT};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Model family of a sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Mlp,
+    Resnet,
+    Vit,
+}
+
+impl Family {
+    /// Checkpoint-name prefix in the zoo.
+    pub fn prefix(&self) -> &'static str {
+        match self {
+            Family::Mlp => "mlp",
+            Family::Resnet => "resnet",
+            Family::Vit => "vit",
+        }
+    }
+}
+
+/// A loaded vision model (enum dispatch keeps the sweep engine free of
+/// generics over `Compressible`).
+pub enum VisionModel {
+    Mlp(MlpNet),
+    Resnet(MiniResNet),
+    Vit(TinyViT),
+}
+
+impl VisionModel {
+    /// Load a checkpoint.
+    pub fn load(zoo: &Zoo, family: Family, name: &str) -> Result<VisionModel> {
+        Ok(match family {
+            Family::Mlp => VisionModel::Mlp(zoo.mlp(name)?),
+            Family::Resnet => VisionModel::Resnet(zoo.resnet(name)?),
+            Family::Vit => VisionModel::Vit(zoo.vit(name)?),
+        })
+    }
+
+    /// Logits for a flattened image batch.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        match self {
+            VisionModel::Mlp(m) => m.forward(x),
+            VisionModel::Resnet(m) => m.forward(x),
+            VisionModel::Vit(m) => m.forward(x),
+        }
+    }
+
+    /// Run the closed-loop compression pipeline.
+    pub fn compress(&mut self, calib_x: &Tensor, cfg: &PipelineConfig) -> crate::grail::Report {
+        match self {
+            VisionModel::Mlp(m) => compress_model(m, calib_x, cfg),
+            VisionModel::Resnet(m) => compress_model(m, calib_x, cfg),
+            VisionModel::Vit(m) => compress_model(m, calib_x, cfg),
+        }
+    }
+
+    /// REPAIR BN-statistics reset (MiniResNet only; no-op otherwise).
+    pub fn repair(&mut self, calib: &VisionSet) -> bool {
+        match self {
+            VisionModel::Resnet(m) => {
+                m.repair(calib);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Test accuracy (batched).
+    pub fn accuracy(&self, test: &VisionSet) -> f64 {
+        vision_accuracy(|x| self.forward(x), test, 128)
+    }
+}
+
+/// Post-compression recovery variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Base,
+    Grail,
+    Repair,
+    GrailRepair,
+}
+
+impl Variant {
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Base => "base",
+            Variant::Grail => "grail",
+            Variant::Repair => "repair",
+            Variant::GrailRepair => "grail+repair",
+        }
+    }
+
+    fn wants_grail(&self) -> bool {
+        matches!(self, Variant::Grail | Variant::GrailRepair)
+    }
+
+    fn wants_repair(&self) -> bool {
+        matches!(self, Variant::Repair | Variant::GrailRepair)
+    }
+}
+
+/// One sweep measurement.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub ckpt: String,
+    pub method: String,
+    pub ratio: f64,
+    pub variant: &'static str,
+    pub acc: f64,
+    /// Uncompressed accuracy of the same checkpoint (the oracle line).
+    pub base_acc: f64,
+}
+
+/// Sweep configuration.
+pub struct SweepSpec {
+    pub family: Family,
+    pub ckpts: Vec<String>,
+    pub methods: Vec<Method>,
+    pub ratios: Vec<f64>,
+    pub variants: Vec<Variant>,
+    pub calib_n: usize,
+    pub test_n: usize,
+    pub seed: u64,
+}
+
+/// Default ratio grid (paper: 0.1–0.9 layer-wise uniform).
+pub fn ratio_grid(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![0.1, 0.3, 0.5, 0.7, 0.9]
+    } else {
+        (1..=9).map(|i| i as f64 / 10.0).collect()
+    }
+}
+
+/// Run a sweep; rows come back in (ckpt, method, ratio, variant) order.
+pub fn sweep(opts: &ExpOptions, spec: &SweepSpec) -> Result<Vec<SweepRow>> {
+    let zoo = opts.zoo()?;
+    let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
+        .slice(0, spec.calib_n);
+    let test =
+        crate::data::io::read_images(&opts.artifacts.data("vision_test.imgs"))?.slice(0, spec.test_n);
+    let mut rows = Vec::new();
+    for ckpt in &spec.ckpts {
+        let original = VisionModel::load(&zoo, spec.family, ckpt)?;
+        let base_acc = original.accuracy(&test);
+        for method in &spec.methods {
+            for &ratio in &spec.ratios {
+                for &variant in &spec.variants {
+                    let mut m = VisionModel::load(&zoo, spec.family, ckpt)?;
+                    let mut cfg = PipelineConfig::new(*method, ratio, variant.wants_grail());
+                    cfg.seed = spec.seed;
+                    m.compress(&calib.x, &cfg);
+                    if variant.wants_repair() {
+                        m.repair(&calib);
+                    }
+                    let acc = m.accuracy(&test);
+                    rows.push(SweepRow {
+                        ckpt: ckpt.clone(),
+                        method: method.name(),
+                        ratio,
+                        variant: variant.name(),
+                        acc,
+                        base_acc,
+                    });
+                }
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Mean accuracy over checkpoints for each (method, ratio, variant)
+/// cell — the paper's "mean accuracy vs sparsity" panels.
+pub fn aggregate(rows: &[SweepRow]) -> Vec<(String, f64, &'static str, f64, f64)> {
+    use std::collections::BTreeMap;
+    let mut acc: BTreeMap<(String, String, &'static str), (f64, f64, usize)> = BTreeMap::new();
+    for r in rows {
+        let key = (r.method.clone(), format!("{:.2}", r.ratio), r.variant);
+        let e = acc.entry(key).or_insert((0.0, 0.0, 0));
+        e.0 += r.acc;
+        e.1 += r.base_acc;
+        e.2 += 1;
+    }
+    acc.into_iter()
+        .map(|((m, ratio, v), (a, b, n))| {
+            (m, ratio.parse::<f64>().unwrap(), v, a / n as f64, b / n as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_grids() {
+        assert_eq!(ratio_grid(false).len(), 9);
+        assert_eq!(ratio_grid(true).len(), 5);
+        assert!((ratio_grid(false)[8] - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variant_flags() {
+        assert!(!Variant::Base.wants_grail());
+        assert!(Variant::Grail.wants_grail() && !Variant::Grail.wants_repair());
+        assert!(Variant::GrailRepair.wants_grail() && Variant::GrailRepair.wants_repair());
+    }
+
+    #[test]
+    fn aggregate_means() {
+        let rows = vec![
+            SweepRow { ckpt: "a".into(), method: "wanda".into(), ratio: 0.5, variant: "base", acc: 0.4, base_acc: 0.9 },
+            SweepRow { ckpt: "b".into(), method: "wanda".into(), ratio: 0.5, variant: "base", acc: 0.6, base_acc: 0.8 },
+        ];
+        let agg = aggregate(&rows);
+        assert_eq!(agg.len(), 1);
+        let (m, ratio, v, a, b) = &agg[0];
+        assert_eq!(m, "wanda");
+        assert!((ratio - 0.5).abs() < 1e-9);
+        assert_eq!(*v, "base");
+        assert!((a - 0.5).abs() < 1e-9);
+        assert!((b - 0.85).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,337 @@
+//! The sequential closed-loop compression pipeline (paper §3.2: "re-
+//! evaluating the Gram matrix for each layer based on the output of the
+//! already-pruned previous layers").
+//!
+//! For every site in forward order: run the calibration batch through
+//! the *current* (partially compressed) model, accumulate consumer-
+//! input statistics, build the reduction (selector / folding /
+//! baseline), optionally attach the GRAIL reconstruction map, apply.
+
+use crate::compress::baselines::{baseline_plan, Baseline};
+use crate::compress::heads::validate_head_reducer;
+use crate::compress::select::{self, ScoreInputs, Selector};
+use crate::compress::{fold, Compressible, ReductionPlan, SiteKind};
+use crate::rng::Pcg64;
+use std::time::Instant;
+
+/// How each site's reduction is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Structured pruning with a criterion from [`Selector`].
+    Prune(Selector),
+    /// k-means folding over producer features.
+    Fold,
+    /// Random folding (fig. 6).
+    RandomFold,
+    /// A baseline with its own recovery mechanism (Tables 1–2).
+    Baseline(Baseline),
+}
+
+impl Method {
+    /// Stable display name.
+    pub fn name(&self) -> String {
+        match self {
+            Method::Prune(s) => s.name().to_string(),
+            Method::Fold => "fold".to_string(),
+            Method::RandomFold => "random-fold".to_string(),
+            Method::Baseline(b) => b.name().to_string(),
+        }
+    }
+
+    /// Parse a CLI/config name.
+    pub fn from_name(s: &str) -> Option<Method> {
+        if s == "fold" {
+            return Some(Method::Fold);
+        }
+        if s == "random-fold" {
+            return Some(Method::RandomFold);
+        }
+        // Baselines win name clashes ("wanda" is both a selector and a
+        // baseline with identical behaviour when uncompensated).
+        if let Some(b) = Baseline::from_name(s) {
+            return Some(Method::Baseline(b));
+        }
+        Selector::from_name(s).map(Method::Prune)
+    }
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub method: Method,
+    /// Fraction of units removed per site (layer-wise uniform
+    /// compression ratio, 0.0–1.0).
+    pub ratio: f64,
+    /// Apply the GRAIL compensation map.
+    pub grail: bool,
+    /// Ridge scale α (λ = α · mean diag(G_PP)).
+    pub alpha: f32,
+    pub seed: u64,
+    /// Sequential closed-loop calibration (paper §3.2: re-evaluate the
+    /// Gram on the already-compressed prefix). `false` = open loop:
+    /// all statistics come from the dense model — the ablation that
+    /// shows why the closed loop matters.
+    pub closed_loop: bool,
+}
+
+impl PipelineConfig {
+    /// A pipeline with sensible defaults.
+    pub fn new(method: Method, ratio: f64, grail: bool) -> Self {
+        PipelineConfig {
+            method,
+            ratio,
+            grail,
+            alpha: super::DEFAULT_ALPHA,
+            seed: 0,
+            closed_loop: true,
+        }
+    }
+}
+
+/// Outcome of one site's reduction.
+#[derive(Clone, Debug)]
+pub struct SiteOutcome {
+    pub id: String,
+    pub units_before: usize,
+    pub units_after: usize,
+    /// Relative consumer-input reconstruction error of the applied map.
+    pub recon_err: f32,
+}
+
+/// Outcome of a full pipeline run.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub sites: Vec<SiteOutcome>,
+    /// Seconds spent in calibration forwards + statistics.
+    pub calib_seconds: f64,
+    /// Seconds spent building/applying compensations.
+    pub comp_seconds: f64,
+}
+
+impl Report {
+    /// Mean relative reconstruction error across sites.
+    pub fn mean_recon_err(&self) -> f32 {
+        if self.sites.is_empty() {
+            return 0.0;
+        }
+        self.sites.iter().map(|s| s.recon_err).sum::<f32>() / self.sites.len() as f32
+    }
+}
+
+/// Units kept for a site of `units` units in `groups` groups at
+/// removal `ratio` — always ≥1 per group and a multiple of `groups`.
+pub fn uniform_keep(units: usize, groups: usize, ratio: f64) -> usize {
+    let g = groups.max(1);
+    let per_group = units / g;
+    let keep_pg = ((per_group as f64) * (1.0 - ratio)).round() as usize;
+    keep_pg.clamp(1, per_group) * g
+}
+
+/// Run the closed-loop pipeline over every site of `model`.
+pub fn compress_model<M: Compressible>(
+    model: &mut M,
+    calib: &M::Input,
+    cfg: &PipelineConfig,
+) -> Report {
+    let n_sites = model.sites().len();
+    let mut rng = Pcg64::seed_stream(cfg.seed, 0x6121);
+    let mut outcomes = Vec::with_capacity(n_sites);
+    let mut calib_seconds = 0.0;
+    let mut comp_seconds = 0.0;
+
+    // Open-loop ablation: freeze all activations from the dense model
+    // up front (error propagation becomes visible at depth).
+    let dense_acts: Vec<crate::tensor::Tensor> = if cfg.closed_loop {
+        Vec::new()
+    } else {
+        let t0 = Instant::now();
+        let acts = (0..n_sites).map(|si| model.site_activations(calib, si)).collect();
+        calib_seconds += t0.elapsed().as_secs_f64();
+        acts
+    };
+
+    for si in 0..n_sites {
+        let info = &model.sites()[si];
+        let keep = uniform_keep(info.units, info.groups, cfg.ratio);
+        if keep >= info.units {
+            outcomes.push(SiteOutcome {
+                id: info.id.clone(),
+                units_before: info.units,
+                units_after: info.units,
+                recon_err: 0.0,
+            });
+            continue;
+        }
+
+        // --- calibration: consumer-input statistics on the current
+        // (closed loop) or dense (open loop) model.
+        let t0 = Instant::now();
+        let acts = if cfg.closed_loop {
+            model.site_activations(calib, si)
+        } else {
+            dense_acts[si].clone()
+        };
+        let stats = super::ActStats::from_acts(&acts);
+        calib_seconds += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let l1 = model.producer_row_norm(si, 1);
+        let l2 = model.producer_row_norm(si, 2);
+        let consumer = model.consumer_matrix(si);
+        let gd = select::gram_diag(&stats.gram);
+        let consumer_cols = crate::tensor::ops::col_l2(&consumer);
+
+        // --- choose the reduction
+        let mut plan: ReductionPlan = match cfg.method {
+            Method::Prune(sel) => {
+                let inputs = ScoreInputs {
+                    site: info,
+                    producer_l1: &l1,
+                    producer_l2: &l2,
+                    gram_diag: &gd,
+                    consumer_cols: &consumer_cols,
+                };
+                ReductionPlan::bare(select::select_reducer(sel, &inputs, keep, &mut rng))
+            }
+            Method::Fold => {
+                let feats = model.producer_features(si);
+                ReductionPlan::bare(fold::fold_reducer(&feats, info, keep, &mut rng))
+            }
+            Method::RandomFold => ReductionPlan::bare(fold::random_fold(info, keep, &mut rng)),
+            Method::Baseline(b) => {
+                baseline_plan(b, info, &stats, &l1, &l2, &consumer, keep, &mut rng)
+            }
+        };
+
+        // --- optional GRAIL compensation: keep the selection, replace
+        // the weight-space update with the closed-form reconstruction.
+        if cfg.grail {
+            let b = super::reconstruction(&stats.gram, &plan.reducer, info.unit_dim, cfg.alpha);
+            plan.compensation = Some(b);
+            plan.consumer_override = None;
+            // The ridge solution on uncentered moments already carries
+            // the removed features' conditional mean; a separate bias
+            // shift would double-count it.
+            plan.bias_delta = None;
+        }
+
+        if info.kind == SiteKind::AttnHeads {
+            validate_head_reducer(&plan.reducer, info).expect("invalid head reducer");
+        }
+
+        // --- diagnostics + apply
+        let eff_map = if let Some(b) = &plan.compensation {
+            b.clone()
+        } else {
+            plan.reducer.lift(info.unit_dim).consumer_matrix(info.feat_width())
+        };
+        let recon_err =
+            super::reconstruction_error(&acts, &plan.reducer, info.unit_dim, &eff_map);
+        model.apply(si, &plan);
+        comp_seconds += t1.elapsed().as_secs_f64();
+
+        outcomes.push(SiteOutcome {
+            id: info.id.clone(),
+            units_before: info.units,
+            units_after: keep,
+            recon_err,
+        });
+    }
+    Report { sites: outcomes, calib_seconds, comp_seconds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthVision;
+    use crate::nn::models::MlpNet;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn uniform_keep_bounds() {
+        assert_eq!(uniform_keep(100, 1, 0.5), 50);
+        assert_eq!(uniform_keep(100, 1, 0.99), 1);
+        assert_eq!(uniform_keep(100, 1, 0.0), 100);
+        // Grouped: 8 units, 4 groups, ratio 0.5 -> 1 per group.
+        assert_eq!(uniform_keep(8, 4, 0.5), 4);
+        // Never below one per group.
+        assert_eq!(uniform_keep(8, 4, 0.95), 4);
+    }
+
+    fn trained_ish_mlp() -> (MlpNet, crate::tensor::Tensor) {
+        // A random MLP on SynthVision inputs; the statistics are real
+        // even if the model is untrained.
+        let mut rng = Pcg64::seed(77);
+        let m = MlpNet::init(768, 32, 10, &mut rng);
+        let x = SynthVision::new(3).generate(64).x;
+        (m, x)
+    }
+
+    #[test]
+    fn grail_reduces_output_distortion_vs_bare() {
+        let (m0, x) = trained_ish_mlp();
+        let y_ref = m0.forward(&x);
+        let run = |grail: bool| {
+            let mut m = m0.clone();
+            let cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.5, grail);
+            let rep = compress_model(&mut m, &x, &cfg);
+            assert_eq!(rep.sites.len(), 2);
+            let mut d = m.forward(&x);
+            crate::tensor::ops::axpy(&mut d, -1.0, &y_ref);
+            d.frobenius()
+        };
+        let bare = run(false);
+        let grail = run(true);
+        assert!(
+            grail < bare,
+            "GRAIL must reduce output distortion: grail={grail} bare={bare}"
+        );
+    }
+
+    #[test]
+    fn fold_pipeline_runs_and_reports() {
+        let (mut m, x) = trained_ish_mlp();
+        let cfg = PipelineConfig::new(Method::Fold, 0.4, true);
+        let rep = compress_model(&mut m, &x, &cfg);
+        assert_eq!(rep.sites.len(), 2);
+        for s in &rep.sites {
+            assert_eq!(s.units_before, 32);
+            assert_eq!(s.units_after, 19);
+            assert!(s.recon_err.is_finite());
+        }
+        assert!(m.forward(&x).all_finite());
+        assert!(rep.calib_seconds >= 0.0 && rep.comp_seconds >= 0.0);
+    }
+
+    #[test]
+    fn ratio_zero_is_identity() {
+        let (m0, x) = trained_ish_mlp();
+        let mut m = m0.clone();
+        let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.0, true);
+        let rep = compress_model(&mut m, &x, &cfg);
+        assert!(rep.sites.iter().all(|s| s.units_after == s.units_before));
+        assert!(m0.forward(&x).max_abs_diff(&m.forward(&x)) < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (m0, x) = trained_ish_mlp();
+        let run = || {
+            let mut m = m0.clone();
+            let cfg = PipelineConfig::new(Method::RandomFold, 0.5, true);
+            compress_model(&mut m, &x, &cfg);
+            m.forward(&x)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn method_names_roundtrip() {
+        for name in ["mag-l1", "mag-l2", "fold", "random-fold", "wanda", "ziplm", "flap"] {
+            let m = Method::from_name(name).unwrap();
+            // wanda maps to the baseline spelling of the same name.
+            assert_eq!(Method::from_name(&m.name()).unwrap(), m);
+        }
+        assert!(Method::from_name("nope").is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! # GRAIL — post-hoc compensation by linear reconstruction
+//!
+//! A from-scratch reproduction of *GRAIL: Post-hoc Compensation by
+//! Linear Reconstruction for Compressed Networks* as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the compression coordinator: structured
+//!   pruning/folding selectors, the GRAIL Gram-ridge compensation
+//!   engine, closed-loop per-layer pipeline, evaluation, experiments.
+//! - **L2 (`python/compile/model.py`)** — JAX forward graphs, AOT-
+//!   lowered once to HLO text artifacts executed via PJRT.
+//! - **L1 (`python/compile/kernels/`)** — Pallas kernels (tiled Gram
+//!   accumulation, blocked matmul) inside those graphs.
+//!
+//! Python never runs at request time: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + trained checkpoint weights, and the Rust
+//! binary is self-contained afterwards.
+
+pub mod bench_util;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod grail;
+pub mod linalg;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;

@@ -1,0 +1,218 @@
+//! Cholesky factorization and SPD solves (f64 internal precision).
+//!
+//! Gram matrices from short calibration runs are frequently
+//! near-singular (N < H or strongly correlated channels); the paper
+//! handles this with the ridge term. We additionally retry with
+//! escalating diagonal jitter if the factorization still breaks down,
+//! mirroring standard practice.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `L·Lᵀ = A` (A symmetric
+/// positive definite). Stored dense row-major in f64.
+pub struct Cholesky {
+    n: usize,
+    l: Vec<f64>,
+}
+
+impl Cholesky {
+    /// Factor `a` (must be square & SPD). Fails on non-positive pivots.
+    pub fn factor(a: &Tensor) -> Result<Self> {
+        let n = a.dim(0);
+        if a.dim(1) != n {
+            bail!("cholesky: matrix not square: {:?}", a.shape());
+        }
+        let ad = a.data();
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = ad[i * n + j] as f64;
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        bail!("cholesky: non-positive pivot {s:.3e} at {i}");
+                    }
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Ok(Cholesky { n, l })
+    }
+
+    /// Factor with escalating diagonal jitter: tries `a`, then
+    /// `a + jitter·scale·I` with jitter ∈ {1e-8, 1e-6, ...} where
+    /// `scale` is the mean diagonal.
+    pub fn factor_jittered(a: &Tensor) -> Result<Self> {
+        if let Ok(c) = Self::factor(a) {
+            return Ok(c);
+        }
+        let scale = super::mean_diag(a).abs().max(1e-12);
+        for e in [1e-8f32, 1e-6, 1e-4, 1e-2, 1.0] {
+            let mut aj = a.clone();
+            super::add_diag(&mut aj, e * scale);
+            if let Ok(c) = Self::factor(&aj) {
+                return Ok(c);
+            }
+        }
+        bail!("cholesky: matrix not factorizable even with jitter")
+    }
+
+    /// Solve `A x = b` for one right-hand side.
+    pub fn solve_vec(&self, b: &[f32]) -> Vec<f32> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        let l = &self.l;
+        // Forward substitution L y = b.
+        let mut y = vec![0.0f64; n];
+        for i in 0..n {
+            let mut s = b[i] as f64;
+            for k in 0..i {
+                s -= l[i * n + k] * y[k];
+            }
+            y[i] = s / l[i * n + i];
+        }
+        // Back substitution Lᵀ x = y.
+        let mut x = vec![0.0f64; n];
+        for ii in 0..n {
+            let i = n - 1 - ii;
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= l[k * n + i] * x[k];
+            }
+            x[i] = s / l[i * n + i];
+        }
+        x.iter().map(|v| *v as f32).collect()
+    }
+
+    /// Solve `A X = B` column-by-column where `b: [n, m]` holds the
+    /// right-hand sides as *rows are equations*: returns `X: [n, m]`.
+    pub fn solve_multi(&self, b: &Tensor) -> Tensor {
+        let n = self.n;
+        assert_eq!(b.dim(0), n, "rhs rows must match system size");
+        let m = b.dim(1);
+        let mut out = Tensor::zeros(&[n, m]);
+        // Extract column j, solve, write back. m is at most H (≤ a few
+        // hundred here), so the transpose traffic is negligible.
+        let mut col = vec![0.0f32; n];
+        for j in 0..m {
+            for i in 0..n {
+                col[i] = b.at2(i, j);
+            }
+            let x = self.solve_vec(&col);
+            for i in 0..n {
+                out.set2(i, j, x[i]);
+            }
+        }
+        out
+    }
+
+    /// log-determinant of A (2·Σ log Lᵢᵢ) — used by tests/diagnostics.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n).map(|i| self.l[i * self.n + i].ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// Solve `A x = b` (SPD `A`), with jitter fallback.
+pub fn solve_spd(a: &Tensor, b: &[f32]) -> Result<Vec<f32>> {
+    Ok(Cholesky::factor_jittered(a)?.solve_vec(b))
+}
+
+/// Solve `A X = B` (SPD `A`, `B: [n,m]`), with jitter fallback. Panics
+/// only on shape errors; numerical failure falls back to jitter and is
+/// practically unreachable for `G + λI` with λ > 0.
+pub fn solve_spd_multi(a: &Tensor, b: &Tensor) -> Tensor {
+    Cholesky::factor_jittered(a)
+        .expect("SPD solve failed even with jitter")
+        .solve_multi(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::ops::{gram, matmul};
+
+    fn spd(r: &mut Pcg64, n: usize) -> Tensor {
+        // XᵀX + I with X taller than wide is comfortably SPD.
+        let mut x = Tensor::zeros(&[2 * n + 3, n]);
+        r.fill_normal(x.data_mut(), 1.0);
+        let mut g = gram(&x);
+        super::super::add_diag(&mut g, 1.0);
+        g
+    }
+
+    #[test]
+    fn factor_and_reconstruct() {
+        let mut r = Pcg64::seed(21);
+        let a = spd(&mut r, 7);
+        let c = Cholesky::factor(&a).unwrap();
+        // L Lᵀ == A
+        let n = 7;
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += c.l[i * n + k] * c.l[j * n + k];
+                }
+                assert!((s - a.at2(i, j) as f64).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_residual_small() {
+        let mut r = Pcg64::seed(22);
+        let a = spd(&mut r, 12);
+        let b: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect();
+        let x = solve_spd(&a, &b).unwrap();
+        let xt = Tensor::from_vec(&[12, 1], x);
+        let ax = matmul(&a, &xt);
+        for i in 0..12 {
+            assert!((ax.at2(i, 0) - b[i]).abs() < 1e-3, "row {i}");
+        }
+    }
+
+    #[test]
+    fn solve_multi_matches_vec() {
+        let mut r = Pcg64::seed(23);
+        let a = spd(&mut r, 9);
+        let mut b = Tensor::zeros(&[9, 4]);
+        r.fill_normal(b.data_mut(), 1.0);
+        let x = solve_spd_multi(&a, &b);
+        let c = Cholesky::factor(&a).unwrap();
+        for j in 0..4 {
+            let col: Vec<f32> = (0..9).map(|i| b.at2(i, j)).collect();
+            let xj = c.solve_vec(&col);
+            for i in 0..9 {
+                assert!((x.at2(i, j) - xj[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn non_spd_fails_then_jitter_rescues() {
+        // Rank-deficient Gram (N < H): plain factor fails, jitter works.
+        let mut r = Pcg64::seed(24);
+        let mut x = Tensor::zeros(&[3, 8]);
+        r.fill_normal(x.data_mut(), 1.0);
+        let g = gram(&x);
+        assert!(Cholesky::factor(&g).is_err());
+        let c = Cholesky::factor_jittered(&g).unwrap();
+        assert!(c.logdet().is_finite());
+    }
+
+    #[test]
+    fn identity_solve_is_identity() {
+        let a = Tensor::eye(5);
+        let b: Vec<f32> = vec![1., -2., 3., -4., 5.];
+        let x = solve_spd(&a, &b).unwrap();
+        for i in 0..5 {
+            assert!((x[i] - b[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! k-means clustering for model folding.
+//!
+//! Folding (paper §3.1) groups channels into K clusters over their
+//! *weight rows* (or activation profiles) and replaces each cluster by
+//! its centroid; the merge map `M_fold(h,k) = 1/|C_k|` for `h ∈ C_k`.
+//! This is Lloyd's algorithm with k-means++ seeding and empty-cluster
+//! re-seeding — deterministic given the RNG seed.
+
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Output of [`kmeans`]: cluster assignment per point plus centroids.
+pub struct KmeansResult {
+    /// `assign[i]` = cluster index of point `i` (in `0..k`).
+    pub assign: Vec<usize>,
+    /// Centroids, `[k, d]`.
+    pub centroids: Tensor,
+    /// Final within-cluster sum of squares.
+    pub inertia: f64,
+    /// Iterations executed.
+    pub iters: usize,
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Cluster the rows of `x: [n, d]` into `k` groups.
+///
+/// Panics if `k == 0` or `k > n`.
+pub fn kmeans(x: &Tensor, k: usize, rng: &mut Pcg64, max_iters: usize) -> KmeansResult {
+    let (n, d) = (x.dim(0), x.dim(1));
+    assert!(k >= 1 && k <= n, "kmeans: k={k} out of range for n={n}");
+
+    // --- k-means++ seeding ---
+    let mut centroids = Tensor::zeros(&[k, d]);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(x.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| dist2(x.row(i), centroids.row(0))).collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut t = rng.next_f64() * total;
+            let mut idx = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                t -= w;
+                if t <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centroids.row_mut(c).copy_from_slice(x.row(pick));
+        for i in 0..n {
+            d2[i] = d2[i].min(dist2(x.row(i), centroids.row(c)));
+        }
+    }
+
+    // --- Lloyd iterations ---
+    let mut assign = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..max_iters {
+        iters = it + 1;
+        // Assignment step.
+        let mut new_inertia = 0.0f64;
+        let mut changed = false;
+        for i in 0..n {
+            let (mut best, mut best_d) = (0usize, f64::INFINITY);
+            for c in 0..k {
+                let dd = dist2(x.row(i), centroids.row(c));
+                if dd < best_d {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+            new_inertia += best_d;
+        }
+        // Update step.
+        let mut counts = vec![0usize; k];
+        let mut sums = Tensor::zeros(&[k, d]);
+        for i in 0..n {
+            counts[assign[i]] += 1;
+            for (s, &v) in sums.row_mut(assign[i]).iter_mut().zip(x.row(i)) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed an empty cluster at the point farthest from
+                // its centroid.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        dist2(x.row(a), centroids.row(assign[a]))
+                            .total_cmp(&dist2(x.row(b), centroids.row(assign[b])))
+                    })
+                    .unwrap_or_else(|| rng.below(n));
+                centroids.row_mut(c).copy_from_slice(x.row(far));
+                changed = true;
+            } else {
+                let inv = 1.0 / counts[c] as f32;
+                for (cd, &s) in centroids.row_mut(c).iter_mut().zip(sums.row(c)) {
+                    *cd = s * inv;
+                }
+            }
+        }
+        inertia = new_inertia;
+        if !changed && it > 0 {
+            break;
+        }
+    }
+    KmeansResult { assign, centroids, inertia, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_data() -> Tensor {
+        // Three well-separated 2-D blobs, 5 points each.
+        let mut pts = Vec::new();
+        for (cx, cy) in [(0.0f32, 0.0f32), (10.0, 10.0), (-10.0, 10.0)] {
+            for i in 0..5 {
+                pts.push(cx + 0.1 * i as f32);
+                pts.push(cy - 0.1 * i as f32);
+            }
+        }
+        Tensor::from_vec(&[15, 2], pts)
+    }
+
+    #[test]
+    fn separates_blobs() {
+        let x = blob_data();
+        let mut rng = Pcg64::seed(1);
+        let r = kmeans(&x, 3, &mut rng, 50);
+        // Points within a blob share a label; across blobs differ.
+        for b in 0..3 {
+            let l0 = r.assign[b * 5];
+            for i in 0..5 {
+                assert_eq!(r.assign[b * 5 + i], l0, "blob {b}");
+            }
+        }
+        let labels: std::collections::HashSet<_> = r.assign.iter().collect();
+        assert_eq!(labels.len(), 3);
+        assert!(r.inertia < 1.0);
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let x = blob_data();
+        let mut rng = Pcg64::seed(2);
+        let r = kmeans(&x, 15, &mut rng, 50);
+        assert!(r.inertia < 1e-9);
+    }
+
+    #[test]
+    fn k_one_centroid_is_mean() {
+        let x = blob_data();
+        let mut rng = Pcg64::seed(3);
+        let r = kmeans(&x, 1, &mut rng, 50);
+        let mu = crate::tensor::ops::col_mean(&x);
+        for j in 0..2 {
+            assert!((r.centroids.at2(0, j) - mu[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x = blob_data();
+        let a = kmeans(&x, 3, &mut Pcg64::seed(7), 50);
+        let b = kmeans(&x, 3, &mut Pcg64::seed(7), 50);
+        assert_eq!(a.assign, b.assign);
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_zero_panics() {
+        let x = blob_data();
+        kmeans(&x, 0, &mut Pcg64::seed(1), 10);
+    }
+}

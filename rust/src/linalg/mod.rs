@@ -1,0 +1,126 @@
+//! Dense linear algebra for the GRAIL ridge systems.
+//!
+//! The compensation map is `B = G_PH^T (G_PP + λI)^{-1}` (paper §3.1);
+//! we never form the inverse — instead we Cholesky-factor the SPD
+//! matrix `G_PP + λI` (in f64 for stability) and solve against the
+//! right-hand sides. k-means (for folding) also lives here.
+
+mod cholesky;
+mod kmeans;
+
+pub use cholesky::{solve_spd, solve_spd_multi, Cholesky};
+pub use kmeans::{kmeans, KmeansResult};
+
+use crate::tensor::Tensor;
+
+/// Mean of the diagonal of a square matrix (used for the paper's
+/// λ = α · mean diag(G_PP) regularizer scaling).
+pub fn mean_diag(g: &Tensor) -> f32 {
+    let n = g.dim(0);
+    assert_eq!(g.dim(1), n);
+    if n == 0 {
+        return 0.0;
+    }
+    let s: f64 = (0..n).map(|i| g.at2(i, i) as f64).sum();
+    (s / n as f64) as f32
+}
+
+/// Add `lambda` to the diagonal, in place.
+pub fn add_diag(g: &mut Tensor, lambda: f32) {
+    let n = g.dim(0);
+    assert_eq!(g.dim(1), n);
+    for i in 0..n {
+        let v = g.at2(i, i) + lambda;
+        g.set2(i, i, v);
+    }
+}
+
+/// Solve the ridge system that defines the GRAIL reconstruction:
+/// given `g_pp: [K,K]` (reduced Gram), `g_ph: [K,H]` (cross Gram, i.e.
+/// `Mᵀ G`), and `lambda`, return `B: [H,K]` with
+/// `B = g_phᵀ · (g_pp + λI)^{-1}`.
+///
+/// Solved column-block-wise: `(g_pp + λI) Z = g_ph`, then `B = Zᵀ`.
+pub fn ridge_reconstruction(g_pp: &Tensor, g_ph: &Tensor, lambda: f32) -> Tensor {
+    let k = g_pp.dim(0);
+    assert_eq!(g_pp.dim(1), k);
+    assert_eq!(g_ph.dim(0), k, "g_ph rows must equal K");
+    let h = g_ph.dim(1);
+    let mut a = g_pp.clone();
+    add_diag(&mut a, lambda);
+    let z = solve_spd_multi(&a, g_ph); // [K, H]
+    crate::tensor::ops::transpose(&z).reshape(&[h, k])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::ops::{gram, matmul, transpose};
+
+    fn randn(r: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        r.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn mean_diag_simple() {
+        let g = Tensor::from_vec(&[2, 2], vec![2., 5., 5., 4.]);
+        assert_eq!(mean_diag(&g), 3.0);
+    }
+
+    #[test]
+    fn ridge_identity_gram_recovers_selection() {
+        // When G = I (uncorrelated channels), B must be (up to λ shrink)
+        // the selection matrix itself — the paper's "recovers classic
+        // pruning" property.
+        let h = 6;
+        let p = [1usize, 4, 5];
+        let g = Tensor::eye(h);
+        let g_ph = crate::tensor::ops::gather_rows(&g, &p); // [K,H] = Mᵀ G
+        let g_pp = crate::tensor::ops::gather_cols(&g_ph, &p); // [K,K]
+        let b = ridge_reconstruction(&g_pp, &g_ph, 0.0);
+        assert_eq!(b.shape(), &[h, p.len()]);
+        for i in 0..h {
+            for (kk, &pi) in p.iter().enumerate() {
+                let want = if i == pi { 1.0 } else { 0.0 };
+                assert!((b.at2(i, kk) - want).abs() < 1e-5, "B[{i},{kk}]");
+            }
+        }
+    }
+
+    #[test]
+    fn ridge_matches_normal_equations() {
+        // B should minimize ||H - H_P Bᵀ||² + λ||B||²; check against an
+        // explicit least-squares residual-orthogonality test.
+        let mut r = Pcg64::seed(10);
+        let n = 200;
+        let h = 8;
+        let p = [0usize, 2, 3, 7];
+        let x = randn(&mut r, &[n, h]);
+        let xp = crate::tensor::ops::gather_cols(&x, &p);
+        let g = gram(&x);
+        let g_ph = crate::tensor::ops::gather_rows(&g, &p);
+        let g_pp = crate::tensor::ops::gather_cols(&g_ph, &p);
+        let lambda = 1e-3 * mean_diag(&g_pp);
+        let b = ridge_reconstruction(&g_pp, &g_ph, lambda);
+        // Gradient of the objective wrt B must vanish:
+        //   -2 H_Pᵀ(H - H_P Bᵀ) + 2λBᵀ = 0  ⇔  G_PP Bᵀ + λBᵀ = G_PH.
+        let bt = transpose(&b);
+        let mut lhs = matmul(&g_pp, &bt);
+        crate::tensor::ops::axpy(&mut lhs, lambda, &bt);
+        assert!(lhs.max_abs_diff(&g_ph) < 1e-2 * (n as f32).sqrt());
+        // And reconstruction error should be far below predicting zero.
+        let rec = matmul(&xp, &bt);
+        let err = rec.max_abs_diff(&x);
+        assert!(err.is_finite());
+        let base: f32 = x.frobenius();
+        let diff = {
+            let mut d = rec.clone();
+            crate::tensor::ops::axpy(&mut d, -1.0, &x);
+            d.frobenius()
+        };
+        assert!(diff < base, "reconstruction no better than zero");
+    }
+}

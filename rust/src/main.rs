@@ -1,0 +1,60 @@
+//! `grail` — the L3 coordinator CLI.
+//!
+//! ```text
+//! grail datagen [--out artifacts]          write the canonical datasets
+//! grail exp <id|all> [--out results]       regenerate a paper table/figure
+//! grail compress --model <ckpt> ...        one-off compression + eval
+//! grail info                               artifact / runtime inventory
+//! ```
+
+use anyhow::{bail, Result};
+use grail::cli::Args;
+use grail::coordinator::{generate_all, Artifacts};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "datagen" => {
+            let art = Artifacts::at(args.opt_or("out", "artifacts"));
+            generate_all(&art, &mut |m| println!("{m}"))?;
+            Ok(())
+        }
+        "exp" => grail::exp::run_cli(&args),
+        "compress" => grail::exp::compress_cli(&args),
+        "info" => {
+            let art = Artifacts::at(args.opt_or("out", "artifacts"));
+            println!("artifacts root: {:?}", art.root);
+            println!("data present:   {}", art.has_data());
+            match grail::runtime::Runtime::cpu(art) {
+                Ok(rt) => println!("pjrt platform:  {}", rt.platform()),
+                Err(e) => println!("pjrt:           unavailable ({e})"),
+            }
+            Ok(())
+        }
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `grail help`)"),
+    }
+}
+
+const HELP: &str = "\
+grail — GRAIL post-hoc compensation coordinator
+
+USAGE:
+  grail datagen [--out artifacts]
+  grail exp <fig2|fig3|fig5|fig6|fig7|table1|table2|table3|fig4|all>
+            [--out results] [--artifacts artifacts] [--quick]
+  grail compress --family <mlp|resnet|vit|lm> --ckpt <name>
+            --method <mag-l1|mag-l2|wanda|gram|random|fold|random-fold|wanda++|slimgpt|ziplm|flap>
+            --ratio <0..1> [--grail] [--alpha 1e-3]
+  grail info";

@@ -1,0 +1,335 @@
+//! Multi-head self-attention with optional grouped-query attention
+//! (GQA) and head-structured compression hooks.
+//!
+//! The feature axis before the output projection factorizes as
+//! `H = n_heads · d_head`; any width reduction must act at the head
+//! level (paper §3.2). The *consumer input* GRAIL compensates here is
+//! the concatenated per-head feature vector just before `w_o`, which
+//! [`MultiHeadAttention::forward`] exposes as a tap.
+
+use super::{softmax_rows, Linear, Tensor};
+use crate::rng::Pcg64;
+
+/// Self-attention block. Weight layout (matching the Python side):
+/// `wq: [n_heads·d_head, d_model]`, `wk/wv: [n_kv·d_head, d_model]`,
+/// `wo: [d_model, n_heads·d_head]`. For plain MHA, `n_kv == n_heads`;
+/// for GQA, `n_heads` is a multiple of `n_kv` and query head `h` reads
+/// KV head `h / (n_heads / n_kv)`.
+#[derive(Clone, Debug)]
+pub struct MultiHeadAttention {
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub n_heads: usize,
+    pub n_kv: usize,
+    pub d_head: usize,
+    pub causal: bool,
+}
+
+impl MultiHeadAttention {
+    /// Random-initialized attention (Rust-side tests).
+    pub fn init(
+        d_model: usize,
+        n_heads: usize,
+        n_kv: usize,
+        d_head: usize,
+        causal: bool,
+        rng: &mut Pcg64,
+    ) -> Self {
+        assert!(n_heads % n_kv == 0, "query heads must be a multiple of KV heads");
+        MultiHeadAttention {
+            wq: Linear::init(n_heads * d_head, d_model, rng),
+            wk: Linear::init(n_kv * d_head, d_model, rng),
+            wv: Linear::init(n_kv * d_head, d_model, rng),
+            wo: Linear::init(d_model, n_heads * d_head, rng),
+            n_heads,
+            n_kv,
+            d_head,
+            causal,
+        }
+    }
+
+    /// Query heads per KV head.
+    pub fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv
+    }
+
+    /// Feature width before the output projection.
+    pub fn feat_width(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    /// Forward over `[b*t, d_model]` rows laid out batch-major.
+    /// Returns `(output [b*t, d_model], tap [b*t, n_heads*d_head])`
+    /// where the tap is the concatenated per-head context — the
+    /// consumer input of `w_o`.
+    pub fn forward(&self, x: &Tensor, b: usize, t: usize) -> (Tensor, Tensor) {
+        let rows = b * t;
+        assert_eq!(x.dim(0), rows, "rows must equal b*t");
+        let dh = self.d_head;
+        let q = self.wq.forward(x); // [rows, n_heads*dh]
+        let k = self.wk.forward(x); // [rows, n_kv*dh]
+        let v = self.wv.forward(x);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut tap = Tensor::zeros(&[rows, self.n_heads * dh]);
+        let gs = self.group_size();
+        for bi in 0..b {
+            for h in 0..self.n_heads {
+                let kvh = h / gs;
+                // Scores for this (batch, head): [t, t].
+                let mut scores = Tensor::zeros(&[t, t]);
+                for ti in 0..t {
+                    let qrow = &q.row(bi * t + ti)[h * dh..(h + 1) * dh];
+                    let srow = scores.row_mut(ti);
+                    let lim = if self.causal { ti + 1 } else { t };
+                    for tj in 0..t {
+                        if tj < lim {
+                            let krow = &k.row(bi * t + tj)[kvh * dh..(kvh + 1) * dh];
+                            srow[tj] = crate::tensor::ops::dot(qrow, krow) * scale;
+                        } else {
+                            srow[tj] = f32::NEG_INFINITY;
+                        }
+                    }
+                }
+                softmax_rows(&mut scores);
+                // Context = scores · V_head.
+                for ti in 0..t {
+                    let srow = scores.row(ti);
+                    let out = &mut tap.row_mut(bi * t + ti)[h * dh..(h + 1) * dh];
+                    let lim = if self.causal { ti + 1 } else { t };
+                    for tj in 0..lim {
+                        let w = srow[tj];
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let vrow = &v.row(bi * t + tj)[kvh * dh..(kvh + 1) * dh];
+                        for (o, &vv) in out.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+            }
+        }
+        let y = self.wo.forward(&tap);
+        (y, tap)
+    }
+
+    /// Keep query heads `heads` (sorted ascending; for GQA the caller
+    /// must keep an equal count per KV group — validated here). The
+    /// output projection is narrowed separately by the compression
+    /// plan (selection or a GRAIL merge).
+    pub fn select_heads(&mut self, heads: &[usize]) {
+        assert!(!heads.is_empty(), "cannot remove all heads");
+        assert!(heads.windows(2).all(|w| w[0] < w[1]), "heads must be sorted unique");
+        let gs = self.group_size();
+        if gs > 1 {
+            // True GQA: equal per-group counts keep the mapping valid.
+            let mut per_group = vec![0usize; self.n_kv];
+            for &h in heads {
+                assert!(h < self.n_heads);
+                per_group[h / gs] += 1;
+            }
+            let k0 = per_group[0];
+            assert!(
+                per_group.iter().all(|&c| c == k0) && k0 > 0,
+                "GQA head selection must keep an equal, nonzero count per KV group: {per_group:?}"
+            );
+        }
+        let dh = self.d_head;
+        let rows: Vec<usize> =
+            heads.iter().flat_map(|&h| h * dh..(h + 1) * dh).collect();
+        self.wq.select_outputs(&rows);
+        if gs == 1 {
+            // Plain MHA: each query head owns its KV head — prune those
+            // too so the head mapping stays 1:1.
+            self.wk.select_outputs(&rows);
+            self.wv.select_outputs(&rows);
+            self.n_kv = heads.len();
+        }
+        self.n_heads = heads.len();
+    }
+
+    /// Fold query heads by cluster averaging (`assign[h] = cluster`).
+    /// For GQA, clusters must not cross KV groups (validated).
+    pub fn fold_heads(&mut self, assign: &[usize], k_total: usize) {
+        assert_eq!(assign.len(), self.n_heads);
+        let gs = self.group_size();
+        if gs > 1 {
+            // True GQA: each cluster must live inside one KV group.
+            let mut cluster_group = vec![usize::MAX; k_total];
+            for (h, &k) in assign.iter().enumerate() {
+                let g = h / gs;
+                if cluster_group[k] == usize::MAX {
+                    cluster_group[k] = g;
+                } else {
+                    assert_eq!(
+                        cluster_group[k], g,
+                        "GQA head folding must not merge heads across KV groups"
+                    );
+                }
+            }
+        }
+        let dh = self.d_head;
+        // Lift head assignment to the feature axis (Kronecker with I_dh):
+        // feature row h*dh+j folds into cluster k*dh+j.
+        let feat_assign: Vec<usize> = (0..self.n_heads * dh)
+            .map(|r| assign[r / dh] * dh + (r % dh))
+            .collect();
+        self.wq.fold_outputs(&feat_assign, k_total * dh);
+        if gs == 1 {
+            // Plain MHA: fold the 1:1 KV heads the same way.
+            self.wk.fold_outputs(&feat_assign, k_total * dh);
+            self.wv.fold_outputs(&feat_assign, k_total * dh);
+            self.n_kv = k_total;
+        } else {
+            // True GQA: clusters stay within groups; group blocks must
+            // remain contiguous and balanced so `group_size` is valid.
+            assert_eq!(
+                k_total % self.n_kv,
+                0,
+                "GQA folding must keep an equal cluster count per KV group"
+            );
+        }
+        self.n_heads = k_total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+
+    fn small_attn(causal: bool) -> MultiHeadAttention {
+        let mut rng = Pcg64::seed(42);
+        MultiHeadAttention::init(8, 4, 4, 2, causal, &mut rng)
+    }
+
+    fn randx(rows: usize, d: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seed(seed);
+        let mut x = Tensor::zeros(&[rows, d]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        x
+    }
+
+    #[test]
+    fn output_shapes() {
+        let a = small_attn(true);
+        let x = randx(2 * 5, 8, 1);
+        let (y, tap) = a.forward(&x, 2, 5);
+        assert_eq!(y.shape(), &[10, 8]);
+        assert_eq!(tap.shape(), &[10, 8]); // 4 heads * 2
+        assert!(y.all_finite());
+    }
+
+    #[test]
+    fn causal_first_token_attends_only_self() {
+        let a = small_attn(true);
+        let mut x1 = randx(4, 8, 2); // b=1, t=4
+        let (y_full, _) = a.forward(&x1, 1, 4);
+        // Changing later tokens must not affect position 0.
+        for v in x1.data_mut()[8..].iter_mut() {
+            *v += 10.0;
+        }
+        let (y_mod, _) = a.forward(&x1, 1, 4);
+        for j in 0..8 {
+            assert!((y_full.at2(0, j) - y_mod.at2(0, j)).abs() < 1e-5);
+        }
+        // ...but does affect later positions.
+        assert!((0..8).any(|j| (y_full.at2(3, j) - y_mod.at2(3, j)).abs() > 1e-3));
+    }
+
+    #[test]
+    fn non_causal_is_permutation_sensitive_but_full_context() {
+        let a = small_attn(false);
+        let mut x = randx(3, 8, 3);
+        let (y0, _) = a.forward(&x, 1, 3);
+        for v in x.data_mut()[16..].iter_mut() {
+            *v += 5.0;
+        }
+        let (y1, _) = a.forward(&x, 1, 3);
+        // Position 0 IS affected without the causal mask.
+        assert!((0..8).any(|j| (y0.at2(0, j) - y1.at2(0, j)).abs() > 1e-3));
+    }
+
+    #[test]
+    fn tap_feeds_output_projection() {
+        let a = small_attn(true);
+        let x = randx(6, 8, 4);
+        let (y, tap) = a.forward(&x, 1, 6);
+        let y2 = a.wo.forward(&tap);
+        assert!(y.max_abs_diff(&y2) < 1e-6);
+    }
+
+    #[test]
+    fn gqa_matches_mha_with_duplicated_kv() {
+        // A GQA layer must equal a plain MHA layer whose KV weight rows
+        // duplicate each KV head `group_size` times.
+        let mut rng = Pcg64::seed(7);
+        let gqa = MultiHeadAttention::init(8, 4, 2, 2, true, &mut rng);
+        let dh = 2;
+        // kv head of query head h is h / 2 -> duplication order 0,0,1,1.
+        let kv_rows: Vec<usize> = [0usize, 0, 1, 1]
+            .iter()
+            .flat_map(|&h| (h * dh)..(h + 1) * dh)
+            .collect();
+        let mut mha = gqa.clone();
+        mha.n_kv = 4;
+        mha.wk.w = ops::gather_rows(&gqa.wk.w, &kv_rows);
+        mha.wv.w = ops::gather_rows(&gqa.wv.w, &kv_rows);
+        let kb: Vec<f32> = kv_rows.iter().map(|&r| gqa.wk.b.data()[r]).collect();
+        let vb: Vec<f32> = kv_rows.iter().map(|&r| gqa.wv.b.data()[r]).collect();
+        mha.wk.b = Tensor::from_vec(&[8], kb);
+        mha.wv.b = Tensor::from_vec(&[8], vb);
+        let x = randx(5, 8, 8);
+        let (yg, _) = gqa.forward(&x, 1, 5);
+        let (ym, _) = mha.forward(&x, 1, 5);
+        assert!(yg.max_abs_diff(&ym) < 1e-5);
+    }
+
+    #[test]
+    fn select_heads_drops_tap_features() {
+        let a = small_attn(true);
+        let x = randx(4, 8, 5);
+        let (_, tap_full) = a.forward(&x, 1, 4);
+        let mut pruned = a.clone();
+        pruned.select_heads(&[1, 3]);
+        pruned.wo.select_inputs(&[2, 3, 6, 7]); // features of heads 1,3
+        let (_, tap) = pruned.forward(&x, 1, 4);
+        assert_eq!(tap.shape(), &[4, 4]);
+        // Kept heads compute identical features.
+        for r in 0..4 {
+            assert!((tap.at2(r, 0) - tap_full.at2(r, 2)).abs() < 1e-5);
+            assert!((tap.at2(r, 3) - tap_full.at2(r, 7)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "equal, nonzero count per KV group")]
+    fn gqa_unbalanced_selection_panics() {
+        let mut rng = Pcg64::seed(9);
+        let mut a = MultiHeadAttention::init(8, 4, 2, 2, true, &mut rng);
+        a.select_heads(&[0, 1, 2]); // group0 keeps 2, group1 keeps 1
+    }
+
+    #[test]
+    #[should_panic(expected = "across KV groups")]
+    fn gqa_cross_group_fold_panics() {
+        let mut rng = Pcg64::seed(10);
+        let mut a = MultiHeadAttention::init(8, 4, 2, 2, true, &mut rng);
+        a.fold_heads(&[0, 0, 0, 1], 2); // head 2 (group1) folded with group0
+    }
+
+    #[test]
+    fn fold_heads_averages_query_rows() {
+        let mut a = small_attn(true);
+        let r0 = a.wq.w.row(0).to_vec();
+        let r2 = a.wq.w.row(4).to_vec(); // head 2, feature 0
+        a.fold_heads(&[0, 1, 0, 1], 2);
+        assert_eq!(a.n_heads, 2);
+        for j in 0..8 {
+            let want = (r0[j] + r2[j]) / 2.0;
+            assert!((a.wq.w.at2(0, j) - want).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,364 @@
+//! 2-D convolution via im2col + GEMM (re-exports [`BatchNorm2d`] from
+//! the norm module for CNN call sites).
+
+pub use super::norm::BatchNorm2d;
+use super::Tensor;
+use crate::rng::Pcg64;
+use crate::tensor::ops;
+
+/// Convolution layer. Weights `[o, c, kh, kw]`, activations `[n, c*h*w]`
+/// flattened CHW. Same-padding is explicit via `pad`.
+#[derive(Clone, Debug)]
+pub struct Conv2d {
+    /// Kernel, stored as a 4-D tensor `[o, c, kh, kw]`.
+    pub w: Tensor,
+    /// Bias per output channel.
+    pub b: Tensor,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2d {
+    /// He-initialized conv (Rust-side tests; checkpoints come from
+    /// Python).
+    pub fn init(o: usize, c: usize, k: usize, stride: usize, pad: usize, rng: &mut Pcg64) -> Self {
+        let std = (2.0 / (c * k * k) as f32).sqrt();
+        let mut w = Tensor::zeros(&[o, c, k, k]);
+        rng.fill_normal(w.data_mut(), std);
+        Conv2d { w, b: Tensor::zeros(&[o]), stride, pad }
+    }
+
+    pub fn out_channels(&self) -> usize {
+        self.w.dim(0)
+    }
+
+    pub fn in_channels(&self) -> usize {
+        self.w.dim(1)
+    }
+
+    pub fn kernel(&self) -> (usize, usize) {
+        (self.w.dim(2), self.w.dim(3))
+    }
+
+    /// Spatial output size for an input of `h×w`.
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        let (kh, kw) = self.kernel();
+        (
+            (h + 2 * self.pad - kh) / self.stride + 1,
+            (w + 2 * self.pad - kw) / self.stride + 1,
+        )
+    }
+
+    /// im2col: expand `[n, c*h*w]` into patch rows
+    /// `[n*oh*ow, c*kh*kw]`.
+    pub fn im2col(&self, x: &Tensor, h: usize, w: usize) -> Tensor {
+        let c = self.in_channels();
+        let (kh, kw) = self.kernel();
+        let (oh, ow) = self.out_hw(h, w);
+        let n = x.dim(0);
+        assert_eq!(x.dim(1), c * h * w, "conv input layout");
+        let mut cols = Tensor::zeros(&[n * oh * ow, c * kh * kw]);
+        let xd = x.data();
+        let pad = self.pad as isize;
+        let stride = self.stride;
+        for i in 0..n {
+            let base = i * c * h * w;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row_idx = (i * oh + oy) * ow + ox;
+                    let dst = cols.row_mut(row_idx);
+                    for cc in 0..c {
+                        for ky in 0..kh {
+                            let sy = oy as isize * stride as isize + ky as isize - pad;
+                            for kx in 0..kw {
+                                let sx = ox as isize * stride as isize + kx as isize - pad;
+                                let v = if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize
+                                {
+                                    xd[base + cc * h * w + sy as usize * w + sx as usize]
+                                } else {
+                                    0.0
+                                };
+                                dst[(cc * kh + ky) * kw + kx] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    /// Forward: `[n, c*h*w] -> [n, o*oh*ow]` (CHW layout).
+    ///
+    /// Perf pass note (EXPERIMENTS.md §Perf): an image-chunked im2col
+    /// variant was tried and reverted — the monolithic buffer stays
+    /// within LLC at these geometries and chunking only added copy +
+    /// dispatch overhead.
+    pub fn forward(&self, x: &Tensor, h: usize, w: usize) -> Tensor {
+        let n = x.dim(0);
+        let o = self.out_channels();
+        let (oh, ow) = self.out_hw(h, w);
+        let cols = self.im2col(x, h, w); // [n*oh*ow, c*kh*kw]
+        let wmat = self.weight_matrix(); // [o, c*kh*kw]
+        let y = ops::matmul_nt(&cols, &wmat); // [n*oh*ow, o]
+        // Rearrange to [n, o, oh, ow] and add bias: channel-outer loop
+        // gives contiguous writes (strided reads hit the LLC line
+        // already brought in by the GEMM).
+        let mut out = Tensor::zeros(&[n, o * oh * ow]);
+        let yd = y.data();
+        let bd = self.b.data();
+        let hw = oh * ow;
+        for i in 0..n {
+            let dst = out.row_mut(i);
+            for ch in 0..o {
+                let b = bd[ch];
+                let drow = &mut dst[ch * hw..(ch + 1) * hw];
+                for (s, dv) in drow.iter_mut().enumerate() {
+                    *dv = yd[(i * hw + s) * o + ch] + b;
+                }
+            }
+        }
+        out
+    }
+
+    /// The kernel viewed as a 2-D matrix `[o, c*kh*kw]`.
+    pub fn weight_matrix(&self) -> Tensor {
+        let (o, c) = (self.out_channels(), self.in_channels());
+        let (kh, kw) = self.kernel();
+        Tensor::from_vec(&[o, c * kh * kw], self.w.data().to_vec())
+    }
+
+    /// Keep output channels `idx` (producer narrowing).
+    pub fn select_outputs(&mut self, idx: &[usize]) {
+        let (c, kh, kw) = (self.in_channels(), self.kernel().0, self.kernel().1);
+        let sz = c * kh * kw;
+        let mut w = Tensor::zeros(&[idx.len(), c, kh, kw]);
+        for (dst, &src) in idx.iter().enumerate() {
+            assert!(src < self.out_channels());
+            w.data_mut()[dst * sz..(dst + 1) * sz]
+                .copy_from_slice(&self.w.data()[src * sz..(src + 1) * sz]);
+        }
+        self.w = w;
+        let b: Vec<f32> = idx.iter().map(|&i| self.b.data()[i]).collect();
+        self.b = Tensor::from_vec(&[idx.len()], b);
+    }
+
+    /// Fold output channels by cluster averaging.
+    pub fn fold_outputs(&mut self, assign: &[usize], k_total: usize) {
+        let (c, kh, kw) = (self.in_channels(), self.kernel().0, self.kernel().1);
+        let sz = c * kh * kw;
+        assert_eq!(assign.len(), self.out_channels());
+        let mut w = Tensor::zeros(&[k_total, c, kh, kw]);
+        let mut b = vec![0.0f32; k_total];
+        let mut counts = vec![0usize; k_total];
+        for (h, &k) in assign.iter().enumerate() {
+            counts[k] += 1;
+            for (dv, &sv) in w.data_mut()[k * sz..(k + 1) * sz]
+                .iter_mut()
+                .zip(&self.w.data()[h * sz..(h + 1) * sz])
+            {
+                *dv += sv;
+            }
+            b[k] += self.b.data()[h];
+        }
+        for k in 0..k_total {
+            let cnt = counts[k].max(1) as f32;
+            for v in &mut w.data_mut()[k * sz..(k + 1) * sz] {
+                *v /= cnt;
+            }
+            b[k] /= cnt;
+        }
+        self.w = w;
+        self.b = Tensor::from_vec(&[k_total], b);
+    }
+
+    /// GRAIL conv merge: apply the reconstruction map `B: [c, k]` along
+    /// the *input channel* axis —
+    /// `W'(o,k,:,:) = Σ_c W(o,c,:,:) B(c,k)` (paper §3.1).
+    pub fn merge_input_map(&mut self, b_map: &Tensor) {
+        let (o, c) = (self.out_channels(), self.in_channels());
+        let (kh, kw) = self.kernel();
+        assert_eq!(b_map.dim(0), c, "B rows must match conv in-channels");
+        let k = b_map.dim(1);
+        let mut w = Tensor::zeros(&[o, k, kh, kw]);
+        let src = self.w.data();
+        let dst = w.data_mut();
+        for oo in 0..o {
+            for cc in 0..c {
+                let s_base = (oo * c + cc) * kh * kw;
+                for kk in 0..k {
+                    let scale = b_map.at2(cc, kk);
+                    if scale == 0.0 {
+                        continue;
+                    }
+                    let d_base = (oo * k + kk) * kh * kw;
+                    for t in 0..kh * kw {
+                        dst[d_base + t] += scale * src[s_base + t];
+                    }
+                }
+            }
+        }
+        self.w = w;
+    }
+
+    /// Keep input channels `idx` (uncompensated consumer update).
+    pub fn select_inputs(&mut self, idx: &[usize]) {
+        let (o, c) = (self.out_channels(), self.in_channels());
+        let (kh, kw) = self.kernel();
+        let mut w = Tensor::zeros(&[o, idx.len(), kh, kw]);
+        for oo in 0..o {
+            for (dst_c, &src_c) in idx.iter().enumerate() {
+                assert!(src_c < c);
+                let s = (oo * c + src_c) * kh * kw;
+                let d = (oo * idx.len() + dst_c) * kh * kw;
+                w.data_mut()[d..d + kh * kw].copy_from_slice(&self.w.data()[s..s + kh * kw]);
+            }
+        }
+        self.w = w;
+    }
+
+    /// Per-input-channel L2 norm over `(o, kh, kw)` (selector scoring).
+    pub fn input_col_norms(&self) -> Vec<f32> {
+        let (o, c) = (self.out_channels(), self.in_channels());
+        let (kh, kw) = self.kernel();
+        let mut acc = vec![0.0f64; c];
+        for oo in 0..o {
+            for cc in 0..c {
+                for &v in &self.w.data()[(oo * c + cc) * kh * kw..(oo * c + cc + 1) * kh * kw] {
+                    acc[cc] += (v as f64) * (v as f64);
+                }
+            }
+        }
+        acc.iter().map(|v| v.sqrt() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Direct (naive) convolution for cross-checking.
+    fn conv_ref(conv: &Conv2d, x: &Tensor, h: usize, w: usize) -> Tensor {
+        let n = x.dim(0);
+        let (o, c) = (conv.out_channels(), conv.in_channels());
+        let (kh, kw) = conv.kernel();
+        let (oh, ow) = conv.out_hw(h, w);
+        let mut out = Tensor::zeros(&[n, o * oh * ow]);
+        for i in 0..n {
+            for ch in 0..o {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut s = conv.b.data()[ch];
+                        for cc in 0..c {
+                            for ky in 0..kh {
+                                for kx in 0..kw {
+                                    let sy = (oy * conv.stride + ky) as isize - conv.pad as isize;
+                                    let sx = (ox * conv.stride + kx) as isize - conv.pad as isize;
+                                    if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                                        let xv = x.data()
+                                            [i * c * h * w + cc * h * w + sy as usize * w + sx as usize];
+                                        let wv = conv.w.data()
+                                            [((ch * c + cc) * kh + ky) * kw + kx];
+                                        s += xv * wv;
+                                    }
+                                }
+                            }
+                        }
+                        out.data_mut()[i * o * oh * ow + ch * oh * ow + oy * ow + ox] = s;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn forward_matches_reference() {
+        let mut rng = crate::rng::Pcg64::seed(1);
+        for &(stride, pad) in &[(1usize, 1usize), (2, 1), (1, 0)] {
+            let conv = Conv2d::init(4, 3, 3, stride, pad, &mut rng);
+            let mut x = Tensor::zeros(&[2, 3 * 8 * 8]);
+            rng.fill_normal(x.data_mut(), 1.0);
+            let y = conv.forward(&x, 8, 8);
+            let yr = conv_ref(&conv, &x, 8, 8);
+            assert!(y.max_abs_diff(&yr) < 1e-4, "stride={stride} pad={pad}");
+        }
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 conv with identity weights returns the input.
+        let mut conv = Conv2d { w: Tensor::zeros(&[2, 2, 1, 1]), b: Tensor::zeros(&[2]), stride: 1, pad: 0 };
+        conv.w.data_mut()[0] = 1.0; // (0,0)
+        conv.w.data_mut()[3] = 1.0; // (1,1)
+        let x = Tensor::from_vec(&[1, 2 * 2 * 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let y = conv.forward(&x, 2, 2);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn select_outputs_drops_channels() {
+        let mut rng = crate::rng::Pcg64::seed(2);
+        let mut conv = Conv2d::init(4, 2, 3, 1, 1, &mut rng);
+        let x = {
+            let mut t = Tensor::zeros(&[1, 2 * 6 * 6]);
+            rng.fill_normal(t.data_mut(), 1.0);
+            t
+        };
+        let full = conv.forward(&x, 6, 6);
+        conv.select_outputs(&[3, 1]);
+        let sel = conv.forward(&x, 6, 6);
+        // Channel 0 of sel equals channel 3 of full.
+        let hw = 36;
+        assert_eq!(&sel.data()[0..hw], &full.data()[3 * hw..4 * hw]);
+        assert_eq!(&sel.data()[hw..2 * hw], &full.data()[hw..2 * hw]);
+    }
+
+    #[test]
+    fn merge_identity_is_noop() {
+        let mut rng = crate::rng::Pcg64::seed(3);
+        let mut conv = Conv2d::init(3, 4, 3, 1, 1, &mut rng);
+        let orig = conv.w.clone();
+        conv.merge_input_map(&Tensor::eye(4));
+        assert!(conv.w.max_abs_diff(&orig) < 1e-6);
+    }
+
+    #[test]
+    fn merge_selection_matches_select_inputs() {
+        let mut rng = crate::rng::Pcg64::seed(4);
+        let conv = Conv2d::init(3, 5, 3, 1, 1, &mut rng);
+        let idx = [4usize, 0, 2];
+        let mut a = conv.clone();
+        a.select_inputs(&idx);
+        let mut m = Tensor::zeros(&[5, 3]);
+        for (k, &i) in idx.iter().enumerate() {
+            m.set2(i, k, 1.0);
+        }
+        let mut b = conv.clone();
+        b.merge_input_map(&m);
+        assert!(a.w.max_abs_diff(&b.w) < 1e-6);
+    }
+
+    #[test]
+    fn fold_outputs_centroid() {
+        let mut rng = crate::rng::Pcg64::seed(5);
+        let mut conv = Conv2d::init(4, 2, 1, 1, 0, &mut rng);
+        let w0 = conv.w.data()[0 * 2..1 * 2].to_vec();
+        let w2 = conv.w.data()[2 * 2..3 * 2].to_vec();
+        conv.fold_outputs(&[0, 1, 0, 1], 2);
+        assert_eq!(conv.out_channels(), 2);
+        // First centroid is the mean of original channels 0 and 2.
+        for j in 0..2 {
+            let want = (w0[j] + w2[j]) / 2.0;
+            assert!((conv.w.data()[j] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn out_hw_arithmetic() {
+        let conv = Conv2d { w: Tensor::zeros(&[1, 1, 3, 3]), b: Tensor::zeros(&[1]), stride: 2, pad: 1 };
+        assert_eq!(conv.out_hw(16, 16), (8, 8));
+        let c2 = Conv2d { w: Tensor::zeros(&[1, 1, 3, 3]), b: Tensor::zeros(&[1]), stride: 1, pad: 1 };
+        assert_eq!(c2.out_hw(16, 16), (16, 16));
+    }
+}

@@ -1,0 +1,157 @@
+//! Fully connected layer.
+
+use super::Tensor;
+use crate::rng::Pcg64;
+use crate::tensor::ops;
+
+/// `y = x Wᵀ + b` with `W: [out, in]`, `b: [out]`.
+///
+/// Weights are stored `[out, in]` so that each *row* is one output
+/// unit: structured pruning of the layer's outputs is a row selection,
+/// matching the paper's `W'_{i-1} = W_{i-1}[P, :]`.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub w: Tensor,
+    pub b: Tensor,
+}
+
+impl Linear {
+    /// He-initialized layer (used by pure-Rust tests; real checkpoints
+    /// come from the Python training step).
+    pub fn init(out_dim: usize, in_dim: usize, rng: &mut Pcg64) -> Self {
+        let std = (2.0 / in_dim as f32).sqrt();
+        let mut w = Tensor::zeros(&[out_dim, in_dim]);
+        rng.fill_normal(w.data_mut(), std);
+        Linear { w, b: Tensor::zeros(&[out_dim]) }
+    }
+
+    /// Output width.
+    pub fn out_dim(&self) -> usize {
+        self.w.dim(0)
+    }
+
+    /// Input width.
+    pub fn in_dim(&self) -> usize {
+        self.w.dim(1)
+    }
+
+    /// Forward over a batch `[n, in] -> [n, out]`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.dim(1), self.in_dim(), "linear input width");
+        let mut y = ops::matmul_nt(x, &self.w);
+        ops::add_bias(&mut y, self.b.data());
+        y
+    }
+
+    /// Keep only output rows `idx` (structured output pruning).
+    pub fn select_outputs(&mut self, idx: &[usize]) {
+        self.w = ops::gather_rows(&self.w, idx);
+        let b: Vec<f32> = idx.iter().map(|&i| self.b.data()[i]).collect();
+        self.b = Tensor::from_vec(&[idx.len()], b);
+    }
+
+    /// Fold output rows by cluster averaging: `assign[h] = k` maps each
+    /// output unit to one of `k_total` centroids.
+    pub fn fold_outputs(&mut self, assign: &[usize], k_total: usize) {
+        assert_eq!(assign.len(), self.out_dim());
+        let in_dim = self.in_dim();
+        let mut w = Tensor::zeros(&[k_total, in_dim]);
+        let mut b = vec![0.0f32; k_total];
+        let mut counts = vec![0usize; k_total];
+        for (h, &k) in assign.iter().enumerate() {
+            assert!(k < k_total);
+            counts[k] += 1;
+            for (dst, &src) in w.row_mut(k).iter_mut().zip(self.w.row(h)) {
+                *dst += src;
+            }
+            b[k] += self.b.data()[h];
+        }
+        for k in 0..k_total {
+            let c = counts[k].max(1) as f32;
+            for v in w.row_mut(k) {
+                *v /= c;
+            }
+            b[k] /= c;
+        }
+        self.w = w;
+        self.b = Tensor::from_vec(&[k_total], b);
+    }
+
+    /// Replace the input side with `W·B` (absorb a reconstruction map
+    /// `B: [in, k]` — the GRAIL consumer merge `W'_i = W_i B`).
+    pub fn merge_input_map(&mut self, b_map: &Tensor) {
+        assert_eq!(b_map.dim(0), self.in_dim(), "B rows must match consumer input width");
+        self.w = ops::matmul(&self.w, b_map);
+    }
+
+    /// Keep only input columns `idx` (the uncompensated consumer update
+    /// that classic pruning applies).
+    pub fn select_inputs(&mut self, idx: &[usize]) {
+        self.w = ops::gather_cols(&self.w, idx);
+    }
+
+    /// Per-input-column L2 norms (selector scoring).
+    pub fn input_col_norms(&self) -> Vec<f32> {
+        ops::col_l2(&self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> Linear {
+        // 3 outputs, 2 inputs.
+        Linear {
+            w: Tensor::from_vec(&[3, 2], vec![1., 0., 0., 1., 1., 1.]),
+            b: Tensor::from_vec(&[3], vec![0.5, -0.5, 0.0]),
+        }
+    }
+
+    #[test]
+    fn forward_math() {
+        let l = layer();
+        let x = Tensor::from_vec(&[1, 2], vec![2., 3.]);
+        let y = l.forward(&x);
+        assert_eq!(y.data(), &[2.5, 2.5, 5.0]);
+    }
+
+    #[test]
+    fn select_outputs_keeps_rows() {
+        let mut l = layer();
+        l.select_outputs(&[2, 0]);
+        assert_eq!(l.out_dim(), 2);
+        assert_eq!(l.w.row(0), &[1., 1.]);
+        assert_eq!(l.b.data(), &[0.0, 0.5]);
+    }
+
+    #[test]
+    fn fold_outputs_averages() {
+        let mut l = layer();
+        l.fold_outputs(&[0, 0, 1], 2);
+        assert_eq!(l.out_dim(), 2);
+        assert_eq!(l.w.row(0), &[0.5, 0.5]); // mean of rows 0,1
+        assert_eq!(l.w.row(1), &[1., 1.]);
+        assert_eq!(l.b.data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn merge_input_map_shrinks_inputs() {
+        let mut l = layer();
+        // B maps a single reduced input back to the two originals.
+        let b = Tensor::from_vec(&[2, 1], vec![1.0, 2.0]);
+        l.merge_input_map(&b);
+        assert_eq!(l.in_dim(), 1);
+        assert_eq!(l.w.data(), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn select_inputs_matches_identity_merge() {
+        let mut a = layer();
+        let mut b = layer();
+        a.select_inputs(&[1]);
+        let m = Tensor::from_vec(&[2, 1], vec![0.0, 1.0]);
+        b.merge_input_map(&m);
+        assert_eq!(a.w, b.w);
+    }
+}

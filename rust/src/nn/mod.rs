@@ -1,0 +1,141 @@
+//! Neural-network layers and models (Rust-side inference).
+//!
+//! The Rust forward passes are the variable-shape engine: compressed
+//! models have data-dependent widths, so they cannot run through the
+//! fixed-shape PJRT artifacts. Layer math mirrors the JAX definitions
+//! in `python/compile/model.py` exactly (same GELU approximation, same
+//! layer-norm epsilon) — `rust/tests/runtime_pjrt.rs` asserts the two
+//! implementations agree on identical weights.
+
+pub mod attention;
+pub mod conv;
+pub mod linear;
+pub mod models;
+pub mod norm;
+pub mod weights;
+
+pub use attention::MultiHeadAttention;
+pub use conv::{BatchNorm2d, Conv2d};
+pub use linear::Linear;
+pub use norm::LayerNorm;
+
+use crate::tensor::Tensor;
+
+/// Shared layer-norm / batch-norm epsilon (matches the Python side).
+pub const NORM_EPS: f32 = 1e-5;
+
+/// ReLU, elementwise.
+pub fn relu(x: &mut Tensor) {
+    x.map_inplace(|v| v.max(0.0));
+}
+
+/// GELU with the tanh approximation (matches `jax.nn.gelu`'s default
+/// `approximate=True`).
+pub fn gelu(x: &mut Tensor) {
+    x.map_inplace(gelu_scalar);
+}
+
+/// Scalar tanh-approximate GELU.
+#[inline]
+pub fn gelu_scalar(v: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh())
+}
+
+/// Row-wise softmax in place.
+pub fn softmax_rows(x: &mut Tensor) {
+    let (m, n) = (x.dim(0), x.dim(1));
+    for i in 0..m {
+        let row = &mut x.data_mut()[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            z += *v;
+        }
+        let inv = 1.0 / z;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row-wise log-softmax in place (numerically stable; used for NLL /
+/// perplexity).
+pub fn log_softmax_rows(x: &mut Tensor) {
+    let (m, n) = (x.dim(0), x.dim(1));
+    for i in 0..m {
+        let row = &mut x.data_mut()[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|v| (v - mx).exp()).sum();
+        let lz = mx + z.ln();
+        for v in row.iter_mut() {
+            *v -= lz;
+        }
+    }
+}
+
+/// Row-wise argmax.
+pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
+    (0..x.dim(0))
+        .map(|i| {
+            x.row(i)
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps() {
+        let mut t = Tensor::from_vec(&[4], vec![-1., 0., 2., -3.]);
+        relu(&mut t);
+        assert_eq!(t.data(), &[0., 0., 2., 0.]);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        // gelu(0) = 0; gelu(large) ≈ identity; gelu(-large) ≈ 0.
+        assert_eq!(gelu_scalar(0.0), 0.0);
+        assert!((gelu_scalar(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu_scalar(-10.0).abs() < 1e-3);
+        // Reference value from jax.nn.gelu(1.0) ≈ 0.841192.
+        assert!((gelu_scalar(1.0) - 0.841192).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 1000., 1000., 1000.]);
+        softmax_rows(&mut t);
+        for i in 0..2 {
+            let s: f32 = t.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // Large-but-equal logits -> uniform, no NaN.
+        assert!((t.at2(1, 0) - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax() {
+        let mut a = Tensor::from_vec(&[1, 4], vec![0.3, -1.0, 2.0, 0.0]);
+        let mut b = a.clone();
+        softmax_rows(&mut a);
+        log_softmax_rows(&mut b);
+        for j in 0..4 {
+            assert!((a.at2(0, j).ln() - b.at2(0, j)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 5., 2., 9., 0., 3.]);
+        assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+}

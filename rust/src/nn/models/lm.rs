@@ -1,0 +1,433 @@
+//! TinyLm — the repro stand-in for LLaMA-2-7B (decoder-only, pre-LN).
+//!
+//! Exercises everything paper §3.2 needs: head-structured attention
+//! reduction (plain MHA and GQA with the block-diagonal constraint),
+//! MLP fc/proj pairs, consumer-input Gram sampling at the `w_o` and
+//! `w_proj` inputs, and sequential closed-loop compensation over depth.
+
+use crate::compress::{Compressible, ReductionPlan, Reducer, SiteInfo, SiteKind};
+use crate::data::TokenSet;
+use crate::nn::weights::WeightBundle;
+use crate::nn::{gelu, LayerNorm, Linear, MultiHeadAttention};
+use crate::rng::Pcg64;
+use crate::tensor::{ops, Tensor};
+use anyhow::Result;
+
+use super::vit::{pull_attn, pull_lin, pull_ln, push_attn, push_lin, push_ln};
+
+/// Architecture hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LmConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads; `== n_heads` for plain MHA, a divisor for GQA.
+    pub n_kv: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+}
+
+impl Default for LmConfig {
+    fn default() -> Self {
+        LmConfig {
+            vocab: crate::data::text::VOCAB,
+            d_model: 64,
+            n_heads: 8,
+            n_kv: 8,
+            d_ff: 192,
+            n_layers: 4,
+            max_seq: 64,
+        }
+    }
+}
+
+impl LmConfig {
+    /// The GQA variant (8 query heads in 4 KV groups).
+    pub fn gqa() -> Self {
+        LmConfig { n_kv: 4, ..Default::default() }
+    }
+
+    /// Per-head width.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// A batch of next-token-prediction windows.
+#[derive(Clone, Debug)]
+pub struct LmBatch {
+    /// Input token ids, `b*t` row-major.
+    pub inputs: Vec<u16>,
+    /// Target ids (inputs shifted by one).
+    pub targets: Vec<u16>,
+    pub b: usize,
+    pub t: usize,
+}
+
+impl LmBatch {
+    /// Build from `[t+1]`-length windows (see [`TokenSet::windows`]).
+    pub fn from_windows(windows: &[Vec<u16>]) -> LmBatch {
+        assert!(!windows.is_empty(), "empty batch");
+        let t = windows[0].len() - 1;
+        let mut inputs = Vec::with_capacity(windows.len() * t);
+        let mut targets = Vec::with_capacity(windows.len() * t);
+        for w in windows {
+            assert_eq!(w.len(), t + 1, "ragged windows");
+            inputs.extend_from_slice(&w[..t]);
+            targets.extend_from_slice(&w[1..]);
+        }
+        LmBatch { inputs, targets, b: windows.len(), t }
+    }
+
+    /// Build the standard calibration/eval batch from a token stream.
+    pub fn from_tokens(ts: &TokenSet, seq_len: usize, max_windows: usize) -> LmBatch {
+        LmBatch::from_windows(&ts.windows(seq_len, max_windows))
+    }
+}
+
+/// One pre-LN decoder block.
+#[derive(Clone, Debug)]
+pub struct LmBlock {
+    pub ln1: LayerNorm,
+    pub attn: MultiHeadAttention,
+    pub ln2: LayerNorm,
+    pub fc: Linear,
+    pub proj: Linear,
+}
+
+/// The decoder-only language model.
+#[derive(Clone, Debug)]
+pub struct TinyLm {
+    pub cfg: LmConfig,
+    pub embed: Tensor, // [vocab, d_model]
+    pub pos: Tensor,   // [max_seq, d_model]
+    pub blocks: Vec<LmBlock>,
+    pub ln_f: LayerNorm,
+    pub lm_head: Linear,
+}
+
+impl TinyLm {
+    /// Random-initialized model.
+    pub fn init(cfg: LmConfig, rng: &mut Pcg64) -> Self {
+        let d = cfg.d_model;
+        let dh = cfg.d_head();
+        let blocks = (0..cfg.n_layers)
+            .map(|_| LmBlock {
+                ln1: LayerNorm::new(d),
+                attn: MultiHeadAttention::init(d, cfg.n_heads, cfg.n_kv, dh, true, rng),
+                ln2: LayerNorm::new(d),
+                fc: Linear::init(cfg.d_ff, d, rng),
+                proj: Linear::init(d, cfg.d_ff, rng),
+            })
+            .collect();
+        let mut embed = Tensor::zeros(&[cfg.vocab, d]);
+        rng.fill_normal(embed.data_mut(), 0.05);
+        let mut pos = Tensor::zeros(&[cfg.max_seq, d]);
+        rng.fill_normal(pos.data_mut(), 0.02);
+        TinyLm {
+            cfg,
+            embed,
+            pos,
+            blocks,
+            ln_f: LayerNorm::new(d),
+            lm_head: Linear::init(cfg.vocab, d, rng),
+        }
+    }
+
+    /// Logits `[b*t, vocab]`.
+    pub fn forward(&self, batch: &LmBatch) -> Tensor {
+        self.forward_with_taps(batch).0
+    }
+
+    /// Logits plus consumer-input taps in site order: for each block,
+    /// the pre-`w_o` concatenated head features, then the post-GELU
+    /// MLP hidden (`2·n_layers` taps total).
+    pub fn forward_with_taps(&self, batch: &LmBatch) -> (Tensor, Vec<Tensor>) {
+        let (b, t) = (batch.b, batch.t);
+        assert!(t <= self.cfg.max_seq, "sequence too long");
+        let d = self.cfg.d_model;
+        let rows = b * t;
+        let mut cur = Tensor::zeros(&[rows, d]);
+        for r in 0..rows {
+            let tok = batch.inputs[r] as usize;
+            assert!(tok < self.embed.dim(0), "token out of vocab");
+            let dst = cur.row_mut(r);
+            let e = self.embed.row(tok);
+            let p = self.pos.row(r % t);
+            for j in 0..d {
+                dst[j] = e[j] + p[j];
+            }
+        }
+        let mut taps = Vec::with_capacity(2 * self.blocks.len());
+        for blk in &self.blocks {
+            let normed = blk.ln1.forward(&cur);
+            let (attn_out, attn_tap) = blk.attn.forward(&normed, b, t);
+            taps.push(attn_tap);
+            ops::axpy(&mut cur, 1.0, &attn_out);
+            let normed = blk.ln2.forward(&cur);
+            let mut hid = blk.fc.forward(&normed);
+            gelu(&mut hid);
+            taps.push(hid.clone());
+            let mlp_out = blk.proj.forward(&hid);
+            ops::axpy(&mut cur, 1.0, &mlp_out);
+        }
+        let normed = self.ln_f.forward(&cur);
+        (self.lm_head.forward(&normed), taps)
+    }
+
+    /// Serialize all parameters.
+    pub fn to_bundle(&self) -> WeightBundle {
+        let mut b = WeightBundle::new();
+        b.insert("embed", self.embed.clone());
+        b.insert("pos", self.pos.clone());
+        for (i, blk) in self.blocks.iter().enumerate() {
+            push_ln(&mut b, &format!("block{i}.ln1"), &blk.ln1);
+            push_attn(&mut b, &format!("block{i}.attn"), &blk.attn);
+            push_ln(&mut b, &format!("block{i}.ln2"), &blk.ln2);
+            push_lin(&mut b, &format!("block{i}.fc"), &blk.fc);
+            push_lin(&mut b, &format!("block{i}.proj"), &blk.proj);
+        }
+        push_ln(&mut b, "ln_f", &self.ln_f);
+        push_lin(&mut b, "lm_head", &self.lm_head);
+        b
+    }
+
+    /// Load from a bundle.
+    pub fn from_bundle(b: &WeightBundle, cfg: LmConfig) -> Result<Self> {
+        let dh = cfg.d_head();
+        let mut blocks = Vec::new();
+        for i in 0..cfg.n_layers {
+            blocks.push(LmBlock {
+                ln1: pull_ln(b, &format!("block{i}.ln1"))?,
+                attn: pull_attn(b, &format!("block{i}.attn"), cfg.n_heads, cfg.n_kv, dh, true)?,
+                ln2: pull_ln(b, &format!("block{i}.ln2"))?,
+                fc: pull_lin(b, &format!("block{i}.fc"))?,
+                proj: pull_lin(b, &format!("block{i}.proj"))?,
+            });
+        }
+        Ok(TinyLm {
+            cfg,
+            embed: b.get("embed")?.clone(),
+            pos: b.get("pos")?.clone(),
+            blocks,
+            ln_f: pull_ln(b, "ln_f")?,
+            lm_head: pull_lin(b, "lm_head")?,
+        })
+    }
+}
+
+impl Compressible for TinyLm {
+    type Input = LmBatch;
+
+    fn sites(&self) -> Vec<SiteInfo> {
+        let mut sites = Vec::with_capacity(2 * self.blocks.len());
+        for (i, blk) in self.blocks.iter().enumerate() {
+            sites.push(SiteInfo {
+                id: format!("block{i}.attn"),
+                units: blk.attn.n_heads,
+                unit_dim: blk.attn.d_head,
+                groups: if blk.attn.group_size() > 1 { blk.attn.n_kv } else { 1 },
+                kind: SiteKind::AttnHeads,
+            });
+            sites.push(SiteInfo {
+                id: format!("block{i}.mlp"),
+                units: blk.fc.out_dim(),
+                unit_dim: 1,
+                groups: 1,
+                kind: SiteKind::MlpPair,
+            });
+        }
+        sites
+    }
+
+    fn site_activations(&self, input: &LmBatch, site: usize) -> Tensor {
+        self.forward_with_taps(input).1.swap_remove(site)
+    }
+
+    fn producer_row_norm(&self, site: usize, ord: u8) -> Vec<f32> {
+        let blk = &self.blocks[site / 2];
+        if site % 2 == 0 {
+            // Attention heads: norm of each head's query-weight block.
+            let dh = blk.attn.d_head;
+            let per_row = super::mlp::row_norms(&blk.attn.wq.w, ord);
+            (0..blk.attn.n_heads)
+                .map(|h| per_row[h * dh..(h + 1) * dh].iter().sum())
+                .collect()
+        } else {
+            super::mlp::row_norms(&blk.fc.w, ord)
+        }
+    }
+
+    fn producer_features(&self, site: usize) -> Tensor {
+        let blk = &self.blocks[site / 2];
+        if site % 2 == 0 {
+            crate::compress::heads::head_features(&blk.attn.wq.w, blk.attn.n_heads, blk.attn.d_head)
+        } else {
+            blk.fc.w.clone()
+        }
+    }
+
+    fn consumer_col_norms(&self, site: usize) -> Vec<f32> {
+        let blk = &self.blocks[site / 2];
+        if site % 2 == 0 {
+            blk.attn.wo.input_col_norms()
+        } else {
+            blk.proj.input_col_norms()
+        }
+    }
+
+    fn consumer_matrix(&self, site: usize) -> Tensor {
+        let blk = &self.blocks[site / 2];
+        if site % 2 == 0 {
+            blk.attn.wo.w.clone()
+        } else {
+            blk.proj.w.clone()
+        }
+    }
+
+    fn apply(&mut self, site: usize, plan: &ReductionPlan) {
+        let blk = &mut self.blocks[site / 2];
+        if site % 2 == 1 {
+            super::mlp::apply_dense_pair(&mut blk.fc, &mut blk.proj, plan);
+            return;
+        }
+        // Attention heads: narrow the producer at the head level, then
+        // update w_o on the Kronecker-lifted feature axis.
+        let dh = blk.attn.d_head;
+        let h_feat = blk.attn.feat_width();
+        match &plan.reducer {
+            Reducer::Select(heads) => blk.attn.select_heads(heads),
+            Reducer::Fold { assign, k } => blk.attn.fold_heads(assign, *k),
+        }
+        if let Some(w) = &plan.consumer_override {
+            assert_eq!(w.dim(0), blk.attn.wo.out_dim(), "override rows");
+            assert_eq!(w.dim(1), plan.reducer.k() * dh, "override cols");
+            blk.attn.wo.w = w.clone();
+        } else if let Some(b_map) = &plan.compensation {
+            blk.attn.wo.merge_input_map(b_map);
+        } else {
+            let lifted = plan.reducer.lift(dh);
+            blk.attn.wo.merge_input_map(&lifted.consumer_matrix(h_feat));
+        }
+        if let Some(delta) = &plan.bias_delta {
+            assert_eq!(delta.len(), blk.attn.wo.out_dim(), "wo bias delta");
+            for (b, d) in blk.attn.wo.b.data_mut().iter_mut().zip(delta) {
+                *b += d;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthText, TextSplit};
+
+    fn model(gqa: bool) -> TinyLm {
+        let mut rng = Pcg64::seed(13);
+        let cfg = if gqa { LmConfig::gqa() } else { LmConfig::default() };
+        TinyLm::init(cfg, &mut rng)
+    }
+
+    fn batch(b: usize, t: usize) -> LmBatch {
+        let ts = SynthText::new(5).generate(TextSplit::Train, b * (t + 1) + 10);
+        LmBatch::from_tokens(&ts, t, b)
+    }
+
+    #[test]
+    fn forward_shapes_and_taps() {
+        let m = model(false);
+        let bt = batch(2, 16);
+        let (y, taps) = m.forward_with_taps(&bt);
+        assert_eq!(y.shape(), &[32, m.cfg.vocab]);
+        assert_eq!(taps.len(), 8); // 4 blocks × (attn, mlp)
+        assert_eq!(taps[0].shape(), &[32, 64]); // 8 heads × dh 8
+        assert_eq!(taps[1].shape(), &[32, 192]);
+        assert!(y.all_finite());
+    }
+
+    #[test]
+    fn batch_windows_shift_targets() {
+        let bt = batch(2, 8);
+        assert_eq!(bt.inputs.len(), 16);
+        assert_eq!(bt.targets.len(), 16);
+        // Targets are inputs shifted by one inside each window.
+        assert_eq!(bt.inputs[1], bt.targets[0]);
+    }
+
+    #[test]
+    fn bundle_roundtrip_preserves_function() {
+        for gqa in [false, true] {
+            let m = model(gqa);
+            let bt = batch(1, 12);
+            let y0 = m.forward(&bt);
+            let r = TinyLm::from_bundle(&m.to_bundle(), m.cfg).unwrap();
+            assert!(y0.max_abs_diff(&r.forward(&bt)) < 1e-5, "gqa={gqa}");
+        }
+    }
+
+    #[test]
+    fn sites_cover_attention_and_mlp() {
+        let m = model(true);
+        let sites = m.sites();
+        assert_eq!(sites.len(), 8);
+        assert_eq!(sites[0].kind, SiteKind::AttnHeads);
+        assert_eq!(sites[0].units, 8);
+        assert_eq!(sites[0].unit_dim, 8);
+        assert_eq!(sites[0].groups, 4); // GQA groups
+        assert_eq!(sites[1].kind, SiteKind::MlpPair);
+        let mha = model(false);
+        assert_eq!(mha.sites()[0].groups, 1);
+    }
+
+    #[test]
+    fn head_prune_mha() {
+        let mut m = model(false);
+        let bt = batch(1, 8);
+        m.apply(0, &ReductionPlan::bare(Reducer::Select(vec![0, 2, 5, 7])));
+        assert_eq!(m.blocks[0].attn.n_heads, 4);
+        assert_eq!(m.blocks[0].attn.wo.in_dim(), 32);
+        assert!(m.forward(&bt).all_finite());
+    }
+
+    #[test]
+    fn head_prune_gqa_balanced() {
+        let mut m = model(true);
+        let bt = batch(1, 8);
+        // Keep 1 of 2 query heads per group.
+        m.apply(0, &ReductionPlan::bare(Reducer::Select(vec![0, 2, 4, 6])));
+        assert_eq!(m.blocks[0].attn.n_heads, 4);
+        assert_eq!(m.blocks[0].attn.n_kv, 4); // kv untouched
+        assert!(m.forward(&bt).all_finite());
+    }
+
+    #[test]
+    fn full_head_selection_identity() {
+        let mut m = model(false);
+        let bt = batch(1, 8);
+        let y0 = m.forward(&bt);
+        m.apply(0, &ReductionPlan::bare(Reducer::Select((0..8).collect())));
+        assert!(y0.max_abs_diff(&m.forward(&bt)) < 1e-5);
+    }
+
+    #[test]
+    fn mlp_site_apply() {
+        let mut m = model(false);
+        let bt = batch(1, 8);
+        m.apply(1, &ReductionPlan::bare(Reducer::Select((0..96).collect())));
+        assert_eq!(m.blocks[0].fc.out_dim(), 96);
+        assert_eq!(m.blocks[0].proj.in_dim(), 96);
+        assert!(m.forward(&bt).all_finite());
+    }
+
+    #[test]
+    fn attn_tap_matches_wo_input() {
+        let m = model(false);
+        let bt = batch(1, 8);
+        let (_, taps) = m.forward_with_taps(&bt);
+        // Rebuilding the attention output from the tap must match the
+        // block's contribution: verified indirectly by width.
+        assert_eq!(taps[0].dim(1), m.blocks[0].attn.feat_width());
+    }
+}

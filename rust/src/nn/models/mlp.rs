@@ -1,0 +1,285 @@
+//! Three-layer MLP classifier — the simplest compression target and
+//! the unit-test workhorse for the dense-block math of paper §3.1.
+
+use crate::compress::{Compressible, ReductionPlan, Reducer, SiteInfo, SiteKind};
+use crate::nn::weights::WeightBundle;
+use crate::nn::{relu, Linear};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// `x -> relu(fc1) -> relu(fc2) -> head` classifier.
+#[derive(Clone, Debug)]
+pub struct MlpNet {
+    pub fc1: Linear,
+    pub fc2: Linear,
+    pub head: Linear,
+}
+
+impl MlpNet {
+    /// Random-initialized network.
+    pub fn init(in_dim: usize, hidden: usize, classes: usize, rng: &mut Pcg64) -> Self {
+        MlpNet {
+            fc1: Linear::init(hidden, in_dim, rng),
+            fc2: Linear::init(hidden, hidden, rng),
+            head: Linear::init(classes, hidden, rng),
+        }
+    }
+
+    /// Logits for a batch `[n, in_dim]`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_with_taps(x).0
+    }
+
+    /// Logits plus consumer-input activations per site:
+    /// `taps[0]` = input of `fc2`, `taps[1]` = input of `head`.
+    pub fn forward_with_taps(&self, x: &Tensor) -> (Tensor, Vec<Tensor>) {
+        let mut h1 = self.fc1.forward(x);
+        relu(&mut h1);
+        let mut h2 = self.fc2.forward(&h1);
+        relu(&mut h2);
+        let y = self.head.forward(&h2);
+        (y, vec![h1, h2])
+    }
+
+    /// Serialize all parameters.
+    pub fn to_bundle(&self) -> WeightBundle {
+        let mut b = WeightBundle::new();
+        for (name, l) in [("fc1", &self.fc1), ("fc2", &self.fc2), ("head", &self.head)] {
+            b.insert(&format!("{name}.w"), l.w.clone());
+            b.insert(&format!("{name}.b"), l.b.clone());
+        }
+        b
+    }
+
+    /// Load from a bundle (shapes inferred from the stored tensors).
+    pub fn from_bundle(b: &WeightBundle) -> Result<Self> {
+        let lin = |name: &str| -> Result<Linear> {
+            let w = b.get(&format!("{name}.w"))?.clone();
+            let bias = b.get(&format!("{name}.b"))?.clone();
+            anyhow::ensure!(w.ndim() == 2 && bias.ndim() == 1, "{name}: bad ranks");
+            anyhow::ensure!(w.dim(0) == bias.dim(0), "{name}: w/b mismatch");
+            Ok(Linear { w, b: bias })
+        };
+        Ok(MlpNet { fc1: lin("fc1")?, fc2: lin("fc2")?, head: lin("head")? })
+    }
+}
+
+impl Compressible for MlpNet {
+    type Input = Tensor;
+
+    fn sites(&self) -> Vec<SiteInfo> {
+        vec![
+            SiteInfo {
+                id: "fc1>fc2".into(),
+                units: self.fc1.out_dim(),
+                unit_dim: 1,
+                groups: 1,
+                kind: SiteKind::Dense,
+            },
+            SiteInfo {
+                id: "fc2>head".into(),
+                units: self.fc2.out_dim(),
+                unit_dim: 1,
+                groups: 1,
+                kind: SiteKind::Dense,
+            },
+        ]
+    }
+
+    fn site_activations(&self, input: &Tensor, site: usize) -> Tensor {
+        self.forward_with_taps(input).1.swap_remove(site)
+    }
+
+    fn producer_row_norm(&self, site: usize, ord: u8) -> Vec<f32> {
+        let p = if site == 0 { &self.fc1 } else { &self.fc2 };
+        row_norms(&p.w, ord)
+    }
+
+    fn producer_features(&self, site: usize) -> Tensor {
+        let p = if site == 0 { &self.fc1 } else { &self.fc2 };
+        p.w.clone()
+    }
+
+    fn consumer_col_norms(&self, site: usize) -> Vec<f32> {
+        let c = if site == 0 { &self.fc2 } else { &self.head };
+        c.input_col_norms()
+    }
+
+    fn consumer_matrix(&self, site: usize) -> Tensor {
+        let c = if site == 0 { &self.fc2 } else { &self.head };
+        c.w.clone()
+    }
+
+    fn apply(&mut self, site: usize, plan: &ReductionPlan) {
+        let (producer, consumer) = if site == 0 {
+            (&mut self.fc1, &mut self.fc2)
+        } else {
+            (&mut self.fc2, &mut self.head)
+        };
+        apply_dense_pair(producer, consumer, plan);
+    }
+}
+
+/// Per-row L1/L2 norms of a weight matrix.
+pub(crate) fn row_norms(w: &Tensor, ord: u8) -> Vec<f32> {
+    (0..w.dim(0))
+        .map(|i| {
+            let row = w.row(i);
+            match ord {
+                1 => row.iter().map(|v| v.abs()).sum(),
+                2 => row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32,
+                _ => panic!("row_norms: ord must be 1 or 2"),
+            }
+        })
+        .collect()
+}
+
+/// Shared producer/consumer update for dense pairs (also used by the
+/// ViT/LM MLP sites).
+pub(crate) fn apply_dense_pair(producer: &mut Linear, consumer: &mut Linear, plan: &ReductionPlan) {
+    let h = producer.out_dim();
+    // 1. Narrow the producer.
+    match &plan.reducer {
+        Reducer::Select(idx) => producer.select_outputs(idx),
+        Reducer::Fold { assign, k } => producer.fold_outputs(assign, *k),
+    }
+    // 2. Update the consumer: override ≻ compensation ≻ data-free.
+    if let Some(w) = &plan.consumer_override {
+        assert_eq!(w.dim(0), consumer.out_dim(), "override rows");
+        assert_eq!(w.dim(1), plan.reducer.k(), "override cols");
+        consumer.w = w.clone();
+    } else if let Some(b_map) = &plan.compensation {
+        consumer.merge_input_map(b_map);
+    } else {
+        consumer.merge_input_map(&plan.reducer.consumer_matrix(h));
+    }
+    // 3. Optional bias correction.
+    if let Some(delta) = &plan.bias_delta {
+        assert_eq!(delta.len(), consumer.out_dim(), "bias delta length");
+        for (b, d) in consumer.b.data_mut().iter_mut().zip(delta) {
+            *b += d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Reducer;
+
+    fn net() -> MlpNet {
+        let mut rng = Pcg64::seed(11);
+        MlpNet::init(12, 16, 4, &mut rng)
+    }
+
+    fn batch(n: usize) -> Tensor {
+        let mut rng = Pcg64::seed(99);
+        let mut x = Tensor::zeros(&[n, 12]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        x
+    }
+
+    #[test]
+    fn forward_shapes_and_taps() {
+        let m = net();
+        let x = batch(5);
+        let (y, taps) = m.forward_with_taps(&x);
+        assert_eq!(y.shape(), &[5, 4]);
+        assert_eq!(taps[0].shape(), &[5, 16]);
+        assert_eq!(taps[1].shape(), &[5, 16]);
+        // Taps are post-ReLU: non-negative.
+        assert!(taps[0].data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn bundle_roundtrip() {
+        let m = net();
+        let b = m.to_bundle();
+        let r = MlpNet::from_bundle(&b).unwrap();
+        let x = batch(3);
+        assert!(m.forward(&x).max_abs_diff(&r.forward(&x)) < 1e-7);
+    }
+
+    #[test]
+    fn prune_site0_changes_width() {
+        let mut m = net();
+        let keep: Vec<usize> = (0..8).collect();
+        m.apply(0, &ReductionPlan::bare(Reducer::Select(keep)));
+        assert_eq!(m.fc1.out_dim(), 8);
+        assert_eq!(m.fc2.in_dim(), 8);
+        let y = m.forward(&batch(2));
+        assert_eq!(y.shape(), &[2, 4]);
+        assert!(y.all_finite());
+    }
+
+    #[test]
+    fn identity_fold_preserves_function() {
+        // Folding H units into H singleton clusters is a no-op.
+        let mut m = net();
+        let x = batch(4);
+        let y0 = m.forward(&x);
+        m.apply(1, &ReductionPlan::bare(Reducer::Fold { assign: (0..16).collect(), k: 16 }));
+        let y1 = m.forward(&x);
+        assert!(y0.max_abs_diff(&y1) < 1e-5);
+    }
+
+    #[test]
+    fn full_selection_preserves_function() {
+        let mut m = net();
+        let x = batch(4);
+        let y0 = m.forward(&x);
+        m.apply(0, &ReductionPlan::bare(Reducer::Select((0..16).collect())));
+        assert!(y0.max_abs_diff(&m.forward(&x)) < 1e-6);
+    }
+
+    #[test]
+    fn duplicate_units_fold_losslessly() {
+        // Make units 0 and 1 of fc1 identical; folding them together
+        // with the data-free consumer update is exactly lossless.
+        let mut m = net();
+        let r0 = m.fc1.w.row(0).to_vec();
+        m.fc1.w.row_mut(1).copy_from_slice(&r0);
+        let b0 = m.fc1.b.data()[0];
+        m.fc1.b.data_mut()[1] = b0;
+        let x = batch(6);
+        let y0 = m.forward(&x);
+        // Units 0,1 -> cluster 0; unit h>=2 -> cluster h-1.
+        let assign: Vec<usize> = (0..16usize).map(|h| h.saturating_sub(1)).collect();
+        m.apply(0, &ReductionPlan::bare(Reducer::Fold { assign, k: 15 }));
+        let y1 = m.forward(&x);
+        assert!(y0.max_abs_diff(&y1) < 1e-4);
+        assert_eq!(m.fc1.out_dim(), 15);
+    }
+
+    #[test]
+    fn bias_delta_applied() {
+        let mut m = net();
+        let before = m.head.b.data().to_vec();
+        let plan = ReductionPlan {
+            reducer: Reducer::Select((0..16).collect()),
+            compensation: None,
+            bias_delta: Some(vec![1.0; 4]),
+            consumer_override: None,
+        };
+        m.apply(1, &plan);
+        for (a, b) in m.head.b.data().iter().zip(&before) {
+            assert!((a - b - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn consumer_override_wins() {
+        let mut m = net();
+        let w = Tensor::full(&[4, 3], 0.25);
+        let plan = ReductionPlan {
+            reducer: Reducer::Select(vec![0, 5, 9]),
+            compensation: Some(Tensor::eye(16)), // would be wrong; must be ignored
+            bias_delta: None,
+            consumer_override: Some(w.clone()),
+        };
+        m.apply(1, &plan);
+        assert_eq!(m.head.w, w);
+        assert_eq!(m.fc2.out_dim(), 3);
+    }
+}

@@ -1,0 +1,23 @@
+//! The model zoo: the repro substitutes for the paper's architectures
+//! (DESIGN.md §2).
+//!
+//! | Paper                      | Here                               |
+//! |----------------------------|------------------------------------|
+//! | ResNet-18 / CIFAR-10       | [`MiniResNet`] / SynthVision       |
+//! | ViT-B/32, CLIP ViT-B/32    | [`TinyViT`] / SynthVision          |
+//! | LLaMA-2-7B                 | [`TinyLm`] (MHA + GQA) / SynthText |
+//! | MLP probes                 | [`MlpNet`]                         |
+//!
+//! Every model implements [`crate::compress::Compressible`] and
+//! round-trips through the `GRWB` weight format shared with the
+//! Python training step.
+
+mod lm;
+mod mlp;
+mod resnet;
+mod vit;
+
+pub use lm::{LmBatch, LmConfig, TinyLm};
+pub use mlp::MlpNet;
+pub use resnet::MiniResNet;
+pub use vit::{TinyViT, VitConfig};

@@ -1,0 +1,483 @@
+//! MiniResNet — the repro stand-in for ResNet-18/CIFAR-10.
+//!
+//! Stem conv + 4 BasicBlocks (2 stages, the second strided with a 1×1
+//! downsample skip) + global average pool + linear head. Compression
+//! sites are each block's *internal* channels (conv1 out → conv2 in),
+//! which keeps the residual topology intact — the standard structured-
+//! pruning surface for ResNets.
+
+use crate::compress::{Compressible, ReductionPlan, Reducer, SiteInfo, SiteKind};
+use crate::data::VisionSet;
+use crate::nn::weights::WeightBundle;
+use crate::nn::{relu, BatchNorm2d, Conv2d, Linear};
+use crate::rng::Pcg64;
+use crate::tensor::{ops, Tensor};
+use anyhow::Result;
+
+/// One residual block: `relu(bn2(conv2(relu(bn1(conv1 x)))) + skip)`.
+#[derive(Clone, Debug)]
+pub struct BasicBlock {
+    pub conv1: Conv2d,
+    pub bn1: BatchNorm2d,
+    pub conv2: Conv2d,
+    pub bn2: BatchNorm2d,
+    /// 1×1 conv + BN on the skip when shape changes.
+    pub down: Option<(Conv2d, BatchNorm2d)>,
+}
+
+impl BasicBlock {
+    fn init(c_in: usize, c_out: usize, stride: usize, rng: &mut Pcg64) -> Self {
+        let down = if stride != 1 || c_in != c_out {
+            Some((Conv2d::init(c_out, c_in, 1, stride, 0, rng), BatchNorm2d::new(c_out)))
+        } else {
+            None
+        };
+        BasicBlock {
+            conv1: Conv2d::init(c_out, c_in, 3, stride, 1, rng),
+            bn1: BatchNorm2d::new(c_out),
+            conv2: Conv2d::init(c_out, c_out, 3, 1, 1, rng),
+            bn2: BatchNorm2d::new(c_out),
+            down,
+        }
+    }
+
+    /// Forward over `[n, c_in*h*w]`; returns `(out, mid_tap, oh, ow)`
+    /// where `mid_tap` is the post-`relu(bn1(conv1))` activation — the
+    /// consumer input of `conv2`.
+    fn forward(&self, x: &Tensor, h: usize, w: usize) -> (Tensor, Tensor, usize, usize) {
+        let (oh, ow) = self.conv1.out_hw(h, w);
+        let mut mid = self.conv1.forward(x, h, w);
+        self.bn1.forward_inplace(&mut mid, oh * ow);
+        relu(&mut mid);
+        let mut out = self.conv2.forward(&mid, oh, ow);
+        self.bn2.forward_inplace(&mut out, oh * ow);
+        let skip = match &self.down {
+            Some((conv, bn)) => {
+                let mut s = conv.forward(x, h, w);
+                bn.forward_inplace(&mut s, oh * ow);
+                s
+            }
+            None => x.clone(),
+        };
+        ops::axpy(&mut out, 1.0, &skip);
+        relu(&mut out);
+        (out, mid, oh, ow)
+    }
+}
+
+/// The full network.
+#[derive(Clone, Debug)]
+pub struct MiniResNet {
+    pub stem_conv: Conv2d,
+    pub stem_bn: BatchNorm2d,
+    pub blocks: Vec<BasicBlock>,
+    pub head: Linear,
+    /// Input geometry `(c, h, w)`.
+    pub chw: (usize, usize, usize),
+}
+
+impl MiniResNet {
+    /// Standard configuration: widths 32/64 on 3×16×16 inputs,
+    /// 10 classes.
+    pub fn init(rng: &mut Pcg64) -> Self {
+        MiniResNet {
+            stem_conv: Conv2d::init(32, 3, 3, 1, 1, rng),
+            stem_bn: BatchNorm2d::new(32),
+            blocks: vec![
+                BasicBlock::init(32, 32, 1, rng),
+                BasicBlock::init(32, 32, 1, rng),
+                BasicBlock::init(32, 64, 2, rng),
+                BasicBlock::init(64, 64, 1, rng),
+            ],
+            head: Linear::init(10, 64, rng),
+            chw: (3, 16, 16),
+        }
+    }
+
+    /// Logits for `[n, c*h*w]`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_with_taps(x).0
+    }
+
+    /// Logits plus one mid-block tap per site, already reshaped to
+    /// `[n*oh*ow, c_mid]` rows (pixels are Gram samples).
+    pub fn forward_with_taps(&self, x: &Tensor) -> (Tensor, Vec<Tensor>) {
+        let (_, h0, w0) = self.chw;
+        let mut cur = self.stem_conv.forward(x, h0, w0);
+        let (mut h, mut w) = self.stem_conv.out_hw(h0, w0);
+        self.stem_bn.forward_inplace(&mut cur, h * w);
+        relu(&mut cur);
+        let mut taps = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            let (out, mid, oh, ow) = blk.forward(&cur, h, w);
+            taps.push(chw_to_rows(&mid, blk.conv1.out_channels(), oh * ow));
+            cur = out;
+            h = oh;
+            w = ow;
+        }
+        // Global average pool to [n, c].
+        let c = self.blocks.last().map(|b| b.conv2.out_channels()).unwrap_or(0);
+        let pooled = global_avg_pool(&cur, c, h * w);
+        (self.head.forward(&pooled), taps)
+    }
+
+    /// REPAIR (Jordan et al.): recompute every BatchNorm's running
+    /// statistics from calibration data flowing through the *current*
+    /// (compressed) network.
+    pub fn repair(&mut self, calib: &VisionSet) {
+        let (_, h0, w0) = self.chw;
+        let x = &calib.x;
+        let mut pre = self.stem_conv.forward(x, h0, w0);
+        let (mut h, mut w) = self.stem_conv.out_hw(h0, w0);
+        self.stem_bn.recompute_stats(&pre, h * w);
+        self.stem_bn.forward_inplace(&mut pre, h * w);
+        relu(&mut pre);
+        let mut cur = pre;
+        for bi in 0..self.blocks.len() {
+            let (oh, ow) = self.blocks[bi].conv1.out_hw(h, w);
+            let mut mid = self.blocks[bi].conv1.forward(&cur, h, w);
+            self.blocks[bi].bn1.recompute_stats(&mid, oh * ow);
+            self.blocks[bi].bn1.forward_inplace(&mut mid, oh * ow);
+            relu(&mut mid);
+            let mut out = self.blocks[bi].conv2.forward(&mid, oh, ow);
+            self.blocks[bi].bn2.recompute_stats(&out, oh * ow);
+            self.blocks[bi].bn2.forward_inplace(&mut out, oh * ow);
+            let skip = match &mut self.blocks[bi].down {
+                Some((conv, bn)) => {
+                    let mut s = conv.forward(&cur, h, w);
+                    bn.recompute_stats(&s, oh * ow);
+                    bn.forward_inplace(&mut s, oh * ow);
+                    s
+                }
+                None => cur.clone(),
+            };
+            ops::axpy(&mut out, 1.0, &skip);
+            relu(&mut out);
+            cur = out;
+            h = oh;
+            w = ow;
+        }
+    }
+
+    /// Serialize all parameters.
+    pub fn to_bundle(&self) -> WeightBundle {
+        let mut b = WeightBundle::new();
+        push_conv(&mut b, "stem.conv", &self.stem_conv);
+        push_bn(&mut b, "stem.bn", &self.stem_bn);
+        for (i, blk) in self.blocks.iter().enumerate() {
+            push_conv(&mut b, &format!("block{i}.conv1"), &blk.conv1);
+            push_bn(&mut b, &format!("block{i}.bn1"), &blk.bn1);
+            push_conv(&mut b, &format!("block{i}.conv2"), &blk.conv2);
+            push_bn(&mut b, &format!("block{i}.bn2"), &blk.bn2);
+            if let Some((conv, bn)) = &blk.down {
+                push_conv(&mut b, &format!("block{i}.down.conv"), conv);
+                push_bn(&mut b, &format!("block{i}.down.bn"), bn);
+            }
+        }
+        b.insert("head.w", self.head.w.clone());
+        b.insert("head.b", self.head.b.clone());
+        b
+    }
+
+    /// Load from a bundle (the standard 4-block topology; strides are
+    /// inferred from the presence of downsample weights).
+    pub fn from_bundle(b: &WeightBundle) -> Result<Self> {
+        let stem_conv = pull_conv(b, "stem.conv", 1, 1)?;
+        let stem_bn = pull_bn(b, "stem.bn")?;
+        let mut blocks = Vec::new();
+        for i in 0.. {
+            if b.get(&format!("block{i}.conv1.w")).is_err() {
+                break;
+            }
+            let has_down = b.get(&format!("block{i}.down.conv.w")).is_ok();
+            let stride = if has_down { 2 } else { 1 };
+            let blk = BasicBlock {
+                conv1: pull_conv(b, &format!("block{i}.conv1"), stride, 1)?,
+                bn1: pull_bn(b, &format!("block{i}.bn1"))?,
+                conv2: pull_conv(b, &format!("block{i}.conv2"), 1, 1)?,
+                bn2: pull_bn(b, &format!("block{i}.bn2"))?,
+                down: if has_down {
+                    Some((
+                        pull_conv(b, &format!("block{i}.down.conv"), stride, 0)?,
+                        pull_bn(b, &format!("block{i}.down.bn"))?,
+                    ))
+                } else {
+                    None
+                },
+            };
+            blocks.push(blk);
+        }
+        anyhow::ensure!(!blocks.is_empty(), "no blocks in bundle");
+        Ok(MiniResNet {
+            stem_conv,
+            stem_bn,
+            blocks,
+            head: Linear { w: b.get("head.w")?.clone(), b: b.get("head.b")?.clone() },
+            chw: (3, 16, 16),
+        })
+    }
+}
+
+/// Reorder `[n, c*hw]` CHW activations into `[n*hw, c]` rows so each
+/// pixel is one Gram sample over channels.
+pub fn chw_to_rows(x: &Tensor, c: usize, hw: usize) -> Tensor {
+    let n = x.dim(0);
+    assert_eq!(x.dim(1), c * hw);
+    let mut out = Tensor::zeros(&[n * hw, c]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for i in 0..n {
+        for ch in 0..c {
+            let src = &xd[i * c * hw + ch * hw..i * c * hw + (ch + 1) * hw];
+            for (s, &v) in src.iter().enumerate() {
+                od[(i * hw + s) * c + ch] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Mean over the spatial axis: `[n, c*hw] -> [n, c]`.
+pub fn global_avg_pool(x: &Tensor, c: usize, hw: usize) -> Tensor {
+    let n = x.dim(0);
+    assert_eq!(x.dim(1), c * hw);
+    let mut out = Tensor::zeros(&[n, c]);
+    for i in 0..n {
+        for ch in 0..c {
+            let s: f32 = x.data()[i * c * hw + ch * hw..i * c * hw + (ch + 1) * hw]
+                .iter()
+                .sum();
+            out.set2(i, ch, s / hw as f32);
+        }
+    }
+    out
+}
+
+fn push_conv(b: &mut WeightBundle, name: &str, c: &Conv2d) {
+    b.insert(&format!("{name}.w"), c.w.clone());
+    b.insert(&format!("{name}.b"), c.b.clone());
+}
+
+fn push_bn(b: &mut WeightBundle, name: &str, bn: &BatchNorm2d) {
+    b.insert(&format!("{name}.gamma"), bn.gamma.clone());
+    b.insert(&format!("{name}.beta"), bn.beta.clone());
+    b.insert(&format!("{name}.mean"), bn.running_mean.clone());
+    b.insert(&format!("{name}.var"), bn.running_var.clone());
+}
+
+fn pull_conv(b: &WeightBundle, name: &str, stride: usize, pad: usize) -> Result<Conv2d> {
+    let w = b.get(&format!("{name}.w"))?.clone();
+    anyhow::ensure!(w.ndim() == 4, "{name}: conv weight must be 4-D");
+    Ok(Conv2d { w, b: b.get(&format!("{name}.b"))?.clone(), stride, pad })
+}
+
+fn pull_bn(b: &WeightBundle, name: &str) -> Result<BatchNorm2d> {
+    Ok(BatchNorm2d {
+        gamma: b.get(&format!("{name}.gamma"))?.clone(),
+        beta: b.get(&format!("{name}.beta"))?.clone(),
+        running_mean: b.get(&format!("{name}.mean"))?.clone(),
+        running_var: b.get(&format!("{name}.var"))?.clone(),
+    })
+}
+
+impl Compressible for MiniResNet {
+    type Input = Tensor;
+
+    fn sites(&self) -> Vec<SiteInfo> {
+        self.blocks
+            .iter()
+            .enumerate()
+            .map(|(i, blk)| SiteInfo {
+                id: format!("block{i}.mid"),
+                units: blk.conv1.out_channels(),
+                unit_dim: 1,
+                groups: 1,
+                kind: SiteKind::Conv,
+            })
+            .collect()
+    }
+
+    fn site_activations(&self, input: &Tensor, site: usize) -> Tensor {
+        self.forward_with_taps(input).1.swap_remove(site)
+    }
+
+    fn producer_row_norm(&self, site: usize, ord: u8) -> Vec<f32> {
+        super::mlp::row_norms(&self.blocks[site].conv1.weight_matrix(), ord)
+    }
+
+    fn producer_features(&self, site: usize) -> Tensor {
+        self.blocks[site].conv1.weight_matrix()
+    }
+
+    fn consumer_col_norms(&self, site: usize) -> Vec<f32> {
+        self.blocks[site].conv2.input_col_norms()
+    }
+
+    fn consumer_matrix(&self, site: usize) -> Tensor {
+        // conv2 as [o*kh*kw, c]: one output row per spatial tap.
+        let conv = &self.blocks[site].conv2;
+        let (o, c) = (conv.out_channels(), conv.in_channels());
+        let (kh, kw) = conv.kernel();
+        let mut m = Tensor::zeros(&[o * kh * kw, c]);
+        for oo in 0..o {
+            for cc in 0..c {
+                for t in 0..kh * kw {
+                    let v = conv.w.data()[(oo * c + cc) * kh * kw + t];
+                    m.set2(oo * kh * kw + t, cc, v);
+                }
+            }
+        }
+        m
+    }
+
+    fn apply(&mut self, site: usize, plan: &ReductionPlan) {
+        let blk = &mut self.blocks[site];
+        let h = blk.conv1.out_channels();
+        // 1. Narrow the producer conv + its BN.
+        match &plan.reducer {
+            Reducer::Select(idx) => {
+                blk.conv1.select_outputs(idx);
+                blk.bn1.select_channels(idx);
+            }
+            Reducer::Fold { assign, k } => {
+                blk.conv1.fold_outputs(assign, *k);
+                blk.bn1.fold_channels(assign, *k);
+            }
+        }
+        // 2. Update the consumer conv along its input channels.
+        if let Some(w) = &plan.consumer_override {
+            let conv = &mut blk.conv2;
+            let (o, _c) = (conv.out_channels(), conv.in_channels());
+            let (kh, kw) = conv.kernel();
+            let k = plan.reducer.k();
+            assert_eq!(w.shape(), &[o * kh * kw, k], "conv override shape");
+            let mut nw = Tensor::zeros(&[o, k, kh, kw]);
+            for oo in 0..o {
+                for cc in 0..k {
+                    for t in 0..kh * kw {
+                        nw.data_mut()[(oo * k + cc) * kh * kw + t] =
+                            w.at2(oo * kh * kw + t, cc);
+                    }
+                }
+            }
+            conv.w = nw;
+        } else if let Some(b_map) = &plan.compensation {
+            blk.conv2.merge_input_map(b_map);
+        } else {
+            blk.conv2.merge_input_map(&plan.reducer.consumer_matrix(h));
+        }
+        // 3. Optional bias correction. Bias deltas are per consumer-
+        // matrix row, i.e. one per (out-channel, spatial tap); the conv
+        // bias has per-channel granularity, so sum a channel's taps
+        // (each tap sees the removed features' mean).
+        if let Some(delta) = &plan.bias_delta {
+            let o = blk.conv2.out_channels();
+            let (kh, kw) = blk.conv2.kernel();
+            assert_eq!(delta.len(), o * kh * kw, "conv bias delta rows");
+            for (oo, b) in blk.conv2.b.data_mut().iter_mut().enumerate() {
+                *b += delta[oo * kh * kw..(oo + 1) * kh * kw].iter().sum::<f32>();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthVision;
+
+    fn net() -> MiniResNet {
+        let mut rng = Pcg64::seed(3);
+        MiniResNet::init(&mut rng)
+    }
+
+    fn imgs(n: usize) -> Tensor {
+        SynthVision::new(7).generate(n).x
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = net();
+        let x = imgs(4);
+        let (y, taps) = m.forward_with_taps(&x);
+        assert_eq!(y.shape(), &[4, 10]);
+        assert_eq!(taps.len(), 4);
+        assert_eq!(taps[0].shape(), &[4 * 256, 32]);
+        assert_eq!(taps[2].shape(), &[4 * 64, 64]); // strided stage: 8×8
+        assert!(y.all_finite());
+    }
+
+    #[test]
+    fn bundle_roundtrip_preserves_function() {
+        let m = net();
+        let x = imgs(2);
+        let y0 = m.forward(&x);
+        let r = MiniResNet::from_bundle(&m.to_bundle()).unwrap();
+        assert!(y0.max_abs_diff(&r.forward(&x)) < 1e-5);
+    }
+
+    #[test]
+    fn chw_to_rows_layout() {
+        // 1 sample, 2 channels, hw=3.
+        let x = Tensor::from_vec(&[1, 6], vec![1., 2., 3., 10., 20., 30.]);
+        let r = chw_to_rows(&x, 2, 3);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.row(0), &[1., 10.]);
+        assert_eq!(r.row(2), &[3., 30.]);
+    }
+
+    #[test]
+    fn avg_pool_means() {
+        let x = Tensor::from_vec(&[1, 4], vec![1., 3., 10., 30.]); // c=2, hw=2
+        let p = global_avg_pool(&x, 2, 2);
+        assert_eq!(p.data(), &[2., 20.]);
+    }
+
+    #[test]
+    fn prune_block_changes_width_keeps_finite() {
+        let mut m = net();
+        let x = imgs(2);
+        m.apply(1, &ReductionPlan::bare(Reducer::Select((0..16).collect())));
+        assert_eq!(m.blocks[1].conv1.out_channels(), 16);
+        assert_eq!(m.blocks[1].conv2.in_channels(), 16);
+        assert_eq!(m.blocks[1].bn1.channels(), 16);
+        let y = m.forward(&x);
+        assert!(y.all_finite());
+    }
+
+    #[test]
+    fn full_selection_is_identity() {
+        let mut m = net();
+        let x = imgs(2);
+        let y0 = m.forward(&x);
+        m.apply(0, &ReductionPlan::bare(Reducer::Select((0..32).collect())));
+        assert!(y0.max_abs_diff(&m.forward(&x)) < 1e-4);
+    }
+
+    #[test]
+    fn repair_runs_and_updates_stats() {
+        let mut m = net();
+        let calib = SynthVision::new(7).generate(16);
+        let before = m.blocks[0].bn1.running_mean.clone();
+        m.repair(&calib);
+        let after = &m.blocks[0].bn1.running_mean;
+        assert!(before.max_abs_diff(after) > 1e-4, "stats should move");
+        assert!(m.forward(&calib.x).all_finite());
+    }
+
+    #[test]
+    fn consumer_matrix_matches_merge_semantics() {
+        // consumer_matrix · M must equal conv2 after merge_input_map(M).
+        let m = net();
+        let site = 0;
+        let cm = m.consumer_matrix(site);
+        let h = m.blocks[site].conv1.out_channels();
+        let reducer = Reducer::Select((0..h / 2).collect());
+        let mm = reducer.matrix(h);
+        let want = ops::matmul(&cm, &mm);
+        let mut m2 = m.clone();
+        m2.apply(site, &ReductionPlan::bare(reducer));
+        let got = m2.consumer_matrix(site);
+        assert!(want.max_abs_diff(&got) < 1e-5);
+    }
+}

@@ -1,0 +1,384 @@
+//! TinyViT — the repro stand-in for ViT-B/32 and CLIP ViT-B/32.
+//!
+//! Patch embedding + pre-LN encoder blocks + mean-pool head. Following
+//! the paper (§3.1 "Compensation for ViTs and CLIP"), GRAIL targets the
+//! MLP `(W_fc, W_proj)` producer–consumer pairs; attention is left at
+//! full width for this architecture.
+
+use crate::compress::{Compressible, ReductionPlan, SiteInfo, SiteKind};
+use crate::nn::weights::WeightBundle;
+use crate::nn::{gelu, LayerNorm, Linear, MultiHeadAttention};
+use crate::rng::Pcg64;
+use crate::tensor::{ops, Tensor};
+use anyhow::Result;
+
+/// Architecture hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VitConfig {
+    pub image: (usize, usize, usize), // c, h, w
+    pub patch: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub classes: usize,
+}
+
+impl Default for VitConfig {
+    fn default() -> Self {
+        VitConfig {
+            image: (3, 16, 16),
+            patch: 4,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 128,
+            n_layers: 3,
+            classes: 10,
+        }
+    }
+}
+
+impl VitConfig {
+    /// Tokens per image.
+    pub fn tokens(&self) -> usize {
+        let (_, h, w) = self.image;
+        (h / self.patch) * (w / self.patch)
+    }
+
+    /// Flattened patch dimension.
+    pub fn patch_dim(&self) -> usize {
+        let (c, _, _) = self.image;
+        c * self.patch * self.patch
+    }
+}
+
+/// One pre-LN encoder block.
+#[derive(Clone, Debug)]
+pub struct VitBlock {
+    pub ln1: LayerNorm,
+    pub attn: MultiHeadAttention,
+    pub ln2: LayerNorm,
+    pub fc: Linear,
+    pub proj: Linear,
+}
+
+/// The full encoder.
+#[derive(Clone, Debug)]
+pub struct TinyViT {
+    pub cfg: VitConfig,
+    pub patch_embed: Linear,
+    pub pos: Tensor, // [tokens, d_model]
+    pub blocks: Vec<VitBlock>,
+    pub ln_f: LayerNorm,
+    pub head: Linear,
+}
+
+impl TinyViT {
+    /// Random-initialized encoder.
+    pub fn init(cfg: VitConfig, rng: &mut Pcg64) -> Self {
+        let d = cfg.d_model;
+        let dh = d / cfg.n_heads;
+        let blocks = (0..cfg.n_layers)
+            .map(|_| VitBlock {
+                ln1: LayerNorm::new(d),
+                attn: MultiHeadAttention::init(d, cfg.n_heads, cfg.n_heads, dh, false, rng),
+                ln2: LayerNorm::new(d),
+                fc: Linear::init(cfg.d_ff, d, rng),
+                proj: Linear::init(d, cfg.d_ff, rng),
+            })
+            .collect();
+        let mut pos = Tensor::zeros(&[cfg.tokens(), d]);
+        rng.fill_normal(pos.data_mut(), 0.02);
+        TinyViT {
+            cfg,
+            patch_embed: Linear::init(d, cfg.patch_dim(), rng),
+            pos,
+            blocks,
+            ln_f: LayerNorm::new(d),
+            head: Linear::init(cfg.classes, d, rng),
+        }
+    }
+
+    /// Split `[n, c*h*w]` CHW images into `[n*tokens, patch_dim]` rows
+    /// ordered `(c, dy, dx)` per token, tokens row-major.
+    pub fn patchify(&self, x: &Tensor) -> Tensor {
+        let (c, h, w) = self.cfg.image;
+        let p = self.cfg.patch;
+        let (gh, gw) = (h / p, w / p);
+        let n = x.dim(0);
+        assert_eq!(x.dim(1), c * h * w, "image layout");
+        let mut out = Tensor::zeros(&[n * gh * gw, c * p * p]);
+        let xd = x.data();
+        for i in 0..n {
+            for ty in 0..gh {
+                for tx in 0..gw {
+                    let row = out.row_mut((i * gh + ty) * gw + tx);
+                    for cc in 0..c {
+                        for dy in 0..p {
+                            for dx in 0..p {
+                                row[(cc * p + dy) * p + dx] = xd[i * c * h * w
+                                    + cc * h * w
+                                    + (ty * p + dy) * w
+                                    + (tx * p + dx)];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Logits for `[n, c*h*w]`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_with_taps(x).0
+    }
+
+    /// Logits plus one post-GELU MLP tap per block (`[n*tokens, d_ff]`).
+    pub fn forward_with_taps(&self, x: &Tensor) -> (Tensor, Vec<Tensor>) {
+        let n = x.dim(0);
+        let t = self.cfg.tokens();
+        let mut cur = self.patch_embed.forward(&self.patchify(x)); // [n*t, d]
+        // Add positional embedding per token.
+        let d = self.cfg.d_model;
+        for r in 0..n * t {
+            let pos_row = self.pos.row(r % t).to_vec();
+            for (v, p) in cur.row_mut(r).iter_mut().zip(&pos_row) {
+                *v += p;
+            }
+        }
+        let mut taps = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            // Pre-LN attention with residual.
+            let normed = blk.ln1.forward(&cur);
+            let (attn_out, _) = blk.attn.forward(&normed, n, t);
+            ops::axpy(&mut cur, 1.0, &attn_out);
+            // Pre-LN MLP with residual.
+            let normed = blk.ln2.forward(&cur);
+            let mut hid = blk.fc.forward(&normed);
+            gelu(&mut hid);
+            taps.push(hid.clone());
+            let mlp_out = blk.proj.forward(&hid);
+            ops::axpy(&mut cur, 1.0, &mlp_out);
+        }
+        let normed = self.ln_f.forward(&cur);
+        // Mean-pool tokens to [n, d].
+        let mut pooled = Tensor::zeros(&[n, d]);
+        for i in 0..n {
+            for tok in 0..t {
+                let src = normed.row(i * t + tok);
+                for (p, &v) in pooled.row_mut(i).iter_mut().zip(src) {
+                    *p += v;
+                }
+            }
+            for v in pooled.row_mut(i) {
+                *v /= t as f32;
+            }
+        }
+        (self.head.forward(&pooled), taps)
+    }
+
+    /// Serialize all parameters.
+    pub fn to_bundle(&self) -> WeightBundle {
+        let mut b = WeightBundle::new();
+        b.insert("patch.w", self.patch_embed.w.clone());
+        b.insert("patch.b", self.patch_embed.b.clone());
+        b.insert("pos", self.pos.clone());
+        for (i, blk) in self.blocks.iter().enumerate() {
+            push_ln(&mut b, &format!("block{i}.ln1"), &blk.ln1);
+            push_attn(&mut b, &format!("block{i}.attn"), &blk.attn);
+            push_ln(&mut b, &format!("block{i}.ln2"), &blk.ln2);
+            push_lin(&mut b, &format!("block{i}.fc"), &blk.fc);
+            push_lin(&mut b, &format!("block{i}.proj"), &blk.proj);
+        }
+        push_ln(&mut b, "ln_f", &self.ln_f);
+        push_lin(&mut b, "head", &self.head);
+        b
+    }
+
+    /// Load from a bundle.
+    pub fn from_bundle(b: &WeightBundle, cfg: VitConfig) -> Result<Self> {
+        let mut blocks = Vec::new();
+        let dh = cfg.d_model / cfg.n_heads;
+        for i in 0..cfg.n_layers {
+            blocks.push(VitBlock {
+                ln1: pull_ln(b, &format!("block{i}.ln1"))?,
+                attn: pull_attn(b, &format!("block{i}.attn"), cfg.n_heads, cfg.n_heads, dh, false)?,
+                ln2: pull_ln(b, &format!("block{i}.ln2"))?,
+                fc: pull_lin(b, &format!("block{i}.fc"))?,
+                proj: pull_lin(b, &format!("block{i}.proj"))?,
+            });
+        }
+        Ok(TinyViT {
+            cfg,
+            patch_embed: Linear { w: b.get("patch.w")?.clone(), b: b.get("patch.b")?.clone() },
+            pos: b.get("pos")?.clone(),
+            blocks,
+            ln_f: pull_ln(b, "ln_f")?,
+            head: pull_lin(b, "head")?,
+        })
+    }
+}
+
+pub(crate) fn push_lin(b: &mut WeightBundle, name: &str, l: &Linear) {
+    b.insert(&format!("{name}.w"), l.w.clone());
+    b.insert(&format!("{name}.b"), l.b.clone());
+}
+
+pub(crate) fn pull_lin(b: &WeightBundle, name: &str) -> Result<Linear> {
+    Ok(Linear { w: b.get(&format!("{name}.w"))?.clone(), b: b.get(&format!("{name}.b"))?.clone() })
+}
+
+pub(crate) fn push_ln(b: &mut WeightBundle, name: &str, l: &LayerNorm) {
+    b.insert(&format!("{name}.gamma"), l.gamma.clone());
+    b.insert(&format!("{name}.beta"), l.beta.clone());
+}
+
+pub(crate) fn pull_ln(b: &WeightBundle, name: &str) -> Result<LayerNorm> {
+    Ok(LayerNorm {
+        gamma: b.get(&format!("{name}.gamma"))?.clone(),
+        beta: b.get(&format!("{name}.beta"))?.clone(),
+    })
+}
+
+pub(crate) fn push_attn(b: &mut WeightBundle, name: &str, a: &MultiHeadAttention) {
+    push_lin(b, &format!("{name}.wq"), &a.wq);
+    push_lin(b, &format!("{name}.wk"), &a.wk);
+    push_lin(b, &format!("{name}.wv"), &a.wv);
+    push_lin(b, &format!("{name}.wo"), &a.wo);
+}
+
+pub(crate) fn pull_attn(
+    b: &WeightBundle,
+    name: &str,
+    n_heads: usize,
+    n_kv: usize,
+    d_head: usize,
+    causal: bool,
+) -> Result<MultiHeadAttention> {
+    Ok(MultiHeadAttention {
+        wq: pull_lin(b, &format!("{name}.wq"))?,
+        wk: pull_lin(b, &format!("{name}.wk"))?,
+        wv: pull_lin(b, &format!("{name}.wv"))?,
+        wo: pull_lin(b, &format!("{name}.wo"))?,
+        n_heads,
+        n_kv,
+        d_head,
+        causal,
+    })
+}
+
+impl Compressible for TinyViT {
+    type Input = Tensor;
+
+    fn sites(&self) -> Vec<SiteInfo> {
+        self.blocks
+            .iter()
+            .enumerate()
+            .map(|(i, blk)| SiteInfo {
+                id: format!("block{i}.mlp"),
+                units: blk.fc.out_dim(),
+                unit_dim: 1,
+                groups: 1,
+                kind: SiteKind::MlpPair,
+            })
+            .collect()
+    }
+
+    fn site_activations(&self, input: &Tensor, site: usize) -> Tensor {
+        self.forward_with_taps(input).1.swap_remove(site)
+    }
+
+    fn producer_row_norm(&self, site: usize, ord: u8) -> Vec<f32> {
+        super::mlp::row_norms(&self.blocks[site].fc.w, ord)
+    }
+
+    fn producer_features(&self, site: usize) -> Tensor {
+        self.blocks[site].fc.w.clone()
+    }
+
+    fn consumer_col_norms(&self, site: usize) -> Vec<f32> {
+        self.blocks[site].proj.input_col_norms()
+    }
+
+    fn consumer_matrix(&self, site: usize) -> Tensor {
+        self.blocks[site].proj.w.clone()
+    }
+
+    fn apply(&mut self, site: usize, plan: &ReductionPlan) {
+        let blk = &mut self.blocks[site];
+        super::mlp::apply_dense_pair(&mut blk.fc, &mut blk.proj, plan);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressible, ReductionPlan, Reducer};
+    use crate::data::SynthVision;
+
+    fn net() -> TinyViT {
+        let mut rng = Pcg64::seed(5);
+        TinyViT::init(VitConfig::default(), &mut rng)
+    }
+
+    fn imgs(n: usize) -> Tensor {
+        SynthVision::new(7).generate(n).x
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = net();
+        let x = imgs(3);
+        let (y, taps) = m.forward_with_taps(&x);
+        assert_eq!(y.shape(), &[3, 10]);
+        assert_eq!(taps.len(), 3);
+        assert_eq!(taps[0].shape(), &[3 * 16, 128]);
+        assert!(y.all_finite());
+    }
+
+    #[test]
+    fn patchify_layout() {
+        // A single-channel delta image lands in exactly one patch cell.
+        let mut cfg = VitConfig::default();
+        cfg.image = (1, 8, 8);
+        cfg.patch = 4;
+        let mut rng = Pcg64::seed(1);
+        let m = TinyViT::init(cfg, &mut rng);
+        let mut x = Tensor::zeros(&[1, 64]);
+        // Pixel (y=5, x=2) -> token (1,0), offset (dy=1, dx=2).
+        x.data_mut()[5 * 8 + 2] = 1.0;
+        let p = m.patchify(&x);
+        assert_eq!(p.shape(), &[4, 16]);
+        assert_eq!(p.at2(2, 1 * 4 + 2), 1.0);
+        let total: f32 = p.data().iter().sum();
+        assert_eq!(total, 1.0);
+    }
+
+    #[test]
+    fn bundle_roundtrip_preserves_function() {
+        let m = net();
+        let x = imgs(2);
+        let y0 = m.forward(&x);
+        let r = TinyViT::from_bundle(&m.to_bundle(), m.cfg).unwrap();
+        assert!(y0.max_abs_diff(&r.forward(&x)) < 1e-5);
+    }
+
+    #[test]
+    fn mlp_prune_keeps_width_consistency() {
+        let mut m = net();
+        m.apply(1, &ReductionPlan::bare(Reducer::Select((0..64).collect())));
+        assert_eq!(m.blocks[1].fc.out_dim(), 64);
+        assert_eq!(m.blocks[1].proj.in_dim(), 64);
+        assert!(m.forward(&imgs(2)).all_finite());
+    }
+
+    #[test]
+    fn full_selection_identity() {
+        let mut m = net();
+        let x = imgs(2);
+        let y0 = m.forward(&x);
+        m.apply(0, &ReductionPlan::bare(Reducer::Select((0..128).collect())));
+        assert!(y0.max_abs_diff(&m.forward(&x)) < 1e-5);
+    }
+}

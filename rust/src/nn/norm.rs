@@ -1,0 +1,231 @@
+//! Normalization layers: LayerNorm (transformers) and BatchNorm2d
+//! (CNNs; evaluation mode uses running statistics, and REPAIR resets
+//! them from calibration data).
+
+use super::{Tensor, NORM_EPS};
+
+/// Layer normalization over the last dimension.
+#[derive(Clone, Debug)]
+pub struct LayerNorm {
+    pub gamma: Tensor,
+    pub beta: Tensor,
+}
+
+impl LayerNorm {
+    /// Unit-gain layer norm of width `d`.
+    pub fn new(d: usize) -> Self {
+        LayerNorm { gamma: Tensor::full(&[d], 1.0), beta: Tensor::zeros(&[d]) }
+    }
+
+    /// Normalized width.
+    pub fn dim(&self) -> usize {
+        self.gamma.dim(0)
+    }
+
+    /// Forward over `[n, d]`, in place.
+    pub fn forward_inplace(&self, x: &mut Tensor) {
+        let (n, d) = (x.dim(0), x.dim(1));
+        assert_eq!(d, self.dim(), "layernorm width");
+        let g = self.gamma.data();
+        let b = self.beta.data();
+        for i in 0..n {
+            let row = &mut x.data_mut()[i * d..(i + 1) * d];
+            let mean: f32 = row.iter().sum::<f32>() / d as f32;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let inv = 1.0 / (var + NORM_EPS).sqrt();
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (*v - mean) * inv * g[j] + b[j];
+            }
+        }
+    }
+
+    /// Forward returning a new tensor.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut y = x.clone();
+        self.forward_inplace(&mut y);
+        y
+    }
+}
+
+/// BatchNorm over channels of `[n, c, h, w]` activations, evaluation
+/// mode (running statistics). Channel-indexable for structured pruning
+/// and recomputable for REPAIR.
+#[derive(Clone, Debug)]
+pub struct BatchNorm2d {
+    pub gamma: Tensor,
+    pub beta: Tensor,
+    pub running_mean: Tensor,
+    pub running_var: Tensor,
+}
+
+impl BatchNorm2d {
+    /// Identity-initialized batch norm over `c` channels.
+    pub fn new(c: usize) -> Self {
+        BatchNorm2d {
+            gamma: Tensor::full(&[c], 1.0),
+            beta: Tensor::zeros(&[c]),
+            running_mean: Tensor::zeros(&[c]),
+            running_var: Tensor::full(&[c], 1.0),
+        }
+    }
+
+    /// Number of channels.
+    pub fn channels(&self) -> usize {
+        self.gamma.dim(0)
+    }
+
+    /// Forward in place on `[n, c*h*w]` data laid out CHW with `hw`
+    /// spatial elements per channel.
+    pub fn forward_inplace(&self, x: &mut Tensor, hw: usize) {
+        let c = self.channels();
+        let (n, d) = (x.dim(0), x.dim(1));
+        assert_eq!(d, c * hw, "batchnorm channel layout");
+        let g = self.gamma.data();
+        let b = self.beta.data();
+        let mu = self.running_mean.data();
+        let var = self.running_var.data();
+        let scale: Vec<f32> =
+            (0..c).map(|j| g[j] / (var[j] + NORM_EPS).sqrt()).collect();
+        let shift: Vec<f32> = (0..c).map(|j| b[j] - mu[j] * scale[j]).collect();
+        for i in 0..n {
+            let row = &mut x.data_mut()[i * d..(i + 1) * d];
+            for j in 0..c {
+                let (s, t) = (scale[j], shift[j]);
+                for v in &mut row[j * hw..(j + 1) * hw] {
+                    *v = *v * s + t;
+                }
+            }
+        }
+    }
+
+    /// Keep only channels `idx`.
+    pub fn select_channels(&mut self, idx: &[usize]) {
+        let pick = |t: &Tensor| {
+            let v: Vec<f32> = idx.iter().map(|&i| t.data()[i]).collect();
+            Tensor::from_vec(&[idx.len()], v)
+        };
+        self.gamma = pick(&self.gamma);
+        self.beta = pick(&self.beta);
+        self.running_mean = pick(&self.running_mean);
+        self.running_var = pick(&self.running_var);
+    }
+
+    /// Fold channels by cluster averaging.
+    pub fn fold_channels(&mut self, assign: &[usize], k_total: usize) {
+        let fold = |t: &Tensor| {
+            let mut out = vec![0.0f32; k_total];
+            let mut counts = vec![0usize; k_total];
+            for (h, &k) in assign.iter().enumerate() {
+                out[k] += t.data()[h];
+                counts[k] += 1;
+            }
+            for k in 0..k_total {
+                out[k] /= counts[k].max(1) as f32;
+            }
+            Tensor::from_vec(&[k_total], out)
+        };
+        self.gamma = fold(&self.gamma);
+        self.beta = fold(&self.beta);
+        self.running_mean = fold(&self.running_mean);
+        self.running_var = fold(&self.running_var);
+    }
+
+    /// REPAIR: overwrite running statistics with the empirical mean /
+    /// variance of pre-norm activations `x: [n, c*hw]` (CHW layout).
+    pub fn recompute_stats(&mut self, x: &Tensor, hw: usize) {
+        let c = self.channels();
+        let (n, d) = (x.dim(0), x.dim(1));
+        assert_eq!(d, c * hw);
+        let count = (n * hw) as f64;
+        for j in 0..c {
+            let mut s = 0.0f64;
+            let mut s2 = 0.0f64;
+            for i in 0..n {
+                for &v in &x.data()[i * d + j * hw..i * d + (j + 1) * hw] {
+                    s += v as f64;
+                    s2 += (v as f64) * (v as f64);
+                }
+            }
+            let mean = s / count;
+            let var = (s2 / count - mean * mean).max(0.0);
+            self.running_mean.data_mut()[j] = mean as f32;
+            self.running_var.data_mut()[j] = var as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Pcg64::seed(1);
+        let mut x = Tensor::zeros(&[4, 16]);
+        rng.fill_normal(x.data_mut(), 3.0);
+        let ln = LayerNorm::new(16);
+        ln.forward_inplace(&mut x);
+        for i in 0..4 {
+            let row = x.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn layernorm_gain_bias() {
+        let mut ln = LayerNorm::new(2);
+        ln.gamma = Tensor::from_vec(&[2], vec![2.0, 2.0]);
+        ln.beta = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+        let x = Tensor::from_vec(&[1, 2], vec![-1.0, 1.0]);
+        let y = ln.forward(&x);
+        // normalized = [-1, 1] (up to eps), scaled+shifted = [-1, 3].
+        assert!((y.at2(0, 0) + 1.0).abs() < 1e-2);
+        assert!((y.at2(0, 1) - 3.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn batchnorm_identity_with_matching_stats() {
+        let mut bn = BatchNorm2d::new(2);
+        bn.running_mean = Tensor::from_vec(&[2], vec![1.0, -1.0]);
+        bn.running_var = Tensor::from_vec(&[2], vec![4.0, 0.25]);
+        // x with those exact stats per channel maps to ~N(0,1).
+        let x = Tensor::from_vec(&[1, 4], vec![3.0, -1.0, -0.5, -1.5]); // hw=2
+        let mut y = x.clone();
+        bn.forward_inplace(&mut y, 2);
+        assert!((y.at2(0, 0) - 1.0).abs() < 1e-3); // (3-1)/2
+        assert!((y.at2(0, 1) + 1.0).abs() < 1e-3);
+        assert!((y.at2(0, 2) - 1.0).abs() < 1e-3); // (-0.5+1)/0.5
+        assert!((y.at2(0, 3) + 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn recompute_stats_then_normalizes() {
+        let mut rng = Pcg64::seed(5);
+        let mut x = Tensor::zeros(&[32, 3 * 8]);
+        rng.fill_normal(x.data_mut(), 2.0);
+        for v in x.data_mut().iter_mut() {
+            *v += 5.0;
+        }
+        let mut bn = BatchNorm2d::new(3);
+        bn.recompute_stats(&x, 8);
+        let mut y = x.clone();
+        bn.forward_inplace(&mut y, 8);
+        let mean: f32 = y.data().iter().sum::<f32>() / y.len() as f32;
+        assert!(mean.abs() < 1e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn select_and_fold_channels() {
+        let mut bn = BatchNorm2d::new(3);
+        bn.running_mean = Tensor::from_vec(&[3], vec![1., 2., 3.]);
+        let mut sel = bn.clone();
+        sel.select_channels(&[2, 0]);
+        assert_eq!(sel.running_mean.data(), &[3., 1.]);
+        bn.fold_channels(&[0, 0, 1], 2);
+        assert_eq!(bn.running_mean.data(), &[1.5, 3.0]);
+    }
+}

@@ -1,0 +1,206 @@
+//! `GRWB` weight-bundle IO — the checkpoint interchange format between
+//! the Python training step and the Rust coordinator.
+//!
+//! Layout (little-endian): u32 magic `GRWB`, u32 version, u32 tensor
+//! count, then per tensor: u32 name length, UTF-8 name, u32 ndim,
+//! u32 dims…, f32 data.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+pub const MAGIC: u32 = 0x4752_5742; // "GRWB"
+pub const VERSION: u32 = 1;
+
+/// An ordered name → tensor map.
+#[derive(Clone, Debug, Default)]
+pub struct WeightBundle {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl WeightBundle {
+    /// Empty bundle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (replaces an existing entry).
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    /// Fetch a tensor by name.
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| anyhow::anyhow!("weight bundle missing `{name}`"))
+    }
+
+    /// Fetch and validate the shape.
+    pub fn get_shaped(&self, name: &str, shape: &[usize]) -> Result<Tensor> {
+        let t = self.get(name)?;
+        if t.shape() != shape {
+            bail!("`{name}`: expected shape {shape:?}, file has {:?}", t.shape());
+        }
+        Ok(t.clone())
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if no tensors.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Iterate entries in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to(&self, out: &mut impl Write) -> Result<()> {
+        out.write_all(&MAGIC.to_le_bytes())?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&(self.map.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.map {
+            let nb = name.as_bytes();
+            out.write_all(&(nb.len() as u32).to_le_bytes())?;
+            out.write_all(nb)?;
+            out.write_all(&(t.ndim() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                out.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let mut buf = Vec::with_capacity(t.len() * 4);
+            for &v in t.data() {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            out.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
+        );
+        self.write_to(&mut f)
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from(inp: &mut impl Read) -> Result<Self> {
+        let mut u32buf = [0u8; 4];
+        let mut rd_u32 = |inp: &mut dyn Read| -> Result<u32> {
+            inp.read_exact(&mut u32buf)?;
+            Ok(u32::from_le_bytes(u32buf))
+        };
+        if rd_u32(inp)? != MAGIC {
+            bail!("not a GRWB weight bundle");
+        }
+        let version = rd_u32(inp)?;
+        if version != VERSION {
+            bail!("unsupported GRWB version {version}");
+        }
+        let count = rd_u32(inp)? as usize;
+        let mut map = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = rd_u32(inp)? as usize;
+            if name_len > 4096 {
+                bail!("implausible name length {name_len}");
+            }
+            let mut nb = vec![0u8; name_len];
+            inp.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb).context("weight name not UTF-8")?;
+            let ndim = rd_u32(inp)? as usize;
+            if ndim > 8 {
+                bail!("implausible ndim {ndim} for `{name}`");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(rd_u32(inp)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut buf = vec![0u8; n * 4];
+            inp.read_exact(&mut buf).with_context(|| format!("truncated data for `{name}`"))?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            map.insert(name, Tensor::from_vec(&shape, data));
+        }
+        Ok(WeightBundle { map })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path}"))?,
+        );
+        Self::read_from(&mut f).with_context(|| format!("parsing {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("grail_wbin_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::seed(1);
+        let mut b = WeightBundle::new();
+        let mut t1 = Tensor::zeros(&[3, 4]);
+        rng.fill_normal(t1.data_mut(), 1.0);
+        let t2 = Tensor::from_vec(&[2, 2, 2, 2], (0..16).map(|i| i as f32).collect());
+        b.insert("layer.w", t1.clone());
+        b.insert("layer.b", Tensor::zeros(&[3]));
+        b.insert("conv.w", t2.clone());
+        let p = tmp("a.wbin");
+        b.save(&p).unwrap();
+        let r = WeightBundle::load(&p).unwrap();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.get("layer.w").unwrap(), &t1);
+        assert_eq!(r.get("conv.w").unwrap(), &t2);
+        assert_eq!(r.num_params(), 12 + 3 + 16);
+    }
+
+    #[test]
+    fn shape_check() {
+        let mut b = WeightBundle::new();
+        b.insert("x", Tensor::zeros(&[2, 3]));
+        assert!(b.get_shaped("x", &[2, 3]).is_ok());
+        assert!(b.get_shaped("x", &[3, 2]).is_err());
+        assert!(b.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("bad.wbin");
+        std::fs::write(&p, b"not a bundle at all").unwrap();
+        assert!(WeightBundle::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut b = WeightBundle::new();
+        b.insert("w", Tensor::zeros(&[64, 64]));
+        let p = tmp("t.wbin");
+        b.save(&p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..100]).unwrap();
+        assert!(WeightBundle::load(&p).is_err());
+    }
+}

@@ -1,0 +1,375 @@
+//! Linear-algebra kernels over [`Tensor`].
+//!
+//! These are the Rust-side hot paths: compressed-model evaluation and
+//! all GRAIL algebra (Gram accumulation, reducer application, weight
+//! merges) run through the GEMM/SYRK routines here. The loop orders are
+//! chosen so the inner loop is a contiguous fused-multiply-add over
+//! rows (auto-vectorizes well on a single core); see EXPERIMENTS.md
+//! §Perf for measurements.
+
+use super::Tensor;
+
+/// `C = A · B` for `A: [m,k]`, `B: [k,n]`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (k2, n) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2, "matmul inner dims: {:?} x {:?}", a.shape(), b.shape());
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm_acc(a.data(), b.data(), c.data_mut(), m, k, n, 1.0);
+    c
+}
+
+/// `C += alpha * A · B` on raw row-major buffers (ikj loop order: the
+/// inner `j` loop is a contiguous axpy over a row of B and C).
+pub fn gemm_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, alpha: f32) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (p, &a_ip) in a_row.iter().enumerate() {
+            let s = alpha * a_ip;
+            if s == 0.0 {
+                continue;
+            }
+            let b_row = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += s * bv;
+            }
+        }
+    }
+}
+
+/// `C = A · Bᵀ` for `A: [m,k]`, `B: [n,k]` — both operands traversed
+/// row-wise, so this is the preferred layout for linear layers
+/// (`y = x Wᵀ`).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (n, k2) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2, "matmul_nt inner dims: {:?} x {:?}ᵀ", a.shape(), b.shape());
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm_nt_acc(a.data(), b.data(), c.data_mut(), m, k, n);
+    c
+}
+
+/// `C += A · Bᵀ` on raw buffers; inner loop is a dot of two contiguous
+/// rows, unrolled 4-wide into independent accumulators.
+pub fn gemm_nt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let b_row = &b[j * k..(j + 1) * k];
+            c_row[j] += dot(a_row, b_row);
+        }
+    }
+}
+
+/// Dot product with 4 independent accumulators (keeps the FMA pipeline
+/// busy; LLVM vectorizes the chunks).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        let xi = &x[c * 4..c * 4 + 4];
+        let yi = &y[c * 4..c * 4 + 4];
+        acc[0] += xi[0] * yi[0];
+        acc[1] += xi[1] * yi[1];
+        acc[2] += xi[2] * yi[2];
+        acc[3] += xi[3] * yi[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// `G += Xᵀ·X` for `X: [n,h]` — the Gram accumulation kernel (paper §3:
+/// `G = Σ x xᵀ`). Row-major SYRK: each sample row performs a rank-1
+/// update over the upper triangle; the mirror is filled at the end by
+/// [`symmetrize_from_upper`]. Callers stream batches through this and
+/// symmetrize once.
+pub fn syrk_upper_acc(x: &Tensor, g: &mut Tensor) {
+    let (n, h) = (x.dim(0), x.dim(1));
+    assert_eq!(g.shape(), &[h, h], "gram shape");
+    let xd = x.data();
+    let gd = g.data_mut();
+    for s in 0..n {
+        let row = &xd[s * h..(s + 1) * h];
+        for i in 0..h {
+            let xi = row[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let g_row = &mut gd[i * h + i..(i + 1) * h];
+            let r = &row[i..];
+            for (gv, &xv) in g_row.iter_mut().zip(r) {
+                *gv += xi * xv;
+            }
+        }
+    }
+}
+
+/// Copy the upper triangle onto the lower one, making `G` symmetric.
+pub fn symmetrize_from_upper(g: &mut Tensor) {
+    let h = g.dim(0);
+    assert_eq!(g.dim(1), h);
+    let gd = g.data_mut();
+    for i in 0..h {
+        for j in (i + 1)..h {
+            gd[j * h + i] = gd[i * h + j];
+        }
+    }
+}
+
+/// Full Gram matrix `Xᵀ·X` of a batch (convenience over
+/// [`syrk_upper_acc`] + [`symmetrize_from_upper`]).
+pub fn gram(x: &Tensor) -> Tensor {
+    let h = x.dim(1);
+    let mut g = Tensor::zeros(&[h, h]);
+    syrk_upper_acc(x, &mut g);
+    symmetrize_from_upper(&mut g);
+    g
+}
+
+/// Transpose a 2-D tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.dim(0), a.dim(1));
+    let mut t = Tensor::zeros(&[n, m]);
+    // Blocked to keep both sides cache-resident.
+    const B: usize = 32;
+    let ad = a.data();
+    let td = t.data_mut();
+    for ib in (0..m).step_by(B) {
+        for jb in (0..n).step_by(B) {
+            for i in ib..(ib + B).min(m) {
+                for j in jb..(jb + B).min(n) {
+                    td[j * m + i] = ad[i * n + j];
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Gather columns of a 2-D tensor: `out[:, k] = a[:, idx[k]]`.
+pub fn gather_cols(a: &Tensor, idx: &[usize]) -> Tensor {
+    let (m, n) = (a.dim(0), a.dim(1));
+    let k = idx.len();
+    for &j in idx {
+        assert!(j < n, "gather_cols index {j} out of {n}");
+    }
+    let mut out = Tensor::zeros(&[m, k]);
+    for i in 0..m {
+        let src = a.row(i);
+        let dst = out.row_mut(i);
+        for (d, &j) in dst.iter_mut().zip(idx) {
+            *d = src[j];
+        }
+    }
+    out
+}
+
+/// Gather rows of a 2-D tensor: `out[k, :] = a[idx[k], :]`.
+pub fn gather_rows(a: &Tensor, idx: &[usize]) -> Tensor {
+    let n = a.dim(1);
+    let mut out = Tensor::zeros(&[idx.len(), n]);
+    for (k, &i) in idx.iter().enumerate() {
+        assert!(i < a.dim(0), "gather_rows index {i} out of {}", a.dim(0));
+        out.row_mut(k).copy_from_slice(a.row(i));
+    }
+    out
+}
+
+/// Elementwise `a + b`.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let mut out = a.clone();
+    for (o, &v) in out.data_mut().iter_mut().zip(b.data()) {
+        *o += v;
+    }
+    out
+}
+
+/// In-place `a += alpha * b`.
+pub fn axpy(a: &mut Tensor, alpha: f32, b: &Tensor) {
+    assert_eq!(a.shape(), b.shape());
+    for (o, &v) in a.data_mut().iter_mut().zip(b.data()) {
+        *o += alpha * v;
+    }
+}
+
+/// Add a bias row vector to every row of a 2-D tensor, in place.
+pub fn add_bias(a: &mut Tensor, bias: &[f32]) {
+    let (m, n) = (a.dim(0), a.dim(1));
+    assert_eq!(bias.len(), n, "bias length");
+    for i in 0..m {
+        for (v, &b) in a.row_mut(i).iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Column-wise mean of a 2-D tensor.
+pub fn col_mean(a: &Tensor) -> Vec<f32> {
+    let (m, n) = (a.dim(0), a.dim(1));
+    let mut mu = vec![0.0f64; n];
+    for i in 0..m {
+        for (s, &v) in mu.iter_mut().zip(a.row(i)) {
+            *s += v as f64;
+        }
+    }
+    mu.iter().map(|s| (*s / m.max(1) as f64) as f32).collect()
+}
+
+/// Per-column L2 norm of a 2-D tensor.
+pub fn col_l2(a: &Tensor) -> Vec<f32> {
+    let (m, n) = (a.dim(0), a.dim(1));
+    let mut acc = vec![0.0f64; n];
+    for i in 0..m {
+        for (s, &v) in acc.iter_mut().zip(a.row(i)) {
+            *s += (v as f64) * (v as f64);
+        }
+    }
+    acc.iter().map(|s| s.sqrt() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn randn(r: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        r.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    /// O(mnk) reference matmul for cross-checking the kernels.
+    fn matmul_ref(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.dim(0), a.dim(1), b.dim(1));
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for p in 0..k {
+                    s += (a.at2(i, p) as f64) * (b.at2(p, j) as f64);
+                }
+                c.set2(i, j, s as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_matches_reference_random() {
+        let mut r = Pcg64::seed(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 13), (32, 64, 8)] {
+            let a = randn(&mut r, &[m, k]);
+            let b = randn(&mut r, &[k, n]);
+            let c = matmul(&a, &b);
+            let cr = matmul_ref(&a, &b);
+            assert!(c.max_abs_diff(&cr) < 1e-3, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose_path() {
+        let mut r = Pcg64::seed(2);
+        let a = randn(&mut r, &[7, 11]);
+        let b = randn(&mut r, &[5, 11]);
+        let c1 = matmul_nt(&a, &b);
+        let c2 = matmul(&a, &transpose(&b));
+        assert!(c1.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let mut r = Pcg64::seed(3);
+        let x = randn(&mut r, &[20, 9]);
+        let g = gram(&x);
+        let gr = matmul(&transpose(&x), &x);
+        assert!(g.max_abs_diff(&gr) < 1e-3);
+        // Symmetry.
+        for i in 0..9 {
+            for j in 0..9 {
+                assert!((g.at2(i, j) - g.at2(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_accumulates_across_batches() {
+        let mut r = Pcg64::seed(4);
+        let x1 = randn(&mut r, &[8, 6]);
+        let x2 = randn(&mut r, &[5, 6]);
+        let mut g = Tensor::zeros(&[6, 6]);
+        syrk_upper_acc(&x1, &mut g);
+        syrk_upper_acc(&x2, &mut g);
+        symmetrize_from_upper(&mut g);
+        // Equals gram of the concatenated batch.
+        let mut all = Tensor::zeros(&[13, 6]);
+        all.data_mut()[..48].copy_from_slice(x1.data());
+        all.data_mut()[48..].copy_from_slice(x2.data());
+        assert!(g.max_abs_diff(&gram(&all)) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut r = Pcg64::seed(5);
+        let a = randn(&mut r, &[37, 19]);
+        let t = transpose(&transpose(&a));
+        assert_eq!(a, t);
+    }
+
+    #[test]
+    fn gather_cols_selects() {
+        let a = Tensor::from_vec(&[2, 4], vec![0., 1., 2., 3., 10., 11., 12., 13.]);
+        let g = gather_cols(&a, &[3, 1]);
+        assert_eq!(g.shape(), &[2, 2]);
+        assert_eq!(g.data(), &[3., 1., 13., 11.]);
+    }
+
+    #[test]
+    fn gather_rows_selects() {
+        let a = Tensor::from_vec(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let g = gather_rows(&a, &[2, 0]);
+        assert_eq!(g.data(), &[20., 21., 0., 1.]);
+    }
+
+    #[test]
+    fn bias_and_stats() {
+        let mut a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        add_bias(&mut a, &[10., 20.]);
+        assert_eq!(a.data(), &[11., 22., 13., 24.]);
+        let mu = col_mean(&a);
+        assert_eq!(mu, vec![12., 23.]);
+        let l2 = col_l2(&Tensor::from_vec(&[2, 1], vec![3., 4.]));
+        assert!((l2[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in 0..9 {
+            let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let y: Vec<f32> = (0..n).map(|i| (i * 2) as f32).collect();
+            let want: f32 = (0..n).map(|i| (i * i * 2) as f32).sum();
+            assert_eq!(dot(&x, &y), want, "n={n}");
+        }
+    }
+}

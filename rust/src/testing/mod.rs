@@ -1,0 +1,111 @@
+//! Minimal property-based testing support (no `proptest` offline).
+//!
+//! [`check`] runs a property over many seeded random cases and, on
+//! failure, retries with progressively "smaller" cases drawn from the
+//! same failing seed family (shrink-lite), then panics with the seed so
+//! the case is reproducible.
+
+use crate::rng::Pcg64;
+
+/// Configuration for a property run.
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (each case forks a child generator).
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// A sizing hint passed to generators: starts at 1.0 and is reduced
+/// while shrinking, letting generators produce smaller shapes/values.
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub f64);
+
+impl Size {
+    /// Scale an upper bound; always at least `min`.
+    pub fn scale(&self, max: usize, min: usize) -> usize {
+        min.max(((max as f64) * self.0).round() as usize)
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` random cases. `prop` returns
+/// `Err(msg)` (or panics) to signal failure.
+pub fn check<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Pcg64, Size) -> Result<(), String>,
+{
+    let mut master = Pcg64::seed(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = master.next_u64();
+        let mut rng = Pcg64::seed(case_seed);
+        if let Err(msg) = prop(&mut rng, Size(1.0)) {
+            // Shrink-lite: same seed, smaller size hints.
+            let mut smallest = (Size(1.0), msg.clone());
+            for &s in &[0.5, 0.25, 0.1, 0.05] {
+                let mut rng = Pcg64::seed(case_seed);
+                if let Err(m) = prop(&mut rng, Size(s)) {
+                    smallest = (Size(s), m);
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, size {:?}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close; formats a useful error.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config { cases: 16, seed: 1 }, |rng, size| {
+            let n = size.scale(100, 1);
+            let v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            if v.len() == n {
+                Ok(())
+            } else {
+                Err("bad".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(Config { cases: 8, seed: 2 }, |rng, _| {
+            if rng.next_u64() % 2 < 2 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0001], 1e-3).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,295 @@
+//! Artifact-free integration tests: the full compression pipeline on
+//! in-memory models across every architecture, method, and recovery
+//! combination, plus property-based invariants via the in-tree
+//! framework (no proptest offline).
+
+use grail::compress::baselines::Baseline;
+use grail::compress::Selector;
+use grail::data::{SynthText, SynthVision, TextSplit};
+use grail::eval::{lm_perplexity, vision_accuracy};
+use grail::grail::{compress_model, Method, PipelineConfig};
+use grail::nn::models::{LmBatch, LmConfig, MiniResNet, MlpNet, TinyLm, TinyViT, VitConfig};
+use grail::rng::Pcg64;
+use grail::testing::{check, Config};
+
+fn vision_calib() -> grail::tensor::Tensor {
+    SynthVision::new(9).generate(64).x
+}
+
+/// Every (method, grail) combination leaves every model functional.
+#[test]
+fn all_methods_all_models_stay_finite() {
+    let mut rng = Pcg64::seed(1);
+    let methods = [
+        Method::Prune(Selector::MagnitudeL1),
+        Method::Prune(Selector::MagnitudeL2),
+        Method::Prune(Selector::Wanda),
+        Method::Prune(Selector::GramDiag),
+        Method::Prune(Selector::Random),
+        Method::Fold,
+        Method::RandomFold,
+        Method::Baseline(Baseline::Wanda),
+        Method::Baseline(Baseline::WandaPP),
+        Method::Baseline(Baseline::SlimGPT),
+        Method::Baseline(Baseline::ZipLM),
+        Method::Baseline(Baseline::Flap),
+    ];
+    let x = vision_calib();
+    let mlp = MlpNet::init(768, 32, 10, &mut rng);
+    let resnet = MiniResNet::init(&mut rng);
+    let vit = TinyViT::init(VitConfig::default(), &mut rng);
+    for method in methods {
+        for grail_on in [false, true] {
+            let cfg = PipelineConfig::new(method, 0.5, grail_on);
+            let mut m = mlp.clone();
+            compress_model(&mut m, &x, &cfg);
+            assert!(m.forward(&x).all_finite(), "mlp {method:?} grail={grail_on}");
+            let mut r = resnet.clone();
+            compress_model(&mut r, &x, &cfg);
+            assert!(r.forward(&x).all_finite(), "resnet {method:?} grail={grail_on}");
+            let mut v = vit.clone();
+            compress_model(&mut v, &x, &cfg);
+            assert!(v.forward(&x).all_finite(), "vit {method:?} grail={grail_on}");
+        }
+    }
+}
+
+/// The LM pipeline handles head sites (MHA and GQA) for every method.
+#[test]
+fn lm_pipeline_mha_and_gqa() {
+    let mut rng = Pcg64::seed(2);
+    let ts = SynthText::new(3).generate(TextSplit::Train, 4000);
+    let calib = LmBatch::from_tokens(&ts, 16, 16);
+    for cfg_lm in [LmConfig::default(), LmConfig::gqa()] {
+        let lm = TinyLm::init(cfg_lm, &mut rng);
+        for method in [
+            Method::Prune(Selector::Wanda),
+            Method::Fold,
+            Method::Baseline(Baseline::Flap),
+            Method::Baseline(Baseline::ZipLM),
+        ] {
+            for grail_on in [false, true] {
+                let mut m = lm.clone();
+                let cfg = PipelineConfig::new(method, 0.5, grail_on);
+                let rep = compress_model(&mut m, &calib, &cfg);
+                assert_eq!(rep.sites.len(), 8);
+                assert!(m.forward(&calib).all_finite(), "{method:?} grail={grail_on}");
+                // Heads halved on every attention site.
+                for blk in &m.blocks {
+                    assert_eq!(blk.attn.n_heads, 4);
+                }
+            }
+        }
+    }
+}
+
+/// GRAIL's defining guarantee: for a *trained-ish* model with
+/// correlated activations, compensation beats data-free updates on
+/// output fidelity — across selectors and architectures.
+#[test]
+fn grail_beats_bare_on_output_fidelity() {
+    let mut rng = Pcg64::seed(4);
+    let model = MlpNet::init(768, 64, 10, &mut rng);
+    let x = SynthVision::new(5).generate(96).x;
+    let y_ref = model.forward(&x);
+    for method in [
+        Method::Prune(Selector::MagnitudeL2),
+        Method::Prune(Selector::Random),
+        Method::Fold,
+    ] {
+        let mut dist = [0.0f32; 2];
+        for (i, grail_on) in [false, true].into_iter().enumerate() {
+            let mut m = model.clone();
+            compress_model(&mut m, &x, &PipelineConfig::new(method, 0.6, grail_on));
+            let mut d = m.forward(&x);
+            grail::tensor::ops::axpy(&mut d, -1.0, &y_ref);
+            dist[i] = d.frobenius();
+        }
+        assert!(
+            dist[1] < dist[0],
+            "{method:?}: grail {} !< bare {}",
+            dist[1],
+            dist[0]
+        );
+    }
+}
+
+/// Property: for any ratio and seed, pruning+GRAIL keeps logits finite
+/// and the requested widths (shrink-lite sweeps smaller shapes too).
+#[test]
+fn prop_pipeline_widths_and_finiteness() {
+    check(Config { cases: 24, seed: 77 }, |rng, size| {
+        let hidden = 8 + rng.below(size.scale(48, 8));
+        let mut init_rng = Pcg64::seed(rng.next_u64());
+        let model = MlpNet::init(48, hidden, 5, &mut init_rng);
+        let mut x = grail::tensor::Tensor::zeros(&[32, 48]);
+        init_rng.fill_normal(x.data_mut(), 1.0);
+        let ratio = 0.1 + 0.8 * rng.next_f64();
+        let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), ratio, true);
+        cfg.seed = rng.next_u64();
+        let mut m = model;
+        let rep = compress_model(&mut m, &x, &cfg);
+        let want = grail::grail::pipeline::uniform_keep(hidden, 1, ratio);
+        if m.fc1.out_dim() != want {
+            return Err(format!("fc1 width {} != {}", m.fc1.out_dim(), want));
+        }
+        if !m.forward(&x).all_finite() {
+            return Err("non-finite logits".into());
+        }
+        if rep.sites.len() != 2 {
+            return Err("wrong site count".into());
+        }
+        Ok(())
+    });
+}
+
+/// Property: the reconstruction map at α→0 on an identity Gram is the
+/// selection matrix for arbitrary widths/selections.
+#[test]
+fn prop_identity_gram_recovers_selection() {
+    check(Config { cases: 40, seed: 78 }, |rng, size| {
+        let h = 4 + rng.below(size.scale(60, 4));
+        let k = 1 + rng.below(h);
+        let keep = rng.choose_k(h, k);
+        let mut keep = keep;
+        keep.sort_unstable();
+        let g = grail::tensor::Tensor::eye(h);
+        let r = grail::compress::Reducer::Select(keep.clone());
+        let b = grail::grail::reconstruction(&g, &r, 1, 0.0);
+        let m = r.matrix(h);
+        if b.max_abs_diff(&m) > 1e-4 {
+            return Err(format!("h={h} k={k}: B differs from M"));
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end sanity on real (in-test trained-free) statistics: a
+/// MiniResNet compressed at a mild ratio with GRAIL + REPAIR retains
+/// more accuracy than plain pruning. Uses an untrained net, so we
+/// check relative output distortion rather than accuracy.
+#[test]
+fn resnet_grail_repair_reduces_distortion() {
+    let mut rng = Pcg64::seed(6);
+    let model = MiniResNet::init(&mut rng);
+    let calib_set = SynthVision::new(7).generate(48);
+    let y_ref = model.forward(&calib_set.x);
+    let run = |grail_on: bool, repair: bool| {
+        let mut m = model.clone();
+        let cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.5, grail_on);
+        compress_model(&mut m, &calib_set.x, &cfg);
+        if repair {
+            m.repair(&calib_set);
+        }
+        let mut d = m.forward(&calib_set.x);
+        grail::tensor::ops::axpy(&mut d, -1.0, &y_ref);
+        d.frobenius()
+    };
+    let bare = run(false, false);
+    let grail_only = run(true, false);
+    assert!(grail_only < bare, "grail {grail_only} !< bare {bare}");
+}
+
+/// Perplexity direction on a *trained* tiny chain: a 1-layer LM fitted
+/// briefly in-test (closed-form-ish via many SGD steps is too slow
+/// here, so we instead verify the weaker invariant that GRAIL never
+/// makes an untrained model's perplexity dramatically worse).
+#[test]
+fn lm_grail_does_not_explode_perplexity() {
+    let mut rng = Pcg64::seed(8);
+    let lm = TinyLm::init(LmConfig { n_layers: 2, ..Default::default() }, &mut rng);
+    let text = SynthText::new(10);
+    let calib = LmBatch::from_tokens(&text.generate(TextSplit::Calib, 3000), 16, 16);
+    let eval = text.generate(TextSplit::Wt2s, 2000);
+    let base = lm_perplexity(&lm, &eval, 16, 16, 8);
+    let mut m = lm.clone();
+    compress_model(
+        &mut m,
+        &calib,
+        &PipelineConfig::new(Method::Prune(Selector::Wanda), 0.3, true),
+    );
+    let after = lm_perplexity(&m, &eval, 16, 16, 8);
+    assert!(after.is_finite());
+    assert!(after < base * 3.0, "ppl {base} -> {after}");
+}
+
+/// Accuracy metric plumbed through the sweep path agrees with direct
+/// evaluation (guards the experiment engine's batching).
+#[test]
+fn sweep_eval_matches_direct() {
+    let mut rng = Pcg64::seed(11);
+    let m = MlpNet::init(768, 24, 10, &mut rng);
+    let set = SynthVision::new(12).generate(100);
+    let direct = {
+        let logits = m.forward(&set.x);
+        grail::eval::accuracy_from_logits(&logits, &set.y)
+    };
+    let batched = vision_accuracy(|x| m.forward(x), &set, 13);
+    assert!((direct - batched).abs() < 1e-12);
+}
+
+/// Extreme-ratio edge cases: the pipeline clamps to ≥1 unit (or one
+/// head per KV group) and still produces a working model.
+#[test]
+fn extreme_ratios_clamp_safely() {
+    let mut rng = Pcg64::seed(20);
+    let x = vision_calib();
+    for ratio in [0.95, 0.99] {
+        let mut m = MlpNet::init(768, 16, 10, &mut rng);
+        compress_model(&mut m, &x, &PipelineConfig::new(Method::Prune(Selector::Wanda), ratio, true));
+        assert!(m.fc1.out_dim() >= 1);
+        assert!(m.forward(&x).all_finite());
+    }
+    // GQA: never below one query head per group.
+    let ts = SynthText::new(21).generate(TextSplit::Train, 2000);
+    let calib = LmBatch::from_tokens(&ts, 16, 8);
+    let mut lm = TinyLm::init(LmConfig::gqa(), &mut rng);
+    compress_model(&mut lm, &calib, &PipelineConfig::new(Method::Prune(Selector::Wanda), 0.99, true));
+    for blk in &lm.blocks {
+        assert_eq!(blk.attn.n_heads, 4); // 4 groups × 1 head floor
+        assert_eq!(blk.attn.n_kv, 4);
+    }
+    assert!(lm.forward(&calib).all_finite());
+}
+
+/// Open-loop ablation plumbing: both modes run; closed loop is at
+/// least as good on deep-model output fidelity.
+#[test]
+fn closed_loop_no_worse_than_open() {
+    let mut rng = Pcg64::seed(22);
+    let model = MlpNet::init(768, 64, 10, &mut rng);
+    let x = SynthVision::new(23).generate(96).x;
+    let y_ref = model.forward(&x);
+    let run = |closed: bool| {
+        let mut m = model.clone();
+        let mut cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.6, true);
+        cfg.closed_loop = closed;
+        compress_model(&mut m, &x, &cfg);
+        let mut d = m.forward(&x);
+        grail::tensor::ops::axpy(&mut d, -1.0, &y_ref);
+        d.frobenius()
+    };
+    let closed = run(true);
+    let open = run(false);
+    assert!(closed.is_finite() && open.is_finite());
+    assert!(closed <= open * 1.05, "closed {closed} vs open {open}");
+}
+
+/// Determinism across the whole pipeline: same seed, same compressed
+/// weights, bit-for-bit — the reproducibility contract every
+/// experiment relies on.
+#[test]
+fn full_pipeline_bitwise_deterministic() {
+    let run = || {
+        let mut rng = Pcg64::seed(30);
+        let mut m = TinyLm::init(LmConfig::default(), &mut rng);
+        let ts = SynthText::new(31).generate(TextSplit::Calib, 2000);
+        let calib = LmBatch::from_tokens(&ts, 16, 8);
+        let mut cfg =
+            PipelineConfig::new(Method::Baseline(Baseline::Flap), 0.5, true);
+        cfg.seed = 99;
+        compress_model(&mut m, &calib, &cfg);
+        m.forward(&calib)
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,141 @@
+//! PJRT runtime integration: load the AOT-compiled HLO artifacts and
+//! check them against the Rust-native implementations on identical
+//! weights — the cross-language parity contract of the three-layer
+//! architecture.
+//!
+//! Requires `make artifacts`; tests skip with a notice otherwise.
+
+use grail::coordinator::{Artifacts, Zoo};
+use grail::data::io::{read_images, read_tokens};
+use grail::nn::models::LmBatch;
+use grail::runtime::Runtime;
+use grail::tensor::{ops, Tensor};
+
+fn setup() -> Option<(Artifacts, Zoo, Runtime)> {
+    let art = Artifacts::default_root();
+    match Zoo::open(art.clone()) {
+        Ok(zoo) => match Runtime::cpu(art.clone()) {
+            Ok(rt) => Some((art, zoo, rt)),
+            Err(e) => {
+                eprintln!("skipping: PJRT unavailable: {e}");
+                None
+            }
+        },
+        Err(_) => {
+            eprintln!("skipping runtime test (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// The AOT Gram kernel (Pallas, interpret-lowered) matches the Rust
+/// SYRK on the same data.
+#[test]
+fn gram_kernel_matches_rust_syrk() {
+    let Some((_, _, mut rt)) = setup() else { return };
+    let mut rng = grail::rng::Pcg64::seed(3);
+    for h in [64usize, 192] {
+        let mut x = Tensor::zeros(&[1024, h]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let outs = rt.run_f32(&format!("gram_h{h}_n1024"), &[&x]).unwrap();
+        assert_eq!(outs.len(), 1);
+        let got = &outs[0];
+        assert_eq!(got.shape(), &[h, h]);
+        let want = ops::gram(&x);
+        let denom = want.frobenius().max(1.0);
+        let rel = {
+            let mut d = got.clone();
+            ops::axpy(&mut d, -1.0, &want);
+            d.frobenius() / denom
+        };
+        assert!(rel < 1e-4, "h={h}: relative gram error {rel}");
+    }
+}
+
+/// The AOT MLP forward (weights baked) matches the Rust MLP loaded
+/// from the same checkpoint.
+#[test]
+fn mlp_forward_parity() {
+    let Some((art, zoo, mut rt)) = setup() else { return };
+    let m = zoo.mlp("mlp_seed0").unwrap();
+    let imgs = read_images(&art.data("vision_test.imgs")).unwrap().slice(0, 128);
+    let outs = rt.run_f32("mlp_seed0_fwd", &[&imgs.x]).unwrap();
+    let want = m.forward(&imgs.x);
+    assert_eq!(outs[0].shape(), want.shape());
+    let diff = outs[0].max_abs_diff(&want);
+    assert!(diff < 1e-3, "mlp logits diverge by {diff}");
+}
+
+/// The AOT MiniResNet forward matches the Rust conv/BN stack.
+#[test]
+fn resnet_forward_parity() {
+    let Some((art, zoo, mut rt)) = setup() else { return };
+    let m = zoo.resnet("resnet_seed0").unwrap();
+    let imgs = read_images(&art.data("vision_test.imgs")).unwrap().slice(0, 64);
+    // The AOT graph takes NCHW [64, 3, 16, 16].
+    let x4 = imgs.x.clone().reshape(&[64, 3, 16, 16]);
+    let outs = rt.run_f32("resnet_seed0_fwd", &[&x4]).unwrap();
+    let want = m.forward(&imgs.x);
+    let diff = outs[0].clone().reshape(&[64, 10]).max_abs_diff(&want);
+    assert!(diff < 2e-3, "resnet logits diverge by {diff}");
+}
+
+/// The AOT TinyViT forward (Pallas fused linear+GELU inside) matches
+/// the Rust implementation.
+#[test]
+fn vit_forward_parity() {
+    let Some((art, zoo, mut rt)) = setup() else { return };
+    let m = zoo.vit("vit_seed0").unwrap();
+    let imgs = read_images(&art.data("vision_test.imgs")).unwrap().slice(0, 64);
+    let x4 = imgs.x.clone().reshape(&[64, 3, 16, 16]);
+    let outs = rt.run_f32("vit_seed0_fwd", &[&x4]).unwrap();
+    let want = m.forward(&imgs.x);
+    let diff = outs[0].clone().reshape(&[64, 10]).max_abs_diff(&want);
+    assert!(diff < 2e-3, "vit logits diverge by {diff}");
+}
+
+/// The AOT TinyLm forwards (MHA + GQA) match the Rust decoder.
+#[test]
+fn lm_forward_parity() {
+    let Some((art, zoo, mut rt)) = setup() else { return };
+    let toks = read_tokens(&art.data("text_calib.tokens")).unwrap();
+    let batch = LmBatch::from_tokens(&toks, 32, 8);
+    for name in ["tinylm_mha", "tinylm_gqa"] {
+        let m = zoo.lm(name).unwrap();
+        let outs = rt.run_tokens(&format!("{name}_fwd"), &batch.inputs, 8, 32).unwrap();
+        let want = m.forward(&batch);
+        let got = outs[0].clone().reshape(&[8 * 32, m.cfg.vocab]);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 2e-3, "{name} logits diverge by {diff}");
+    }
+}
+
+/// The calibration graph's taps match the Rust taps — the consumer-
+/// input activations GRAIL consumes are identical across languages.
+#[test]
+fn lm_calibration_taps_parity() {
+    let Some((art, zoo, mut rt)) = setup() else { return };
+    let toks = read_tokens(&art.data("text_calib.tokens")).unwrap();
+    let batch = LmBatch::from_tokens(&toks, 32, 8);
+    let m = zoo.lm("tinylm_mha").unwrap();
+    let outs = rt.run_tokens("tinylm_mha_calib", &batch.inputs, 8, 32).unwrap();
+    let (_, taps) = m.forward_with_taps(&batch);
+    assert_eq!(outs.len(), 1 + taps.len(), "logits + one tap per site");
+    for (i, tap) in taps.iter().enumerate() {
+        let got = outs[i + 1].clone().reshape(&[tap.dim(0), tap.dim(1)]);
+        let diff = got.max_abs_diff(tap);
+        assert!(diff < 2e-3, "tap {i} diverges by {diff}");
+    }
+}
+
+/// Executables are cached: the second load is a no-op and re-execution
+/// is deterministic.
+#[test]
+fn runtime_caching_and_determinism() {
+    let Some((art, _, mut rt)) = setup() else { return };
+    let imgs = read_images(&art.data("vision_test.imgs")).unwrap().slice(0, 128);
+    let a = rt.run_f32("mlp_seed0_fwd", &[&imgs.x]).unwrap();
+    assert_eq!(rt.loaded().len(), 1);
+    let b = rt.run_f32("mlp_seed0_fwd", &[&imgs.x]).unwrap();
+    assert_eq!(a[0], b[0]);
+}
