@@ -6,9 +6,11 @@
 //! in-memory model. Perf targets and before/after history live in
 //! EXPERIMENTS.md §Perf.
 
-use grail::bench_util::{bench, report_gflops};
+use grail::bench_util::{bench, layer_forwards, layer_forwards_reset, report_gflops};
 use grail::compress::{Reducer, Selector};
-use grail::grail::{compress_model, reconstruction, ActStats, Method, PipelineConfig};
+use grail::grail::{
+    compress_model, compress_model_rescan, reconstruction, ActStats, Method, PipelineConfig,
+};
 use grail::nn::models::{LmBatch, LmConfig, MlpNet, TinyLm};
 use grail::rng::Pcg64;
 use grail::tensor::{ops, Tensor};
@@ -91,6 +93,65 @@ fn main() {
         let ts = grail::data::TokenSet { tokens: toks, vocab: 64 };
         let batch = LmBatch::from_tokens(&ts, 32, 16);
         bench("tinylm_forward b=16 t=32", 500, || lm.forward(&batch));
+    }
+
+    // --- Closed-loop calibration: staged O(L) segment executor vs the
+    // per-site rescan reference (O(L²) layer forwards). Same shards,
+    // same statistics, bit-identical Report.sites — only the execution
+    // strategy differs. Depths: 4/8/16 sites on the TinyLm family.
+    for &layers in &[2usize, 4, 8] {
+        let n_sites = 2 * layers;
+        let cfg_lm = LmConfig { n_layers: layers, ..Default::default() };
+        let lm = TinyLm::init(cfg_lm, &mut rng);
+        let toks: Vec<u16> = (0..16 * 33).map(|i| (i % 64) as u16).collect();
+        let ts = grail::data::TokenSet { tokens: toks, vocab: 64 };
+        let batch = LmBatch::from_tokens(&ts, 32, 16);
+        let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+
+        let staged = bench(&format!("pipeline lm staged sites={n_sites}"), 1200, || {
+            let mut m = lm.clone();
+            compress_model(&mut m, &batch, &cfg)
+        });
+        let rescan = bench(&format!("pipeline lm rescan sites={n_sites}"), 1200, || {
+            let mut m = lm.clone();
+            compress_model_rescan(&mut m, &batch, &cfg)
+        });
+        println!(
+            "{:<44} {:.2}x",
+            format!("staged speedup over rescan sites={n_sites}"),
+            rescan.median_ns / staged.median_ns
+        );
+
+        // Layer-forward counts (single shard/worker so the counter
+        // reflects segment executions, not sharding) + outcome parity.
+        let mut count_cfg = cfg.clone();
+        count_cfg.shards = 1;
+        count_cfg.workers = 1;
+        let mut a = lm.clone();
+        layer_forwards_reset();
+        let ra = compress_model(&mut a, &batch, &count_cfg);
+        let staged_fwd = layer_forwards();
+        let mut b = lm.clone();
+        layer_forwards_reset();
+        let rb = compress_model_rescan(&mut b, &batch, &count_cfg);
+        let rescan_fwd = layer_forwards();
+        println!(
+            "{:<44} staged {staged_fwd} vs rescan {rescan_fwd}",
+            format!("layer forwards sites={n_sites}")
+        );
+        assert!(staged_fwd < rescan_fwd, "staged must do fewer layer forwards");
+        assert_eq!(ra.sites.len(), rb.sites.len());
+        for (x, y) in ra.sites.iter().zip(&rb.sites) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.units_before, y.units_before);
+            assert_eq!(x.units_after, y.units_after);
+            assert_eq!(
+                x.recon_err.to_bits(),
+                y.recon_err.to_bits(),
+                "site {}: staged and rescan outcomes must be identical",
+                x.id
+            );
+        }
     }
     println!("\ndone");
 }

@@ -5,7 +5,30 @@
 //! prints a stable `name  median  p10  p90  iters` line (plus optional
 //! throughput).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Global layer-forward counter. Every block-level segment execution in
+/// the model families increments it (see `Compressible::site_tap` /
+/// `forward_segment` impls), which is how tests and benches verify the
+/// closed-loop pipeline performs O(L) — not O(L²) — layer forwards.
+static LAYER_FORWARDS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one block-level forward execution.
+#[inline]
+pub fn count_layer_forward() {
+    LAYER_FORWARDS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Reset the global layer-forward counter to zero.
+pub fn layer_forwards_reset() {
+    LAYER_FORWARDS.store(0, Ordering::Relaxed);
+}
+
+/// Current value of the global layer-forward counter.
+pub fn layer_forwards() -> u64 {
+    LAYER_FORWARDS.load(Ordering::Relaxed)
+}
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
@@ -97,6 +120,15 @@ mod tests {
         assert!(r.median_ns > 0.0);
         assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn forward_counter_counts() {
+        layer_forwards_reset();
+        let before = layer_forwards();
+        count_layer_forward();
+        count_layer_forward();
+        assert!(layer_forwards() >= before + 2);
     }
 
     #[test]

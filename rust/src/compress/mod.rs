@@ -184,16 +184,65 @@ impl SiteInfo {
 /// earlier sites have been compressed, later sites' activations come
 /// from the already-compressed prefix (the paper's sequential
 /// closed-loop compensation).
+///
+/// # Staged segment execution
+///
+/// The closed loop visits sites in forward order and re-calibrates each
+/// one on the already-compressed prefix. Re-running the whole network
+/// per site would cost O(L²) layer forwards, so calibration is staged:
+/// a [`CalibState`](Compressible::CalibState) caches the activations at
+/// the *boundary* of the current site (the input of that site's
+/// producer), [`site_tap`](Compressible::site_tap) derives the site's
+/// consumer-input activations from the boundary, and
+/// [`forward_segment`](Compressible::forward_segment) advances the
+/// boundary through the (by then compressed) site to the next one —
+/// O(L) layer forwards for the whole loop. States are per input shard
+/// ([`split_input`](Compressible::split_input)), so the pipeline can
+/// stream shards through `ActStats` with bounded peak memory and
+/// execute them on parallel threads.
 pub trait Compressible {
     /// The calibration/evaluation input batch type.
     type Input;
 
+    /// Cached boundary activations between consecutive sites. Holds
+    /// whatever the model needs to resume a forward pass at the current
+    /// site's producer input (activations plus geometry).
+    type CalibState;
+
     /// All compressible sites, in forward order.
     fn sites(&self) -> Vec<SiteInfo>;
 
-    /// Consumer-input activations at `site` for `input`:
-    /// `[rows, feat_width]` where rows are samples, tokens, or pixels.
-    fn site_activations(&self, input: &Self::Input, site: usize) -> Tensor;
+    /// Run the pre-site prefix (stem / embedding) and return a state
+    /// positioned at site 0's boundary.
+    fn calib_begin(&self, input: &Self::Input) -> Self::CalibState;
+
+    /// Consumer-input activations at `site`: `[rows, feat_width]` where
+    /// rows are samples, tokens, or pixels. `state` must sit at
+    /// `site`'s boundary; it is not advanced (though the model may
+    /// cache intermediate work in it for the following
+    /// [`forward_segment`](Compressible::forward_segment) call).
+    fn site_tap(&self, state: &mut Self::CalibState, site: usize) -> Tensor;
+
+    /// Advance `state` from `from_site`'s boundary to `to_site`'s
+    /// boundary through the model's *current* weights (i.e. through
+    /// sites `from_site..to_site` as already compressed).
+    fn forward_segment(&self, state: &mut Self::CalibState, from_site: usize, to_site: usize);
+
+    /// Split a calibration input into at most `max_shards` non-empty
+    /// sample shards whose concatenation, in order, is the original
+    /// input. Shards are the unit of parallel segment execution and of
+    /// streamed statistics accumulation.
+    fn split_input(&self, input: &Self::Input, max_shards: usize) -> Vec<Self::Input>;
+
+    /// One-shot oracle built on the staged API: consumer-input
+    /// activations at `site` from a fresh forward pass. Costs O(site)
+    /// layer forwards — the closed loop uses the staged methods
+    /// directly instead of calling this per site.
+    fn site_activations(&self, input: &Self::Input, site: usize) -> Tensor {
+        let mut state = self.calib_begin(input);
+        self.forward_segment(&mut state, 0, site);
+        self.site_tap(&mut state, site)
+    }
 
     /// Per-unit producer weight-row norm (`ord` 1 or 2) — magnitude
     /// selector scores.

@@ -48,6 +48,45 @@ where
         .collect()
 }
 
+/// Run `worker` over mutable jobs in place, fanned over scoped threads
+/// in contiguous chunks. Results come back in job order. Unlike
+/// [`run_grid`] the jobs stay owned by the caller — this is the
+/// primitive the closed-loop calibration pipeline uses to advance its
+/// per-shard [`crate::compress::Compressible::CalibState`]s in
+/// parallel.
+pub fn run_grid_mut<J, T, F>(jobs: &mut [J], threads: usize, worker: F) -> Vec<T>
+where
+    J: Send,
+    T: Send,
+    F: Fn(usize, &mut J) -> T + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return jobs.iter_mut().enumerate().map(|(i, j)| worker(i, j)).collect();
+    }
+    let chunk = (n + threads - 1) / threads;
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (ci, (job_chunk, out_chunk)) in
+            jobs.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate()
+        {
+            let worker = &worker;
+            scope.spawn(move || {
+                for (off, (j, o)) in
+                    job_chunk.iter_mut().zip(out_chunk.iter_mut()).enumerate()
+                {
+                    *o = Some(worker(ci * chunk + off, j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker completed")).collect()
+}
+
 /// Worker-thread count: `GRAIL_THREADS` env or available parallelism.
 pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("GRAIL_THREADS") {
@@ -90,5 +129,28 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn run_grid_mut_mutates_in_order() {
+        let mut jobs: Vec<u64> = (0..23).collect();
+        let out = run_grid_mut(&mut jobs, 4, |i, j| {
+            *j += 100;
+            (i as u64, *j)
+        });
+        assert_eq!(jobs, (100..123).collect::<Vec<_>>());
+        for (i, (idx, v)) in out.iter().enumerate() {
+            assert_eq!(*idx, i as u64);
+            assert_eq!(*v, 100 + i as u64);
+        }
+    }
+
+    #[test]
+    fn run_grid_mut_empty_and_single() {
+        let mut empty: Vec<u8> = Vec::new();
+        let out: Vec<u8> = run_grid_mut(&mut empty, 8, |_, j| *j);
+        assert!(out.is_empty());
+        let mut one = vec![7u8];
+        assert_eq!(run_grid_mut(&mut one, 8, |_, j| *j + 1), vec![8]);
     }
 }

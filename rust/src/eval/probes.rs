@@ -218,10 +218,15 @@ pub fn continuation_logprob(model: &TinyLm, context: &[u16], continuation: &[u16
     total
 }
 
-/// Accuracy of a model on a set of probe items.
+/// Accuracy of a model on a set of probe items. Items are independent
+/// single-sequence forwards, so they fan out over the scheduler's
+/// worker threads; the correct-count is order-insensitive, keeping the
+/// result bit-identical to a sequential evaluation.
 pub fn probe_accuracy(model: &TinyLm, items: &[ProbeItem]) -> f64 {
-    let mut correct = 0usize;
-    for item in items {
+    let threads = crate::coordinator::scheduler::default_threads();
+    let jobs: Vec<usize> = (0..items.len()).collect();
+    let hits = crate::coordinator::scheduler::run_grid(jobs, threads, |_, &idx| {
+        let item = &items[idx];
         let scores: Vec<f64> = item
             .candidates
             .iter()
@@ -233,10 +238,9 @@ pub fn probe_accuracy(model: &TinyLm, items: &[ProbeItem]) -> f64 {
             .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
-        if best == item.answer {
-            correct += 1;
-        }
-    }
+        best == item.answer
+    });
+    let correct = hits.iter().filter(|&&h| h).count();
     correct as f64 / items.len().max(1) as f64
 }
 

@@ -13,7 +13,10 @@
 
 pub mod pipeline;
 
-pub use pipeline::{compress_model, Method, PipelineConfig, Report, SiteOutcome};
+pub use pipeline::{
+    compress_model, compress_model_rescan, Method, PipelineConfig, Report, SiteOutcome,
+    DEFAULT_SHARDS,
+};
 
 use crate::compress::Reducer;
 use crate::linalg::{mean_diag, ridge_reconstruction};
@@ -57,6 +60,22 @@ impl ActStats {
                 as f32;
         }
         self.rows += n_new;
+    }
+
+    /// Fold another (un-finalized) accumulator into this one — used to
+    /// combine per-shard partial statistics in shard order, which keeps
+    /// the merged result deterministic under parallel calibration.
+    pub fn merge(&mut self, other: &ActStats) {
+        assert_eq!(self.width(), other.width(), "stat widths");
+        ops::axpy(&mut self.gram, 1.0, &other.gram);
+        let total = self.rows + other.rows;
+        if total > 0 {
+            for (m, &om) in self.mean.iter_mut().zip(&other.mean) {
+                *m = ((*m as f64 * self.rows as f64 + om as f64 * other.rows as f64)
+                    / total as f64) as f32;
+            }
+        }
+        self.rows = total;
     }
 
     /// Finish accumulation (mirror the Gram's upper triangle).
@@ -132,6 +151,37 @@ pub fn reconstruction_error(
     ops::axpy(&mut diff, -1.0, acts);
     let denom = acts.frobenius().max(1e-12);
     diff.frobenius() / denom
+}
+
+/// Relative reconstruction error computed from the Gram matrix alone:
+/// with `E = I − M·Bᵀ`, `‖X − X·M·Bᵀ‖²_F = tr(Eᵀ·G·E)` and
+/// `‖X‖²_F = tr(G)`, so the streamed pipeline never has to materialize
+/// raw activations to report the same diagnostic as
+/// [`reconstruction_error`].
+pub fn reconstruction_error_from_gram(
+    gram: &Tensor,
+    reducer: &Reducer,
+    unit_dim: usize,
+    b_map: &Tensor,
+) -> f32 {
+    let h = gram.dim(0);
+    assert_eq!(gram.dim(1), h, "gram must be square");
+    let m = reducer.lift(unit_dim).matrix(h); // [H, K]
+    let mut e = ops::matmul(&m, &ops::transpose(b_map)); // [H, H] = M·Bᵀ
+    for v in e.data_mut().iter_mut() {
+        *v = -*v;
+    }
+    for i in 0..h {
+        let v = e.at2(i, i) + 1.0;
+        e.set2(i, i, v); // E = I − M·Bᵀ
+    }
+    let ge = ops::matmul(gram, &e); // [H, H]
+    let mut err2 = 0.0f64;
+    for (&ev, &gv) in e.data().iter().zip(ge.data()) {
+        err2 += (ev as f64) * (gv as f64); // tr(Eᵀ·G·E)
+    }
+    let denom2: f64 = (0..h).map(|i| gram.at2(i, i) as f64).sum();
+    (err2.max(0.0).sqrt() / denom2.max(1e-24).sqrt()) as f32
 }
 
 #[cfg(test)]
@@ -226,6 +276,43 @@ mod tests {
         let r = Reducer::Select(vec![0, 2]); // head-level
         let b = reconstruction(&stats.gram, &r, 4, 1e-3);
         assert_eq!(b.shape(), &[12, 8]);
+    }
+
+    #[test]
+    fn merge_matches_sequential_updates() {
+        let x = correlated_acts(48, 6, 9);
+        let a = crate::tensor::ops::split_rows(&x, 3);
+        let mut merged = ActStats::new(6);
+        for part in &a {
+            let mut p = ActStats::new(6);
+            p.update(part);
+            merged.merge(&p);
+        }
+        merged.finalize();
+        let one = ActStats::from_acts(&x);
+        assert_eq!(merged.rows, 48);
+        assert!(merged.gram.max_abs_diff(&one.gram) < 1e-3);
+        for (m, o) in merged.mean.iter().zip(&one.mean) {
+            assert!((m - o).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_recon_error_matches_activation_recon_error() {
+        let x = correlated_acts(256, 12, 5);
+        let stats = ActStats::from_acts(&x);
+        let r = Reducer::Select((0..6).collect());
+        for b in [
+            reconstruction(&stats.gram, &r, 1, 1e-4),
+            r.matrix(12), // data-free map: large error path
+        ] {
+            let from_acts = reconstruction_error(&x, &r, 1, &b);
+            let from_gram = reconstruction_error_from_gram(&stats.gram, &r, 1, &b);
+            assert!(
+                (from_acts - from_gram).abs() < 1e-3 * (1.0 + from_acts),
+                "acts {from_acts} vs gram {from_gram}"
+            );
+        }
     }
 
     #[test]

@@ -2,15 +2,34 @@
 //! evaluating the Gram matrix for each layer based on the output of the
 //! already-pruned previous layers").
 //!
-//! For every site in forward order: run the calibration batch through
-//! the *current* (partially compressed) model, accumulate consumer-
-//! input statistics, build the reduction (selector / folding /
-//! baseline), optionally attach the GRAIL reconstruction map, apply.
+//! For every site in forward order: obtain the consumer-input
+//! statistics on the *current* (partially compressed) model, build the
+//! reduction (selector / folding / baseline), optionally attach the
+//! GRAIL reconstruction map, apply.
+//!
+//! Calibration is *staged*: the input is split into shards
+//! ([`Compressible::split_input`]), each shard carries a
+//! [`Compressible::CalibState`] cached at the current site's boundary,
+//! and after every `apply` the states advance one segment
+//! ([`Compressible::forward_segment`]) — O(L) total layer forwards for
+//! the whole loop instead of the O(L²) of re-running the network per
+//! site. Shard taps are folded into [`super::ActStats`] immediately
+//! (bounded peak memory; no `[all_rows, h]` materialization) and shards
+//! execute on scoped worker threads, which parallelizes both the
+//! calibration forwards and the `syrk_upper_acc` Gram accumulation.
+//! Statistics merge in shard order, so results are deterministic
+//! regardless of thread scheduling.
+//!
+//! [`compress_model_rescan`] keeps the pre-staging O(L²) strategy
+//! (rebuild every state from scratch at every site) as a reference
+//! implementation: it produces bit-identical `Report::sites`, which the
+//! equivalence tests and `benches/hotpath.rs` rely on.
 
 use crate::compress::baselines::{baseline_plan, Baseline};
 use crate::compress::heads::validate_head_reducer;
 use crate::compress::select::{self, ScoreInputs, Selector};
 use crate::compress::{fold, Compressible, ReductionPlan, SiteKind};
+use crate::coordinator::scheduler::{default_threads, run_grid, run_grid_mut};
 use crate::rng::Pcg64;
 use std::time::Instant;
 
@@ -72,6 +91,16 @@ pub struct PipelineConfig {
     /// all statistics come from the dense model — the ablation that
     /// shows why the closed loop matters.
     pub closed_loop: bool,
+    /// Calibration shards (micro-batches) for streamed statistics and
+    /// parallel segment execution. `0` = [`DEFAULT_SHARDS`] (models
+    /// clamp to the available sample count). More shards lower peak
+    /// tap memory; results are shard-count-dependent only in float
+    /// summation order, which is why the default is a fixed constant
+    /// rather than a function of the machine.
+    pub shards: usize,
+    /// Worker threads for calibration forwards. `0` = auto
+    /// (`GRAIL_THREADS` env or available parallelism).
+    pub workers: usize,
 }
 
 impl PipelineConfig {
@@ -84,6 +113,8 @@ impl PipelineConfig {
             alpha: super::DEFAULT_ALPHA,
             seed: 0,
             closed_loop: true,
+            shards: 0,
+            workers: 0,
         }
     }
 }
@@ -118,40 +149,139 @@ impl Report {
     }
 }
 
+/// Default calibration shard count when [`PipelineConfig::shards`] is
+/// 0. Deliberately a fixed constant — never derived from detected core
+/// count — so float summation order, and therefore compressed-model
+/// numerics, are identical across machines (the repo's bitwise
+/// reproducibility contract). Worker threads may still vary freely:
+/// partial statistics merge in shard-index order regardless of
+/// scheduling.
+pub const DEFAULT_SHARDS: usize = 16;
+
 /// Units kept for a site of `units` units in `groups` groups at
-/// removal `ratio` — always ≥1 per group and a multiple of `groups`.
+/// removal `ratio` — always ≥1 per group and, for divisible grouped
+/// sites, a multiple of `groups`. When `units` is not a multiple of
+/// `groups` the per-group arithmetic would silently truncate (e.g.
+/// `ratio = 0.0` dropping units), so such sites fall back to ungrouped
+/// rounding on the total.
 pub fn uniform_keep(units: usize, groups: usize, ratio: f64) -> usize {
     let g = groups.max(1);
+    if units % g != 0 {
+        let keep = ((units as f64) * (1.0 - ratio)).round() as usize;
+        return keep.clamp(1, units);
+    }
     let per_group = units / g;
     let keep_pg = ((per_group as f64) * (1.0 - ratio)).round() as usize;
     keep_pg.clamp(1, per_group) * g
 }
 
-/// Run the closed-loop pipeline over every site of `model`.
-pub fn compress_model<M: Compressible>(
+/// Which calibration strategy drives the closed loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Engine {
+    /// Staged segment execution: persistent per-shard boundary states,
+    /// O(L) total layer forwards.
+    Staged,
+    /// Reference strategy: rebuild every state from scratch at every
+    /// site, O(L²) layer forwards. Same statistics, bit-identical
+    /// outcomes.
+    Rescan,
+}
+
+/// Run the closed-loop pipeline over every site of `model` using the
+/// staged O(L) segment executor.
+pub fn compress_model<M>(model: &mut M, calib: &M::Input, cfg: &PipelineConfig) -> Report
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    run_pipeline(model, calib, cfg, Engine::Staged)
+}
+
+/// Reference pipeline: identical statistics and outcomes, but every
+/// site re-executes the full prefix (O(L²) layer forwards). Kept for
+/// equivalence tests and the `benches/hotpath.rs` before/after
+/// comparison.
+pub fn compress_model_rescan<M>(model: &mut M, calib: &M::Input, cfg: &PipelineConfig) -> Report
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    run_pipeline(model, calib, cfg, Engine::Rescan)
+}
+
+fn run_pipeline<M>(
     model: &mut M,
     calib: &M::Input,
     cfg: &PipelineConfig,
-) -> Report {
+    engine: Engine,
+) -> Report
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
     let n_sites = model.sites().len();
     let mut rng = Pcg64::seed_stream(cfg.seed, 0x6121);
     let mut outcomes = Vec::with_capacity(n_sites);
-    let mut calib_seconds = 0.0;
-    let mut comp_seconds = 0.0;
+    let mut calib_seconds = 0.0f64;
+    let mut comp_seconds = 0.0f64;
+    let workers = if cfg.workers != 0 { cfg.workers } else { default_threads() };
+    let shard_target = if cfg.shards != 0 { cfg.shards } else { DEFAULT_SHARDS };
 
-    // Open-loop ablation: freeze all activations from the dense model
-    // up front (error propagation becomes visible at depth).
-    let dense_acts: Vec<crate::tensor::Tensor> = if cfg.closed_loop {
+    let t_init = Instant::now();
+    let shard_inputs: Vec<M::Input> = model.split_input(calib, shard_target);
+
+    // Open-loop ablation: one streamed pass over the dense model
+    // accumulates every site's statistics up front (error propagation
+    // becomes visible at depth). Peak memory is one tap per in-flight
+    // shard plus `shards × Σ h²` partial Gram accumulators — bounded
+    // by the fixed shard count, and merged strictly in shard order so
+    // the result is independent of worker count.
+    let open_stats: Vec<super::ActStats> = if cfg.closed_loop {
         Vec::new()
     } else {
-        let t0 = Instant::now();
-        let acts = (0..n_sites).map(|si| model.site_activations(calib, si)).collect();
-        calib_seconds += t0.elapsed().as_secs_f64();
-        acts
+        let widths: Vec<usize> = model.sites().iter().map(|s| s.feat_width()).collect();
+        let widths_ref = &widths;
+        let mref: &M = &*model;
+        let per_shard: Vec<Vec<super::ActStats>> =
+            run_grid(shard_inputs.iter().collect(), workers, |_, inp| {
+                let mut st = mref.calib_begin(inp);
+                let mut local: Vec<super::ActStats> =
+                    widths_ref.iter().map(|&w| super::ActStats::new(w)).collect();
+                for si in 0..widths_ref.len() {
+                    let tap = mref.site_tap(&mut st, si);
+                    local[si].update(&tap);
+                    if si + 1 < widths_ref.len() {
+                        mref.forward_segment(&mut st, si, si + 1);
+                    }
+                }
+                local
+            });
+        (0..widths.len())
+            .map(|si| {
+                let mut s = super::ActStats::new(widths[si]);
+                for shard in &per_shard {
+                    s.merge(&shard[si]);
+                }
+                s.finalize();
+                s
+            })
+            .collect()
     };
 
+    // Staged closed loop: per-shard boundary states at site 0.
+    let mut states: Vec<M::CalibState> = if cfg.closed_loop && engine == Engine::Staged {
+        let mref: &M = &*model;
+        run_grid(shard_inputs.iter().collect(), workers, |_, inp| mref.calib_begin(inp))
+    } else {
+        Vec::new()
+    };
+    calib_seconds += t_init.elapsed().as_secs_f64();
+
     for si in 0..n_sites {
-        let info = &model.sites()[si];
+        let info = model.sites()[si].clone();
         let keep = uniform_keep(info.units, info.groups, cfg.ratio);
         if keep >= info.units {
             outcomes.push(SiteOutcome {
@@ -160,19 +290,52 @@ pub fn compress_model<M: Compressible>(
                 units_after: info.units,
                 recon_err: 0.0,
             });
+            // The boundary still has to move past the untouched site.
+            if cfg.closed_loop && engine == Engine::Staged && si + 1 < n_sites {
+                let t = Instant::now();
+                let mref: &M = &*model;
+                run_grid_mut(&mut states, workers, |_, st| {
+                    mref.forward_segment(st, si, si + 1);
+                });
+                calib_seconds += t.elapsed().as_secs_f64();
+            }
             continue;
         }
 
-        // --- calibration: consumer-input statistics on the current
-        // (closed loop) or dense (open loop) model.
-        let t0 = Instant::now();
-        let acts = if cfg.closed_loop {
-            model.site_activations(calib, si)
+        // --- calibration: stream shard taps into the statistics on
+        // the current (closed loop) or dense (open loop) model.
+        let tc = Instant::now();
+        let width = info.feat_width();
+        let stats = if !cfg.closed_loop {
+            open_stats[si].clone()
         } else {
-            dense_acts[si].clone()
+            let mref: &M = &*model;
+            let partials: Vec<super::ActStats> = match engine {
+                Engine::Staged => run_grid_mut(&mut states, workers, |_, st| {
+                    let tap = mref.site_tap(st, si);
+                    let mut s = super::ActStats::new(width);
+                    s.update(&tap);
+                    s
+                }),
+                Engine::Rescan => {
+                    run_grid(shard_inputs.iter().collect(), workers, |_, inp| {
+                        let mut st = mref.calib_begin(inp);
+                        mref.forward_segment(&mut st, 0, si);
+                        let tap = mref.site_tap(&mut st, si);
+                        let mut s = super::ActStats::new(width);
+                        s.update(&tap);
+                        s
+                    })
+                }
+            };
+            let mut stats = super::ActStats::new(width);
+            for p in &partials {
+                stats.merge(p);
+            }
+            stats.finalize();
+            stats
         };
-        let stats = super::ActStats::from_acts(&acts);
-        calib_seconds += t0.elapsed().as_secs_f64();
+        calib_seconds += tc.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
         let l1 = model.producer_row_norm(si, 1);
@@ -185,7 +348,7 @@ pub fn compress_model<M: Compressible>(
         let mut plan: ReductionPlan = match cfg.method {
             Method::Prune(sel) => {
                 let inputs = ScoreInputs {
-                    site: info,
+                    site: &info,
                     producer_l1: &l1,
                     producer_l2: &l2,
                     gram_diag: &gd,
@@ -195,11 +358,13 @@ pub fn compress_model<M: Compressible>(
             }
             Method::Fold => {
                 let feats = model.producer_features(si);
-                ReductionPlan::bare(fold::fold_reducer(&feats, info, keep, &mut rng))
+                ReductionPlan::bare(fold::fold_reducer(&feats, &info, keep, &mut rng))
             }
-            Method::RandomFold => ReductionPlan::bare(fold::random_fold(info, keep, &mut rng)),
+            Method::RandomFold => {
+                ReductionPlan::bare(fold::random_fold(&info, keep, &mut rng))
+            }
             Method::Baseline(b) => {
-                baseline_plan(b, info, &stats, &l1, &l2, &consumer, keep, &mut rng)
+                baseline_plan(b, &info, &stats, &l1, &l2, &consumer, keep, &mut rng)
             }
         };
 
@@ -216,19 +381,34 @@ pub fn compress_model<M: Compressible>(
         }
 
         if info.kind == SiteKind::AttnHeads {
-            validate_head_reducer(&plan.reducer, info).expect("invalid head reducer");
+            validate_head_reducer(&plan.reducer, &info).expect("invalid head reducer");
         }
 
-        // --- diagnostics + apply
+        // --- diagnostics + apply. The reconstruction error comes from
+        // the Gram matrix (tr-form), so no raw activations are kept.
         let eff_map = if let Some(b) = &plan.compensation {
             b.clone()
         } else {
             plan.reducer.lift(info.unit_dim).consumer_matrix(info.feat_width())
         };
-        let recon_err =
-            super::reconstruction_error(&acts, &plan.reducer, info.unit_dim, &eff_map);
+        let recon_err = super::reconstruction_error_from_gram(
+            &stats.gram,
+            &plan.reducer,
+            info.unit_dim,
+            &eff_map,
+        );
         model.apply(si, &plan);
         comp_seconds += t1.elapsed().as_secs_f64();
+
+        // --- advance the boundary through the now-compressed site.
+        if cfg.closed_loop && engine == Engine::Staged && si + 1 < n_sites {
+            let t = Instant::now();
+            let mref: &M = &*model;
+            run_grid_mut(&mut states, workers, |_, st| {
+                mref.forward_segment(st, si, si + 1);
+            });
+            calib_seconds += t.elapsed().as_secs_f64();
+        }
 
         outcomes.push(SiteOutcome {
             id: info.id.clone(),
@@ -256,6 +436,19 @@ mod tests {
         assert_eq!(uniform_keep(8, 4, 0.5), 4);
         // Never below one per group.
         assert_eq!(uniform_keep(8, 4, 0.95), 4);
+    }
+
+    #[test]
+    fn uniform_keep_non_divisible_groups() {
+        // Regression: `units / groups` used to truncate, so ratio 0.0
+        // silently dropped units (10 units / 3 groups kept only 9).
+        assert_eq!(uniform_keep(10, 3, 0.0), 10);
+        assert_eq!(uniform_keep(7, 2, 0.0), 7);
+        assert_eq!(uniform_keep(10, 3, 0.5), 5);
+        assert_eq!(uniform_keep(10, 3, 1.0), 1);
+        // Divisible grouped behaviour unchanged.
+        assert_eq!(uniform_keep(8, 4, 0.0), 8);
+        assert_eq!(uniform_keep(8, 4, 0.5), 4);
     }
 
     fn trained_ish_mlp() -> (MlpNet, crate::tensor::Tensor) {
@@ -323,6 +516,23 @@ mod tests {
             m.forward(&x)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn shard_and_worker_counts_do_not_change_widths() {
+        // Float summation order differs across shard counts, but the
+        // structural outcome (selection sizes, finiteness) must not.
+        let (m0, x) = trained_ish_mlp();
+        for (shards, workers) in [(1usize, 1usize), (3, 2), (16, 4)] {
+            let mut m = m0.clone();
+            let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+            cfg.shards = shards;
+            cfg.workers = workers;
+            let rep = compress_model(&mut m, &x, &cfg);
+            assert_eq!(rep.sites.len(), 2);
+            assert!(rep.sites.iter().all(|s| s.units_after == 16));
+            assert!(m.forward(&x).all_finite(), "shards={shards}");
+        }
     }
 
     #[test]

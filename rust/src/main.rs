@@ -33,9 +33,15 @@ fn run() -> Result<()> {
             let art = Artifacts::at(args.opt_or("out", "artifacts"));
             println!("artifacts root: {:?}", art.root);
             println!("data present:   {}", art.has_data());
+            #[cfg(feature = "pjrt")]
             match grail::runtime::Runtime::cpu(art) {
                 Ok(rt) => println!("pjrt platform:  {}", rt.platform()),
                 Err(e) => println!("pjrt:           unavailable ({e})"),
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = art;
+                println!("pjrt:           disabled (build with --features pjrt)");
             }
             Ok(())
         }

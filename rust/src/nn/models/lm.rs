@@ -140,10 +140,9 @@ impl TinyLm {
         self.forward_with_taps(batch).0
     }
 
-    /// Logits plus consumer-input taps in site order: for each block,
-    /// the pre-`w_o` concatenated head features, then the post-GELU
-    /// MLP hidden (`2·n_layers` taps total).
-    pub fn forward_with_taps(&self, batch: &LmBatch) -> (Tensor, Vec<Tensor>) {
+    /// Token + positional embedding: batch ids to the `[b*t, d_model]`
+    /// residual stream entering block 0.
+    pub fn embed_batch(&self, batch: &LmBatch) -> Tensor {
         let (b, t) = (batch.b, batch.t);
         assert!(t <= self.cfg.max_seq, "sequence too long");
         let d = self.cfg.d_model;
@@ -159,6 +158,15 @@ impl TinyLm {
                 dst[j] = e[j] + p[j];
             }
         }
+        cur
+    }
+
+    /// Logits plus consumer-input taps in site order: for each block,
+    /// the pre-`w_o` concatenated head features, then the post-GELU
+    /// MLP hidden (`2·n_layers` taps total).
+    pub fn forward_with_taps(&self, batch: &LmBatch) -> (Tensor, Vec<Tensor>) {
+        let (b, t) = (batch.b, batch.t);
+        let mut cur = self.embed_batch(batch);
         let mut taps = Vec::with_capacity(2 * self.blocks.len());
         for blk in &self.blocks {
             let normed = blk.ln1.forward(&cur);
@@ -217,8 +225,73 @@ impl TinyLm {
     }
 }
 
+/// Segment-executor state: the residual stream at the current site's
+/// boundary — before `ln1` for attention sites (even indices), before
+/// `ln2` for MLP sites (odd indices) — plus the batch geometry the
+/// attention forward needs.
+#[derive(Clone, Debug)]
+pub struct LmCalibState {
+    cur: Tensor,
+    b: usize,
+    t: usize,
+}
+
 impl Compressible for TinyLm {
     type Input = LmBatch;
+    type CalibState = LmCalibState;
+
+    fn calib_begin(&self, input: &LmBatch) -> LmCalibState {
+        LmCalibState { cur: self.embed_batch(input), b: input.b, t: input.t }
+    }
+
+    fn site_tap(&self, state: &mut LmCalibState, site: usize) -> Tensor {
+        crate::bench_util::count_layer_forward();
+        let blk = &self.blocks[site / 2];
+        if site % 2 == 0 {
+            let normed = blk.ln1.forward(&state.cur);
+            let (_, tap) = blk.attn.forward(&normed, state.b, state.t);
+            tap
+        } else {
+            let normed = blk.ln2.forward(&state.cur);
+            let mut hid = blk.fc.forward(&normed);
+            gelu(&mut hid);
+            hid
+        }
+    }
+
+    fn forward_segment(&self, state: &mut LmCalibState, from_site: usize, to_site: usize) {
+        for s in from_site..to_site {
+            crate::bench_util::count_layer_forward();
+            let blk = &self.blocks[s / 2];
+            if s % 2 == 0 {
+                // Through the attention site: re-runs the (possibly
+                // just-compressed) attention — head reductions rewrite
+                // q/k/v, so the pre-apply tap cannot be reused.
+                let normed = blk.ln1.forward(&state.cur);
+                let (attn_out, _) = blk.attn.forward(&normed, state.b, state.t);
+                ops::axpy(&mut state.cur, 1.0, &attn_out);
+            } else {
+                let normed = blk.ln2.forward(&state.cur);
+                let mut hid = blk.fc.forward(&normed);
+                gelu(&mut hid);
+                let mlp_out = blk.proj.forward(&hid);
+                ops::axpy(&mut state.cur, 1.0, &mlp_out);
+            }
+        }
+    }
+
+    fn split_input(&self, input: &LmBatch, max_shards: usize) -> Vec<LmBatch> {
+        let t = input.t;
+        ops::shard_ranges(input.b, max_shards)
+            .into_iter()
+            .map(|(start, len)| LmBatch {
+                inputs: input.inputs[start * t..(start + len) * t].to_vec(),
+                targets: input.targets[start * t..(start + len) * t].to_vec(),
+                b: len,
+                t,
+            })
+            .collect()
+    }
 
     fn sites(&self) -> Vec<SiteInfo> {
         let mut sites = Vec::with_capacity(2 * self.blocks.len());
@@ -239,10 +312,6 @@ impl Compressible for TinyLm {
             });
         }
         sites
-    }
-
-    fn site_activations(&self, input: &LmBatch, site: usize) -> Tensor {
-        self.forward_with_taps(input).1.swap_remove(site)
     }
 
     fn producer_row_norm(&self, site: usize, ord: u8) -> Vec<f32> {
@@ -419,6 +488,38 @@ mod tests {
         assert_eq!(m.blocks[0].fc.out_dim(), 96);
         assert_eq!(m.blocks[0].proj.in_dim(), 96);
         assert!(m.forward(&bt).all_finite());
+    }
+
+    #[test]
+    fn staged_taps_match_forward_with_taps() {
+        for gqa in [false, true] {
+            let m = model(gqa);
+            let bt = batch(2, 12);
+            let (_, taps) = m.forward_with_taps(&bt);
+            for site in 0..taps.len() {
+                let staged = m.site_activations(&bt, site);
+                assert_eq!(staged, taps[site], "gqa={gqa} site {site}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_input_preserves_windows() {
+        let m = model(false);
+        let bt = batch(5, 8);
+        let shards = m.split_input(&bt, 2);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].b + shards[1].b, 5);
+        let rejoined: Vec<u16> = shards
+            .iter()
+            .flat_map(|s| s.inputs.iter().copied())
+            .collect();
+        assert_eq!(rejoined, bt.inputs);
+        for s in &shards {
+            assert_eq!(s.t, 8);
+            assert_eq!(s.inputs.len(), s.b * s.t);
+            assert_eq!(s.targets.len(), s.b * s.t);
+        }
     }
 
     #[test]

@@ -65,8 +65,42 @@ impl MlpNet {
     }
 }
 
+/// Segment-executor state: the input of the current site's producer
+/// (`x` for site 0, `relu(fc1·x)` for site 1).
+#[derive(Clone, Debug)]
+pub struct MlpCalibState {
+    cur: Tensor,
+}
+
 impl Compressible for MlpNet {
     type Input = Tensor;
+    type CalibState = MlpCalibState;
+
+    fn calib_begin(&self, input: &Tensor) -> MlpCalibState {
+        MlpCalibState { cur: input.clone() }
+    }
+
+    fn site_tap(&self, state: &mut MlpCalibState, site: usize) -> Tensor {
+        crate::bench_util::count_layer_forward();
+        let p = if site == 0 { &self.fc1 } else { &self.fc2 };
+        let mut h = p.forward(&state.cur);
+        relu(&mut h);
+        h
+    }
+
+    fn forward_segment(&self, state: &mut MlpCalibState, from_site: usize, to_site: usize) {
+        for s in from_site..to_site {
+            crate::bench_util::count_layer_forward();
+            let p = if s == 0 { &self.fc1 } else { &self.fc2 };
+            let mut h = p.forward(&state.cur);
+            relu(&mut h);
+            state.cur = h;
+        }
+    }
+
+    fn split_input(&self, input: &Tensor, max_shards: usize) -> Vec<Tensor> {
+        crate::tensor::ops::split_rows(input, max_shards)
+    }
 
     fn sites(&self) -> Vec<SiteInfo> {
         vec![
@@ -85,10 +119,6 @@ impl Compressible for MlpNet {
                 kind: SiteKind::Dense,
             },
         ]
-    }
-
-    fn site_activations(&self, input: &Tensor, site: usize) -> Tensor {
-        self.forward_with_taps(input).1.swap_remove(site)
     }
 
     fn producer_row_norm(&self, site: usize, ord: u8) -> Vec<f32> {
@@ -266,6 +296,27 @@ mod tests {
         for (a, b) in m.head.b.data().iter().zip(&before) {
             assert!((a - b - 1.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn staged_taps_match_forward_with_taps() {
+        let m = net();
+        let x = batch(6);
+        let (_, taps) = m.forward_with_taps(&x);
+        for site in 0..2 {
+            let staged = m.site_activations(&x, site);
+            assert_eq!(staged, taps[site], "site {site}");
+        }
+    }
+
+    #[test]
+    fn split_input_rejoins() {
+        let m = net();
+        let x = batch(7);
+        let shards = m.split_input(&x, 3);
+        assert_eq!(shards.len(), 3);
+        let total: usize = shards.iter().map(|s| s.dim(0)).sum();
+        assert_eq!(total, 7);
     }
 
     #[test]

@@ -17,7 +17,7 @@ mod mlp;
 mod resnet;
 mod vit;
 
-pub use lm::{LmBatch, LmConfig, TinyLm};
-pub use mlp::MlpNet;
-pub use resnet::MiniResNet;
-pub use vit::{TinyViT, VitConfig};
+pub use lm::{LmBatch, LmCalibState, LmConfig, TinyLm};
+pub use mlp::{MlpCalibState, MlpNet};
+pub use resnet::{MiniResNet, ResNetCalibState};
+pub use vit::{TinyViT, VitCalibState, VitConfig};

@@ -280,8 +280,52 @@ fn pull_bn(b: &WeightBundle, name: &str) -> Result<BatchNorm2d> {
     })
 }
 
+/// Segment-executor state: the current block's input activation plus
+/// its spatial geometry (the stem has already run).
+#[derive(Clone, Debug)]
+pub struct ResNetCalibState {
+    cur: Tensor,
+    h: usize,
+    w: usize,
+}
+
 impl Compressible for MiniResNet {
     type Input = Tensor;
+    type CalibState = ResNetCalibState;
+
+    fn calib_begin(&self, input: &Tensor) -> ResNetCalibState {
+        crate::bench_util::count_layer_forward();
+        let (_, h0, w0) = self.chw;
+        let mut cur = self.stem_conv.forward(input, h0, w0);
+        let (h, w) = self.stem_conv.out_hw(h0, w0);
+        self.stem_bn.forward_inplace(&mut cur, h * w);
+        relu(&mut cur);
+        ResNetCalibState { cur, h, w }
+    }
+
+    fn site_tap(&self, state: &mut ResNetCalibState, site: usize) -> Tensor {
+        crate::bench_util::count_layer_forward();
+        let blk = &self.blocks[site];
+        let (oh, ow) = blk.conv1.out_hw(state.h, state.w);
+        let mut mid = blk.conv1.forward(&state.cur, state.h, state.w);
+        blk.bn1.forward_inplace(&mut mid, oh * ow);
+        relu(&mut mid);
+        chw_to_rows(&mid, blk.conv1.out_channels(), oh * ow)
+    }
+
+    fn forward_segment(&self, state: &mut ResNetCalibState, from_site: usize, to_site: usize) {
+        for s in from_site..to_site {
+            crate::bench_util::count_layer_forward();
+            let (out, _mid, oh, ow) = self.blocks[s].forward(&state.cur, state.h, state.w);
+            state.cur = out;
+            state.h = oh;
+            state.w = ow;
+        }
+    }
+
+    fn split_input(&self, input: &Tensor, max_shards: usize) -> Vec<Tensor> {
+        ops::split_rows(input, max_shards)
+    }
 
     fn sites(&self) -> Vec<SiteInfo> {
         self.blocks
@@ -295,10 +339,6 @@ impl Compressible for MiniResNet {
                 kind: SiteKind::Conv,
             })
             .collect()
-    }
-
-    fn site_activations(&self, input: &Tensor, site: usize) -> Tensor {
-        self.forward_with_taps(input).1.swap_remove(site)
     }
 
     fn producer_row_norm(&self, site: usize, ord: u8) -> Vec<f32> {
@@ -463,6 +503,17 @@ mod tests {
         let after = &m.blocks[0].bn1.running_mean;
         assert!(before.max_abs_diff(after) > 1e-4, "stats should move");
         assert!(m.forward(&calib.x).all_finite());
+    }
+
+    #[test]
+    fn staged_taps_match_forward_with_taps() {
+        let m = net();
+        let x = imgs(3);
+        let (_, taps) = m.forward_with_taps(&x);
+        for site in 0..m.blocks.len() {
+            let staged = m.site_activations(&x, site);
+            assert_eq!(staged, taps[site], "site {site}");
+        }
     }
 
     #[test]

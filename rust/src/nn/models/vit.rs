@@ -134,19 +134,27 @@ impl TinyViT {
         self.forward_with_taps(x).0
     }
 
-    /// Logits plus one post-GELU MLP tap per block (`[n*tokens, d_ff]`).
-    pub fn forward_with_taps(&self, x: &Tensor) -> (Tensor, Vec<Tensor>) {
+    /// Patch-embed plus positional embedding: `[n, c*h*w]` images to
+    /// the `[n*tokens, d_model]` token stream entering block 0.
+    pub fn embed(&self, x: &Tensor) -> Tensor {
         let n = x.dim(0);
         let t = self.cfg.tokens();
         let mut cur = self.patch_embed.forward(&self.patchify(x)); // [n*t, d]
-        // Add positional embedding per token.
-        let d = self.cfg.d_model;
         for r in 0..n * t {
             let pos_row = self.pos.row(r % t).to_vec();
             for (v, p) in cur.row_mut(r).iter_mut().zip(&pos_row) {
                 *v += p;
             }
         }
+        cur
+    }
+
+    /// Logits plus one post-GELU MLP tap per block (`[n*tokens, d_ff]`).
+    pub fn forward_with_taps(&self, x: &Tensor) -> (Tensor, Vec<Tensor>) {
+        let n = x.dim(0);
+        let t = self.cfg.tokens();
+        let d = self.cfg.d_model;
+        let mut cur = self.embed(x);
         let mut taps = Vec::with_capacity(self.blocks.len());
         for blk in &self.blocks {
             // Pre-LN attention with residual.
@@ -268,8 +276,76 @@ pub(crate) fn pull_attn(
     })
 }
 
+/// Segment-executor state: the residual stream entering the current
+/// block, plus the post-attention residual cached by `site_tap` —
+/// attention sits *upstream* of the MLP site, so the cache stays valid
+/// across `apply` and saves re-running attention in the following
+/// `forward_segment` call. The cache is tagged with its site index so a
+/// stale entry is never reused.
+#[derive(Clone, Debug)]
+pub struct VitCalibState {
+    cur: Tensor,
+    n: usize,
+    attn_mid: Option<(usize, Tensor)>,
+}
+
+impl TinyViT {
+    /// Post-attention residual of `site`'s block (the MLP boundary),
+    /// consuming a matching cache or recomputing attention from the
+    /// state's residual stream.
+    fn mlp_boundary(&self, state: &mut VitCalibState, site: usize) -> Tensor {
+        if let Some((cached_site, mid)) = state.attn_mid.take() {
+            if cached_site == site {
+                return mid;
+            }
+        }
+        let blk = &self.blocks[site];
+        let normed = blk.ln1.forward(&state.cur);
+        let (attn_out, _) = blk.attn.forward(&normed, state.n, self.cfg.tokens());
+        let mut mid = state.cur.clone();
+        ops::axpy(&mut mid, 1.0, &attn_out);
+        mid
+    }
+}
+
 impl Compressible for TinyViT {
     type Input = Tensor;
+    type CalibState = VitCalibState;
+
+    fn calib_begin(&self, input: &Tensor) -> VitCalibState {
+        crate::bench_util::count_layer_forward();
+        VitCalibState { cur: self.embed(input), n: input.dim(0), attn_mid: None }
+    }
+
+    fn site_tap(&self, state: &mut VitCalibState, site: usize) -> Tensor {
+        crate::bench_util::count_layer_forward();
+        let mid = self.mlp_boundary(state, site);
+        let blk = &self.blocks[site];
+        let normed = blk.ln2.forward(&mid);
+        let mut hid = blk.fc.forward(&normed);
+        gelu(&mut hid);
+        state.attn_mid = Some((site, mid));
+        hid
+    }
+
+    fn forward_segment(&self, state: &mut VitCalibState, from_site: usize, to_site: usize) {
+        for s in from_site..to_site {
+            crate::bench_util::count_layer_forward();
+            let mid = self.mlp_boundary(state, s);
+            let blk = &self.blocks[s];
+            let normed = blk.ln2.forward(&mid);
+            let mut hid = blk.fc.forward(&normed);
+            gelu(&mut hid);
+            let mlp_out = blk.proj.forward(&hid);
+            let mut out = mid;
+            ops::axpy(&mut out, 1.0, &mlp_out);
+            state.cur = out;
+        }
+    }
+
+    fn split_input(&self, input: &Tensor, max_shards: usize) -> Vec<Tensor> {
+        ops::split_rows(input, max_shards)
+    }
 
     fn sites(&self) -> Vec<SiteInfo> {
         self.blocks
@@ -283,10 +359,6 @@ impl Compressible for TinyViT {
                 kind: SiteKind::MlpPair,
             })
             .collect()
-    }
-
-    fn site_activations(&self, input: &Tensor, site: usize) -> Tensor {
-        self.forward_with_taps(input).1.swap_remove(site)
     }
 
     fn producer_row_norm(&self, site: usize, ord: u8) -> Vec<f32> {
@@ -380,5 +452,31 @@ mod tests {
         let y0 = m.forward(&x);
         m.apply(0, &ReductionPlan::bare(Reducer::Select((0..128).collect())));
         assert!(y0.max_abs_diff(&m.forward(&x)) < 1e-5);
+    }
+
+    #[test]
+    fn staged_taps_match_forward_with_taps() {
+        let m = net();
+        let x = imgs(2);
+        let (_, taps) = m.forward_with_taps(&x);
+        for site in 0..m.blocks.len() {
+            let staged = m.site_activations(&x, site);
+            assert_eq!(staged, taps[site], "site {site}");
+        }
+    }
+
+    #[test]
+    fn attn_cache_reused_only_for_matching_site() {
+        // tap(site 0) then segment through site 0 reuses the cache;
+        // tapping a *different* site afterwards must not.
+        let m = net();
+        let x = imgs(2);
+        let mut st = m.calib_begin(&x);
+        let t0 = m.site_tap(&mut st, 0);
+        m.forward_segment(&mut st, 0, 1);
+        let t1 = m.site_tap(&mut st, 1);
+        let (_, taps) = m.forward_with_taps(&x);
+        assert_eq!(t0, taps[0]);
+        assert_eq!(t1, taps[1]);
     }
 }

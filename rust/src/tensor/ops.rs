@@ -25,12 +25,18 @@ pub fn gemm_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    // The `s == 0` sparse fast path is only sound when B is finite:
+    // IEEE 0·NaN and 0·∞ are NaN and must propagate. The finiteness
+    // scan is lazy (first zero hit) so dense-A GEMMs never pay it.
+    let mut b_finite: Option<bool> = None;
     for i in 0..m {
         let a_row = &a[i * k..(i + 1) * k];
         let c_row = &mut c[i * n..(i + 1) * n];
         for (p, &a_ip) in a_row.iter().enumerate() {
             let s = alpha * a_ip;
-            if s == 0.0 {
+            if s == 0.0
+                && *b_finite.get_or_insert_with(|| b.iter().all(|v| v.is_finite()))
+            {
                 continue;
             }
             let b_row = &b[p * n..(p + 1) * n];
@@ -101,11 +107,17 @@ pub fn syrk_upper_acc(x: &Tensor, g: &mut Tensor) {
     assert_eq!(g.shape(), &[h, h], "gram shape");
     let xd = x.data();
     let gd = g.data_mut();
+    // Like `gemm_acc`, the zero skip must not swallow 0·NaN / 0·∞ from
+    // other entries of the same sample row; the finiteness scan is
+    // lazy so zero-free inputs never pay it.
+    let mut x_finite: Option<bool> = None;
     for s in 0..n {
         let row = &xd[s * h..(s + 1) * h];
         for i in 0..h {
             let xi = row[i];
-            if xi == 0.0 {
+            if xi == 0.0
+                && *x_finite.get_or_insert_with(|| xd.iter().all(|v| v.is_finite()))
+            {
                 continue;
             }
             let g_row = &mut gd[i * h + i..(i + 1) * h];
@@ -186,6 +198,41 @@ pub fn gather_rows(a: &Tensor, idx: &[usize]) -> Tensor {
         out.row_mut(k).copy_from_slice(a.row(i));
     }
     out
+}
+
+/// Balanced contiguous chunking of `n` items into at most `max_shards`
+/// non-empty `(start, len)` ranges covering `0..n` in order — the
+/// shared sharding arithmetic behind [`split_rows`] and the model
+/// families' `Compressible::split_input` impls.
+pub fn shard_ranges(n: usize, max_shards: usize) -> Vec<(usize, usize)> {
+    let shards = max_shards.clamp(1, n.max(1));
+    let base = n / shards;
+    let rem = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for i in 0..shards {
+        let len = base + usize::from(i < rem);
+        if len == 0 {
+            continue;
+        }
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Split a 2-D tensor into at most `max_shards` contiguous row chunks
+/// (each non-empty, sizes as balanced as possible, concatenation order
+/// preserved) — the calibration-sharding primitive of the segment
+/// executor.
+pub fn split_rows(x: &Tensor, max_shards: usize) -> Vec<Tensor> {
+    let d = x.dim(1);
+    shard_ranges(x.dim(0), max_shards)
+        .into_iter()
+        .map(|(start, len)| {
+            Tensor::from_vec(&[len, d], x.data()[start * d..(start + len) * d].to_vec())
+        })
+        .collect()
 }
 
 /// Elementwise `a + b`.
@@ -361,6 +408,60 @@ mod tests {
         assert_eq!(mu, vec![12., 23.]);
         let l2 = col_l2(&Tensor::from_vec(&[2, 1], vec![3., 4.]));
         assert!((l2[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gemm_zero_times_nonfinite_propagates() {
+        // 0·NaN and 0·∞ must be NaN, not silently dropped by the
+        // sparse fast path.
+        let a = Tensor::from_vec(&[1, 2], vec![0.0, 1.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![f32::NAN, 1.0, 2.0, 3.0]);
+        let c = matmul(&a, &b);
+        assert!(c.at2(0, 0).is_nan(), "0·NaN + 1·2 must be NaN");
+        assert_eq!(c.at2(0, 1), 3.0); // 0·1 + 1·3: finite column unaffected
+        let b_inf = Tensor::from_vec(&[2, 2], vec![f32::INFINITY, 1.0, 2.0, 3.0]);
+        let c = matmul(&a, &b_inf);
+        assert!(c.at2(0, 0).is_nan(), "0·∞ + 1·2 must be NaN");
+    }
+
+    #[test]
+    fn gemm_finite_fast_path_unchanged() {
+        let mut r = Pcg64::seed(40);
+        let mut a = randn(&mut r, &[5, 7]);
+        // Inject exact zeros so the skip actually fires.
+        for i in 0..5 {
+            a.set2(i, i % 7, 0.0);
+        }
+        let b = randn(&mut r, &[7, 4]);
+        let c = matmul(&a, &b);
+        let cr = matmul_ref(&a, &b);
+        assert!(c.max_abs_diff(&cr) < 1e-4);
+    }
+
+    #[test]
+    fn syrk_zero_times_nonfinite_propagates() {
+        let x = Tensor::from_vec(&[1, 2], vec![0.0, f32::NAN]);
+        let mut g = Tensor::zeros(&[2, 2]);
+        syrk_upper_acc(&x, &mut g);
+        assert!(g.at2(0, 1).is_nan(), "0·NaN cross term must be NaN");
+        assert!(g.at2(1, 1).is_nan());
+        assert_eq!(g.at2(0, 0), 0.0); // 0·0 stays 0
+    }
+
+    #[test]
+    fn split_rows_partitions() {
+        let x = Tensor::from_vec(&[5, 2], (0..10).map(|i| i as f32).collect());
+        let parts = split_rows(&x, 3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].shape(), &[2, 2]);
+        assert_eq!(parts[1].shape(), &[2, 2]);
+        assert_eq!(parts[2].shape(), &[1, 2]);
+        let rejoined: Vec<f32> =
+            parts.iter().flat_map(|p| p.data().iter().copied()).collect();
+        assert_eq!(rejoined, x.data());
+        // More shards than rows clamps to one row each.
+        assert_eq!(split_rows(&x, 99).len(), 5);
+        assert_eq!(split_rows(&x, 1).len(), 1);
     }
 
     #[test]

@@ -1,0 +1,59 @@
+//! Closed-loop complexity contract: the staged pipeline performs O(L)
+//! layer forwards where the rescan reference performs O(L²).
+//!
+//! This lives in its own integration-test binary (single `#[test]`) so
+//! the process-global counter in `bench_util` sees no concurrent
+//! increments from other tests.
+
+use grail::bench_util::{layer_forwards, layer_forwards_reset};
+use grail::compress::Selector;
+use grail::data::{SynthText, TextSplit};
+use grail::grail::{compress_model, compress_model_rescan, Method, PipelineConfig};
+use grail::nn::models::{LmBatch, LmConfig, TinyLm};
+use grail::rng::Pcg64;
+
+#[test]
+fn closed_loop_layer_forwards_are_linear_in_depth() {
+    let layers = 3usize;
+    let n_sites = 2 * layers; // one attention + one MLP site per block
+    let mut rng = Pcg64::seed(11);
+    let lm = TinyLm::init(LmConfig { n_layers: layers, ..Default::default() }, &mut rng);
+    let ts = SynthText::new(5).generate(TextSplit::Calib, 2000);
+    let calib = LmBatch::from_tokens(&ts, 16, 8);
+
+    // Single shard / single worker so the counter reflects segment
+    // executions of the whole batch, independent of sharding.
+    let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+    cfg.shards = 1;
+    cfg.workers = 1;
+
+    layer_forwards_reset();
+    let mut a = lm.clone();
+    let rep = compress_model(&mut a, &calib, &cfg);
+    let staged = layer_forwards();
+    assert_eq!(rep.sites.len(), n_sites);
+    assert!(rep.sites.iter().all(|s| s.units_after < s.units_before));
+
+    layer_forwards_reset();
+    let mut b = lm.clone();
+    compress_model_rescan(&mut b, &calib, &cfg);
+    let rescan = layer_forwards();
+
+    // Staged: one tap per site plus one segment step per site boundary
+    // = 2·S − 1. Rescan: site `si` re-runs the whole prefix (si segment
+    // steps + 1 tap) = S·(S+1)/2.
+    assert_eq!(
+        staged,
+        (2 * n_sites - 1) as u64,
+        "staged layer forwards must be linear in depth"
+    );
+    assert_eq!(
+        rescan,
+        (n_sites * (n_sites + 1) / 2) as u64,
+        "rescan reference must be quadratic in depth"
+    );
+    assert!(staged < rescan);
+
+    // And the two strategies still agree on the compressed model.
+    assert_eq!(a.forward(&calib), b.forward(&calib));
+}

@@ -1,0 +1,197 @@
+//! Segment-executor equivalence tests: the staged O(L) closed loop
+//! must be *bit-identical* to the from-scratch reference on every model
+//! family, in both closed- and open-loop modes — same selections, same
+//! reconstruction errors, same compressed weights.
+
+use grail::compress::{Compressible, Selector};
+use grail::data::{SynthText, SynthVision, TextSplit};
+use grail::grail::{compress_model, compress_model_rescan, Method, PipelineConfig, Report};
+use grail::nn::models::{LmBatch, LmConfig, MiniResNet, MlpNet, TinyLm, TinyViT, VitConfig};
+use grail::rng::Pcg64;
+use grail::testing::{check, Config};
+
+fn assert_reports_identical(a: &Report, b: &Report) {
+    assert_eq!(a.sites.len(), b.sites.len(), "site counts");
+    for (x, y) in a.sites.iter().zip(&b.sites) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.units_before, y.units_before);
+        assert_eq!(x.units_after, y.units_after);
+        assert_eq!(
+            x.recon_err.to_bits(),
+            y.recon_err.to_bits(),
+            "site {}: recon_err {} vs {}",
+            x.id,
+            x.recon_err,
+            y.recon_err
+        );
+    }
+}
+
+fn configs() -> Vec<PipelineConfig> {
+    let mut out = Vec::new();
+    for closed in [true, false] {
+        for method in [Method::Prune(Selector::Wanda), Method::Fold] {
+            let mut cfg = PipelineConfig::new(method, 0.5, true);
+            cfg.closed_loop = closed;
+            out.push(cfg);
+        }
+    }
+    out
+}
+
+#[test]
+fn staged_matches_rescan_mlp() {
+    let mut rng = Pcg64::seed(1);
+    let m0 = MlpNet::init(768, 32, 10, &mut rng);
+    let x = SynthVision::new(9).generate(48).x;
+    for cfg in configs() {
+        let mut a = m0.clone();
+        let ra = compress_model(&mut a, &x, &cfg);
+        let mut b = m0.clone();
+        let rb = compress_model_rescan(&mut b, &x, &cfg);
+        assert_reports_identical(&ra, &rb);
+        assert_eq!(a.forward(&x), b.forward(&x), "cfg {cfg:?}");
+    }
+}
+
+#[test]
+fn staged_matches_rescan_resnet() {
+    let mut rng = Pcg64::seed(2);
+    let m0 = MiniResNet::init(&mut rng);
+    let x = SynthVision::new(9).generate(12).x;
+    for cfg in configs() {
+        let mut a = m0.clone();
+        let ra = compress_model(&mut a, &x, &cfg);
+        let mut b = m0.clone();
+        let rb = compress_model_rescan(&mut b, &x, &cfg);
+        assert_reports_identical(&ra, &rb);
+        assert_eq!(a.forward(&x), b.forward(&x), "cfg {cfg:?}");
+    }
+}
+
+#[test]
+fn staged_matches_rescan_vit() {
+    let mut rng = Pcg64::seed(3);
+    let m0 = TinyViT::init(VitConfig::default(), &mut rng);
+    let x = SynthVision::new(9).generate(16).x;
+    for cfg in configs() {
+        let mut a = m0.clone();
+        let ra = compress_model(&mut a, &x, &cfg);
+        let mut b = m0.clone();
+        let rb = compress_model_rescan(&mut b, &x, &cfg);
+        assert_reports_identical(&ra, &rb);
+        assert_eq!(a.forward(&x), b.forward(&x), "cfg {cfg:?}");
+    }
+}
+
+#[test]
+fn staged_matches_rescan_lm_mha_and_gqa() {
+    let mut rng = Pcg64::seed(4);
+    let ts = SynthText::new(5).generate(TextSplit::Calib, 3000);
+    let calib = LmBatch::from_tokens(&ts, 16, 12);
+    for lm_cfg in [LmConfig::default(), LmConfig::gqa()] {
+        let m0 = TinyLm::init(lm_cfg, &mut rng);
+        for cfg in configs() {
+            let mut a = m0.clone();
+            let ra = compress_model(&mut a, &calib, &cfg);
+            let mut b = m0.clone();
+            let rb = compress_model_rescan(&mut b, &calib, &cfg);
+            assert_reports_identical(&ra, &rb);
+            assert_eq!(a.forward(&calib), b.forward(&calib), "cfg {cfg:?}");
+        }
+    }
+}
+
+/// After a full compression pass, staged prefix execution on the
+/// *compressed* model must still bit-match the one-shot tap oracle for
+/// every family — the invariant the next closed-loop run relies on.
+#[test]
+fn staged_prefix_matches_taps_after_compression_all_families() {
+    let mut rng = Pcg64::seed(6);
+    let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+    let x = SynthVision::new(9).generate(10).x;
+
+    let mut mlp = MlpNet::init(768, 32, 10, &mut rng);
+    compress_model(&mut mlp, &x, &cfg);
+    let (_, taps) = mlp.forward_with_taps(&x);
+    for (site, tap) in taps.iter().enumerate() {
+        assert_eq!(&mlp.site_activations(&x, site), tap, "mlp site {site}");
+    }
+
+    let mut resnet = MiniResNet::init(&mut rng);
+    compress_model(&mut resnet, &x, &cfg);
+    let (_, taps) = resnet.forward_with_taps(&x);
+    for (site, tap) in taps.iter().enumerate() {
+        assert_eq!(&resnet.site_activations(&x, site), tap, "resnet site {site}");
+    }
+
+    let mut vit = TinyViT::init(VitConfig::default(), &mut rng);
+    compress_model(&mut vit, &x, &cfg);
+    let (_, taps) = vit.forward_with_taps(&x);
+    for (site, tap) in taps.iter().enumerate() {
+        assert_eq!(&vit.site_activations(&x, site), tap, "vit site {site}");
+    }
+
+    let ts = SynthText::new(5).generate(TextSplit::Calib, 2000);
+    let calib = LmBatch::from_tokens(&ts, 16, 8);
+    let mut lm = TinyLm::init(LmConfig::default(), &mut rng);
+    compress_model(&mut lm, &calib, &cfg);
+    let (_, taps) = lm.forward_with_taps(&calib);
+    for (site, tap) in taps.iter().enumerate() {
+        assert_eq!(&lm.site_activations(&calib, site), tap, "lm site {site}");
+    }
+}
+
+/// Property: for random widths, ratios, and seeds, incremental staged
+/// execution (tap, advance, tap, …) bit-matches the one-shot forward
+/// taps on the compressed model.
+#[test]
+fn prop_incremental_states_match_one_shot_taps() {
+    check(Config { cases: 12, seed: 0xA11 }, |rng, size| {
+        let hidden = 8 + rng.below(size.scale(40, 8));
+        let mut init_rng = Pcg64::seed(rng.next_u64());
+        let model0 = MlpNet::init(48, hidden, 5, &mut init_rng);
+        let mut x = grail::tensor::Tensor::zeros(&[16, 48]);
+        init_rng.fill_normal(x.data_mut(), 1.0);
+        let ratio = 0.1 + 0.8 * rng.next_f64();
+        let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), ratio, true);
+        cfg.seed = rng.next_u64();
+        let mut m = model0;
+        compress_model(&mut m, &x, &cfg);
+
+        let (_, taps) = m.forward_with_taps(&x);
+        let mut st = m.calib_begin(&x);
+        for site in 0..taps.len() {
+            let tap = m.site_tap(&mut st, site);
+            if tap != taps[site] {
+                return Err(format!("hidden={hidden} ratio={ratio:.2}: site {site} mismatch"));
+            }
+            if site + 1 < taps.len() {
+                m.forward_segment(&mut st, site, site + 1);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Sharded, multi-threaded calibration keeps the structural outcome
+/// (selected widths) and produces working models at every shard count.
+#[test]
+fn shard_counts_agree_on_selections() {
+    let mut rng = Pcg64::seed(7);
+    let ts = SynthText::new(5).generate(TextSplit::Calib, 3000);
+    let calib = LmBatch::from_tokens(&ts, 16, 12);
+    let m0 = TinyLm::init(LmConfig::default(), &mut rng);
+    let mut widths: Vec<Vec<usize>> = Vec::new();
+    for (shards, workers) in [(1usize, 1usize), (4, 2), (12, 4)] {
+        let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+        cfg.shards = shards;
+        cfg.workers = workers;
+        let mut m = m0.clone();
+        let rep = compress_model(&mut m, &calib, &cfg);
+        assert!(m.forward(&calib).all_finite(), "shards={shards}");
+        widths.push(rep.sites.iter().map(|s| s.units_after).collect());
+    }
+    assert_eq!(widths[0], widths[1]);
+    assert_eq!(widths[0], widths[2]);
+}

@@ -1,0 +1,145 @@
+//! Offline stub of the `xla` crate's PJRT surface.
+//!
+//! Mirrors the exact API `grail::runtime` uses so the `pjrt` feature
+//! compiles without a system XLA/PJRT install. Every entry point fails
+//! at runtime with a clear "PJRT unavailable" error, which the runtime
+//! and its tests already treat as a skip condition. To execute the AOT
+//! HLO artifacts for real, point the `xla` path dependency in the
+//! workspace `Cargo.toml` at the actual bindings.
+
+use std::fmt;
+
+/// Stub error: always "PJRT unavailable".
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "PJRT unavailable: {what} (offline xla stub; link the real `xla` crate to run HLO artifacts)"
+    )))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always errors: no PJRT runtime is linked in.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform string.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation (unreachable: no client can be built).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Always errors: HLO text parsing needs the real bindings.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Array shape of a literal (stub).
+pub struct ArrayShape;
+
+impl ArrayShape {
+    /// Dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Unpack a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Shape accessor.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute on literal inputs.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[1]).is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("PJRT unavailable"));
+    }
+}
