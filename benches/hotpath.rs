@@ -9,7 +9,7 @@
 use grail::bench_util::{bench, layer_forwards, layer_forwards_reset, report_gflops};
 use grail::compress::{Reducer, Selector};
 use grail::grail::{
-    compress_model, compress_model_rescan, reconstruction, ActStats, Method, PipelineConfig,
+    compress_model, compress_model_rescan, reconstruction, ActStats, Method, CompressionSpec,
 };
 use grail::nn::models::{LmBatch, LmConfig, MlpNet, TinyLm};
 use grail::rng::Pcg64;
@@ -81,7 +81,7 @@ fn main() {
         let calib = randn(&mut rng, &[128, 768]);
         bench("pipeline mlp wanda+grail r=0.5", 500, || {
             let mut m = model.clone();
-            let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+            let cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
             compress_model(&mut m, &calib, &cfg)
         });
     }
@@ -106,7 +106,7 @@ fn main() {
         let toks: Vec<u16> = (0..16 * 33).map(|i| (i % 64) as u16).collect();
         let ts = grail::data::TokenSet { tokens: toks, vocab: 64 };
         let batch = LmBatch::from_tokens(&ts, 32, 16);
-        let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+        let cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
 
         let staged = bench(&format!("pipeline lm staged sites={n_sites}"), 1200, || {
             let mut m = lm.clone();

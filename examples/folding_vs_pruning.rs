@@ -12,7 +12,7 @@ use grail::compress::Selector;
 use grail::coordinator::{Artifacts, Zoo};
 use grail::data::io::read_images;
 use grail::eval::vision_accuracy;
-use grail::grail::{compress_model, Method, PipelineConfig};
+use grail::grail::{compress_model, Method, CompressionSpec};
 
 fn main() -> Result<()> {
     let art = Artifacts::default_root();
@@ -34,7 +34,7 @@ fn main() -> Result<()> {
                 (Method::Fold, false),
                 (Method::Fold, true),
             ] {
-                let cfg = PipelineConfig::new(method, ratio, grail);
+                let cfg = CompressionSpec::uniform(method, ratio, grail);
                 let acc = match family {
                     "resnet" => {
                         let mut m = zoo.resnet("resnet_seed0")?;

@@ -12,7 +12,7 @@ use grail::compress::baselines::Baseline;
 use grail::coordinator::{Artifacts, Zoo};
 use grail::data::io::read_tokens;
 use grail::eval::lm_perplexity;
-use grail::grail::{compress_model, Method, PipelineConfig};
+use grail::grail::{compress_model, Method, CompressionSpec};
 use grail::nn::models::LmBatch;
 
 fn main() -> Result<()> {
@@ -36,7 +36,7 @@ fn main() -> Result<()> {
         for ratio in [0.25, 0.5] {
             for grail in [false, true] {
                 let mut m = model.clone();
-                let cfg = PipelineConfig::new(Method::Baseline(Baseline::Wanda), ratio, grail);
+                let cfg = CompressionSpec::uniform(Method::Baseline(Baseline::Wanda), ratio, grail);
                 let rep = compress_model(&mut m, &calib, &cfg);
                 let ppl = lm_perplexity(&m, &eval, 32, 96, 16);
                 // Verify every attention site kept equal heads per group.

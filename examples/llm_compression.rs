@@ -18,7 +18,7 @@ use grail::coordinator::{Artifacts, Zoo};
 use grail::data::io::read_tokens;
 use grail::data::TextSplit;
 use grail::eval::lm_perplexity;
-use grail::grail::{compress_model, Method, PipelineConfig};
+use grail::grail::{compress_model, Method, CompressionSpec};
 use grail::nn::models::LmBatch;
 use grail::runtime::Runtime;
 use std::time::Instant;
@@ -73,7 +73,7 @@ fn main() -> Result<()> {
     let calib = LmBatch::from_tokens(&calib_toks, SEQ, 128);
     for (label, grail) in [("wanda 40%", false), ("wanda 40% + GRAIL", true)] {
         let mut m = model.clone();
-        let cfg = PipelineConfig::new(Method::Baseline(Baseline::Wanda), 0.4, grail);
+        let cfg = CompressionSpec::uniform(Method::Baseline(Baseline::Wanda), 0.4, grail);
         let t0 = Instant::now();
         let rep = compress_model(&mut m, &calib, &cfg);
         let secs = t0.elapsed().as_secs_f64();

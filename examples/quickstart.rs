@@ -12,7 +12,7 @@ use grail::compress::Selector;
 use grail::coordinator::{Artifacts, Zoo};
 use grail::data::io::read_images;
 use grail::eval::vision_accuracy;
-use grail::grail::{compress_model, Method, PipelineConfig};
+use grail::grail::{compress_model, Method, CompressionSpec};
 
 fn main() -> Result<()> {
     let art = Artifacts::default_root();
@@ -29,7 +29,7 @@ fn main() -> Result<()> {
 
     // Prune 50% of every hidden layer with magnitude-L2 — no recovery.
     let mut pruned = model.clone();
-    let cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.5, false);
+    let cfg = CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL2), 0.5, false);
     compress_model(&mut pruned, &calib.x, &cfg);
     let pruned_acc = vision_accuracy(|x| pruned.forward(x), &test, 128);
     println!("pruned 50% (no recovery):    {pruned_acc:.4}");
@@ -37,7 +37,7 @@ fn main() -> Result<()> {
     // Same selection + GRAIL: Gram statistics from 128 unlabeled
     // images, ridge reconstruction, merged into the consumer weights.
     let mut compensated = model.clone();
-    let cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.5, true);
+    let cfg = CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL2), 0.5, true);
     let report = compress_model(&mut compensated, &calib.x, &cfg);
     let grail_acc = vision_accuracy(|x| compensated.forward(x), &test, 128);
     println!("pruned 50% + GRAIL:          {grail_acc:.4}");
@@ -52,6 +52,7 @@ fn main() -> Result<()> {
             s.id, s.units_before, s.units_after, s.recon_err
         );
     }
+    println!("  {}", report.summary());
     println!(
         "  calibration {:.3}s, compensation {:.3}s (no labels, no gradients)",
         report.calib_seconds, report.comp_seconds

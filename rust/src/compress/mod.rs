@@ -156,6 +156,29 @@ pub enum SiteKind {
     AttnHeads,
 }
 
+impl SiteKind {
+    /// Stable display/config name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SiteKind::Dense => "dense",
+            SiteKind::Conv => "conv",
+            SiteKind::MlpPair => "mlp-pair",
+            SiteKind::AttnHeads => "attn-heads",
+        }
+    }
+
+    /// Parse a config name (spec rule `match_kind`).
+    pub fn from_name(s: &str) -> Option<SiteKind> {
+        Some(match s {
+            "dense" => SiteKind::Dense,
+            "conv" => SiteKind::Conv,
+            "mlp-pair" | "mlp" => SiteKind::MlpPair,
+            "attn-heads" | "attn" => SiteKind::AttnHeads,
+            _ => return None,
+        })
+    }
+}
+
 /// Static description of a compressible site.
 #[derive(Clone, Debug)]
 pub struct SiteInfo {
@@ -211,6 +234,11 @@ pub trait Compressible {
 
     /// All compressible sites, in forward order.
     fn sites(&self) -> Vec<SiteInfo>;
+
+    /// Total scalar parameter count (weights, biases, norms) of the
+    /// model's *current* state — `Report` uses the before/after pair
+    /// for the overall compression-ratio summary.
+    fn param_count(&self) -> usize;
 
     /// Run the pre-site prefix (stem / embedding) and return a state
     /// positioned at site 0's boundary.
@@ -324,6 +352,17 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn site_kind_names_roundtrip() {
+        for k in [SiteKind::Dense, SiteKind::Conv, SiteKind::MlpPair, SiteKind::AttnHeads] {
+            assert_eq!(SiteKind::from_name(k.name()), Some(k));
+        }
+        // Short aliases for the transformer kinds.
+        assert_eq!(SiteKind::from_name("mlp"), Some(SiteKind::MlpPair));
+        assert_eq!(SiteKind::from_name("attn"), Some(SiteKind::AttnHeads));
+        assert!(SiteKind::from_name("nope").is_none());
     }
 
     #[test]

@@ -179,13 +179,26 @@ impl Config {
 }
 
 fn strip_comment(line: &str) -> &str {
-    // `#` starts a comment unless inside a quoted string.
+    // `#` starts a comment unless inside a quoted string. `\"` inside
+    // a string is an escaped quote, not a closing delimiter (and `\\`
+    // does not escape the quote that follows it).
     let mut in_str = false;
+    let mut escaped = false;
     for (i, c) in line.char_indices() {
-        match c {
-            '"' => in_str = !in_str,
-            '#' if !in_str => return &line[..i],
-            _ => {}
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else {
+            match c {
+                '"' => in_str = true,
+                '#' => return &line[..i],
+                _ => {}
+            }
         }
     }
     line
@@ -196,11 +209,38 @@ fn parse_value(s: &str) -> Result<Value> {
     if s.is_empty() {
         bail!("empty value");
     }
-    if s.starts_with('"') {
-        if s.len() < 2 || !s.ends_with('"') {
-            bail!("unterminated string: {s}");
+    if let Some(inner) = s.strip_prefix('"') {
+        // Unescape `\"`, `\\`, `\n`, `\t`; the closing quote must end
+        // the value (no trailing garbage).
+        let mut out = String::new();
+        let mut escaped = false;
+        let mut close = None;
+        for (i, c) in inner.char_indices() {
+            if escaped {
+                match c {
+                    '"' => out.push('"'),
+                    '\\' => out.push('\\'),
+                    'n' => out.push('\n'),
+                    't' => out.push('\t'),
+                    other => bail!("unknown escape `\\{other}` in string: {s}"),
+                }
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                close = Some(i);
+                break;
+            } else {
+                out.push(c);
+            }
         }
-        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+        let Some(close) = close else {
+            bail!("unterminated string: {s}");
+        };
+        if !inner[close + 1..].trim().is_empty() {
+            bail!("trailing characters after string: {s}");
+        }
+        return Ok(Value::Str(out));
     }
     if s.starts_with('[') {
         if !s.ends_with(']') {
@@ -230,27 +270,40 @@ fn parse_value(s: &str) -> Result<Value> {
     bail!("cannot parse value: `{s}`")
 }
 
-/// Split on commas that are not inside nested brackets or strings.
+/// Split on commas that are not inside nested brackets or strings
+/// (respecting `\"` escapes inside strings).
 fn split_top_level(s: &str) -> Vec<String> {
     let mut out = Vec::new();
     let mut depth = 0usize;
     let mut in_str = false;
+    let mut escaped = false;
     let mut cur = String::new();
     for c in s.chars() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            cur.push(c);
+            continue;
+        }
         match c {
             '"' => {
-                in_str = !in_str;
+                in_str = true;
                 cur.push(c);
             }
-            '[' if !in_str => {
+            '[' => {
                 depth += 1;
                 cur.push(c);
             }
-            ']' if !in_str => {
+            ']' => {
                 depth = depth.saturating_sub(1);
                 cur.push(c);
             }
-            ',' if !in_str && depth == 0 => {
+            ',' if depth == 0 => {
                 out.push(std::mem::take(&mut cur));
             }
             _ => cur.push(c),
@@ -324,6 +377,37 @@ heads = 8
         assert!(Config::parse("x = ").is_err());
         assert!(Config::parse("x = [1, 2").is_err());
         assert!(Config::parse("x = \"abc").is_err());
+    }
+
+    #[test]
+    fn escaped_quotes_in_strings() {
+        let c = Config::parse(r#"s = "a \"quoted\" part""#).unwrap();
+        assert_eq!(c.str("s").unwrap(), r#"a "quoted" part"#);
+        // Escaped backslash does not re-open the escape.
+        let c = Config::parse(r#"s = "tail\\""#).unwrap();
+        assert_eq!(c.str("s").unwrap(), r"tail\");
+        // \n and \t unescape.
+        let c = Config::parse(r#"s = "a\nb\tc""#).unwrap();
+        assert_eq!(c.str("s").unwrap(), "a\nb\tc");
+        // A `#` after an escaped quote is still inside the string …
+        let c = Config::parse(r#"s = "x \" # y"  # real comment"#).unwrap();
+        assert_eq!(c.str("s").unwrap(), r#"x " # y"#);
+        // … and arrays carry escapes through element splitting.
+        let c = Config::parse(r#"xs = ["a\"b", "c,d"]"#).unwrap();
+        assert_eq!(c.str_array("xs").unwrap(), vec![r#"a"b"#, "c,d"]);
+    }
+
+    #[test]
+    fn malformed_escapes_error() {
+        // Regression: `"abc\"` used to parse as the string `abc\` —
+        // the escaped quote must not terminate the value.
+        assert!(Config::parse(r#"x = "abc\""#).is_err());
+        // Unknown escape.
+        assert!(Config::parse(r#"x = "a\qb""#).is_err());
+        // Trailing garbage after the closing quote.
+        assert!(Config::parse(r#"x = "a" b"#).is_err());
+        // Dangling backslash at end of value.
+        assert!(Config::parse(r#"x = "a\"#).is_err());
     }
 
     #[test]

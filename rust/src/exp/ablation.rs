@@ -12,7 +12,7 @@ use super::ExpOptions;
 use crate::compress::Selector;
 use crate::data::TextSplit;
 use crate::eval::{lm_perplexity, vision_accuracy};
-use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::grail::{compress_model, Method, CompressionSpec};
 use crate::nn::models::LmBatch;
 use anyhow::Result;
 
@@ -41,13 +41,13 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     let mut t1 = Table::new(&["alpha", "resnet@0.6 acc", "lm@0.4 ppl"]);
     for &alpha in alphas {
         let mut r = resnet.clone();
-        let mut cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.6, true);
-        cfg.alpha = alpha;
+        let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL2), 0.6, true);
+        cfg.defaults.alpha = alpha;
         compress_model(&mut r, &calib.x, &cfg);
         let acc = vision_accuracy(|x| r.forward(x), &test, 128);
         let mut m = lm.clone();
-        let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.4, true);
-        cfg.alpha = alpha;
+        let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.4, true);
+        cfg.defaults.alpha = alpha;
         compress_model(&mut m, &lm_calib, &cfg);
         let ppl = lm_perplexity(&m, &eval_toks, 32, eval_windows, 16);
         t1.row(vec![format!("{alpha:.0e}"), format!("{acc:.4}"), f(ppl)]);
@@ -62,14 +62,14 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         let mut cells = vec![format!("{ratio:.1}")];
         for closed in [true, false] {
             let mut r = resnet.clone();
-            let mut cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), ratio, true);
+            let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL2), ratio, true);
             cfg.closed_loop = closed;
             compress_model(&mut r, &calib.x, &cfg);
             cells.push(format!("{:.4}", vision_accuracy(|x| r.forward(x), &test, 128)));
         }
         for closed in [true, false] {
             let mut m = lm.clone();
-            let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), ratio, true);
+            let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), ratio, true);
             cfg.closed_loop = closed;
             compress_model(&mut m, &lm_calib, &cfg);
             cells.push(f(lm_perplexity(&m, &eval_toks, 32, eval_windows, 16)));

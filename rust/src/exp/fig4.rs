@@ -9,7 +9,7 @@ use crate::compress::baselines::Baseline;
 use crate::compress::Selector;
 use crate::data::TextSplit;
 use crate::eval::{lm_perplexity, vision_accuracy};
-use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::grail::{compress_model, Method, CompressionSpec};
 use crate::nn::models::LmBatch;
 use anyhow::Result;
 
@@ -35,7 +35,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     for method in methods {
         // Uncompensated reference for the gain column.
         let mut plain = base.clone();
-        let mut cfg0 = PipelineConfig::new(method, 0.75, false);
+        let mut cfg0 = CompressionSpec::uniform(method, 0.75, false);
         cfg0.seed = opts.seed;
         // Even "uncompensated" pipelines need calibration for
         // data-aware selectors; give them the full set.
@@ -43,7 +43,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         let plain_acc = vision_accuracy(|x| plain.forward(x), &test, 128);
         for &n in sizes {
             let mut m = base.clone();
-            let mut cfg = PipelineConfig::new(method, 0.75, true);
+            let mut cfg = CompressionSpec::uniform(method, 0.75, true);
             cfg.seed = opts.seed;
             let calib = calib_full.slice(0, n);
             compress_model(&mut m, &calib.x, &cfg);
@@ -75,7 +75,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     ] {
         for &w in window_counts {
             let mut m = lm.clone();
-            let mut cfg = PipelineConfig::new(method, 0.4, true);
+            let mut cfg = CompressionSpec::uniform(method, 0.4, true);
             cfg.seed = opts.seed;
             let calib = LmBatch::from_tokens(&calib_toks, 32, w);
             compress_model(&mut m, &calib, &cfg);

@@ -18,6 +18,7 @@
 
 pub mod ablation;
 pub mod fig2;
+pub mod runner;
 pub mod fig35;
 pub mod fig4;
 pub mod fig6;
@@ -119,9 +120,11 @@ pub const EXPERIMENTS: &[(&str, fn(&ExpOptions) -> Result<()>)] = &[
     ("ablation", ablation::run),
 ];
 
-/// `grail compress` — a one-off compression + evaluation run.
+/// `grail compress` — a one-off layer-wise-uniform compression +
+/// evaluation run. Heterogeneous per-site policies go through
+/// `grail run --spec` ([`runner`]).
 pub fn compress_cli(args: &Args) -> Result<()> {
-    use crate::grail::{compress_model, Method, PipelineConfig};
+    use crate::grail::{compress_model, CompressionSpec, Method};
 
     let opts = ExpOptions::from_args(args)?;
     let zoo = opts.zoo()?;
@@ -131,8 +134,8 @@ pub fn compress_cli(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown method `{method_name}`"))?;
     let ratio = args.opt_f64("ratio", 0.5)?;
     let grail = args.has("grail");
-    let mut cfg = PipelineConfig::new(method, ratio, grail);
-    cfg.alpha = args.opt_f64("alpha", crate::grail::DEFAULT_ALPHA as f64)? as f32;
+    let mut cfg = CompressionSpec::uniform(method, ratio, grail);
+    cfg.defaults.alpha = args.opt_f64("alpha", crate::grail::DEFAULT_ALPHA as f64)? as f32;
     cfg.seed = opts.seed;
 
     match family {
@@ -169,12 +172,7 @@ pub fn compress_cli(args: &Args) -> Result<()> {
             println!(
                 "{family} {method_name} ratio={ratio} grail={grail}: acc {base:.4} -> {after:.4}"
             );
-            for s in &report.sites {
-                println!(
-                    "  {}: {} -> {} units, recon err {:.4}",
-                    s.id, s.units_before, s.units_after, s.recon_err
-                );
-            }
+            runner::print_report(&report);
         }
         "lm" => {
             let name = args.opt_or("ckpt", "tinylm_mha");
@@ -187,12 +185,7 @@ pub fn compress_cli(args: &Args) -> Result<()> {
             let rep = compress_model(&mut m, &calib, &cfg);
             let after = crate::eval::lm_perplexity(&m, &eval_toks, 32, 64, 16);
             println!("lm {method_name} ratio={ratio} grail={grail}: ppl {base:.2} -> {after:.2}");
-            for s in &rep.sites {
-                println!(
-                    "  {}: {} -> {} units, recon err {:.4}",
-                    s.id, s.units_before, s.units_after, s.recon_err
-                );
-            }
+            runner::print_report(&rep);
         }
         other => bail!("unknown family `{other}`"),
     }

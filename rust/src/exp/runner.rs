@@ -1,0 +1,387 @@
+//! Spec-driven compression jobs: `grail run`, `grail plan`, and the
+//! `grail batch` fan-out over the model zoo.
+//!
+//! A *spec file* is a TOML-subset document with a `[model]` section
+//! naming the target (family + optional checkpoint) and the
+//! [`CompressionSpec`] sections (`[pipeline]`, `[budget]`, `[rule.N]`)
+//! — see `examples/lm_depth_ramp.spec.toml` and EXPERIMENTS.md for the
+//! format. `grail plan` resolves and prints the per-site plan without
+//! touching any weight; `grail run` executes it and evaluates the
+//! model before/after; `grail batch` expands several spec files over
+//! the checkpoint zoo (a spec without `model.ckpt` fans over every
+//! checkpoint of its family) and runs the jobs on
+//! [`coordinator::scheduler`](crate::coordinator::scheduler) workers.
+
+use super::report::Table;
+use super::vision::{Family as VisionFamily, VisionModel};
+use super::ExpOptions;
+use crate::cli::Args;
+use crate::config::Config;
+use crate::coordinator::scheduler::{default_threads, run_grid};
+use crate::eval::lm_perplexity;
+use crate::grail::{
+    compress_model, plan_for_model, CompressionPlan, CompressionSpec, Report,
+};
+use crate::nn::models::LmBatch;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// LM calibration/evaluation geometry (matches `grail compress
+/// --family lm`, so a uniform spec reproduces its results exactly).
+const LM_SEQ: usize = 32;
+const LM_CALIB_WINDOWS: usize = 64;
+const LM_EVAL_WINDOWS: usize = 64;
+
+/// Model family a spec job targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Mlp,
+    Resnet,
+    Vit,
+    Lm,
+}
+
+impl Family {
+    /// Parse a `model.family` / `--family` name.
+    pub fn from_name(s: &str) -> Option<Family> {
+        Some(match s {
+            "mlp" => Family::Mlp,
+            "resnet" => Family::Resnet,
+            "vit" => Family::Vit,
+            "lm" | "tinylm" => Family::Lm,
+            _ => return None,
+        })
+    }
+
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Mlp => "mlp",
+            Family::Resnet => "resnet",
+            Family::Vit => "vit",
+            Family::Lm => "lm",
+        }
+    }
+
+    /// Checkpoint-name prefix in the zoo.
+    pub fn zoo_prefix(&self) -> &'static str {
+        match self {
+            Family::Mlp => "mlp",
+            Family::Resnet => "resnet",
+            Family::Vit => "vit",
+            Family::Lm => "tinylm",
+        }
+    }
+
+    /// Default checkpoint when a spec names none.
+    pub fn default_ckpt(&self) -> &'static str {
+        match self {
+            Family::Mlp => "mlp_seed0",
+            Family::Resnet => "resnet_seed0",
+            Family::Vit => "vit_seed0",
+            Family::Lm => "tinylm_mha",
+        }
+    }
+
+    fn vision(&self) -> Option<VisionFamily> {
+        match self {
+            Family::Mlp => Some(VisionFamily::Mlp),
+            Family::Resnet => Some(VisionFamily::Resnet),
+            Family::Vit => Some(VisionFamily::Vit),
+            Family::Lm => None,
+        }
+    }
+}
+
+/// A loaded spec file: target model + compression spec.
+#[derive(Clone, Debug)]
+pub struct SpecJob {
+    pub path: String,
+    pub family: Family,
+    /// `None` = fan over every zoo checkpoint of the family (batch) or
+    /// use the family default (run/plan).
+    pub ckpt: Option<String>,
+    pub spec: CompressionSpec,
+}
+
+impl SpecJob {
+    /// Load and validate a spec file.
+    pub fn load(path: &str) -> Result<SpecJob> {
+        let cfg = Config::load(path)?;
+        // Typos in `[model]` must not silently fall back to defaults
+        // (`CompressionSpec::from_config` rejects unknown keys in its
+        // sections the same way).
+        for key in cfg.keys() {
+            if let Some(field) = key.strip_prefix("model.") {
+                if !matches!(field, "family" | "ckpt") {
+                    bail!("{path}: unknown spec key `{key}`");
+                }
+            }
+        }
+        let fam_name = cfg.str_or("model.family", "lm");
+        let family = Family::from_name(fam_name)
+            .ok_or_else(|| anyhow!("{path}: model.family: unknown family `{fam_name}`"))?;
+        let ckpt = match cfg.get("model.ckpt") {
+            Some(_) => Some(cfg.str("model.ckpt")?.to_string()),
+            None => None,
+        };
+        let spec = CompressionSpec::from_config(&cfg).with_context(|| format!("loading {path}"))?;
+        Ok(SpecJob { path: path.to_string(), family, ckpt, spec })
+    }
+
+    /// Apply `--family` / `--ckpt` CLI overrides.
+    pub fn apply_overrides(&mut self, args: &Args) -> Result<()> {
+        if let Some(f) = args.opt("family") {
+            self.family = Family::from_name(f)
+                .ok_or_else(|| anyhow!("--family: unknown family `{f}`"))?;
+        }
+        if let Some(c) = args.opt("ckpt") {
+            self.ckpt = Some(c.to_string());
+        }
+        Ok(())
+    }
+
+    /// Concrete checkpoint for single-job commands.
+    pub fn ckpt_or_default(&self) -> String {
+        self.ckpt.clone().unwrap_or_else(|| self.family.default_ckpt().to_string())
+    }
+}
+
+/// Outcome of one executed spec job.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub spec_path: String,
+    pub family: Family,
+    pub ckpt: String,
+    /// `"acc"` (vision) or `"ppl"` (lm).
+    pub metric: &'static str,
+    pub before: f64,
+    pub after: f64,
+    pub report: Report,
+}
+
+/// Resolve the plan for a job without mutating anything.
+pub fn resolve_job_plan(
+    opts: &ExpOptions,
+    family: Family,
+    ckpt: &str,
+    spec: &CompressionSpec,
+) -> Result<CompressionPlan> {
+    let zoo = opts.zoo()?;
+    if let Some(vf) = family.vision() {
+        let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
+            .slice(0, 128);
+        let m = VisionModel::load(&zoo, vf, ckpt)?;
+        m.plan(&calib.x, spec)
+    } else {
+        let m = zoo.lm(ckpt)?;
+        let calib_toks =
+            crate::data::io::read_tokens(&opts.artifacts.data("text_calib.tokens"))?;
+        let calib = LmBatch::from_tokens(&calib_toks, LM_SEQ, LM_CALIB_WINDOWS);
+        plan_for_model(&m, &calib, spec)
+    }
+}
+
+/// Compress `ckpt` under `spec` and evaluate it before/after.
+pub fn execute_job(
+    opts: &ExpOptions,
+    family: Family,
+    ckpt: &str,
+    spec: &CompressionSpec,
+    spec_path: &str,
+) -> Result<JobOutcome> {
+    let zoo = opts.zoo()?;
+    let (metric, before, after, report) = if let Some(vf) = family.vision() {
+        let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
+            .slice(0, 128);
+        let test = crate::data::io::read_images(&opts.artifacts.data("vision_test.imgs"))?;
+        let mut m = VisionModel::load(&zoo, vf, ckpt)?;
+        let before = m.accuracy(&test);
+        let report = m.compress(&calib.x, spec);
+        ("acc", before, m.accuracy(&test), report)
+    } else {
+        let mut m = zoo.lm(ckpt)?;
+        let calib_toks =
+            crate::data::io::read_tokens(&opts.artifacts.data("text_calib.tokens"))?;
+        let calib = LmBatch::from_tokens(&calib_toks, LM_SEQ, LM_CALIB_WINDOWS);
+        let eval_toks =
+            crate::data::io::read_tokens(&opts.artifacts.data("text_wt2s.tokens"))?;
+        let before = lm_perplexity(&m, &eval_toks, LM_SEQ, LM_EVAL_WINDOWS, 16);
+        let report = compress_model(&mut m, &calib, spec);
+        ("ppl", before, lm_perplexity(&m, &eval_toks, LM_SEQ, LM_EVAL_WINDOWS, 16), report)
+    };
+    Ok(JobOutcome {
+        spec_path: spec_path.to_string(),
+        family,
+        ckpt: ckpt.to_string(),
+        metric,
+        before,
+        after,
+        report,
+    })
+}
+
+/// Per-site lines + parameter summary for CLI output.
+pub fn print_report(report: &Report) {
+    for s in &report.sites {
+        println!(
+            "  {}: {} -> {} units ({} ratio={:.2}{}), recon err {:.4}",
+            s.id,
+            s.units_before,
+            s.units_after,
+            s.method,
+            s.ratio,
+            if s.grail { " +grail" } else { "" },
+            s.recon_err
+        );
+    }
+    println!("  {}", report.summary());
+}
+
+/// `grail run --spec spec.toml [--family f] [--ckpt c]`.
+pub fn run_cli(args: &Args) -> Result<()> {
+    let spec_path =
+        args.opt("spec").ok_or_else(|| anyhow!("usage: grail run --spec <spec.toml>"))?;
+    let opts = ExpOptions::from_args(args)?;
+    let mut job = SpecJob::load(spec_path)?;
+    job.apply_overrides(args)?;
+    let ckpt = job.ckpt_or_default();
+    let out = execute_job(&opts, job.family, &ckpt, &job.spec, &job.path)?;
+    println!(
+        "{} {} [{}]: {} {:.4} -> {:.4}",
+        out.family.name(),
+        out.ckpt,
+        spec_path,
+        out.metric,
+        out.before,
+        out.after
+    );
+    print_report(&out.report);
+    Ok(())
+}
+
+/// `grail plan --spec spec.toml [--family f] [--ckpt c] [--toml]` —
+/// resolve and print the plan; mutates nothing.
+pub fn plan_cli(args: &Args) -> Result<()> {
+    let spec_path =
+        args.opt("spec").ok_or_else(|| anyhow!("usage: grail plan --spec <spec.toml>"))?;
+    let opts = ExpOptions::from_args(args)?;
+    let mut job = SpecJob::load(spec_path)?;
+    job.apply_overrides(args)?;
+    let ckpt = job.ckpt_or_default();
+    let plan = resolve_job_plan(&opts, job.family, &ckpt, &job.spec)?;
+    if args.has("toml") {
+        print!("{}", plan.to_toml());
+    } else {
+        println!("plan for {} {} [{}]:", job.family.name(), ckpt, spec_path);
+        print!("{}", plan.render());
+    }
+    Ok(())
+}
+
+/// `grail batch <spec.toml>... [--jobs N] [--out results]` — expand
+/// every spec over the zoo and run the jobs in parallel.
+pub fn batch_cli(args: &Args) -> Result<()> {
+    let paths: Vec<String> = args.positional.get(1..).unwrap_or(&[]).to_vec();
+    if paths.is_empty() {
+        bail!("usage: grail batch <spec.toml>... [--jobs N] [--out results]");
+    }
+    let opts = ExpOptions::from_args(args)?;
+    let zoo = opts.zoo()?;
+    let mut jobs: Vec<(String, Family, String, CompressionSpec)> = Vec::new();
+    for p in &paths {
+        let sj = SpecJob::load(p)?;
+        let ckpts = match &sj.ckpt {
+            Some(c) => vec![c.clone()],
+            None => zoo.list(sj.family.zoo_prefix()),
+        };
+        if ckpts.is_empty() {
+            bail!("{p}: no `{}` checkpoints in the zoo (run `make artifacts`)", sj.family.name());
+        }
+        for c in ckpts {
+            jobs.push((p.clone(), sj.family, c, sj.spec.clone()));
+        }
+    }
+    // Each job's pipeline parallelizes internally too; cap the outer
+    // fan-out by --jobs to avoid oversubscription (specs can also pin
+    // `pipeline.workers`).
+    let threads = args.opt_usize("jobs", default_threads().min(jobs.len().max(1)))?;
+    println!("batch: {} jobs from {} specs on {} workers", jobs.len(), paths.len(), threads);
+    let opts_ref = &opts;
+    let results: Vec<std::result::Result<JobOutcome, String>> =
+        run_grid(jobs, threads, |_, (path, fam, ckpt, spec)| {
+            execute_job(opts_ref, *fam, ckpt, spec, path).map_err(|e| format!("{e:#}"))
+        });
+
+    let mut table = Table::new(&[
+        "spec", "family", "ckpt", "metric", "before", "after", "params_before", "params_after",
+        "removed",
+    ]);
+    let mut failures = 0usize;
+    for r in &results {
+        match r {
+            Ok(o) => table.row(vec![
+                o.spec_path.clone(),
+                o.family.name().to_string(),
+                o.ckpt.clone(),
+                o.metric.to_string(),
+                format!("{:.4}", o.before),
+                format!("{:.4}", o.after),
+                o.report.params_before.to_string(),
+                o.report.params_after.to_string(),
+                format!("{:.1}%", 100.0 * o.report.compression_ratio()),
+            ]),
+            Err(e) => {
+                failures += 1;
+                eprintln!("job failed: {e}");
+            }
+        }
+    }
+    println!("{}", table.render());
+    table.write_csv(&opts.out_path("batch.csv")?)?;
+    if failures > 0 {
+        bail!("{failures} of {} jobs failed", results.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_names_roundtrip() {
+        for f in [Family::Mlp, Family::Resnet, Family::Vit, Family::Lm] {
+            assert_eq!(Family::from_name(f.name()), Some(f));
+            assert!(!f.zoo_prefix().is_empty());
+            assert!(f.default_ckpt().starts_with(f.zoo_prefix()));
+        }
+        assert_eq!(Family::from_name("tinylm"), Some(Family::Lm));
+        assert!(Family::from_name("gpt5").is_none());
+    }
+
+    #[test]
+    fn spec_job_loads_from_file() {
+        let dir = std::env::temp_dir().join("grail_runner_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("job.spec.toml");
+        std::fs::write(
+            &p,
+            "[model]\nfamily = \"lm\"\nckpt = \"tinylm_gqa\"\n\n[pipeline]\nmethod = \"flap\"\nratio = 0.3\n",
+        )
+        .unwrap();
+        let job = SpecJob::load(p.to_str().unwrap()).unwrap();
+        assert_eq!(job.family, Family::Lm);
+        assert_eq!(job.ckpt.as_deref(), Some("tinylm_gqa"));
+        assert_eq!(job.spec.defaults.ratio, 0.3);
+        assert_eq!(job.ckpt_or_default(), "tinylm_gqa");
+    }
+
+    #[test]
+    fn spec_job_rejects_unknown_family() {
+        let dir = std::env::temp_dir().join("grail_runner_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.spec.toml");
+        std::fs::write(&p, "[model]\nfamily = \"gpt5\"\n").unwrap();
+        assert!(SpecJob::load(p.to_str().unwrap()).is_err());
+    }
+}

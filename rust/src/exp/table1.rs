@@ -8,7 +8,7 @@ use super::ExpOptions;
 use crate::compress::baselines::Baseline;
 use crate::data::TextSplit;
 use crate::eval::lm_perplexity;
-use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::grail::{compress_model, Method, CompressionSpec};
 use crate::nn::models::LmBatch;
 use anyhow::Result;
 
@@ -82,7 +82,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     for (mi, (label, baseline, grail)) in methods.iter().enumerate() {
         for (pi, &sp) in sparsities.iter().enumerate() {
             let mut m = base.clone();
-            let mut cfg = PipelineConfig::new(Method::Baseline(*baseline), sp, *grail);
+            let mut cfg = CompressionSpec::uniform(Method::Baseline(*baseline), sp, *grail);
             cfg.seed = opts.seed;
             compress_model(&mut m, &calib, &cfg);
             for (si, toks) in eval_toks.iter().enumerate() {

@@ -8,7 +8,7 @@ use super::table1::{method_rows, CALIB_WINDOWS, SEQ};
 use super::ExpOptions;
 use crate::data::SynthText;
 use crate::eval::probes::{probe_accuracy, probe_items, ProbeTask};
-use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::grail::{compress_model, Method, CompressionSpec};
 use crate::nn::models::LmBatch;
 use anyhow::Result;
 
@@ -40,7 +40,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     for &sp in if opts.quick { &[0.5][..] } else { &[0.2, 0.5][..] } {
         for (label, baseline, grail) in method_rows() {
             let mut m = base.clone();
-            let mut cfg = PipelineConfig::new(Method::Baseline(baseline), sp, grail);
+            let mut cfg = CompressionSpec::uniform(Method::Baseline(baseline), sp, grail);
             cfg.seed = opts.seed;
             compress_model(&mut m, &calib, &cfg);
             let mut row = vec![format!("{:.0}%", sp * 100.0), label.clone()];

@@ -6,7 +6,7 @@ use super::report::Table;
 use super::ExpOptions;
 use crate::compress::Selector;
 use crate::coordinator::metrics::{peak_rss_mib, rss_mib};
-use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::grail::{compress_model, Method, CompressionSpec};
 use crate::nn::models::LmBatch;
 use anyhow::Result;
 
@@ -25,7 +25,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         "rss_before_mib",
         "peak_rss_mib",
     ]);
-    let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+    let cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
 
     {
         let mut m = zoo.mlp("mlp_seed0")?;

@@ -5,7 +5,9 @@ use super::ExpOptions;
 use crate::coordinator::Zoo;
 use crate::data::VisionSet;
 use crate::eval::vision_accuracy;
-use crate::grail::{compress_model, Method, PipelineConfig};
+use crate::grail::{
+    compress_model, execute_plan, plan_for_model, CompressionPlan, CompressionSpec, Method,
+};
 use crate::nn::models::{MiniResNet, MlpNet, TinyViT};
 use crate::tensor::Tensor;
 use anyhow::Result;
@@ -57,11 +59,30 @@ impl VisionModel {
     }
 
     /// Run the closed-loop compression pipeline.
-    pub fn compress(&mut self, calib_x: &Tensor, cfg: &PipelineConfig) -> crate::grail::Report {
+    pub fn compress(&mut self, calib_x: &Tensor, spec: &CompressionSpec) -> crate::grail::Report {
         match self {
-            VisionModel::Mlp(m) => compress_model(m, calib_x, cfg),
-            VisionModel::Resnet(m) => compress_model(m, calib_x, cfg),
-            VisionModel::Vit(m) => compress_model(m, calib_x, cfg),
+            VisionModel::Mlp(m) => compress_model(m, calib_x, spec),
+            VisionModel::Resnet(m) => compress_model(m, calib_x, spec),
+            VisionModel::Vit(m) => compress_model(m, calib_x, spec),
+        }
+    }
+
+    /// Resolve a spec into a plan without mutating the model
+    /// (`grail plan`).
+    pub fn plan(&self, calib_x: &Tensor, spec: &CompressionSpec) -> Result<CompressionPlan> {
+        match self {
+            VisionModel::Mlp(m) => plan_for_model(m, calib_x, spec),
+            VisionModel::Resnet(m) => plan_for_model(m, calib_x, spec),
+            VisionModel::Vit(m) => plan_for_model(m, calib_x, spec),
+        }
+    }
+
+    /// Execute an already-resolved plan.
+    pub fn execute(&mut self, calib_x: &Tensor, plan: &CompressionPlan) -> crate::grail::Report {
+        match self {
+            VisionModel::Mlp(m) => execute_plan(m, calib_x, plan),
+            VisionModel::Resnet(m) => execute_plan(m, calib_x, plan),
+            VisionModel::Vit(m) => execute_plan(m, calib_x, plan),
         }
     }
 
@@ -159,7 +180,7 @@ pub fn sweep(opts: &ExpOptions, spec: &SweepSpec) -> Result<Vec<SweepRow>> {
             for &ratio in &spec.ratios {
                 for &variant in &spec.variants {
                     let mut m = VisionModel::load(&zoo, spec.family, ckpt)?;
-                    let mut cfg = PipelineConfig::new(*method, ratio, variant.wants_grail());
+                    let mut cfg = CompressionSpec::uniform(*method, ratio, variant.wants_grail());
                     cfg.seed = spec.seed;
                     m.compress(&calib.x, &cfg);
                     if variant.wants_repair() {

@@ -12,10 +12,15 @@
 //! recomputed on the output of the already-compressed prefix.
 
 pub mod pipeline;
+pub mod spec;
 
 pub use pipeline::{
-    compress_model, compress_model_rescan, Method, PipelineConfig, Report, SiteOutcome,
-    DEFAULT_SHARDS,
+    compress_model, compress_model_rescan, execute_plan, execute_plan_rescan, plan_for_model,
+    site_sensitivities, Method, Report, SiteOutcome, DEFAULT_SHARDS,
+};
+pub use spec::{
+    BudgetMode, CompressionPlan, CompressionSpec, PlannedSite, PolicyOverrides, PolicyRule,
+    SiteMatcher, SitePolicy,
 };
 
 use crate::compress::Reducer;

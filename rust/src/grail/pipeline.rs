@@ -2,10 +2,15 @@
 //! evaluating the Gram matrix for each layer based on the output of the
 //! already-pruned previous layers").
 //!
-//! For every site in forward order: obtain the consumer-input
-//! statistics on the *current* (partially compressed) model, build the
-//! reduction (selector / folding / baseline), optionally attach the
-//! GRAIL reconstruction map, apply.
+//! Execution is the last stage of the Spec → Plan → Execute API
+//! ([`super::spec`]): a [`CompressionPlan`] carries one concrete
+//! [`SitePolicy`](super::spec::SitePolicy) and keep count per site, and
+//! [`execute_plan`] walks the sites in forward order: obtain the
+//! consumer-input statistics on the *current* (partially compressed)
+//! model, build the reduction (selector / folding / baseline) under
+//! that site's policy, optionally attach the GRAIL reconstruction map,
+//! apply. [`compress_model`] is the one-call convenience that resolves
+//! a [`CompressionSpec`] against the model and executes the plan.
 //!
 //! Calibration is *staged*: the input is split into shards
 //! ([`Compressible::split_input`]), each shard carries a
@@ -20,11 +25,13 @@
 //! Statistics merge in shard order, so results are deterministic
 //! regardless of thread scheduling.
 //!
-//! [`compress_model_rescan`] keeps the pre-staging O(L²) strategy
-//! (rebuild every state from scratch at every site) as a reference
-//! implementation: it produces bit-identical `Report::sites`, which the
-//! equivalence tests and `benches/hotpath.rs` rely on.
+//! [`compress_model_rescan`] / [`execute_plan_rescan`] keep the
+//! pre-staging O(L²) strategy (rebuild every state from scratch at
+//! every site) as a reference implementation: they produce
+//! bit-identical `Report::sites`, which the equivalence tests and
+//! `benches/hotpath.rs` rely on.
 
+use super::spec::{CompressionPlan, CompressionSpec};
 use crate::compress::baselines::{baseline_plan, Baseline};
 use crate::compress::heads::validate_head_reducer;
 use crate::compress::select::{self, ScoreInputs, Selector};
@@ -47,9 +54,14 @@ pub enum Method {
 }
 
 impl Method {
-    /// Stable display name.
+    /// Stable display name. `from_name` ∘ `name` is the identity for
+    /// every constructible `Method` (see `method_names_roundtrip`).
     pub fn name(&self) -> String {
         match self {
+            // Bare "wanda" parses to the baseline of the same name, so
+            // the selector spelling needs its explicit prefix to
+            // round-trip.
+            Method::Prune(Selector::Wanda) => "prune-wanda".to_string(),
             Method::Prune(s) => s.name().to_string(),
             Method::Fold => "fold".to_string(),
             Method::RandomFold => "random-fold".to_string(),
@@ -65,6 +77,12 @@ impl Method {
         if s == "random-fold" {
             return Some(Method::RandomFold);
         }
+        // `prune-<selector>` forces the selector spelling — the only
+        // way to reach `Prune(Selector::Wanda)`, whose bare name is
+        // shadowed by the baseline below.
+        if let Some(rest) = s.strip_prefix("prune-") {
+            return Selector::from_name(rest).map(Method::Prune);
+        }
         // Baselines win name clashes ("wanda" is both a selector and a
         // baseline with identical behaviour when uncompensated).
         if let Some(b) = Baseline::from_name(s) {
@@ -72,50 +90,33 @@ impl Method {
         }
         Selector::from_name(s).map(Method::Prune)
     }
-}
 
-/// Pipeline configuration.
-#[derive(Clone, Debug)]
-pub struct PipelineConfig {
-    pub method: Method,
-    /// Fraction of units removed per site (layer-wise uniform
-    /// compression ratio, 0.0–1.0).
-    pub ratio: f64,
-    /// Apply the GRAIL compensation map.
-    pub grail: bool,
-    /// Ridge scale α (λ = α · mean diag(G_PP)).
-    pub alpha: f32,
-    pub seed: u64,
-    /// Sequential closed-loop calibration (paper §3.2: re-evaluate the
-    /// Gram on the already-compressed prefix). `false` = open loop:
-    /// all statistics come from the dense model — the ablation that
-    /// shows why the closed loop matters.
-    pub closed_loop: bool,
-    /// Calibration shards (micro-batches) for streamed statistics and
-    /// parallel segment execution. `0` = [`DEFAULT_SHARDS`] (models
-    /// clamp to the available sample count). More shards lower peak
-    /// tap memory; results are shard-count-dependent only in float
-    /// summation order, which is why the default is a fixed constant
-    /// rather than a function of the machine.
-    pub shards: usize,
-    /// Worker threads for calibration forwards. `0` = auto
-    /// (`GRAIL_THREADS` env or available parallelism).
-    pub workers: usize,
-}
-
-impl PipelineConfig {
-    /// A pipeline with sensible defaults.
-    pub fn new(method: Method, ratio: f64, grail: bool) -> Self {
-        PipelineConfig {
-            method,
-            ratio,
-            grail,
-            alpha: super::DEFAULT_ALPHA,
-            seed: 0,
-            closed_loop: true,
-            shards: 0,
-            workers: 0,
-        }
+    /// Every constructible method (round-trip tests and `grail help`).
+    pub fn all() -> Vec<Method> {
+        let mut out: Vec<Method> = [
+            Selector::MagnitudeL1,
+            Selector::MagnitudeL2,
+            Selector::Wanda,
+            Selector::GramDiag,
+            Selector::Random,
+        ]
+        .into_iter()
+        .map(Method::Prune)
+        .collect();
+        out.push(Method::Fold);
+        out.push(Method::RandomFold);
+        out.extend(
+            [
+                Baseline::Wanda,
+                Baseline::WandaPP,
+                Baseline::SlimGPT,
+                Baseline::ZipLM,
+                Baseline::Flap,
+            ]
+            .into_iter()
+            .map(Method::Baseline),
+        );
+        out
     }
 }
 
@@ -127,6 +128,12 @@ pub struct SiteOutcome {
     pub units_after: usize,
     /// Relative consumer-input reconstruction error of the applied map.
     pub recon_err: f32,
+    /// Provenance: the method the plan assigned to this site.
+    pub method: String,
+    /// Provenance: the removal ratio the plan resolved for this site.
+    pub ratio: f64,
+    /// Provenance: whether GRAIL compensation was applied here.
+    pub grail: bool,
 }
 
 /// Outcome of a full pipeline run.
@@ -137,6 +144,10 @@ pub struct Report {
     pub calib_seconds: f64,
     /// Seconds spent building/applying compensations.
     pub comp_seconds: f64,
+    /// Scalar parameter count of the model before compression.
+    pub params_before: usize,
+    /// Scalar parameter count after compression.
+    pub params_after: usize,
 }
 
 impl Report {
@@ -147,9 +158,27 @@ impl Report {
         }
         self.sites.iter().map(|s| s.recon_err).sum::<f32>() / self.sites.len() as f32
     }
+
+    /// Overall fraction of parameters removed.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.params_before == 0 {
+            return 0.0;
+        }
+        1.0 - self.params_after as f64 / self.params_before as f64
+    }
+
+    /// One-line parameter summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "params {} -> {} ({:.1}% removed)",
+            self.params_before,
+            self.params_after,
+            100.0 * self.compression_ratio()
+        )
+    }
 }
 
-/// Default calibration shard count when [`PipelineConfig::shards`] is
+/// Default calibration shard count when [`CompressionSpec::shards`] is
 /// 0. Deliberately a fixed constant — never derived from detected core
 /// count — so float summation order, and therefore compressed-model
 /// numerics, are identical across machines (the repo's bitwise
@@ -187,34 +216,135 @@ enum Engine {
     Rescan,
 }
 
-/// Run the closed-loop pipeline over every site of `model` using the
-/// staged O(L) segment executor.
-pub fn compress_model<M>(model: &mut M, calib: &M::Input, cfg: &PipelineConfig) -> Report
+/// Resolve `spec` against the model and run the staged O(L) pipeline.
+///
+/// Panics on an unresolvable spec (e.g. inconsistent rule set); callers
+/// that need recoverable errors resolve explicitly via
+/// [`plan_for_model`] and run [`execute_plan`].
+pub fn compress_model<M>(model: &mut M, calib: &M::Input, spec: &CompressionSpec) -> Report
 where
     M: Compressible + Sync,
     M::Input: Sync,
     M::CalibState: Send,
 {
-    run_pipeline(model, calib, cfg, Engine::Staged)
+    let plan = plan_for_model(&*model, calib, spec).expect("unresolvable compression spec");
+    run_pipeline(model, calib, &plan, Engine::Staged)
 }
 
 /// Reference pipeline: identical statistics and outcomes, but every
 /// site re-executes the full prefix (O(L²) layer forwards). Kept for
 /// equivalence tests and the `benches/hotpath.rs` before/after
 /// comparison.
-pub fn compress_model_rescan<M>(model: &mut M, calib: &M::Input, cfg: &PipelineConfig) -> Report
+pub fn compress_model_rescan<M>(model: &mut M, calib: &M::Input, spec: &CompressionSpec) -> Report
 where
     M: Compressible + Sync,
     M::Input: Sync,
     M::CalibState: Send,
 {
-    run_pipeline(model, calib, cfg, Engine::Rescan)
+    let plan = plan_for_model(&*model, calib, spec).expect("unresolvable compression spec");
+    run_pipeline(model, calib, &plan, Engine::Rescan)
+}
+
+/// Resolve a spec into a concrete per-site plan for `model` without
+/// mutating anything. Budget allocators that need activation statistics
+/// (Gram-diagonal sensitivity) run one streamed open-loop pass over the
+/// dense model here; all other specs resolve from site metadata alone.
+/// (Known duplication: gram-sensitivity combined with
+/// `closed_loop = false` pays a second dense pass inside
+/// [`execute_plan`] for the open-loop statistics — keeping plan
+/// resolution side-effect free is worth the extra O(L) forwards.)
+pub fn plan_for_model<M>(
+    model: &M,
+    calib: &M::Input,
+    spec: &CompressionSpec,
+) -> anyhow::Result<CompressionPlan>
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    let sites = model.sites();
+    let sens = if spec.needs_sensitivity() {
+        Some(site_sensitivities(model, calib, spec.shards, spec.workers))
+    } else {
+        None
+    };
+    spec.resolve(&sites, sens.as_deref())
+}
+
+/// Per-site mean activation energy (mean Gram diagonal) on the *dense*
+/// model — the signal behind the Gram-diagonal-sensitivity budget
+/// allocator. One streamed O(L) pass; partial sums merge in shard
+/// order, so the result is independent of worker count.
+pub fn site_sensitivities<M>(
+    model: &M,
+    calib: &M::Input,
+    shards: usize,
+    workers: usize,
+) -> Vec<f64>
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    let sites = model.sites();
+    let n_sites = sites.len();
+    let widths: Vec<usize> = sites.iter().map(|s| s.feat_width()).collect();
+    let workers = if workers != 0 { workers } else { default_threads() };
+    let shard_target = if shards != 0 { shards } else { DEFAULT_SHARDS };
+    let shard_inputs: Vec<M::Input> = model.split_input(calib, shard_target);
+    // Per shard, per site: (Σ x², rows).
+    let per_shard: Vec<Vec<(f64, usize)>> =
+        run_grid(shard_inputs.iter().collect(), workers, |_, inp| {
+            let mut st = model.calib_begin(inp);
+            let mut local = Vec::with_capacity(n_sites);
+            for si in 0..n_sites {
+                let tap = model.site_tap(&mut st, si);
+                let sq: f64 = tap.data().iter().map(|&v| (v as f64) * (v as f64)).sum();
+                local.push((sq, tap.dim(0)));
+                if si + 1 < n_sites {
+                    model.forward_segment(&mut st, si, si + 1);
+                }
+            }
+            local
+        });
+    (0..n_sites)
+        .map(|si| {
+            let mut sq = 0.0f64;
+            let mut rows = 0usize;
+            for shard in &per_shard {
+                sq += shard[si].0;
+                rows += shard[si].1;
+            }
+            sq / ((rows.max(1) * widths[si].max(1)) as f64)
+        })
+        .collect()
+}
+
+/// Execute a resolved plan with the staged O(L) engine.
+pub fn execute_plan<M>(model: &mut M, calib: &M::Input, plan: &CompressionPlan) -> Report
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    run_pipeline(model, calib, plan, Engine::Staged)
+}
+
+/// Execute a resolved plan with the O(L²) rescan reference engine.
+pub fn execute_plan_rescan<M>(model: &mut M, calib: &M::Input, plan: &CompressionPlan) -> Report
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    run_pipeline(model, calib, plan, Engine::Rescan)
 }
 
 fn run_pipeline<M>(
     model: &mut M,
     calib: &M::Input,
-    cfg: &PipelineConfig,
+    plan: &CompressionPlan,
     engine: Engine,
 ) -> Report
 where
@@ -223,12 +353,19 @@ where
     M::CalibState: Send,
 {
     let n_sites = model.sites().len();
-    let mut rng = Pcg64::seed_stream(cfg.seed, 0x6121);
+    assert_eq!(
+        plan.sites.len(),
+        n_sites,
+        "plan has {} sites but the model exposes {n_sites} — resolve the plan against this model",
+        plan.sites.len()
+    );
+    let params_before = model.param_count();
+    let mut rng = Pcg64::seed_stream(plan.seed, 0x6121);
     let mut outcomes = Vec::with_capacity(n_sites);
     let mut calib_seconds = 0.0f64;
     let mut comp_seconds = 0.0f64;
-    let workers = if cfg.workers != 0 { cfg.workers } else { default_threads() };
-    let shard_target = if cfg.shards != 0 { cfg.shards } else { DEFAULT_SHARDS };
+    let workers = if plan.workers != 0 { plan.workers } else { default_threads() };
+    let shard_target = if plan.shards != 0 { plan.shards } else { DEFAULT_SHARDS };
 
     let t_init = Instant::now();
     let shard_inputs: Vec<M::Input> = model.split_input(calib, shard_target);
@@ -239,7 +376,7 @@ where
     // shard plus `shards × Σ h²` partial Gram accumulators — bounded
     // by the fixed shard count, and merged strictly in shard order so
     // the result is independent of worker count.
-    let open_stats: Vec<super::ActStats> = if cfg.closed_loop {
+    let open_stats: Vec<super::ActStats> = if plan.closed_loop {
         Vec::new()
     } else {
         let widths: Vec<usize> = model.sites().iter().map(|s| s.feat_width()).collect();
@@ -272,7 +409,7 @@ where
     };
 
     // Staged closed loop: per-shard boundary states at site 0.
-    let mut states: Vec<M::CalibState> = if cfg.closed_loop && engine == Engine::Staged {
+    let mut states: Vec<M::CalibState> = if plan.closed_loop && engine == Engine::Staged {
         let mref: &M = &*model;
         run_grid(shard_inputs.iter().collect(), workers, |_, inp| mref.calib_begin(inp))
     } else {
@@ -282,16 +419,26 @@ where
 
     for si in 0..n_sites {
         let info = model.sites()[si].clone();
-        let keep = uniform_keep(info.units, info.groups, cfg.ratio);
+        let site_plan = &plan.sites[si];
+        assert_eq!(
+            site_plan.id, info.id,
+            "plan site {si} is `{}` but the model exposes `{}`",
+            site_plan.id, info.id
+        );
+        let policy = &site_plan.policy;
+        let keep = site_plan.keep.min(info.units);
         if keep >= info.units {
             outcomes.push(SiteOutcome {
                 id: info.id.clone(),
                 units_before: info.units,
                 units_after: info.units,
                 recon_err: 0.0,
+                method: policy.method.name(),
+                ratio: policy.ratio,
+                grail: policy.grail,
             });
             // The boundary still has to move past the untouched site.
-            if cfg.closed_loop && engine == Engine::Staged && si + 1 < n_sites {
+            if plan.closed_loop && engine == Engine::Staged && si + 1 < n_sites {
                 let t = Instant::now();
                 let mref: &M = &*model;
                 run_grid_mut(&mut states, workers, |_, st| {
@@ -306,7 +453,7 @@ where
         // the current (closed loop) or dense (open loop) model.
         let tc = Instant::now();
         let width = info.feat_width();
-        let stats = if !cfg.closed_loop {
+        let stats = if !plan.closed_loop {
             open_stats[si].clone()
         } else {
             let mref: &M = &*model;
@@ -344,8 +491,8 @@ where
         let gd = select::gram_diag(&stats.gram);
         let consumer_cols = crate::tensor::ops::col_l2(&consumer);
 
-        // --- choose the reduction
-        let mut plan: ReductionPlan = match cfg.method {
+        // --- choose the reduction under this site's policy
+        let mut red_plan: ReductionPlan = match policy.method {
             Method::Prune(sel) => {
                 let inputs = ScoreInputs {
                     site: &info,
@@ -370,38 +517,43 @@ where
 
         // --- optional GRAIL compensation: keep the selection, replace
         // the weight-space update with the closed-form reconstruction.
-        if cfg.grail {
-            let b = super::reconstruction(&stats.gram, &plan.reducer, info.unit_dim, cfg.alpha);
-            plan.compensation = Some(b);
-            plan.consumer_override = None;
+        if policy.grail {
+            let b = super::reconstruction(
+                &stats.gram,
+                &red_plan.reducer,
+                info.unit_dim,
+                policy.alpha,
+            );
+            red_plan.compensation = Some(b);
+            red_plan.consumer_override = None;
             // The ridge solution on uncentered moments already carries
             // the removed features' conditional mean; a separate bias
             // shift would double-count it.
-            plan.bias_delta = None;
+            red_plan.bias_delta = None;
         }
 
         if info.kind == SiteKind::AttnHeads {
-            validate_head_reducer(&plan.reducer, &info).expect("invalid head reducer");
+            validate_head_reducer(&red_plan.reducer, &info).expect("invalid head reducer");
         }
 
         // --- diagnostics + apply. The reconstruction error comes from
         // the Gram matrix (tr-form), so no raw activations are kept.
-        let eff_map = if let Some(b) = &plan.compensation {
+        let eff_map = if let Some(b) = &red_plan.compensation {
             b.clone()
         } else {
-            plan.reducer.lift(info.unit_dim).consumer_matrix(info.feat_width())
+            red_plan.reducer.lift(info.unit_dim).consumer_matrix(info.feat_width())
         };
         let recon_err = super::reconstruction_error_from_gram(
             &stats.gram,
-            &plan.reducer,
+            &red_plan.reducer,
             info.unit_dim,
             &eff_map,
         );
-        model.apply(si, &plan);
+        model.apply(si, &red_plan);
         comp_seconds += t1.elapsed().as_secs_f64();
 
         // --- advance the boundary through the now-compressed site.
-        if cfg.closed_loop && engine == Engine::Staged && si + 1 < n_sites {
+        if plan.closed_loop && engine == Engine::Staged && si + 1 < n_sites {
             let t = Instant::now();
             let mref: &M = &*model;
             run_grid_mut(&mut states, workers, |_, st| {
@@ -415,9 +567,18 @@ where
             units_before: info.units,
             units_after: keep,
             recon_err,
+            method: policy.method.name(),
+            ratio: policy.ratio,
+            grail: policy.grail,
         });
     }
-    Report { sites: outcomes, calib_seconds, comp_seconds }
+    Report {
+        sites: outcomes,
+        calib_seconds,
+        comp_seconds,
+        params_before,
+        params_after: model.param_count(),
+    }
 }
 
 #[cfg(test)]
@@ -466,7 +627,7 @@ mod tests {
         let y_ref = m0.forward(&x);
         let run = |grail: bool| {
             let mut m = m0.clone();
-            let cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.5, grail);
+            let cfg = CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL2), 0.5, grail);
             let rep = compress_model(&mut m, &x, &cfg);
             assert_eq!(rep.sites.len(), 2);
             let mut d = m.forward(&x);
@@ -484,25 +645,44 @@ mod tests {
     #[test]
     fn fold_pipeline_runs_and_reports() {
         let (mut m, x) = trained_ish_mlp();
-        let cfg = PipelineConfig::new(Method::Fold, 0.4, true);
+        let cfg = CompressionSpec::uniform(Method::Fold, 0.4, true);
         let rep = compress_model(&mut m, &x, &cfg);
         assert_eq!(rep.sites.len(), 2);
         for s in &rep.sites {
             assert_eq!(s.units_before, 32);
             assert_eq!(s.units_after, 19);
             assert!(s.recon_err.is_finite());
+            assert_eq!(s.method, "fold");
+            assert_eq!(s.ratio, 0.4);
+            assert!(s.grail);
         }
         assert!(m.forward(&x).all_finite());
         assert!(rep.calib_seconds >= 0.0 && rep.comp_seconds >= 0.0);
+        assert!(rep.params_after < rep.params_before);
+    }
+
+    #[test]
+    fn report_pins_param_counts_for_known_mlp_spec() {
+        // MlpNet::init(768, 32, 10): fc1 32×768+32, fc2 32×32+32,
+        // head 10×32+10 = 25 994 params. Pruning both hidden sites to
+        // 16 units: fc1 16×768+16, fc2 16×16+16, head 10×16+10.
+        let (mut m, x) = trained_ish_mlp();
+        let cfg = CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL2), 0.5, true);
+        let rep = compress_model(&mut m, &x, &cfg);
+        assert_eq!(rep.params_before, 24_608 + 1_056 + 330);
+        assert_eq!(rep.params_after, 12_304 + 272 + 170);
+        assert!((rep.compression_ratio() - (1.0 - 12_746.0 / 25_994.0)).abs() < 1e-12);
+        assert!(rep.summary().contains("25994 -> 12746"));
     }
 
     #[test]
     fn ratio_zero_is_identity() {
         let (m0, x) = trained_ish_mlp();
         let mut m = m0.clone();
-        let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.0, true);
+        let cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.0, true);
         let rep = compress_model(&mut m, &x, &cfg);
         assert!(rep.sites.iter().all(|s| s.units_after == s.units_before));
+        assert_eq!(rep.params_before, rep.params_after);
         assert!(m0.forward(&x).max_abs_diff(&m.forward(&x)) < 1e-6);
     }
 
@@ -511,7 +691,7 @@ mod tests {
         let (m0, x) = trained_ish_mlp();
         let run = || {
             let mut m = m0.clone();
-            let cfg = PipelineConfig::new(Method::RandomFold, 0.5, true);
+            let cfg = CompressionSpec::uniform(Method::RandomFold, 0.5, true);
             compress_model(&mut m, &x, &cfg);
             m.forward(&x)
         };
@@ -525,7 +705,7 @@ mod tests {
         let (m0, x) = trained_ish_mlp();
         for (shards, workers) in [(1usize, 1usize), (3, 2), (16, 4)] {
             let mut m = m0.clone();
-            let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+            let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
             cfg.shards = shards;
             cfg.workers = workers;
             let rep = compress_model(&mut m, &x, &cfg);
@@ -537,11 +717,42 @@ mod tests {
 
     #[test]
     fn method_names_roundtrip() {
-        for name in ["mag-l1", "mag-l2", "fold", "random-fold", "wanda", "ziplm", "flap"] {
-            let m = Method::from_name(name).unwrap();
-            // wanda maps to the baseline spelling of the same name.
-            assert_eq!(Method::from_name(&m.name()).unwrap(), m);
+        // Regression (`Method::Prune(Selector::Wanda)` used to be
+        // unreachable from names): `from_name` ∘ `name` must be the
+        // identity for *every* constructible method.
+        for m in Method::all() {
+            assert_eq!(Method::from_name(&m.name()), Some(m), "{m:?} via `{}`", m.name());
         }
+        // The selector spelling of the clash is reachable and distinct
+        // from the baseline spelling.
+        assert_eq!(
+            Method::from_name("prune-wanda"),
+            Some(Method::Prune(Selector::Wanda))
+        );
+        assert_eq!(
+            Method::from_name("wanda"),
+            Some(Method::Baseline(Baseline::Wanda))
+        );
+        // Prefix form works for every selector, not just the clash.
+        assert_eq!(
+            Method::from_name("prune-mag-l2"),
+            Some(Method::Prune(Selector::MagnitudeL2))
+        );
         assert!(Method::from_name("nope").is_none());
+        assert!(Method::from_name("prune-nope").is_none());
+    }
+
+    #[test]
+    fn sensitivities_reflect_activation_energy() {
+        let (m, x) = trained_ish_mlp();
+        let s = site_sensitivities(&m, &x, 4, 2);
+        assert_eq!(s.len(), 2);
+        assert!(s.iter().all(|&v| v.is_finite() && v >= 0.0));
+        // Shard/worker counts must not change the result beyond float
+        // summation order.
+        let s2 = site_sensitivities(&m, &x, 1, 1);
+        for (a, b) in s.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-6 * (1.0 + a.abs()), "{a} vs {b}");
+        }
     }
 }

@@ -1,0 +1,900 @@
+//! Declarative compression specs: the Spec → Plan → Execute API.
+//!
+//! The paper's method is selector-agnostic and site-local, so nothing
+//! forces one global `{method, ratio}` on every site. A
+//! [`CompressionSpec`] states *intent*: global default policy, an
+//! ordered list of [`PolicyRule`]s matched per site (by id glob,
+//! [`SiteKind`], or depth range), and an optional global
+//! [`BudgetMode`] that allocates non-uniform keep counts from a target
+//! parameter budget. [`CompressionSpec::resolve`] turns that into a
+//! [`CompressionPlan`] — one concrete [`SitePolicy`] and keep count per
+//! site, inspectable (`grail plan`) and serializable *before* any
+//! weight is touched. [`super::pipeline::execute_plan`] then drives the
+//! staged engine from the plan.
+//!
+//! Precedence: rules apply in order on top of the defaults (later
+//! rules win); a budget allocator then re-assigns ratios for every
+//! site whose ratio no rule pinned explicitly. Specs load from the
+//! TOML subset of [`crate::config`] (`grail run --spec spec.toml`);
+//! see `examples/lm_depth_ramp.spec.toml` for the format.
+
+use super::pipeline::{uniform_keep, Method};
+use crate::compress::{SiteInfo, SiteKind};
+use crate::config::Config;
+use anyhow::{anyhow, bail, Result};
+
+/// Fully resolved per-site policy: how one site gets compressed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SitePolicy {
+    pub method: Method,
+    /// Fraction of units removed at this site (0.0–1.0).
+    pub ratio: f64,
+    /// Apply the GRAIL compensation map.
+    pub grail: bool,
+    /// Ridge scale α (λ = α · mean diag(G_PP)).
+    pub alpha: f32,
+}
+
+/// Partial policy: the fields a rule overrides.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PolicyOverrides {
+    pub method: Option<Method>,
+    pub ratio: Option<f64>,
+    pub grail: Option<bool>,
+    pub alpha: Option<f32>,
+}
+
+impl PolicyOverrides {
+    fn apply(&self, p: &mut SitePolicy) {
+        if let Some(m) = self.method {
+            p.method = m;
+        }
+        if let Some(r) = self.ratio {
+            p.ratio = r;
+        }
+        if let Some(g) = self.grail {
+            p.grail = g;
+        }
+        if let Some(a) = self.alpha {
+            p.alpha = a;
+        }
+    }
+}
+
+/// Which sites a rule applies to. All present conditions must hold
+/// (AND); an empty matcher matches every site.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SiteMatcher {
+    /// Glob over the site id (`*` any substring, `?` one char), e.g.
+    /// `block*.attn`.
+    pub id_glob: Option<String>,
+    /// Site kind (`dense` / `conv` / `mlp-pair` / `attn-heads`).
+    pub kind: Option<SiteKind>,
+    /// Inclusive site-index range `[lo, hi]` in forward order.
+    pub depth: Option<(usize, usize)>,
+}
+
+impl SiteMatcher {
+    /// Does this matcher select `site` at forward position `index`?
+    pub fn matches(&self, site: &SiteInfo, index: usize) -> bool {
+        if let Some(g) = &self.id_glob {
+            if !glob_match(g, &site.id) {
+                return false;
+            }
+        }
+        if let Some(k) = self.kind {
+            if site.kind != k {
+                return false;
+            }
+        }
+        if let Some((lo, hi)) = self.depth {
+            if index < lo || index > hi {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Compact display form for plan rendering.
+    pub fn render(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(g) = &self.id_glob {
+            parts.push(format!("id~{g}"));
+        }
+        if let Some(k) = self.kind {
+            parts.push(format!("kind={}", k.name()));
+        }
+        if let Some((lo, hi)) = self.depth {
+            parts.push(format!("depth={lo}..={hi}"));
+        }
+        if parts.is_empty() {
+            "*".to_string()
+        } else {
+            parts.join(" & ")
+        }
+    }
+}
+
+/// One ordered policy rule: matcher + overrides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyRule {
+    pub matcher: SiteMatcher,
+    pub set: PolicyOverrides,
+}
+
+/// Global keep-count allocation across sites.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BudgetMode {
+    /// Every site uses its own resolved ratio (layer-wise uniform
+    /// unless rules say otherwise) — the legacy behaviour.
+    PerSite,
+    /// Ratios ramp linearly with depth around `target_ratio`:
+    /// `ratio(i) = target · (1 + gamma·(2·pos − 1))` with `pos` the
+    /// normalized site position. `gamma > 0` prunes deeper sites more
+    /// (the free-lunch retraining literature's shape); the mean ratio
+    /// stays ≈ `target_ratio`.
+    DepthRamp { target_ratio: f64, gamma: f64 },
+    /// Keep counts allocated from a global unit budget
+    /// `(1 − target_ratio)·Σ units`, proportionally to each site's
+    /// mean Gram-diagonal activation energy on the dense model —
+    /// high-energy sites keep more units.
+    GramSensitivity { target_ratio: f64 },
+}
+
+impl BudgetMode {
+    /// Stable display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BudgetMode::PerSite => "per-site",
+            BudgetMode::DepthRamp { .. } => "depth-ramp",
+            BudgetMode::GramSensitivity { .. } => "gram-sensitivity",
+        }
+    }
+}
+
+/// A declarative compression spec: defaults + rules + budget.
+#[derive(Clone, Debug)]
+pub struct CompressionSpec {
+    /// Policy for sites no rule touches.
+    pub defaults: SitePolicy,
+    /// Ordered rules; later matching rules override earlier ones.
+    pub rules: Vec<PolicyRule>,
+    pub budget: BudgetMode,
+    pub seed: u64,
+    /// Sequential closed-loop calibration (paper §3.2: re-evaluate the
+    /// Gram on the already-compressed prefix). `false` = open loop:
+    /// all statistics come from the dense model — the ablation that
+    /// shows why the closed loop matters.
+    pub closed_loop: bool,
+    /// Calibration shards (micro-batches) for streamed statistics and
+    /// parallel segment execution. `0` =
+    /// [`DEFAULT_SHARDS`](super::pipeline::DEFAULT_SHARDS) (models
+    /// clamp to the available sample count).
+    pub shards: usize,
+    /// Worker threads for calibration forwards. `0` = auto
+    /// (`GRAIL_THREADS` env or available parallelism).
+    pub workers: usize,
+}
+
+impl CompressionSpec {
+    /// A layer-wise uniform spec — the drop-in replacement for the old
+    /// flat `PipelineConfig::new(method, ratio, grail)`.
+    pub fn uniform(method: Method, ratio: f64, grail: bool) -> Self {
+        CompressionSpec {
+            defaults: SitePolicy { method, ratio, grail, alpha: super::DEFAULT_ALPHA },
+            rules: Vec::new(),
+            budget: BudgetMode::PerSite,
+            seed: 0,
+            closed_loop: true,
+            shards: 0,
+            workers: 0,
+        }
+    }
+
+    /// Whether resolving this spec needs per-site activation
+    /// sensitivities (one streamed pass over the dense model).
+    pub fn needs_sensitivity(&self) -> bool {
+        matches!(self.budget, BudgetMode::GramSensitivity { .. })
+    }
+
+    /// Resolved policy for one site, plus the indices of the rules
+    /// that fired and whether any rule pinned the ratio explicitly.
+    fn policy_for(&self, site: &SiteInfo, index: usize) -> (SitePolicy, Vec<usize>, bool) {
+        let mut p = self.defaults;
+        let mut applied = Vec::new();
+        let mut ratio_pinned = false;
+        for (ri, rule) in self.rules.iter().enumerate() {
+            if rule.matcher.matches(site, index) {
+                rule.set.apply(&mut p);
+                if rule.set.ratio.is_some() {
+                    ratio_pinned = true;
+                }
+                applied.push(ri);
+            }
+        }
+        (p, applied, ratio_pinned)
+    }
+
+    /// Resolve the spec into a concrete plan for `sites`.
+    /// `sensitivities` (per-site, same order) is required exactly when
+    /// [`needs_sensitivity`](Self::needs_sensitivity) — the pipeline's
+    /// [`plan_for_model`](super::pipeline::plan_for_model) computes it.
+    pub fn resolve(
+        &self,
+        sites: &[SiteInfo],
+        sensitivities: Option<&[f64]>,
+    ) -> Result<CompressionPlan> {
+        let n = sites.len();
+        let mut planned: Vec<PlannedSite> = Vec::with_capacity(n);
+        let mut pinned = vec![false; n];
+        for (i, s) in sites.iter().enumerate() {
+            let (policy, rules_applied, ratio_pinned) = self.policy_for(s, i);
+            pinned[i] = ratio_pinned;
+            planned.push(PlannedSite {
+                id: s.id.clone(),
+                index: i,
+                units: s.units,
+                groups: s.groups,
+                kind: s.kind,
+                keep: uniform_keep(s.units, s.groups, policy.ratio),
+                policy,
+                rules_applied,
+            });
+        }
+        match self.budget {
+            BudgetMode::PerSite => {}
+            BudgetMode::DepthRamp { target_ratio, gamma } => {
+                for ps in planned.iter_mut() {
+                    if pinned[ps.index] {
+                        continue;
+                    }
+                    let pos = if n <= 1 { 0.5 } else { ps.index as f64 / (n - 1) as f64 };
+                    let ratio =
+                        (target_ratio * (1.0 + gamma * (2.0 * pos - 1.0))).clamp(0.0, 0.95);
+                    ps.policy.ratio = ratio;
+                    ps.keep = uniform_keep(ps.units, ps.groups, ratio);
+                }
+            }
+            BudgetMode::GramSensitivity { target_ratio } => {
+                let sens = sensitivities.ok_or_else(|| {
+                    anyhow!("gram-sensitivity budget needs per-site sensitivities")
+                })?;
+                if sens.len() != n {
+                    bail!("got {} sensitivities for {n} sites", sens.len());
+                }
+                allocate_by_sensitivity(&mut planned, &pinned, sens, target_ratio);
+            }
+        }
+        Ok(CompressionPlan {
+            sites: planned,
+            seed: self.seed,
+            closed_loop: self.closed_loop,
+            shards: self.shards,
+            workers: self.workers,
+        })
+    }
+
+    /// Load a spec from parsed TOML-subset config. Reads the
+    /// `[pipeline]`, `[budget]`, and `[rule.N]` sections; other
+    /// sections (e.g. the runner's `[model]`) are ignored.
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        for key in cfg.keys() {
+            if let Some(field) = key.strip_prefix("pipeline.") {
+                if !matches!(
+                    field,
+                    "method" | "ratio" | "grail" | "alpha" | "seed" | "closed_loop" | "shards"
+                        | "workers"
+                ) {
+                    bail!("unknown spec key `{key}`");
+                }
+            } else if let Some(field) = key.strip_prefix("budget.") {
+                if !matches!(field, "mode" | "target_ratio" | "gamma") {
+                    bail!("unknown spec key `{key}`");
+                }
+            }
+        }
+        let method_name = cfg.str_or("pipeline.method", "wanda");
+        let method = Method::from_name(method_name)
+            .ok_or_else(|| anyhow!("pipeline.method: unknown method `{method_name}`"))?;
+        let ratio = cfg.f64_or("pipeline.ratio", 0.5);
+        let grail = match cfg.get("pipeline.grail") {
+            Some(_) => cfg.bool("pipeline.grail")?,
+            None => true,
+        };
+        let mut spec = CompressionSpec::uniform(method, ratio, grail);
+        spec.defaults.alpha = cfg.f64_or("pipeline.alpha", super::DEFAULT_ALPHA as f64) as f32;
+        spec.seed = cfg.usize_or("pipeline.seed", 0) as u64;
+        spec.closed_loop = match cfg.get("pipeline.closed_loop") {
+            Some(_) => cfg.bool("pipeline.closed_loop")?,
+            None => true,
+        };
+        spec.shards = cfg.usize_or("pipeline.shards", 0);
+        spec.workers = cfg.usize_or("pipeline.workers", 0);
+        spec.budget = match cfg.str_or("budget.mode", "per-site") {
+            "per-site" => BudgetMode::PerSite,
+            "depth-ramp" => BudgetMode::DepthRamp {
+                target_ratio: cfg.f64_or("budget.target_ratio", ratio),
+                gamma: cfg.f64_or("budget.gamma", 0.5),
+            },
+            "gram-sensitivity" => BudgetMode::GramSensitivity {
+                target_ratio: cfg.f64_or("budget.target_ratio", ratio),
+            },
+            other => bail!("budget.mode: unknown allocator `{other}`"),
+        };
+        spec.rules = parse_rules(cfg)?;
+        Ok(spec)
+    }
+}
+
+/// Parse the ordered `[rule.N]` sections of a spec file.
+fn parse_rules(cfg: &Config) -> Result<Vec<PolicyRule>> {
+    let mut indices: Vec<usize> = Vec::new();
+    for key in cfg.keys() {
+        if let Some(rest) = key.strip_prefix("rule.") {
+            let (idx, field) = rest
+                .split_once('.')
+                .ok_or_else(|| anyhow!("`{key}`: expected `rule.<index>.<field>`"))?;
+            let n: usize = idx
+                .parse()
+                .map_err(|_| anyhow!("`{key}`: rule index `{idx}` is not an integer"))?;
+            if !matches!(
+                field,
+                "match_id" | "match_kind" | "match_depth" | "method" | "ratio" | "grail"
+                    | "alpha"
+            ) {
+                bail!("unknown rule key `{key}`");
+            }
+            if !indices.contains(&n) {
+                indices.push(n);
+            }
+        }
+    }
+    indices.sort_unstable();
+    let mut rules = Vec::with_capacity(indices.len());
+    for n in indices {
+        let k = |f: &str| format!("rule.{n}.{f}");
+        let mut matcher = SiteMatcher::default();
+        if cfg.get(&k("match_id")).is_some() {
+            matcher.id_glob = Some(cfg.str(&k("match_id"))?.to_string());
+        }
+        if cfg.get(&k("match_kind")).is_some() {
+            let name = cfg.str(&k("match_kind"))?;
+            matcher.kind = Some(
+                SiteKind::from_name(name)
+                    .ok_or_else(|| anyhow!("rule.{n}.match_kind: unknown kind `{name}`"))?,
+            );
+        }
+        if cfg.get(&k("match_depth")).is_some() {
+            let range = cfg.f64_array(&k("match_depth"))?;
+            if range.len() != 2 || range[0] < 0.0 || range[1] < range[0] {
+                bail!("rule.{n}.match_depth: expected [lo, hi] with 0 <= lo <= hi");
+            }
+            matcher.depth = Some((range[0] as usize, range[1] as usize));
+        }
+        let mut set = PolicyOverrides::default();
+        if cfg.get(&k("method")).is_some() {
+            let name = cfg.str(&k("method"))?;
+            set.method = Some(
+                Method::from_name(name)
+                    .ok_or_else(|| anyhow!("rule.{n}.method: unknown method `{name}`"))?,
+            );
+        }
+        if cfg.get(&k("ratio")).is_some() {
+            set.ratio = Some(cfg.f64(&k("ratio"))?);
+        }
+        if cfg.get(&k("grail")).is_some() {
+            set.grail = Some(cfg.bool(&k("grail"))?);
+        }
+        if cfg.get(&k("alpha")).is_some() {
+            set.alpha = Some(cfg.f64(&k("alpha"))? as f32);
+        }
+        if set == PolicyOverrides::default() {
+            bail!("rule.{n}: sets no policy field (method/ratio/grail/alpha)");
+        }
+        rules.push(PolicyRule { matcher, set });
+    }
+    Ok(rules)
+}
+
+/// One site of a resolved plan.
+#[derive(Clone, Debug)]
+pub struct PlannedSite {
+    pub id: String,
+    /// Forward position of the site.
+    pub index: usize,
+    pub units: usize,
+    pub groups: usize,
+    pub kind: SiteKind,
+    /// Concrete unit count kept at this site (group-constrained).
+    pub keep: usize,
+    pub policy: SitePolicy,
+    /// Indices of the spec rules that fired for this site.
+    pub rules_applied: Vec<usize>,
+}
+
+/// A fully resolved compression plan: one [`PlannedSite`] per model
+/// site, in forward order. Nothing is mutated until
+/// [`execute_plan`](super::pipeline::execute_plan) runs it.
+#[derive(Clone, Debug)]
+pub struct CompressionPlan {
+    pub sites: Vec<PlannedSite>,
+    pub seed: u64,
+    pub closed_loop: bool,
+    pub shards: usize,
+    pub workers: usize,
+}
+
+impl CompressionPlan {
+    /// Total units kept across sites.
+    pub fn total_keep(&self) -> usize {
+        self.sites.iter().map(|s| s.keep).sum()
+    }
+
+    /// Total units before compression.
+    pub fn total_units(&self) -> usize {
+        self.sites.iter().map(|s| s.units).sum()
+    }
+
+    /// Human-readable table for `grail plan`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<3} {:<16} {:<10} {:>5} {:>5} {:>6}  {:<12} {:>5} {:>8}  rules\n",
+            "#", "site", "kind", "units", "keep", "ratio", "method", "grail", "alpha"
+        ));
+        for s in &self.sites {
+            let rules = if s.rules_applied.is_empty() {
+                "-".to_string()
+            } else {
+                s.rules_applied
+                    .iter()
+                    .map(|r| r.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            out.push_str(&format!(
+                "{:<3} {:<16} {:<10} {:>5} {:>5} {:>6.2}  {:<12} {:>5} {:>8.1e}  {}\n",
+                s.index,
+                s.id,
+                s.kind.name(),
+                s.units,
+                s.keep,
+                s.policy.ratio,
+                s.policy.method.name(),
+                if s.policy.grail { "yes" } else { "no" },
+                s.policy.alpha,
+                rules
+            ));
+        }
+        out.push_str(&format!(
+            "total units {} -> {} (seed {}, {} loop, shards {}, workers {})\n",
+            self.total_units(),
+            self.total_keep(),
+            self.seed,
+            if self.closed_loop { "closed" } else { "open" },
+            self.shards,
+            self.workers
+        ));
+        out
+    }
+
+    /// Serialize to the TOML subset (round-trips through
+    /// [`Config::parse`]).
+    pub fn to_toml(&self) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let mut out = String::new();
+        out.push_str("[plan]\n");
+        out.push_str(&format!("seed = {}\n", self.seed));
+        out.push_str(&format!("closed_loop = {}\n", self.closed_loop));
+        out.push_str(&format!("shards = {}\n", self.shards));
+        out.push_str(&format!("workers = {}\n\n", self.workers));
+        for s in &self.sites {
+            out.push_str(&format!("[site.{}]\n", s.index));
+            out.push_str(&format!("id = \"{}\"\n", esc(&s.id)));
+            out.push_str(&format!("kind = \"{}\"\n", s.kind.name()));
+            out.push_str(&format!("units = {}\n", s.units));
+            out.push_str(&format!("keep = {}\n", s.keep));
+            out.push_str(&format!("method = \"{}\"\n", esc(&s.policy.method.name())));
+            out.push_str(&format!("ratio = {:.6}\n", s.policy.ratio));
+            out.push_str(&format!("grail = {}\n", s.policy.grail));
+            out.push_str(&format!("alpha = {:.6e}\n\n", s.policy.alpha));
+        }
+        out
+    }
+}
+
+/// Keep count clamped to the site's group structure (mirrors
+/// [`uniform_keep`]'s constraints: ≥1 unit per group, multiples of
+/// `groups` for divisible grouped sites).
+fn constrain_keep(units: usize, groups: usize, keep: usize) -> usize {
+    let g = groups.max(1);
+    if units % g != 0 {
+        return keep.clamp(1, units);
+    }
+    let per_group = units / g;
+    let kpg = ((keep as f64) / g as f64).round() as usize;
+    kpg.clamp(1, per_group) * g
+}
+
+/// Smallest step by which a site's keep count can change.
+fn keep_step(units: usize, groups: usize) -> usize {
+    let g = groups.max(1);
+    if g > 1 && units % g == 0 {
+        g
+    } else {
+        1
+    }
+}
+
+/// Smallest admissible keep count for a site.
+fn keep_floor(units: usize, groups: usize) -> usize {
+    let g = groups.max(1);
+    if g > 1 && units % g == 0 {
+        g
+    } else {
+        1
+    }
+}
+
+/// Distribute a global unit budget over the non-pinned sites
+/// proportionally to sensitivity, then walk the rounding drift back to
+/// the target greedily (shrink the least sensitive site first, grow the
+/// most sensitive). Deterministic: ties break on site index.
+fn allocate_by_sensitivity(
+    planned: &mut [PlannedSite],
+    pinned: &[bool],
+    sens: &[f64],
+    target_ratio: f64,
+) {
+    let free: Vec<usize> =
+        (0..planned.len()).filter(|&i| !pinned[i] && planned[i].units > 0).collect();
+    if free.is_empty() {
+        return;
+    }
+    let total_units: usize = free.iter().map(|&i| planned[i].units).sum();
+    let target_keep = ((total_units as f64) * (1.0 - target_ratio)).round() as usize;
+    let min_total: usize =
+        free.iter().map(|&i| keep_floor(planned[i].units, planned[i].groups)).sum();
+    let target_keep = target_keep.clamp(min_total, total_units);
+    // Guard degenerate signals (all-zero sensitivity → uniform).
+    let weight = |i: usize| sens[i].max(1e-12);
+    let denom: f64 = free.iter().map(|&i| weight(i) * planned[i].units as f64).sum();
+    for &i in &free {
+        let raw = target_keep as f64 * weight(i) * planned[i].units as f64 / denom.max(1e-300);
+        planned[i].keep =
+            constrain_keep(planned[i].units, planned[i].groups, raw.round() as usize);
+    }
+    // Walk rounding drift back toward the target.
+    let mut total: usize = free.iter().map(|&i| planned[i].keep).sum();
+    while total > target_keep {
+        // Shrink the least sensitive site that can still shrink.
+        let cand = free
+            .iter()
+            .copied()
+            .filter(|&i| {
+                planned[i].keep
+                    >= keep_floor(planned[i].units, planned[i].groups)
+                        + keep_step(planned[i].units, planned[i].groups)
+            })
+            .min_by(|&a, &b| weight(a).total_cmp(&weight(b)).then(a.cmp(&b)));
+        let Some(i) = cand else { break };
+        let step = keep_step(planned[i].units, planned[i].groups);
+        planned[i].keep -= step;
+        total -= step;
+    }
+    while total < target_keep {
+        // Grow the most sensitive site that has headroom.
+        let cand = free
+            .iter()
+            .copied()
+            .filter(|&i| {
+                planned[i].keep + keep_step(planned[i].units, planned[i].groups)
+                    <= planned[i].units
+            })
+            .max_by(|&a, &b| weight(a).total_cmp(&weight(b)).then(b.cmp(&a)));
+        let Some(i) = cand else { break };
+        let step = keep_step(planned[i].units, planned[i].groups);
+        planned[i].keep += step;
+        total += step;
+    }
+    for &i in &free {
+        planned[i].policy.ratio = 1.0 - planned[i].keep as f64 / planned[i].units as f64;
+    }
+}
+
+/// Minimal glob: `*` matches any substring (including empty), `?` any
+/// single character; everything else is literal. Site ids are ASCII.
+pub fn glob_match(pattern: &str, s: &str) -> bool {
+    fn rec(p: &[u8], s: &[u8]) -> bool {
+        match p.first() {
+            None => s.is_empty(),
+            Some(b'*') => rec(&p[1..], s) || (!s.is_empty() && rec(p, &s[1..])),
+            Some(b'?') => !s.is_empty() && rec(&p[1..], &s[1..]),
+            Some(&c) => s.first() == Some(&c) && rec(&p[1..], &s[1..]),
+        }
+    }
+    rec(pattern.as_bytes(), s.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Selector;
+
+    fn site(id: &str, units: usize, groups: usize, kind: SiteKind) -> SiteInfo {
+        SiteInfo { id: id.into(), units, unit_dim: 1, groups, kind }
+    }
+
+    fn lm_like_sites() -> Vec<SiteInfo> {
+        (0..4)
+            .flat_map(|i| {
+                [
+                    site(&format!("block{i}.attn"), 8, 1, SiteKind::AttnHeads),
+                    site(&format!("block{i}.mlp"), 32, 1, SiteKind::MlpPair),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn glob_basics() {
+        assert!(glob_match("block*.attn", "block0.attn"));
+        assert!(glob_match("block*.attn", "block12.attn"));
+        assert!(!glob_match("block*.attn", "block0.mlp"));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("*", ""));
+        assert!(glob_match("block?.mlp", "block3.mlp"));
+        assert!(!glob_match("block?.mlp", "block12.mlp"));
+        assert!(glob_match("fc1>fc2", "fc1>fc2"));
+    }
+
+    #[test]
+    fn uniform_spec_resolves_layerwise_uniform() {
+        let sites = lm_like_sites();
+        let spec = CompressionSpec::uniform(Method::Fold, 0.5, true);
+        let plan = spec.resolve(&sites, None).unwrap();
+        assert_eq!(plan.sites.len(), 8);
+        for (ps, s) in plan.sites.iter().zip(&sites) {
+            assert_eq!(ps.id, s.id);
+            assert_eq!(ps.keep, uniform_keep(s.units, s.groups, 0.5));
+            assert_eq!(ps.policy.ratio, 0.5);
+            assert_eq!(ps.policy.method, Method::Fold);
+            assert!(ps.rules_applied.is_empty());
+        }
+    }
+
+    #[test]
+    fn rules_match_and_later_rules_win() {
+        let sites = lm_like_sites();
+        let mut spec = CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL2), 0.5, true);
+        spec.rules = vec![
+            // All attention sites: gentler ratio.
+            PolicyRule {
+                matcher: SiteMatcher {
+                    kind: Some(SiteKind::AttnHeads),
+                    ..Default::default()
+                },
+                set: PolicyOverrides { ratio: Some(0.25), ..Default::default() },
+            },
+            // Deep half: fold instead of prune.
+            PolicyRule {
+                matcher: SiteMatcher { depth: Some((4, 7)), ..Default::default() },
+                set: PolicyOverrides { method: Some(Method::Fold), ..Default::default() },
+            },
+            // One specific site by glob: no GRAIL, pinned ratio.
+            PolicyRule {
+                matcher: SiteMatcher {
+                    id_glob: Some("block3.mlp".into()),
+                    ..Default::default()
+                },
+                set: PolicyOverrides {
+                    grail: Some(false),
+                    ratio: Some(0.75),
+                    ..Default::default()
+                },
+            },
+        ];
+        let plan = spec.resolve(&sites, None).unwrap();
+        // block0.attn: rule 0 only.
+        assert_eq!(plan.sites[0].policy.ratio, 0.25);
+        assert_eq!(plan.sites[0].keep, 6);
+        assert_eq!(plan.sites[0].rules_applied, vec![0]);
+        // block0.mlp: default.
+        assert_eq!(plan.sites[1].policy.ratio, 0.5);
+        assert_eq!(plan.sites[1].keep, 16);
+        // block2.attn (index 4): rules 0 and 1 — folded attention at 0.25.
+        assert_eq!(plan.sites[4].policy.method, Method::Fold);
+        assert_eq!(plan.sites[4].policy.ratio, 0.25);
+        assert_eq!(plan.sites[4].rules_applied, vec![0, 1]);
+        // block3.mlp (index 7): rules 1 and 2 — fold, no GRAIL, 0.75.
+        let last = &plan.sites[7];
+        assert_eq!(last.policy.method, Method::Fold);
+        assert!(!last.policy.grail);
+        assert_eq!(last.policy.ratio, 0.75);
+        assert_eq!(last.keep, 8);
+        assert_eq!(last.rules_applied, vec![1, 2]);
+    }
+
+    #[test]
+    fn depth_ramp_ramps_and_preserves_mean() {
+        let sites: Vec<SiteInfo> =
+            (0..5).map(|i| site(&format!("s{i}"), 100, 1, SiteKind::Dense)).collect();
+        let mut spec = CompressionSpec::uniform(Method::Fold, 0.5, true);
+        spec.budget = BudgetMode::DepthRamp { target_ratio: 0.5, gamma: 0.6 };
+        let plan = spec.resolve(&sites, None).unwrap();
+        let ratios: Vec<f64> = plan.sites.iter().map(|s| s.policy.ratio).collect();
+        for w in ratios.windows(2) {
+            assert!(w[1] > w[0], "ratios must increase with depth: {ratios:?}");
+        }
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!((mean - 0.5).abs() < 1e-9, "mean ratio {mean}");
+        assert!((ratios[0] - 0.2).abs() < 1e-9 && (ratios[4] - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn depth_ramp_respects_pinned_rules_and_clamps() {
+        let sites: Vec<SiteInfo> =
+            (0..3).map(|i| site(&format!("s{i}"), 10, 1, SiteKind::Dense)).collect();
+        let mut spec = CompressionSpec::uniform(Method::Fold, 0.5, true);
+        spec.budget = BudgetMode::DepthRamp { target_ratio: 0.6, gamma: 1.0 };
+        spec.rules = vec![PolicyRule {
+            matcher: SiteMatcher { id_glob: Some("s1".into()), ..Default::default() },
+            set: PolicyOverrides { ratio: Some(0.1), ..Default::default() },
+        }];
+        let plan = spec.resolve(&sites, None).unwrap();
+        // s0: 0.6·(1−1) = 0.0; s2 would be 1.2 → clamped to 0.95.
+        assert_eq!(plan.sites[0].policy.ratio, 0.0);
+        assert_eq!(plan.sites[0].keep, 10);
+        assert_eq!(plan.sites[1].policy.ratio, 0.1, "rule-pinned site untouched");
+        assert_eq!(plan.sites[2].policy.ratio, 0.95);
+        assert_eq!(plan.sites[2].keep, 1);
+    }
+
+    #[test]
+    fn gram_sensitivity_allocates_toward_energy() {
+        let sites: Vec<SiteInfo> =
+            (0..4).map(|i| site(&format!("s{i}"), 40, 1, SiteKind::Dense)).collect();
+        let mut spec = CompressionSpec::uniform(Method::Fold, 0.5, true);
+        spec.budget = BudgetMode::GramSensitivity { target_ratio: 0.5 };
+        assert!(spec.needs_sensitivity());
+        assert!(spec.resolve(&sites, None).is_err(), "must demand sensitivities");
+        let sens = [4.0, 2.0, 1.0, 1.0];
+        let plan = spec.resolve(&sites, Some(&sens)).unwrap();
+        let keeps: Vec<usize> = plan.sites.iter().map(|s| s.keep).collect();
+        // Budget hit exactly: 50% of 160 units.
+        assert_eq!(keeps.iter().sum::<usize>(), 80);
+        // Monotone in sensitivity.
+        assert!(keeps[0] > keeps[1] && keeps[1] > keeps[2]);
+        assert_eq!(keeps[2], keeps[3]);
+        // Provenance ratios match the allocated keeps.
+        for (ps, &k) in plan.sites.iter().zip(&keeps) {
+            assert!((ps.policy.ratio - (1.0 - k as f64 / 40.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_sensitivity_respects_groups() {
+        // GQA-like site: keeps must stay multiples of the group count.
+        let sites = vec![
+            site("attn", 8, 4, SiteKind::AttnHeads),
+            site("mlp", 32, 1, SiteKind::MlpPair),
+        ];
+        let mut spec = CompressionSpec::uniform(Method::Fold, 0.5, true);
+        spec.budget = BudgetMode::GramSensitivity { target_ratio: 0.5 };
+        let plan = spec.resolve(&sites, Some(&[5.0, 1.0])).unwrap();
+        assert_eq!(plan.sites[0].keep % 4, 0);
+        assert!(plan.sites[0].keep >= 4);
+        assert!(plan.sites[1].keep >= 1);
+    }
+
+    #[test]
+    fn plan_renders_and_serializes() {
+        let sites = lm_like_sites();
+        let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+        spec.seed = 7;
+        let plan = spec.resolve(&sites, None).unwrap();
+        let rendered = plan.render();
+        assert!(rendered.contains("block0.attn"));
+        assert!(rendered.contains("prune-wanda"));
+        assert!(rendered.contains("total units 160 -> 80"));
+        // TOML round-trip through the config parser.
+        let toml = plan.to_toml();
+        let cfg = Config::parse(&toml).unwrap();
+        assert_eq!(cfg.usize("plan.seed").unwrap(), 7);
+        assert!(cfg.bool("plan.closed_loop").unwrap());
+        assert_eq!(cfg.str("site.0.id").unwrap(), "block0.attn");
+        assert_eq!(cfg.str("site.0.method").unwrap(), "prune-wanda");
+        assert_eq!(cfg.usize("site.7.keep").unwrap(), 16);
+    }
+
+    #[test]
+    fn spec_parses_from_toml() {
+        let text = r#"
+[model]
+family = "lm"            # ignored here (runner metadata)
+
+[pipeline]
+method = "prune-wanda"
+ratio = 0.4
+grail = true
+alpha = 0.001
+seed = 9
+shards = 4
+
+[budget]
+mode = "depth-ramp"
+target_ratio = 0.4
+gamma = 0.8
+
+[rule.0]
+match_kind = "attn-heads"
+ratio = 0.25
+
+[rule.1]
+match_id = "block3.*"
+match_depth = [6, 7]
+method = "fold"
+grail = false
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let spec = CompressionSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.defaults.method, Method::Prune(Selector::Wanda));
+        assert_eq!(spec.defaults.ratio, 0.4);
+        assert_eq!(spec.defaults.alpha, 0.001);
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.shards, 4);
+        assert!(spec.closed_loop);
+        assert_eq!(
+            spec.budget,
+            BudgetMode::DepthRamp { target_ratio: 0.4, gamma: 0.8 }
+        );
+        assert_eq!(spec.rules.len(), 2);
+        assert_eq!(spec.rules[0].matcher.kind, Some(SiteKind::AttnHeads));
+        assert_eq!(spec.rules[0].set.ratio, Some(0.25));
+        assert_eq!(spec.rules[1].matcher.id_glob.as_deref(), Some("block3.*"));
+        assert_eq!(spec.rules[1].matcher.depth, Some((6, 7)));
+        assert_eq!(spec.rules[1].set.method, Some(Method::Fold));
+        assert_eq!(spec.rules[1].set.grail, Some(false));
+    }
+
+    #[test]
+    fn spec_toml_errors_are_helpful() {
+        let bad_key = Config::parse("[pipeline]\nmehtod = \"fold\"").unwrap();
+        let err = CompressionSpec::from_config(&bad_key).unwrap_err().to_string();
+        assert!(err.contains("pipeline.mehtod"), "{err}");
+
+        let bad_method = Config::parse("[pipeline]\nmethod = \"nope\"").unwrap();
+        assert!(CompressionSpec::from_config(&bad_method).is_err());
+
+        let bad_mode = Config::parse("[budget]\nmode = \"psychic\"").unwrap();
+        assert!(CompressionSpec::from_config(&bad_mode).is_err());
+
+        let empty_rule = Config::parse("[rule.0]\nmatch_id = \"x\"").unwrap();
+        let err = CompressionSpec::from_config(&empty_rule).unwrap_err().to_string();
+        assert!(err.contains("sets no policy field"), "{err}");
+
+        let bad_depth = Config::parse("[rule.0]\nmatch_depth = [5, 2]\nratio = 0.1").unwrap();
+        assert!(CompressionSpec::from_config(&bad_depth).is_err());
+
+        let bad_rule_key = Config::parse("[rule.0]\nratoi = 0.5").unwrap();
+        assert!(CompressionSpec::from_config(&bad_rule_key).is_err());
+    }
+
+    #[test]
+    fn rule_order_is_numeric_not_lexical() {
+        // rule.10 must apply after rule.2 (lexically "10" < "2").
+        let text = r#"
+[rule.2]
+match_id = "*"
+ratio = 0.3
+[rule.10]
+match_id = "*"
+ratio = 0.7
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let spec = CompressionSpec::from_config(&cfg).unwrap();
+        let sites = vec![site("a", 10, 1, SiteKind::Dense)];
+        let plan = spec.resolve(&sites, None).unwrap();
+        assert_eq!(plan.sites[0].policy.ratio, 0.7, "later (numeric) rule wins");
+    }
+}

@@ -3,7 +3,10 @@
 //! ```text
 //! grail datagen [--out artifacts]          write the canonical datasets
 //! grail exp <id|all> [--out results]       regenerate a paper table/figure
-//! grail compress --model <ckpt> ...        one-off compression + eval
+//! grail compress --family <f> ...          one-off uniform compression + eval
+//! grail plan --spec spec.toml              resolve + print a compression plan
+//! grail run --spec spec.toml               execute a declarative spec
+//! grail batch <spec.toml>...               fan specs over the model zoo
 //! grail info                               artifact / runtime inventory
 //! ```
 
@@ -29,6 +32,9 @@ fn run() -> Result<()> {
         }
         "exp" => grail::exp::run_cli(&args),
         "compress" => grail::exp::compress_cli(&args),
+        "plan" => grail::exp::runner::plan_cli(&args),
+        "run" => grail::exp::runner::run_cli(&args),
+        "batch" => grail::exp::runner::batch_cli(&args),
         "info" => {
             let art = Artifacts::at(args.opt_or("out", "artifacts"));
             println!("artifacts root: {:?}", art.root);
@@ -63,4 +69,33 @@ USAGE:
   grail compress --family <mlp|resnet|vit|lm> --ckpt <name>
             --method <mag-l1|mag-l2|wanda|gram|random|fold|random-fold|wanda++|slimgpt|ziplm|flap>
             --ratio <0..1> [--grail] [--alpha 1e-3]
-  grail info";
+  grail plan  --spec <spec.toml> [--family f] [--ckpt c] [--toml]
+  grail run   --spec <spec.toml> [--family f] [--ckpt c]
+  grail batch <spec.toml>... [--jobs N] [--out results]
+  grail info
+
+SPEC FILES (TOML subset; full reference in EXPERIMENTS.md, commented
+example in examples/lm_depth_ramp.spec.toml):
+  [model]     family = \"lm\"           mlp|resnet|vit|lm
+              ckpt = \"tinylm_mha\"     omit to fan over the zoo in `batch`
+  [pipeline]  default policy: method, ratio, grail, alpha,
+              seed, closed_loop, shards, workers
+  [rule.N]    ordered per-site overrides; matchers (ANDed):
+                match_id    = \"block*.attn\"   id glob (* and ?)
+                match_kind  = \"attn-heads\"    dense|conv|mlp-pair|attn-heads
+                match_depth = [lo, hi]        inclusive site-index range
+              overrides: method / ratio / grail / alpha.
+              Later rules win; defaults fill the rest.
+  [budget]    mode = \"per-site\" (default) — every site its own ratio
+              mode = \"depth-ramp\"       target_ratio, gamma: ratios ramp
+                linearly with depth around target_ratio
+              mode = \"gram-sensitivity\" target_ratio: keep counts
+                allocated from the global unit budget by each site's mean
+                Gram-diagonal activation energy (dense model)
+              Budget allocators re-assign every ratio no rule pinned.
+
+METHOD NAMES:
+  selectors  mag-l1 mag-l2 prune-wanda gram random   (structured pruning)
+  folding    fold random-fold
+  baselines  wanda wanda++ slimgpt ziplm flap        (own recovery; bare
+             `wanda` is the baseline — `prune-wanda` forces the selector)";

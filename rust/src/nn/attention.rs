@@ -50,6 +50,14 @@ impl MultiHeadAttention {
         }
     }
 
+    /// Scalar parameter count (q/k/v/o projections).
+    pub fn param_count(&self) -> usize {
+        self.wq.param_count()
+            + self.wk.param_count()
+            + self.wv.param_count()
+            + self.wo.param_count()
+    }
+
     /// Query heads per KV head.
     pub fn group_size(&self) -> usize {
         self.n_heads / self.n_kv

@@ -32,6 +32,11 @@ impl Conv2d {
         self.w.dim(0)
     }
 
+    /// Scalar parameter count (kernel + bias).
+    pub fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
     pub fn in_channels(&self) -> usize {
         self.w.dim(1)
     }

@@ -30,6 +30,11 @@ impl Linear {
         self.w.dim(0)
     }
 
+    /// Scalar parameter count (weights + bias).
+    pub fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
     /// Input width.
     pub fn in_dim(&self) -> usize {
         self.w.dim(1)

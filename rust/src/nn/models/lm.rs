@@ -293,6 +293,18 @@ impl Compressible for TinyLm {
             .collect()
     }
 
+    fn param_count(&self) -> usize {
+        let mut n = self.embed.len() + self.pos.len();
+        for blk in &self.blocks {
+            n += blk.ln1.param_count()
+                + blk.attn.param_count()
+                + blk.ln2.param_count()
+                + blk.fc.param_count()
+                + blk.proj.param_count();
+        }
+        n + self.ln_f.param_count() + self.lm_head.param_count()
+    }
+
     fn sites(&self) -> Vec<SiteInfo> {
         let mut sites = Vec::with_capacity(2 * self.blocks.len());
         for (i, blk) in self.blocks.iter().enumerate() {

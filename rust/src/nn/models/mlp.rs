@@ -102,6 +102,10 @@ impl Compressible for MlpNet {
         crate::tensor::ops::split_rows(input, max_shards)
     }
 
+    fn param_count(&self) -> usize {
+        self.fc1.param_count() + self.fc2.param_count() + self.head.param_count()
+    }
+
     fn sites(&self) -> Vec<SiteInfo> {
         vec![
             SiteInfo {

@@ -327,6 +327,20 @@ impl Compressible for MiniResNet {
         ops::split_rows(input, max_shards)
     }
 
+    fn param_count(&self) -> usize {
+        let mut n = self.stem_conv.param_count() + self.stem_bn.param_count();
+        for blk in &self.blocks {
+            n += blk.conv1.param_count()
+                + blk.bn1.param_count()
+                + blk.conv2.param_count()
+                + blk.bn2.param_count();
+            if let Some((conv, bn)) = &blk.down {
+                n += conv.param_count() + bn.param_count();
+            }
+        }
+        n + self.head.param_count()
+    }
+
     fn sites(&self) -> Vec<SiteInfo> {
         self.blocks
             .iter()

@@ -347,6 +347,18 @@ impl Compressible for TinyViT {
         ops::split_rows(input, max_shards)
     }
 
+    fn param_count(&self) -> usize {
+        let mut n = self.patch_embed.param_count() + self.pos.len();
+        for blk in &self.blocks {
+            n += blk.ln1.param_count()
+                + blk.attn.param_count()
+                + blk.ln2.param_count()
+                + blk.fc.param_count()
+                + blk.proj.param_count();
+        }
+        n + self.ln_f.param_count() + self.head.param_count()
+    }
+
     fn sites(&self) -> Vec<SiteInfo> {
         self.blocks
             .iter()

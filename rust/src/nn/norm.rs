@@ -17,6 +17,11 @@ impl LayerNorm {
         LayerNorm { gamma: Tensor::full(&[d], 1.0), beta: Tensor::zeros(&[d]) }
     }
 
+    /// Scalar parameter count (gamma + beta).
+    pub fn param_count(&self) -> usize {
+        self.gamma.len() + self.beta.len()
+    }
+
     /// Normalized width.
     pub fn dim(&self) -> usize {
         self.gamma.dim(0)
@@ -67,6 +72,12 @@ impl BatchNorm2d {
             running_mean: Tensor::zeros(&[c]),
             running_var: Tensor::full(&[c], 1.0),
         }
+    }
+
+    /// Scalar parameter count (gamma + beta + running stats — the
+    /// tensors a checkpoint carries).
+    pub fn param_count(&self) -> usize {
+        self.gamma.len() + self.beta.len() + self.running_mean.len() + self.running_var.len()
     }
 
     /// Number of channels.

@@ -8,7 +8,7 @@
 use grail::bench_util::{layer_forwards, layer_forwards_reset};
 use grail::compress::Selector;
 use grail::data::{SynthText, TextSplit};
-use grail::grail::{compress_model, compress_model_rescan, Method, PipelineConfig};
+use grail::grail::{compress_model, compress_model_rescan, Method, CompressionSpec};
 use grail::nn::models::{LmBatch, LmConfig, TinyLm};
 use grail::rng::Pcg64;
 
@@ -23,7 +23,7 @@ fn closed_loop_layer_forwards_are_linear_in_depth() {
 
     // Single shard / single worker so the counter reflects segment
     // executions of the whole batch, independent of sharding.
-    let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+    let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
     cfg.shards = 1;
     cfg.workers = 1;
 

@@ -10,7 +10,7 @@ use grail::compress::Selector;
 use grail::coordinator::{Artifacts, Zoo};
 use grail::data::io::{read_images, read_tokens};
 use grail::eval::{lm_perplexity, vision_accuracy};
-use grail::grail::{compress_model, Method, PipelineConfig};
+use grail::grail::{compress_model, Method, CompressionSpec};
 use grail::nn::models::LmBatch;
 
 fn zoo() -> Option<(Artifacts, Zoo)> {
@@ -81,7 +81,7 @@ fn grail_recovers_trained_resnet_accuracy() {
     let run = |grail_on: bool| {
         let mut m = base.clone();
         let cfg =
-            PipelineConfig::new(Method::Prune(Selector::MagnitudeL1), 0.6, grail_on);
+            CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL1), 0.6, grail_on);
         compress_model(&mut m, &calib.x, &cfg);
         vision_accuracy(|x| m.forward(x), &test, 128)
     };
@@ -104,7 +104,7 @@ fn grail_improves_trained_lm_perplexity() {
     let base = zoo.lm("tinylm_mha").unwrap();
     let run = |grail_on: bool| {
         let mut m = base.clone();
-        let cfg = PipelineConfig::new(Method::Baseline(Baseline::Wanda), 0.4, grail_on);
+        let cfg = CompressionSpec::uniform(Method::Baseline(Baseline::Wanda), 0.4, grail_on);
         compress_model(&mut m, &calib, &cfg);
         lm_perplexity(&m, &eval, 32, 64, 16)
     };
@@ -128,6 +128,62 @@ fn probes_above_chance_on_trained_lm() {
     let items = probe_items(ProbeTask::Cloze, &text, 48, 1);
     let acc = probe_accuracy(&m, &items);
     assert!(acc > 0.4, "cloze acc {acc} (chance 0.25)");
+}
+
+/// `grail run --spec` end-to-end: a heterogeneous spec file (rules +
+/// depth-ramp budget) resolves, executes on a zoo checkpoint, and
+/// reports per-site provenance plus the parameter summary.
+#[test]
+fn run_spec_file_end_to_end() {
+    use grail::exp::runner::{execute_job, resolve_job_plan, SpecJob};
+    let Some((art, _)) = zoo() else { return };
+    let dir = std::env::temp_dir().join("grail_spec_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec_path = dir.join("het.spec.toml");
+    std::fs::write(
+        &spec_path,
+        r#"
+[model]
+family = "lm"
+ckpt = "tinylm_mha"
+
+[pipeline]
+method = "prune-wanda"
+ratio = 0.4
+grail = true
+
+[budget]
+mode = "depth-ramp"
+target_ratio = 0.4
+gamma = 0.5
+
+[rule.0]
+match_kind = "attn-heads"
+method = "fold"
+"#,
+    )
+    .unwrap();
+    let job = SpecJob::load(spec_path.to_str().unwrap()).unwrap();
+    let opts = grail::exp::ExpOptions {
+        out_dir: dir.to_string_lossy().into_owned(),
+        artifacts: art,
+        quick: true,
+        seed: 0,
+    };
+    // Plan resolution is side-effect free and heterogeneous.
+    let plan = resolve_job_plan(&opts, job.family, &job.ckpt_or_default(), &job.spec).unwrap();
+    let ratios: Vec<f64> = plan.sites.iter().map(|s| s.policy.ratio).collect();
+    assert!(ratios.first().unwrap() < ratios.last().unwrap(), "{ratios:?}");
+    assert!(plan.render().contains("fold"));
+    // Execution matches the plan and evaluates before/after.
+    let out = execute_job(&opts, job.family, &job.ckpt_or_default(), &job.spec, "het").unwrap();
+    assert_eq!(out.metric, "ppl");
+    assert!(out.before.is_finite() && out.after.is_finite());
+    assert!(out.report.params_after < out.report.params_before);
+    for (o, p) in out.report.sites.iter().zip(&plan.sites) {
+        assert_eq!(o.units_after, p.keep, "{}", o.id);
+        assert_eq!(o.method, p.policy.method.name());
+    }
 }
 
 /// Experiment harness smoke: table3 (cheapest) runs end-to-end and

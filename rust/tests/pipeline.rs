@@ -7,13 +7,32 @@ use grail::compress::baselines::Baseline;
 use grail::compress::Selector;
 use grail::data::{SynthText, SynthVision, TextSplit};
 use grail::eval::{lm_perplexity, vision_accuracy};
-use grail::grail::{compress_model, Method, PipelineConfig};
+use grail::grail::{compress_model, Method, CompressionSpec};
 use grail::nn::models::{LmBatch, LmConfig, MiniResNet, MlpNet, TinyLm, TinyViT, VitConfig};
 use grail::rng::Pcg64;
 use grail::testing::{check, Config};
 
 fn vision_calib() -> grail::tensor::Tensor {
     SynthVision::new(9).generate(64).x
+}
+
+/// `Compressible::param_count` must agree with the serialized
+/// checkpoint size for every family (guards drift between the
+/// hand-summed counts and `to_bundle`).
+#[test]
+fn param_count_matches_bundle_for_all_families() {
+    use grail::compress::Compressible;
+    let mut rng = Pcg64::seed(99);
+    let mlp = MlpNet::init(768, 32, 10, &mut rng);
+    assert_eq!(mlp.param_count(), mlp.to_bundle().num_params());
+    let resnet = MiniResNet::init(&mut rng);
+    assert_eq!(resnet.param_count(), resnet.to_bundle().num_params());
+    let vit = TinyViT::init(VitConfig::default(), &mut rng);
+    assert_eq!(vit.param_count(), vit.to_bundle().num_params());
+    for cfg in [LmConfig::default(), LmConfig::gqa()] {
+        let lm = TinyLm::init(cfg, &mut rng);
+        assert_eq!(lm.param_count(), lm.to_bundle().num_params());
+    }
 }
 
 /// Every (method, grail) combination leaves every model functional.
@@ -40,7 +59,7 @@ fn all_methods_all_models_stay_finite() {
     let vit = TinyViT::init(VitConfig::default(), &mut rng);
     for method in methods {
         for grail_on in [false, true] {
-            let cfg = PipelineConfig::new(method, 0.5, grail_on);
+            let cfg = CompressionSpec::uniform(method, 0.5, grail_on);
             let mut m = mlp.clone();
             compress_model(&mut m, &x, &cfg);
             assert!(m.forward(&x).all_finite(), "mlp {method:?} grail={grail_on}");
@@ -70,7 +89,7 @@ fn lm_pipeline_mha_and_gqa() {
         ] {
             for grail_on in [false, true] {
                 let mut m = lm.clone();
-                let cfg = PipelineConfig::new(method, 0.5, grail_on);
+                let cfg = CompressionSpec::uniform(method, 0.5, grail_on);
                 let rep = compress_model(&mut m, &calib, &cfg);
                 assert_eq!(rep.sites.len(), 8);
                 assert!(m.forward(&calib).all_finite(), "{method:?} grail={grail_on}");
@@ -100,7 +119,7 @@ fn grail_beats_bare_on_output_fidelity() {
         let mut dist = [0.0f32; 2];
         for (i, grail_on) in [false, true].into_iter().enumerate() {
             let mut m = model.clone();
-            compress_model(&mut m, &x, &PipelineConfig::new(method, 0.6, grail_on));
+            compress_model(&mut m, &x, &CompressionSpec::uniform(method, 0.6, grail_on));
             let mut d = m.forward(&x);
             grail::tensor::ops::axpy(&mut d, -1.0, &y_ref);
             dist[i] = d.frobenius();
@@ -125,7 +144,7 @@ fn prop_pipeline_widths_and_finiteness() {
         let mut x = grail::tensor::Tensor::zeros(&[32, 48]);
         init_rng.fill_normal(x.data_mut(), 1.0);
         let ratio = 0.1 + 0.8 * rng.next_f64();
-        let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), ratio, true);
+        let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), ratio, true);
         cfg.seed = rng.next_u64();
         let mut m = model;
         let rep = compress_model(&mut m, &x, &cfg);
@@ -176,7 +195,7 @@ fn resnet_grail_repair_reduces_distortion() {
     let y_ref = model.forward(&calib_set.x);
     let run = |grail_on: bool, repair: bool| {
         let mut m = model.clone();
-        let cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.5, grail_on);
+        let cfg = CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL2), 0.5, grail_on);
         compress_model(&mut m, &calib_set.x, &cfg);
         if repair {
             m.repair(&calib_set);
@@ -206,7 +225,7 @@ fn lm_grail_does_not_explode_perplexity() {
     compress_model(
         &mut m,
         &calib,
-        &PipelineConfig::new(Method::Prune(Selector::Wanda), 0.3, true),
+        &CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.3, true),
     );
     let after = lm_perplexity(&m, &eval, 16, 16, 8);
     assert!(after.is_finite());
@@ -236,7 +255,7 @@ fn extreme_ratios_clamp_safely() {
     let x = vision_calib();
     for ratio in [0.95, 0.99] {
         let mut m = MlpNet::init(768, 16, 10, &mut rng);
-        compress_model(&mut m, &x, &PipelineConfig::new(Method::Prune(Selector::Wanda), ratio, true));
+        compress_model(&mut m, &x, &CompressionSpec::uniform(Method::Prune(Selector::Wanda), ratio, true));
         assert!(m.fc1.out_dim() >= 1);
         assert!(m.forward(&x).all_finite());
     }
@@ -244,7 +263,7 @@ fn extreme_ratios_clamp_safely() {
     let ts = SynthText::new(21).generate(TextSplit::Train, 2000);
     let calib = LmBatch::from_tokens(&ts, 16, 8);
     let mut lm = TinyLm::init(LmConfig::gqa(), &mut rng);
-    compress_model(&mut lm, &calib, &PipelineConfig::new(Method::Prune(Selector::Wanda), 0.99, true));
+    compress_model(&mut lm, &calib, &CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.99, true));
     for blk in &lm.blocks {
         assert_eq!(blk.attn.n_heads, 4); // 4 groups × 1 head floor
         assert_eq!(blk.attn.n_kv, 4);
@@ -262,7 +281,7 @@ fn closed_loop_no_worse_than_open() {
     let y_ref = model.forward(&x);
     let run = |closed: bool| {
         let mut m = model.clone();
-        let mut cfg = PipelineConfig::new(Method::Prune(Selector::MagnitudeL2), 0.6, true);
+        let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::MagnitudeL2), 0.6, true);
         cfg.closed_loop = closed;
         compress_model(&mut m, &x, &cfg);
         let mut d = m.forward(&x);
@@ -286,7 +305,7 @@ fn full_pipeline_bitwise_deterministic() {
         let ts = SynthText::new(31).generate(TextSplit::Calib, 2000);
         let calib = LmBatch::from_tokens(&ts, 16, 8);
         let mut cfg =
-            PipelineConfig::new(Method::Baseline(Baseline::Flap), 0.5, true);
+            CompressionSpec::uniform(Method::Baseline(Baseline::Flap), 0.5, true);
         cfg.seed = 99;
         compress_model(&mut m, &calib, &cfg);
         m.forward(&calib)

@@ -3,9 +3,12 @@
 //! family, in both closed- and open-loop modes — same selections, same
 //! reconstruction errors, same compressed weights.
 
-use grail::compress::{Compressible, Selector};
+use grail::compress::{Compressible, Selector, SiteKind};
 use grail::data::{SynthText, SynthVision, TextSplit};
-use grail::grail::{compress_model, compress_model_rescan, Method, PipelineConfig, Report};
+use grail::grail::{
+    compress_model, compress_model_rescan, plan_for_model, BudgetMode, CompressionSpec, Method,
+    PolicyOverrides, PolicyRule, Report, SiteMatcher,
+};
 use grail::nn::models::{LmBatch, LmConfig, MiniResNet, MlpNet, TinyLm, TinyViT, VitConfig};
 use grail::rng::Pcg64;
 use grail::testing::{check, Config};
@@ -27,11 +30,11 @@ fn assert_reports_identical(a: &Report, b: &Report) {
     }
 }
 
-fn configs() -> Vec<PipelineConfig> {
+fn configs() -> Vec<CompressionSpec> {
     let mut out = Vec::new();
     for closed in [true, false] {
         for method in [Method::Prune(Selector::Wanda), Method::Fold] {
-            let mut cfg = PipelineConfig::new(method, 0.5, true);
+            let mut cfg = CompressionSpec::uniform(method, 0.5, true);
             cfg.closed_loop = closed;
             out.push(cfg);
         }
@@ -108,7 +111,7 @@ fn staged_matches_rescan_lm_mha_and_gqa() {
 #[test]
 fn staged_prefix_matches_taps_after_compression_all_families() {
     let mut rng = Pcg64::seed(6);
-    let cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+    let cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
     let x = SynthVision::new(9).generate(10).x;
 
     let mut mlp = MlpNet::init(768, 32, 10, &mut rng);
@@ -154,7 +157,7 @@ fn prop_incremental_states_match_one_shot_taps() {
         let mut x = grail::tensor::Tensor::zeros(&[16, 48]);
         init_rng.fill_normal(x.data_mut(), 1.0);
         let ratio = 0.1 + 0.8 * rng.next_f64();
-        let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), ratio, true);
+        let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), ratio, true);
         cfg.seed = rng.next_u64();
         let mut m = model0;
         compress_model(&mut m, &x, &cfg);
@@ -174,6 +177,160 @@ fn prop_incremental_states_match_one_shot_taps() {
     });
 }
 
+/// A spec that reaches the same uniform per-site policy through the
+/// rule machinery instead of the defaults: the defaults are set to a
+/// deliberately wrong policy and a match-everything rule overrides
+/// every field back to the target. Resolving it must produce the same
+/// plan — and executing it bit-identical outcomes — as the plain
+/// uniform spec (the legacy `PipelineConfig` semantics).
+fn rule_built_uniform(target: &CompressionSpec) -> CompressionSpec {
+    let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Random), 0.9, false);
+    spec.defaults.alpha = 123.0;
+    spec.rules = vec![PolicyRule {
+        matcher: SiteMatcher::default(),
+        set: PolicyOverrides {
+            method: Some(target.defaults.method),
+            ratio: Some(target.defaults.ratio),
+            grail: Some(target.defaults.grail),
+            alpha: Some(target.defaults.alpha),
+        },
+    }];
+    spec.seed = target.seed;
+    spec.closed_loop = target.closed_loop;
+    spec.shards = target.shards;
+    spec.workers = target.workers;
+    spec
+}
+
+/// Golden equivalence: a uniform `CompressionSpec` (the legacy
+/// `PipelineConfig` path, now `CompressionSpec::uniform`) and the same
+/// policy reached through matcher rules produce bit-identical
+/// `Report.sites` and compressed weights — on every model family, in
+/// both engines, closed- and open-loop.
+#[test]
+fn uniform_spec_equivalence_all_families() {
+    let mut rng = Pcg64::seed(41);
+    let x = SynthVision::new(9).generate(16).x;
+    let ts = SynthText::new(5).generate(TextSplit::Calib, 2000);
+    let lm_calib = LmBatch::from_tokens(&ts, 16, 8);
+
+    macro_rules! check_family {
+        ($m0:expr, $calib:expr) => {
+            for cfg in configs() {
+                let ruled = rule_built_uniform(&cfg);
+                // Staged engine.
+                let mut a = $m0.clone();
+                let ra = compress_model(&mut a, $calib, &cfg);
+                let mut b = $m0.clone();
+                let rb = compress_model(&mut b, $calib, &ruled);
+                assert_reports_identical(&ra, &rb);
+                assert_eq!(a.forward($calib), b.forward($calib), "staged cfg {cfg:?}");
+                // Rescan engine.
+                let mut c = $m0.clone();
+                let rc = compress_model_rescan(&mut c, $calib, &ruled);
+                assert_reports_identical(&ra, &rc);
+                assert_eq!(a.forward($calib), c.forward($calib), "rescan cfg {cfg:?}");
+            }
+        };
+    }
+
+    let mlp = MlpNet::init(768, 32, 10, &mut rng);
+    check_family!(mlp, &x);
+    let resnet = MiniResNet::init(&mut rng);
+    check_family!(resnet, &x);
+    let vit = TinyViT::init(VitConfig::default(), &mut rng);
+    check_family!(vit, &x);
+    let lm = TinyLm::init(LmConfig::default(), &mut rng);
+    check_family!(lm, &lm_calib);
+}
+
+/// A heterogeneous spec — depth-ramped ratios with mixed prune+fold
+/// methods via matcher rules — resolves to the expected per-site plan
+/// and runs end-to-end on TinyLm through both engines.
+#[test]
+fn heterogeneous_spec_on_tinylm() {
+    let mut rng = Pcg64::seed(42);
+    let ts = SynthText::new(5).generate(TextSplit::Calib, 3000);
+    let calib = LmBatch::from_tokens(&ts, 16, 12);
+    let m0 = TinyLm::init(LmConfig { n_layers: 3, ..Default::default() }, &mut rng);
+
+    let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+    // Attention sites fold instead of prune; the deepest block is
+    // pinned gentle by a glob rule.
+    spec.rules = vec![
+        PolicyRule {
+            matcher: SiteMatcher { kind: Some(SiteKind::AttnHeads), ..Default::default() },
+            set: PolicyOverrides { method: Some(Method::Fold), ..Default::default() },
+        },
+        PolicyRule {
+            matcher: SiteMatcher { id_glob: Some("block2.*".into()), ..Default::default() },
+            set: PolicyOverrides { ratio: Some(0.25), ..Default::default() },
+        },
+    ];
+    // Depth-ramp allocator over the non-pinned sites.
+    spec.budget = BudgetMode::DepthRamp { target_ratio: 0.5, gamma: 0.5 };
+
+    let plan = plan_for_model(&m0, &calib, &spec).unwrap();
+    assert_eq!(plan.sites.len(), 6);
+    // Attention sites got the fold override, MLP sites kept wanda.
+    for ps in &plan.sites {
+        if ps.id.ends_with(".attn") {
+            assert_eq!(ps.policy.method, Method::Fold, "{}", ps.id);
+        } else {
+            assert_eq!(ps.policy.method, Method::Prune(Selector::Wanda), "{}", ps.id);
+        }
+    }
+    // Ramped ratios increase with depth on the non-pinned prefix …
+    let r: Vec<f64> = plan.sites.iter().map(|s| s.policy.ratio).collect();
+    assert!(r[0] < r[1] && r[1] < r[2] && r[2] < r[3], "{r:?}");
+    // … while block2 sites (indices 4, 5) are rule-pinned at 0.25.
+    assert_eq!(r[4], 0.25);
+    assert_eq!(r[5], 0.25);
+
+    // Executes end-to-end, matches the plan, and both engines agree.
+    let mut a = m0.clone();
+    let ra = compress_model(&mut a, &calib, &spec);
+    assert!(a.forward(&calib).all_finite());
+    for (out, ps) in ra.sites.iter().zip(&plan.sites) {
+        assert_eq!(out.id, ps.id);
+        assert_eq!(out.units_after, ps.keep);
+        assert_eq!(out.method, ps.policy.method.name());
+        assert_eq!(out.ratio, ps.policy.ratio);
+    }
+    assert!(ra.params_after < ra.params_before);
+    let mut b = m0.clone();
+    let rb = compress_model_rescan(&mut b, &calib, &spec);
+    assert_reports_identical(&ra, &rb);
+    assert_eq!(a.forward(&calib), b.forward(&calib));
+}
+
+/// The Gram-sensitivity budget allocator runs end-to-end: keep counts
+/// track the global budget and the compressed model still works.
+#[test]
+fn gram_sensitivity_budget_on_tinylm() {
+    let mut rng = Pcg64::seed(43);
+    let ts = SynthText::new(5).generate(TextSplit::Calib, 3000);
+    let calib = LmBatch::from_tokens(&ts, 16, 12);
+    let m0 = TinyLm::init(LmConfig::default(), &mut rng);
+
+    let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+    spec.budget = BudgetMode::GramSensitivity { target_ratio: 0.5 };
+    let plan = plan_for_model(&m0, &calib, &spec).unwrap();
+    let total: usize = plan.sites.iter().map(|s| s.units).sum();
+    let kept: usize = plan.sites.iter().map(|s| s.keep).sum();
+    // Within one group step of the 50% unit budget.
+    assert!(
+        (kept as i64 - (total / 2) as i64).unsigned_abs() as usize <= 8,
+        "kept {kept} of {total}"
+    );
+    let mut m = m0.clone();
+    let rep = compress_model(&mut m, &calib, &spec);
+    assert!(m.forward(&calib).all_finite());
+    for (out, ps) in rep.sites.iter().zip(&plan.sites) {
+        assert_eq!(out.units_after, ps.keep, "{}", out.id);
+    }
+}
+
 /// Sharded, multi-threaded calibration keeps the structural outcome
 /// (selected widths) and produces working models at every shard count.
 #[test]
@@ -184,7 +341,7 @@ fn shard_counts_agree_on_selections() {
     let m0 = TinyLm::init(LmConfig::default(), &mut rng);
     let mut widths: Vec<Vec<usize>> = Vec::new();
     for (shards, workers) in [(1usize, 1usize), (4, 2), (12, 4)] {
-        let mut cfg = PipelineConfig::new(Method::Prune(Selector::Wanda), 0.5, true);
+        let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
         cfg.shards = shards;
         cfg.workers = workers;
         let mut m = m0.clone();
