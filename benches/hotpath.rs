@@ -59,6 +59,37 @@ fn main() {
         });
     }
 
+    // --- Blocked vs scalar SPD solve on solve-dominated deep-model
+    // geometries: K×K ridge system (K = kept units) against all H
+    // right-hand sides — the per-site cost that dominates the closed
+    // loop at depth. Same f64 precision both ways; only blocking,
+    // panelization, and RHS fan-out differ.
+    for &(n, m) in &[(256usize, 256usize), (384, 512)] {
+        let x = randn(&mut rng, &[2 * n + 5, n]);
+        let mut a = ops::gram(&x);
+        for i in 0..n {
+            let v = a.at2(i, i) + (n as f32);
+            a.set2(i, i, v);
+        }
+        let b = randn(&mut rng, &[n, m]);
+        let blocked = bench(&format!("solve_spd_multi blocked n={n} rhs={m}"), 600, || {
+            grail::linalg::solve_spd_multi(&a, &b)
+        });
+        let scalar = bench(&format!("solve_spd_multi scalar  n={n} rhs={m}"), 600, || {
+            grail::linalg::solve_spd_multi_ref(&a, &b)
+        });
+        println!(
+            "{:<44} {:.2}x",
+            format!("blocked solve speedup n={n} rhs={m}"),
+            scalar.median_ns / blocked.median_ns
+        );
+        let fast = grail::linalg::solve_spd_multi(&a, &b);
+        let slow = grail::linalg::solve_spd_multi_ref(&a, &b);
+        let diff = fast.max_abs_diff(&slow);
+        assert!(diff < 1e-3, "blocked vs scalar diverged: {diff}");
+        assert!(blocked.median_ns < scalar.median_ns, "blocked must beat scalar");
+    }
+
     // --- Conv block forward (MiniResNet block1 geometry)
     {
         let conv = grail::nn::Conv2d::init(32, 32, 3, 1, 1, &mut rng);

@@ -23,7 +23,7 @@
 use super::select::{self, ScoreInputs, Selector};
 use super::{Reducer, ReductionPlan, SiteInfo};
 use crate::grail::ActStats;
-use crate::linalg::{mean_diag, Cholesky};
+use crate::linalg::{mean_diag, BlockedCholesky};
 use crate::rng::Pcg64;
 use crate::tensor::{ops, Tensor};
 
@@ -71,7 +71,9 @@ impl Baseline {
 /// Build a baseline's reduction plan for one site.
 ///
 /// `consumer` is the site's consumer matrix `[o_eff, h_feat]`; `stats`
-/// the consumer-input activation statistics. Returns a plan carrying
+/// the consumer-input activation statistics. `workers` bounds the
+/// solver's RHS-panel fan-out for the OBS Hessian inverse (`0` = auto;
+/// results are bit-identical at every value). Returns a plan carrying
 /// the baseline's own compensation (override / bias delta); callers
 /// stacking GRAIL keep the reducer (and FLAP's bias delta) and replace
 /// the weight update with the GRAIL map.
@@ -83,6 +85,7 @@ pub fn baseline_plan(
     producer_l2: &[f32],
     consumer: &Tensor,
     k_units: usize,
+    workers: usize,
     rng: &mut Pcg64,
 ) -> ReductionPlan {
     let consumer_cols = consumer_col_l2(consumer);
@@ -108,8 +111,8 @@ pub fn baseline_plan(
                 consumer_override: Some(w_new),
             }
         }
-        Baseline::SlimGPT => slimgpt_plan(site, stats, consumer, k_units),
-        Baseline::ZipLM => ziplm_plan(site, stats, consumer, k_units),
+        Baseline::SlimGPT => slimgpt_plan(site, stats, consumer, k_units, workers),
+        Baseline::ZipLM => ziplm_plan(site, stats, consumer, k_units, workers),
         Baseline::Flap => flap_plan(site, stats, consumer, k_units, &inputs, rng),
     }
 }
@@ -184,8 +187,9 @@ fn ziplm_plan(
     stats: &ActStats,
     consumer: &Tensor,
     k_units: usize,
+    workers: usize,
 ) -> ReductionPlan {
-    obs_prune(site, stats, consumer, k_units, /*full_update=*/ true)
+    obs_prune(site, stats, consumer, k_units, workers, /*full_update=*/ true)
 }
 
 /// SlimGPT-like: same greedy OBS ranking, but the curvature correction
@@ -196,8 +200,9 @@ fn slimgpt_plan(
     stats: &ActStats,
     consumer: &Tensor,
     k_units: usize,
+    workers: usize,
 ) -> ReductionPlan {
-    obs_prune(site, stats, consumer, k_units, /*full_update=*/ false)
+    obs_prune(site, stats, consumer, k_units, workers, /*full_update=*/ false)
 }
 
 /// Greedy structured OBS over units.
@@ -212,6 +217,7 @@ fn obs_prune(
     stats: &ActStats,
     consumer: &Tensor,
     k_units: usize,
+    workers: usize,
     full_update: bool,
 ) -> ReductionPlan {
     let dh = site.unit_dim;
@@ -222,8 +228,12 @@ fn obs_prune(
     let mut hess = stats.gram.clone();
     let lambda = (1e-2 * mean_diag(&hess)).max(1e-8);
     crate::linalg::add_diag(&mut hess, lambda);
-    let chol = Cholesky::factor_jittered(&hess).expect("OBS hessian factorization");
-    let mut hinv = chol.solve_multi(&Tensor::eye(h_feat));
+    // Blocked factor + panel solve against the identity: the Hessian
+    // inverse is the one H×H solve of the OBS setup. `workers` bounds
+    // the panel fan-out (the per-block downdates below are too small to
+    // parallelize and stay on the serial path).
+    let chol = BlockedCholesky::factor_jittered(&hess).expect("OBS hessian factorization");
+    let mut hinv = chol.solve_multi_with(&Tensor::eye(h_feat), workers);
     let mut w = consumer.clone();
     let mut alive: Vec<bool> = vec![true; units];
     let mut alive_count = units;
@@ -283,7 +293,7 @@ fn obs_prune(
 fn obs_error(w: &Tensor, hinv: &Tensor, feats: &[usize]) -> f64 {
     let hbb = block(hinv, feats);
     let wb = ops::gather_cols(w, feats); // [O, dh]
-    match Cholesky::factor_jittered(&hbb) {
+    match BlockedCholesky::factor_jittered(&hbb) {
         Ok(c) => {
             // tr(W_B Hbb⁻¹ W_Bᵀ) = Σ_rows w_r · Hbb⁻¹ w_r.
             let mut total = 0.0f64;
@@ -308,7 +318,7 @@ fn obs_full_update(w: &mut Tensor, hinv: &mut Tensor, feats: &[usize]) {
     let h = hinv.dim(0);
     let hbb = block(hinv, feats);
     let hb_all = ops::gather_rows(hinv, feats); // [dh, H]
-    let c = match Cholesky::factor_jittered(&hbb) {
+    let c = match BlockedCholesky::factor_jittered(&hbb) {
         Ok(c) => c,
         Err(_) => return,
     };
@@ -456,10 +466,10 @@ mod tests {
         let site = dense_site(12);
         let l1 = vec![1.0f32; 12];
         let zip = baseline_plan(
-            Baseline::ZipLM, &site, &stats, &l1, &l1, &consumer, 6, &mut Pcg64::seed(3),
+            Baseline::ZipLM, &site, &stats, &l1, &l1, &consumer, 6, 1, &mut Pcg64::seed(3),
         );
         let wanda = baseline_plan(
-            Baseline::Wanda, &site, &stats, &l1, &l1, &consumer, 6, &mut Pcg64::seed(3),
+            Baseline::Wanda, &site, &stats, &l1, &l1, &consumer, 6, 1, &mut Pcg64::seed(3),
         );
         let e_zip = output_err(&consumer, &acts, &zip, 1);
         let e_wanda = output_err(&consumer, &acts, &wanda, 1);
@@ -476,10 +486,10 @@ mod tests {
         let site = dense_site(10);
         let l1 = vec![1.0f32; 10];
         let pp = baseline_plan(
-            Baseline::WandaPP, &site, &stats, &l1, &l1, &consumer, 5, &mut Pcg64::seed(6),
+            Baseline::WandaPP, &site, &stats, &l1, &l1, &consumer, 5, 1, &mut Pcg64::seed(6),
         );
         let plain = baseline_plan(
-            Baseline::Wanda, &site, &stats, &l1, &l1, &consumer, 5, &mut Pcg64::seed(6),
+            Baseline::Wanda, &site, &stats, &l1, &l1, &consumer, 5, 1, &mut Pcg64::seed(6),
         );
         assert_eq!(pp.reducer, plain.reducer, "same selector");
         let e_pp = output_err(&consumer, &acts, &pp, 1);
@@ -498,10 +508,10 @@ mod tests {
         let site = dense_site(16);
         let l1 = vec![1.0f32; 16];
         let zip = baseline_plan(
-            Baseline::ZipLM, &site, &stats, &l1, &l1, &consumer, 4, &mut Pcg64::seed(9),
+            Baseline::ZipLM, &site, &stats, &l1, &l1, &consumer, 4, 1, &mut Pcg64::seed(9),
         );
         let slim = baseline_plan(
-            Baseline::SlimGPT, &site, &stats, &l1, &l1, &consumer, 4, &mut Pcg64::seed(9),
+            Baseline::SlimGPT, &site, &stats, &l1, &l1, &consumer, 4, 1, &mut Pcg64::seed(9),
         );
         let e_zip = output_err(&consumer, &acts, &zip, 1);
         let e_slim = output_err(&consumer, &acts, &slim, 1);
@@ -526,7 +536,7 @@ mod tests {
         let site = dense_site(h);
         let l1 = vec![1.0f32; h];
         let plan = baseline_plan(
-            Baseline::Flap, &site, &stats, &l1, &l1, &consumer, 3, &mut Pcg64::seed(11),
+            Baseline::Flap, &site, &stats, &l1, &l1, &consumer, 3, 1, &mut Pcg64::seed(11),
         );
         // Low-variance/high-mean feature 5 should be dropped by the
         // fluctuation metric...
@@ -562,7 +572,7 @@ mod tests {
         };
         let l1 = vec![1.0f32; 4];
         let plan = baseline_plan(
-            Baseline::ZipLM, &site, &stats, &l1, &l1, &consumer, 2, &mut Pcg64::seed(14),
+            Baseline::ZipLM, &site, &stats, &l1, &l1, &consumer, 2, 1, &mut Pcg64::seed(14),
         );
         if let Reducer::Select(keep) = &plan.reducer {
             assert_eq!(keep.len(), 2);

@@ -24,7 +24,7 @@ pub use spec::{
 };
 
 use crate::compress::Reducer;
-use crate::linalg::{mean_diag, ridge_reconstruction};
+use crate::linalg::{mean_diag, ridge_reconstruction_with};
 use crate::tensor::{ops, Tensor};
 
 /// Default ridge scale α — the top of the paper’s range (α ∈
@@ -118,6 +118,20 @@ impl ActStats {
 /// (`G_PP = G[P,P]`); for folding, the merge map enters as
 /// `Mᵀ G M` (paper §3.1, "which generalizes the pruning case").
 pub fn reconstruction(gram: &Tensor, reducer: &Reducer, unit_dim: usize, alpha: f32) -> Tensor {
+    reconstruction_with(gram, reducer, unit_dim, alpha, 0)
+}
+
+/// [`reconstruction`] with an explicit worker count for the ridge
+/// solve's RHS panel fan-out (`0` = auto). The pipeline passes its
+/// resolved worker budget here so solver parallelism honours the
+/// spec's `workers` setting; results are bit-identical at every value.
+pub fn reconstruction_with(
+    gram: &Tensor,
+    reducer: &Reducer,
+    unit_dim: usize,
+    alpha: f32,
+    workers: usize,
+) -> Tensor {
     let h = gram.dim(0);
     assert_eq!(gram.dim(1), h, "gram must be square");
     let lifted = reducer.lift(unit_dim);
@@ -126,7 +140,7 @@ pub fn reconstruction(gram: &Tensor, reducer: &Reducer, unit_dim: usize, alpha: 
             let g_ph = ops::gather_rows(gram, idx); // [K, H] = Mᵀ G
             let g_pp = ops::gather_cols(&g_ph, idx); // [K, K]
             let lambda = alpha * mean_diag(&g_pp);
-            ridge_reconstruction(&g_pp, &g_ph, lambda)
+            ridge_reconstruction_with(&g_pp, &g_ph, lambda, workers)
         }
         Reducer::Fold { .. } => {
             let m = lifted.matrix(h); // [H, K]
@@ -134,7 +148,7 @@ pub fn reconstruction(gram: &Tensor, reducer: &Reducer, unit_dim: usize, alpha: 
             let g_pp = ops::matmul(&ops::transpose(&m), &gm); // [K, K]
             let g_ph = ops::transpose(&gm); // [K, H]
             let lambda = alpha * mean_diag(&g_pp);
-            ridge_reconstruction(&g_pp, &g_ph, lambda)
+            ridge_reconstruction_with(&g_pp, &g_ph, lambda, workers)
         }
     }
 }

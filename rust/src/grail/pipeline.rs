@@ -510,19 +510,31 @@ where
             Method::RandomFold => {
                 ReductionPlan::bare(fold::random_fold(&info, keep, &mut rng))
             }
-            Method::Baseline(b) => {
-                baseline_plan(b, &info, &stats, &l1, &l2, &consumer, keep, &mut rng)
-            }
+            // Solver fan-out gets `plan.workers` (0 = auto) rather
+            // than the resolved count: auto keeps the solver's
+            // small-system serial threshold, an explicit pin bounds it.
+            Method::Baseline(b) => baseline_plan(
+                b,
+                &info,
+                &stats,
+                &l1,
+                &l2,
+                &consumer,
+                keep,
+                plan.workers,
+                &mut rng,
+            ),
         };
 
         // --- optional GRAIL compensation: keep the selection, replace
         // the weight-space update with the closed-form reconstruction.
         if policy.grail {
-            let b = super::reconstruction(
+            let b = super::reconstruction_with(
                 &stats.gram,
                 &red_plan.reducer,
                 info.unit_dim,
                 policy.alpha,
+                plan.workers,
             );
             red_plan.compensation = Some(b);
             red_plan.consumer_override = None;

@@ -369,6 +369,14 @@ fn parse_rules(cfg: &Config) -> Result<Vec<PolicyRule>> {
             if range.len() != 2 || range[0] < 0.0 || range[1] < range[0] {
                 bail!("rule.{n}.match_depth: expected [lo, hi] with 0 <= lo <= hi");
             }
+            // Depth bounds are site indices; a fractional bound would
+            // silently truncate (`[0, 2.9]` behaving as `[0, 2]`), so
+            // reject it outright.
+            for &v in &range {
+                if v.fract() != 0.0 || v > usize::MAX as f64 {
+                    bail!("rule.{n}.match_depth: bound {v} is not an integer site index");
+                }
+            }
             matcher.depth = Some((range[0] as usize, range[1] as usize));
         }
         let mut set = PolicyOverrides::default();
@@ -604,16 +612,43 @@ fn allocate_by_sensitivity(
 
 /// Minimal glob: `*` matches any substring (including empty), `?` any
 /// single character; everything else is literal. Site ids are ASCII.
+///
+/// Iterative two-pointer wildcard match: on a mismatch after a `*`,
+/// the star's match greedily absorbs one more input character and the
+/// tail retries from just past the star. Each retry advances the
+/// star's anchor, so the walk is O(|pattern|·|s|) worst case and uses
+/// no recursion — the previous backtracking-recursive version was
+/// exponential on patterns like `*a*a*a*a*` against non-matching ids
+/// and recursed O(|s|) deep (a stack-overflow risk on the long site
+/// ids deep models produce).
 pub fn glob_match(pattern: &str, s: &str) -> bool {
-    fn rec(p: &[u8], s: &[u8]) -> bool {
-        match p.first() {
-            None => s.is_empty(),
-            Some(b'*') => rec(&p[1..], s) || (!s.is_empty() && rec(p, &s[1..])),
-            Some(b'?') => !s.is_empty() && rec(&p[1..], &s[1..]),
-            Some(&c) => s.first() == Some(&c) && rec(&p[1..], &s[1..]),
+    let p = pattern.as_bytes();
+    let t = s.as_bytes();
+    let (mut pi, mut ti) = (0usize, 0usize);
+    // Most recent `*` in the pattern and the input position its match
+    // currently ends at.
+    let mut star: Option<(usize, usize)> = None;
+    while ti < t.len() {
+        // `*` must be tested first: a literal `*` byte in the input
+        // would otherwise satisfy the equality branch and silently
+        // demote the wildcard to a one-character literal.
+        if pi < p.len() && p[pi] == b'*' {
+            star = Some((pi, ti));
+            pi += 1;
+        } else if pi < p.len() && (p[pi] == b'?' || p[pi] == t[ti]) {
+            pi += 1;
+            ti += 1;
+        } else if let Some((sp, st)) = star {
+            // Backtrack: widen the star's match by one character.
+            star = Some((sp, st + 1));
+            pi = sp + 1;
+            ti = st + 1;
+        } else {
+            return false;
         }
     }
-    rec(pattern.as_bytes(), s.as_bytes())
+    // Only trailing stars may remain unconsumed.
+    p[pi..].iter().all(|&c| c == b'*')
 }
 
 #[cfg(test)]
@@ -646,6 +681,48 @@ mod tests {
         assert!(glob_match("block?.mlp", "block3.mlp"));
         assert!(!glob_match("block?.mlp", "block12.mlp"));
         assert!(glob_match("fc1>fc2", "fc1>fc2"));
+    }
+
+    #[test]
+    fn glob_multi_star_patterns() {
+        assert!(glob_match("*a*b*", "xxaxxbxx"));
+        assert!(glob_match("*a*b*", "ab"));
+        assert!(!glob_match("*a*b*", "xxbxxaxx"));
+        assert!(glob_match("**", "anything"));
+        assert!(glob_match("a**b", "ab"));
+        assert!(glob_match("a**b", "a123b"));
+        assert!(!glob_match("a*b", "a"));
+        assert!(glob_match("*.mlp", "encoder.block17.layer.3.mlp"));
+        assert!(!glob_match("*.mlp", "encoder.block17.layer.3.attn"));
+        assert!(glob_match("block*.*.proj?", "block9.attn.proj2"));
+        // `?` must not match the empty string, even after a star.
+        assert!(!glob_match("*?", ""));
+        assert!(glob_match("*?", "x"));
+        // A literal `*` byte in the *input* must not demote a pattern
+        // wildcard to a one-character literal (branch-order regression).
+        assert!(glob_match("*b", "*ab"));
+        assert!(glob_match("*", "**"));
+        assert!(!glob_match("?b", "*a"));
+    }
+
+    #[test]
+    fn glob_pathological_pattern_is_fast() {
+        // Regression: the recursive matcher was exponential here —
+        // `*a*a*a*…` against a long all-`a` id that fails only at the
+        // final literal forced ~2^k backtracks (effectively a hang) and
+        // recursed O(|id|) deep. The iterative matcher is O(p·s).
+        let id = "a".repeat(4000) + "b";
+        let pattern = "*a".repeat(24) + "*c";
+        let t0 = std::time::Instant::now();
+        assert!(!glob_match(&pattern, &id));
+        // Matching variant of the same shape, same budget.
+        let pattern_ok = "*a".repeat(24) + "*b";
+        assert!(glob_match(&pattern_ok, &id));
+        assert!(
+            t0.elapsed() < std::time::Duration::from_millis(500),
+            "pathological glob took {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]
@@ -878,6 +955,23 @@ grail = false
 
         let bad_rule_key = Config::parse("[rule.0]\nratoi = 0.5").unwrap();
         assert!(CompressionSpec::from_config(&bad_rule_key).is_err());
+    }
+
+    #[test]
+    fn fractional_match_depth_is_rejected() {
+        // Regression: `[0, 2.9]` used to silently truncate to `[0, 2]`.
+        let frac_hi = Config::parse("[rule.0]\nmatch_depth = [0, 2.9]\nratio = 0.1").unwrap();
+        let err = CompressionSpec::from_config(&frac_hi).unwrap_err().to_string();
+        assert!(err.contains("not an integer"), "{err}");
+        assert!(err.contains("2.9"), "{err}");
+
+        let frac_lo = Config::parse("[rule.0]\nmatch_depth = [0.5, 3]\nratio = 0.1").unwrap();
+        assert!(CompressionSpec::from_config(&frac_lo).is_err());
+
+        // Integral bounds still parse.
+        let ok = Config::parse("[rule.0]\nmatch_depth = [0, 3]\nratio = 0.1").unwrap();
+        let spec = CompressionSpec::from_config(&ok).unwrap();
+        assert_eq!(spec.rules[0].matcher.depth, Some((0, 3)));
     }
 
     #[test]

@@ -1,0 +1,563 @@
+//! Blocked dense SPD solve engine.
+//!
+//! The GRAIL ridge system `B = G_PHᵀ (G_PP + λI)⁻¹` is solved once per
+//! site, and at depth the per-site solve is the dominant serial cost of
+//! the (now O(L)) closed loop. The scalar triple-loop factorization in
+//! [`super::Cholesky`] and its column-at-a-time `solve_multi` leave all
+//! of the available locality on the table, so this module supplies the
+//! production path:
+//!
+//! - **Right-looking panel Cholesky** ([`BlockedCholesky::factor`]):
+//!   a narrow panel is factored with the scalar kernel, and the O(n³)
+//!   trailing update runs through the shared GEMM kernels
+//!   ([`ops::gemm_nt_acc_f64`]) in cache-sized column blocks.
+//! - **Blocked TRSM** — forward/back substitution processes all right-
+//!   hand sides in column panels ([`RHS_PANEL`] wide): the inner loops
+//!   are contiguous panel-row axpys plus GEMM panel updates
+//!   ([`ops::gemm_acc_f64`] / [`ops::gemm_tn_acc_f64`]) instead of one
+//!   strided column extraction per `solve_vec` call.
+//! - **Parallel RHS fan-out** — panels are independent and write
+//!   disjoint output columns, so [`BlockedCholesky::solve_multi`] fans
+//!   them over [`run_grid`] workers once the system is big enough.
+//!   Per-panel arithmetic never depends on the worker count, so results
+//!   are bit-identical at any parallelism (the staged/rescan equality
+//!   contract in `rust/tests/staged.rs` relies on this).
+//!
+//! Everything runs in f64 internally (same precision as the scalar
+//! reference, which stays available as
+//! [`super::solve_spd_multi_ref`] for equivalence tests); only the
+//! summation order differs.
+
+use crate::coordinator::scheduler::{default_threads, run_grid};
+use crate::tensor::{ops, Tensor};
+use anyhow::{bail, Result};
+
+/// Panel width of the right-looking factorization. Sized so one panel
+/// (`n × FACTOR_BLOCK` of f64) stays L2-resident for the Gram sizes the
+/// pipeline produces (n up to ~1k).
+pub const FACTOR_BLOCK: usize = 48;
+
+/// Column-panel width of the multi-RHS substitution: the in-flight
+/// panel (`n × RHS_PANEL` of f64) is the working set of both sweeps.
+pub const RHS_PANEL: usize = 32;
+
+/// Minimum substitution flop volume (≈ `2·n²·m`) before `solve_multi`
+/// fans RHS panels over worker threads; below this the scoped-thread
+/// spawn overhead dominates the solve itself.
+const PARALLEL_MIN_FLOPS: f64 = 4e6;
+
+/// Lower-triangular Cholesky factor `L` with `L·Lᵀ = A` (A symmetric
+/// positive definite), factored by panels. Stored dense row-major in
+/// f64 with the strict upper triangle zeroed.
+pub struct BlockedCholesky {
+    n: usize,
+    l: Vec<f64>,
+}
+
+impl BlockedCholesky {
+    /// Factor `a` (must be square & SPD). Fails on non-positive pivots.
+    pub fn factor(a: &Tensor) -> Result<Self> {
+        let n = a.dim(0);
+        if a.dim(1) != n {
+            bail!("cholesky: matrix not square: {:?}", a.shape());
+        }
+        let mut l = vec![0.0f64; n * n];
+        load_lower(a.data(), &mut l, n, 0.0);
+        factor_in_place(&mut l, n)?;
+        Ok(BlockedCholesky { n, l })
+    }
+
+    /// Factor with escalating diagonal jitter: tries `a`, then
+    /// `a + jitter·scale·I` with jitter ∈ {1e-8, 1e-6, ...} where
+    /// `scale` is the mean diagonal. One work buffer is reused across
+    /// retries, and the final error reports the first pivot failure.
+    pub fn factor_jittered(a: &Tensor) -> Result<Self> {
+        let n = a.dim(0);
+        if a.dim(1) != n {
+            bail!("cholesky: matrix not square: {:?}", a.shape());
+        }
+        let mut l = vec![0.0f64; n * n];
+        load_lower(a.data(), &mut l, n, 0.0);
+        let first_err = match factor_in_place(&mut l, n) {
+            Ok(()) => return Ok(BlockedCholesky { n, l }),
+            Err(e) => e,
+        };
+        // Jitter is computed in f32 to mirror the scalar reference
+        // (`add_diag` on the f32 matrix), so both paths escalate through
+        // identical retry matrices.
+        let scale = super::mean_diag(a).abs().max(1e-12);
+        for e in [1e-8f32, 1e-6, 1e-4, 1e-2, 1.0] {
+            load_lower(a.data(), &mut l, n, e * scale);
+            if factor_in_place(&mut l, n).is_ok() {
+                return Ok(BlockedCholesky { n, l });
+            }
+        }
+        bail!("cholesky: matrix not factorizable even with jitter (first failure: {first_err})")
+    }
+
+    /// System size `n`.
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A x = b` for one right-hand side (single-panel path — no
+    /// worker fan-out, cheap enough for the OBS inner loops).
+    pub fn solve_vec(&self, b: &[f32]) -> Vec<f32> {
+        assert_eq!(b.len(), self.n);
+        let mut y: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+        solve_panel(&self.l, self.n, &mut y, 1);
+        y.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Solve `A X = B` where `b: [n, m]` holds the right-hand sides as
+    /// columns (*rows are equations*): returns `X: [n, m]`. RHS panels
+    /// run on scheduler workers when the system is large enough.
+    pub fn solve_multi(&self, b: &Tensor) -> Tensor {
+        self.solve_multi_with(b, 0)
+    }
+
+    /// [`solve_multi`](Self::solve_multi) with an explicit worker
+    /// count (`0` = auto). The result is bit-identical for every
+    /// `workers` value: panels are computed independently and written
+    /// to disjoint output columns.
+    pub fn solve_multi_with(&self, b: &Tensor, workers: usize) -> Tensor {
+        let (n, m) = (self.n, b.dim(1));
+        assert_eq!(b.dim(0), n, "rhs rows must match system size");
+        let panels = self.solve_panels(b, workers);
+        let mut out = Tensor::zeros(&[n, m]);
+        let od = out.data_mut();
+        for ((c0, pw), y) in panels {
+            for i in 0..n {
+                let row = &y[i * pw..(i + 1) * pw];
+                let dst = &mut od[i * m + c0..i * m + c0 + pw];
+                for (d, &v) in dst.iter_mut().zip(row) {
+                    *d = v as f32;
+                }
+            }
+        }
+        out
+    }
+
+    /// Solve `A X = B` and return `Xᵀ: [m, n]` directly — each solved
+    /// panel is transposed while still cache-resident, so callers that
+    /// want the transposed solution (the ridge reconstruction's
+    /// `B = Zᵀ`) never pay a full-matrix transpose copy.
+    pub fn solve_multi_t(&self, b: &Tensor) -> Tensor {
+        self.solve_multi_t_with(b, 0)
+    }
+
+    /// [`solve_multi_t`](Self::solve_multi_t) with an explicit worker
+    /// count (`0` = auto) — bit-identical at every `workers` value.
+    pub fn solve_multi_t_with(&self, b: &Tensor, workers: usize) -> Tensor {
+        let (n, m) = (self.n, b.dim(1));
+        assert_eq!(b.dim(0), n, "rhs rows must match system size");
+        let panels = self.solve_panels(b, workers);
+        let mut out = Tensor::zeros(&[m, n]);
+        let od = out.data_mut();
+        for ((c0, pw), y) in panels {
+            for j in 0..pw {
+                let dst = &mut od[(c0 + j) * n..(c0 + j + 1) * n];
+                for (i, d) in dst.iter_mut().enumerate() {
+                    *d = y[i * pw + j] as f32;
+                }
+            }
+        }
+        out
+    }
+
+    /// Solve every RHS panel, in parallel when worthwhile. Returns
+    /// `((c0, pw), solved panel)` in ascending `c0` order.
+    #[allow(clippy::type_complexity)]
+    fn solve_panels(&self, b: &Tensor, workers: usize) -> Vec<((usize, usize), Vec<f64>)> {
+        let (n, m) = (self.n, b.dim(1));
+        let mut jobs: Vec<(usize, usize)> = Vec::new();
+        let mut c0 = 0;
+        while c0 < m {
+            let pw = RHS_PANEL.min(m - c0);
+            jobs.push((c0, pw));
+            c0 += pw;
+        }
+        let flops = 2.0 * (n as f64) * (n as f64) * (m as f64);
+        let threads = if workers != 0 {
+            workers
+        } else if flops < PARALLEL_MIN_FLOPS {
+            1
+        } else {
+            default_threads()
+        };
+        if threads <= 1 || jobs.len() <= 1 {
+            return jobs
+                .into_iter()
+                .map(|(c0, pw)| ((c0, pw), self.solve_one_panel(b, c0, pw)))
+                .collect();
+        }
+        let solved = run_grid(jobs.clone(), threads, |_, &(c0, pw)| {
+            self.solve_one_panel(b, c0, pw)
+        });
+        jobs.into_iter().zip(solved).collect()
+    }
+
+    /// Pack RHS columns `[c0, c0+pw)` into an `[n, pw]` f64 panel and
+    /// run both substitution sweeps on it.
+    fn solve_one_panel(&self, b: &Tensor, c0: usize, pw: usize) -> Vec<f64> {
+        let (n, m) = (self.n, b.dim(1));
+        let bd = b.data();
+        let mut y = vec![0.0f64; n * pw];
+        for i in 0..n {
+            let src = &bd[i * m + c0..i * m + c0 + pw];
+            let dst = &mut y[i * pw..(i + 1) * pw];
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = v as f64;
+            }
+        }
+        solve_panel(&self.l, n, &mut y, pw);
+        y
+    }
+
+    /// log-determinant of A (2·Σ log Lᵢᵢ) — used by tests/diagnostics.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n).map(|i| self.l[i * self.n + i].ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// Copy the lower triangle of the f32 matrix `src` (n×n row-major)
+/// into the f64 work buffer, zero the strict upper triangle, and add
+/// `jitter` to the diagonal *in f32* (matching the scalar reference's
+/// `add_diag`-then-widen semantics). Overwrites every entry, so the
+/// buffer can be reused across jitter retries.
+fn load_lower(src: &[f32], dst: &mut [f64], n: usize, jitter: f32) {
+    for i in 0..n {
+        let row = &mut dst[i * n..(i + 1) * n];
+        let srow = &src[i * n..(i + 1) * n];
+        for j in 0..i {
+            row[j] = srow[j] as f64;
+        }
+        row[i] = (srow[i] + jitter) as f64;
+        row[i + 1..].fill(0.0);
+    }
+}
+
+/// Right-looking panel factorization of the lower triangle of `l`
+/// (n×n row-major f64), in place. On success `l` holds `L` with the
+/// strict upper triangle zeroed; fails on the first non-positive pivot.
+fn factor_in_place(l: &mut [f64], n: usize) -> Result<()> {
+    let nb = FACTOR_BLOCK;
+    // Reused packed copy of the sub-diagonal panel (trailing rows ×
+    // panel width) — gives the GEMM kernels contiguous operands and
+    // sidesteps aliasing with the trailing destination.
+    let mut panel: Vec<f64> = Vec::new();
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = nb.min(n - j0);
+        let trail = j0 + jb;
+        // 1. Scalar factor of the diagonal block (its entries already
+        //    carry every previous panel's trailing update).
+        for i in j0..trail {
+            for j in j0..=i {
+                let mut s = l[i * n + j];
+                for k in j0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        bail!("cholesky: non-positive pivot {s:.3e} at {i}");
+                    }
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        // 2. Panel TRSM: rows below the block solve `X · L11ᵀ = A21`.
+        for i in trail..n {
+            for j in j0..trail {
+                let mut s = l[i * n + j];
+                for k in j0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+        // 3. Trailing update `A22 -= P·Pᵀ` through the GEMM kernel, in
+        //    column blocks over the lower triangle.
+        if trail < n {
+            let m_trail = n - trail;
+            panel.clear();
+            panel.reserve(m_trail * jb);
+            for i in trail..n {
+                panel.extend_from_slice(&l[i * n + j0..i * n + j0 + jb]);
+            }
+            let mut c0 = trail;
+            while c0 < n {
+                let cb = nb.min(n - c0);
+                let a_off = (c0 - trail) * jb;
+                ops::gemm_nt_acc_f64(
+                    &panel[a_off..],
+                    jb,
+                    &panel[a_off..a_off + cb * jb],
+                    jb,
+                    &mut l[c0 * n + c0..],
+                    n,
+                    n - c0,
+                    jb,
+                    cb,
+                    -1.0,
+                );
+                c0 += cb;
+            }
+        }
+        j0 = trail;
+    }
+    // The trailing updates touched a few upper-triangle entries inside
+    // diagonal blocks; scrub them so `l` is a clean lower factor.
+    for i in 0..n {
+        l[i * n + i + 1..(i + 1) * n].fill(0.0);
+    }
+    Ok(())
+}
+
+/// Blocked forward + back substitution of `L·Lᵀ·X = Y` on one packed
+/// column panel `y` (`[n, pw]` row-major f64, solved in place).
+fn solve_panel(l: &[f64], n: usize, y: &mut [f64], pw: usize) {
+    let nb = FACTOR_BLOCK;
+    // Forward sweep: L z = y.
+    let mut i0 = 0;
+    while i0 < n {
+        let ib = nb.min(n - i0);
+        // Diagonal block: scalar forward solve over contiguous rows.
+        for i in i0..i0 + ib {
+            let (above, cur) = y.split_at_mut(i * pw);
+            let yi = &mut cur[..pw];
+            for k in i0..i {
+                let c = l[i * n + k];
+                if c != 0.0 {
+                    let yk = &above[k * pw..(k + 1) * pw];
+                    for (v, &u) in yi.iter_mut().zip(yk) {
+                        *v -= c * u;
+                    }
+                }
+            }
+            let d = l[i * n + i];
+            for v in yi.iter_mut() {
+                *v /= d;
+            }
+        }
+        // Rows below the block absorb it in one GEMM panel update.
+        if i0 + ib < n {
+            let (top, bottom) = y.split_at_mut((i0 + ib) * pw);
+            ops::gemm_acc_f64(
+                &l[(i0 + ib) * n + i0..],
+                n,
+                &top[i0 * pw..],
+                pw,
+                bottom,
+                pw,
+                n - i0 - ib,
+                ib,
+                pw,
+                -1.0,
+            );
+        }
+        i0 += ib;
+    }
+    // Back sweep: Lᵀ x = z, bottom-up.
+    let mut i1 = n;
+    while i1 > 0 {
+        let ib = nb.min(i1);
+        let i0 = i1 - ib;
+        // Contributions of the already-solved rows below this block,
+        // applied through the transposed GEMM kernel.
+        if i1 < n {
+            let (top, bottom) = y.split_at_mut(i1 * pw);
+            ops::gemm_tn_acc_f64(
+                &l[i1 * n + i0..],
+                n,
+                bottom,
+                pw,
+                &mut top[i0 * pw..],
+                pw,
+                ib,
+                n - i1,
+                pw,
+                -1.0,
+            );
+        }
+        // Diagonal block: scalar back solve (Lᵀ is upper-triangular).
+        for i in (i0..i1).rev() {
+            let (cur, below) = y.split_at_mut((i + 1) * pw);
+            let yi = &mut cur[i * pw..];
+            for k in (i + 1)..i1 {
+                let c = l[k * n + i];
+                if c != 0.0 {
+                    let xk = &below[(k - i - 1) * pw..(k - i) * pw];
+                    for (v, &u) in yi.iter_mut().zip(xk) {
+                        *v -= c * u;
+                    }
+                }
+            }
+            let d = l[i * n + i];
+            for v in yi.iter_mut() {
+                *v /= d;
+            }
+        }
+        i1 = i0;
+    }
+}
+
+/// Solve `A x = b` (SPD `A`), with jitter fallback.
+pub fn solve_spd(a: &Tensor, b: &[f32]) -> Result<Vec<f32>> {
+    Ok(BlockedCholesky::factor_jittered(a)?.solve_vec(b))
+}
+
+/// Solve `A X = B` (SPD `A`, `B: [n,m]`) with the blocked engine, with
+/// jitter fallback. Panics only on shape errors; numerical failure
+/// falls back to jitter and is practically unreachable for `G + λI`
+/// with λ > 0.
+pub fn solve_spd_multi(a: &Tensor, b: &Tensor) -> Tensor {
+    BlockedCholesky::factor_jittered(a)
+        .expect("SPD solve failed even with jitter")
+        .solve_multi(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{solve_spd_multi_ref, Cholesky};
+    use crate::rng::Pcg64;
+    use crate::tensor::ops::{gram, matmul};
+
+    fn randn(r: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        r.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    fn spd(r: &mut Pcg64, n: usize) -> Tensor {
+        let x = randn(r, &[2 * n + 3, n]);
+        let mut g = gram(&x);
+        super::super::add_diag(&mut g, 1.0);
+        g
+    }
+
+    #[test]
+    fn factor_solve_residual_small() {
+        let mut r = Pcg64::seed(31);
+        for &n in &[1usize, 5, 47, 48, 49, 130] {
+            let a = spd(&mut r, n);
+            let b = randn(&mut r, &[n, 7]);
+            let x = BlockedCholesky::factor(&a).unwrap().solve_multi(&b);
+            let ax = matmul(&a, &x);
+            let scale = a.frobenius().max(1.0);
+            let res = ax.max_abs_diff(&b);
+            assert!(res < 1e-3 * scale, "n={n}: residual {res}");
+        }
+    }
+
+    #[test]
+    fn matches_scalar_reference_across_block_boundaries() {
+        let mut r = Pcg64::seed(32);
+        // Below, at, and above FACTOR_BLOCK, plus multi-panel sizes.
+        for &n in &[3usize, FACTOR_BLOCK - 1, FACTOR_BLOCK, FACTOR_BLOCK + 1, 100] {
+            for &m in &[1usize, RHS_PANEL, RHS_PANEL + 5] {
+                let a = spd(&mut r, n);
+                let b = randn(&mut r, &[n, m]);
+                let fast = solve_spd_multi(&a, &b);
+                let slow = solve_spd_multi_ref(&a, &b);
+                let diff = fast.max_abs_diff(&slow);
+                assert!(diff < 1e-4, "n={n} m={m}: {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_solve_is_transpose() {
+        let mut r = Pcg64::seed(33);
+        let a = spd(&mut r, 70);
+        let b = randn(&mut r, &[70, 37]);
+        let chol = BlockedCholesky::factor(&a).unwrap();
+        let x = chol.solve_multi(&b);
+        let xt = chol.solve_multi_t(&b);
+        assert_eq!(xt.shape(), &[37, 70]);
+        for i in 0..70 {
+            for j in 0..37 {
+                assert_eq!(x.at2(i, j).to_bits(), xt.at2(j, i).to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_bits() {
+        let mut r = Pcg64::seed(34);
+        let a = spd(&mut r, 96);
+        let b = randn(&mut r, &[96, 200]);
+        let chol = BlockedCholesky::factor(&a).unwrap();
+        let base = chol.solve_multi_with(&b, 1);
+        for workers in [2usize, 3, 8] {
+            let x = chol.solve_multi_with(&b, workers);
+            assert_eq!(base, x, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn solve_vec_matches_multi_column() {
+        let mut r = Pcg64::seed(35);
+        let a = spd(&mut r, 60);
+        let b = randn(&mut r, &[60, 3]);
+        let chol = BlockedCholesky::factor(&a).unwrap();
+        let x = chol.solve_multi(&b);
+        for j in 0..3 {
+            let col: Vec<f32> = (0..60).map(|i| b.at2(i, j)).collect();
+            let xj = chol.solve_vec(&col);
+            for i in 0..60 {
+                assert!((x.at2(i, j) - xj[i]).abs() < 1e-5, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_rescues_rank_deficient_gram() {
+        // N < H Gram: plain factor fails, jitter works — and the
+        // rescued solve stays close to the scalar reference.
+        let mut r = Pcg64::seed(36);
+        let x = randn(&mut r, &[5, 12]);
+        let g = gram(&x);
+        let err = BlockedCholesky::factor(&g).unwrap_err().to_string();
+        assert!(err.contains("pivot"), "{err}");
+        let chol = BlockedCholesky::factor_jittered(&g).unwrap();
+        assert!(chol.logdet().is_finite());
+        let b = randn(&mut r, &[12, 4]);
+        let fast = chol.solve_multi(&b);
+        let slow = solve_spd_multi_ref(&g, &b);
+        assert!(fast.all_finite() && slow.all_finite());
+    }
+
+    #[test]
+    fn jitter_failure_reports_first_error() {
+        // A matrix with a negative diagonal that no jitter level fixes.
+        let a = Tensor::from_vec(&[2, 2], vec![-1e9, 0.0, 0.0, -1e9]);
+        let err = BlockedCholesky::factor_jittered(&a).unwrap_err().to_string();
+        assert!(err.contains("first failure"), "{err}");
+        assert!(err.contains("pivot"), "{err}");
+    }
+
+    #[test]
+    fn logdet_matches_scalar() {
+        let mut r = Pcg64::seed(37);
+        let a = spd(&mut r, 64);
+        let fast = BlockedCholesky::factor(&a).unwrap().logdet();
+        let slow = Cholesky::factor(&a).unwrap().logdet();
+        assert!((fast - slow).abs() < 1e-6 * (1.0 + slow.abs()), "{fast} vs {slow}");
+    }
+
+    #[test]
+    fn empty_and_unit_systems() {
+        let a = Tensor::eye(1);
+        let b = Tensor::from_vec(&[1, 1], vec![4.0]);
+        let x = BlockedCholesky::factor(&a).unwrap().solve_multi(&b);
+        assert_eq!(x.data(), &[4.0]);
+        let e = Tensor::zeros(&[0, 0]);
+        let eb = Tensor::zeros(&[0, 3]);
+        let x = BlockedCholesky::factor(&e).unwrap().solve_multi(&eb);
+        assert_eq!(x.shape(), &[0, 3]);
+    }
+}

@@ -1,13 +1,20 @@
-//! Cholesky factorization and SPD solves (f64 internal precision).
+//! Scalar Cholesky factorization and SPD solves (f64 internal
+//! precision) — the *reference* implementation.
 //!
 //! Gram matrices from short calibration runs are frequently
 //! near-singular (N < H or strongly correlated channels); the paper
 //! handles this with the ridge term. We additionally retry with
 //! escalating diagonal jitter if the factorization still breaks down,
 //! mirroring standard practice.
+//!
+//! The production solve path is the blocked engine in
+//! [`super::BlockedCholesky`]; this scalar triple-loop version stays as
+//! the independently-simple oracle behind
+//! [`solve_spd_multi_ref`] that the equivalence tests
+//! (`rust/tests/blocked_solver.rs`) compare against.
 
 use crate::tensor::Tensor;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Lower-triangular Cholesky factor `L` with `L·Lᵀ = A` (A symmetric
 /// positive definite). Stored dense row-major in f64.
@@ -23,43 +30,34 @@ impl Cholesky {
         if a.dim(1) != n {
             bail!("cholesky: matrix not square: {:?}", a.shape());
         }
-        let ad = a.data();
         let mut l = vec![0.0f64; n * n];
-        for i in 0..n {
-            for j in 0..=i {
-                let mut s = ad[i * n + j] as f64;
-                for k in 0..j {
-                    s -= l[i * n + k] * l[j * n + k];
-                }
-                if i == j {
-                    if s <= 0.0 || !s.is_finite() {
-                        bail!("cholesky: non-positive pivot {s:.3e} at {i}");
-                    }
-                    l[i * n + i] = s.sqrt();
-                } else {
-                    l[i * n + j] = s / l[j * n + j];
-                }
-            }
-        }
+        factor_into(a.data(), n, 0.0, &mut l)?;
         Ok(Cholesky { n, l })
     }
 
     /// Factor with escalating diagonal jitter: tries `a`, then
     /// `a + jitter·scale·I` with jitter ∈ {1e-8, 1e-6, ...} where
-    /// `scale` is the mean diagonal.
+    /// `scale` is the mean diagonal. The factor buffer is allocated
+    /// once and reused across retries, and the final error reports the
+    /// *first* pivot failure (the informative one — later retries fail
+    /// on increasingly perturbed matrices).
     pub fn factor_jittered(a: &Tensor) -> Result<Self> {
-        if let Ok(c) = Self::factor(a) {
-            return Ok(c);
+        let n = a.dim(0);
+        if a.dim(1) != n {
+            bail!("cholesky: matrix not square: {:?}", a.shape());
         }
+        let mut l = vec![0.0f64; n * n];
+        let first_err = match factor_into(a.data(), n, 0.0, &mut l) {
+            Ok(()) => return Ok(Cholesky { n, l }),
+            Err(e) => e,
+        };
         let scale = super::mean_diag(a).abs().max(1e-12);
         for e in [1e-8f32, 1e-6, 1e-4, 1e-2, 1.0] {
-            let mut aj = a.clone();
-            super::add_diag(&mut aj, e * scale);
-            if let Ok(c) = Self::factor(&aj) {
-                return Ok(c);
+            if factor_into(a.data(), n, e * scale, &mut l).is_ok() {
+                return Ok(Cholesky { n, l });
             }
         }
-        bail!("cholesky: matrix not factorizable even with jitter")
+        bail!("cholesky: matrix not factorizable even with jitter (first failure: {first_err})")
     }
 
     /// Solve `A x = b` for one right-hand side.
@@ -91,13 +89,13 @@ impl Cholesky {
 
     /// Solve `A X = B` column-by-column where `b: [n, m]` holds the
     /// right-hand sides as *rows are equations*: returns `X: [n, m]`.
+    /// O(n²) per column with strided extraction — the blocked engine's
+    /// panel TRSM replaces this on the hot path.
     pub fn solve_multi(&self, b: &Tensor) -> Tensor {
         let n = self.n;
         assert_eq!(b.dim(0), n, "rhs rows must match system size");
         let m = b.dim(1);
         let mut out = Tensor::zeros(&[n, m]);
-        // Extract column j, solve, write back. m is at most H (≤ a few
-        // hundred here), so the transpose traffic is negligible.
         let mut col = vec![0.0f32; n];
         for j in 0..m {
             for i in 0..n {
@@ -117,15 +115,40 @@ impl Cholesky {
     }
 }
 
-/// Solve `A x = b` (SPD `A`), with jitter fallback.
-pub fn solve_spd(a: &Tensor, b: &[f32]) -> Result<Vec<f32>> {
-    Ok(Cholesky::factor_jittered(a)?.solve_vec(b))
+/// Scalar left-looking factorization of `a + jitter·I` into `l`
+/// (overwritten in full, so one buffer serves every jitter retry). The
+/// jitter is added in f32 — identical retry matrices to the old
+/// clone-then-`add_diag` path and to the blocked engine.
+fn factor_into(ad: &[f32], n: usize, jitter: f32, l: &mut [f64]) -> Result<()> {
+    l.fill(0.0);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = if i == j {
+                (ad[i * n + i] + jitter) as f64
+            } else {
+                ad[i * n + j] as f64
+            };
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return Err(anyhow!("cholesky: non-positive pivot {s:.3e} at {i}"));
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(())
 }
 
-/// Solve `A X = B` (SPD `A`, `B: [n,m]`), with jitter fallback. Panics
-/// only on shape errors; numerical failure falls back to jitter and is
-/// practically unreachable for `G + λI` with λ > 0.
-pub fn solve_spd_multi(a: &Tensor, b: &Tensor) -> Tensor {
+/// Solve `A X = B` (SPD `A`, `B: [n,m]`) with the scalar reference
+/// solver, with jitter fallback. Kept for tolerance-based equivalence
+/// tests against the blocked engine
+/// ([`super::solve_spd_multi`]); not a hot path.
+pub fn solve_spd_multi_ref(a: &Tensor, b: &Tensor) -> Tensor {
     Cholesky::factor_jittered(a)
         .expect("SPD solve failed even with jitter")
         .solve_multi(b)
@@ -169,7 +192,7 @@ mod tests {
         let mut r = Pcg64::seed(22);
         let a = spd(&mut r, 12);
         let b: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect();
-        let x = solve_spd(&a, &b).unwrap();
+        let x = Cholesky::factor_jittered(&a).unwrap().solve_vec(&b);
         let xt = Tensor::from_vec(&[12, 1], x);
         let ax = matmul(&a, &xt);
         for i in 0..12 {
@@ -183,7 +206,7 @@ mod tests {
         let a = spd(&mut r, 9);
         let mut b = Tensor::zeros(&[9, 4]);
         r.fill_normal(b.data_mut(), 1.0);
-        let x = solve_spd_multi(&a, &b);
+        let x = solve_spd_multi_ref(&a, &b);
         let c = Cholesky::factor(&a).unwrap();
         for j in 0..4 {
             let col: Vec<f32> = (0..9).map(|i| b.at2(i, j)).collect();
@@ -207,10 +230,21 @@ mod tests {
     }
 
     #[test]
+    fn hopeless_matrix_reports_first_failure() {
+        // Strongly negative diagonal: every jitter level fails, and the
+        // final error must carry the first (unjittered) pivot message.
+        let a = Tensor::from_vec(&[2, 2], vec![-1e9, 0.0, 0.0, -1e9]);
+        let err = Cholesky::factor_jittered(&a).unwrap_err().to_string();
+        assert!(err.contains("not factorizable"), "{err}");
+        assert!(err.contains("first failure"), "{err}");
+        assert!(err.contains("pivot"), "{err}");
+    }
+
+    #[test]
     fn identity_solve_is_identity() {
         let a = Tensor::eye(5);
         let b: Vec<f32> = vec![1., -2., 3., -4., 5.];
-        let x = solve_spd(&a, &b).unwrap();
+        let x = Cholesky::factor_jittered(&a).unwrap().solve_vec(&b);
         for i in 0..5 {
             assert!((x[i] - b[i]).abs() < 1e-6);
         }

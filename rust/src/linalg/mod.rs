@@ -3,12 +3,19 @@
 //! The compensation map is `B = G_PH^T (G_PP + λI)^{-1}` (paper §3.1);
 //! we never form the inverse — instead we Cholesky-factor the SPD
 //! matrix `G_PP + λI` (in f64 for stability) and solve against the
-//! right-hand sides. k-means (for folding) also lives here.
+//! right-hand sides. The production factor/solve is the blocked engine
+//! ([`BlockedCholesky`]: panel factorization with GEMM trailing
+//! updates, panel TRSM over all right-hand sides, parallel RHS
+//! fan-out); the scalar [`Cholesky`] stays as the reference oracle
+//! behind [`solve_spd_multi_ref`]. k-means (for folding) also lives
+//! here.
 
+mod blocked;
 mod cholesky;
 mod kmeans;
 
-pub use cholesky::{solve_spd, solve_spd_multi, Cholesky};
+pub use blocked::{solve_spd, solve_spd_multi, BlockedCholesky, FACTOR_BLOCK, RHS_PANEL};
+pub use cholesky::{solve_spd_multi_ref, Cholesky};
 pub use kmeans::{kmeans, KmeansResult};
 
 use crate::tensor::Tensor;
@@ -40,16 +47,32 @@ pub fn add_diag(g: &mut Tensor, lambda: f32) {
 /// `Mᵀ G`), and `lambda`, return `B: [H,K]` with
 /// `B = g_phᵀ · (g_pp + λI)^{-1}`.
 ///
-/// Solved column-block-wise: `(g_pp + λI) Z = g_ph`, then `B = Zᵀ`.
+/// Solved with the blocked engine as `(g_pp + λI) Z = g_ph`; each RHS
+/// panel is transposed into `B` while cache-resident
+/// ([`BlockedCholesky::solve_multi_t`]), so there is no full-matrix
+/// transpose+reshape copy at the end.
 pub fn ridge_reconstruction(g_pp: &Tensor, g_ph: &Tensor, lambda: f32) -> Tensor {
+    ridge_reconstruction_with(g_pp, g_ph, lambda, 0)
+}
+
+/// [`ridge_reconstruction`] with an explicit worker count for the RHS
+/// panel fan-out (`0` = auto) — the pipeline passes its resolved
+/// per-run worker budget so a `workers = 1` spec stays single-threaded
+/// through the solves too. Bit-identical at every `workers` value.
+pub fn ridge_reconstruction_with(
+    g_pp: &Tensor,
+    g_ph: &Tensor,
+    lambda: f32,
+    workers: usize,
+) -> Tensor {
     let k = g_pp.dim(0);
     assert_eq!(g_pp.dim(1), k);
     assert_eq!(g_ph.dim(0), k, "g_ph rows must equal K");
-    let h = g_ph.dim(1);
     let mut a = g_pp.clone();
     add_diag(&mut a, lambda);
-    let z = solve_spd_multi(&a, g_ph); // [K, H]
-    crate::tensor::ops::transpose(&z).reshape(&[h, k])
+    BlockedCholesky::factor_jittered(&a)
+        .expect("SPD ridge solve failed even with jitter")
+        .solve_multi_t_with(g_ph, workers) // [H, K] — B directly
 }
 
 #[cfg(test)]

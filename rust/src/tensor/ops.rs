@@ -47,6 +47,127 @@ pub fn gemm_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
     }
 }
 
+/// `C += alpha · A · B` in f64 over strided row-major views — the
+/// precision the SPD solves run at. Same ikj loop order as [`gemm_acc`]
+/// (inner loop is a contiguous axpy over rows of B and C); the explicit
+/// leading dimensions (`lda`/`ldb`/`ldc` ≥ the logical row width) let
+/// the blocked Cholesky engine ([`crate::linalg::BlockedCholesky`])
+/// address panels inside a larger factor buffer without packing copies.
+/// No sparse fast path: factor panels are dense.
+pub fn gemm_acc_f64(
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f64,
+) {
+    debug_assert!(m == 0 || (lda >= k && a.len() >= (m - 1) * lda + k));
+    debug_assert!(k == 0 || (ldb >= n && b.len() >= (k - 1) * ldb + n));
+    debug_assert!(m == 0 || (ldc >= n && c.len() >= (m - 1) * ldc + n));
+    for i in 0..m {
+        let a_row = &a[i * lda..i * lda + k];
+        let c_row = &mut c[i * ldc..i * ldc + n];
+        for (p, &a_ip) in a_row.iter().enumerate() {
+            let s = alpha * a_ip;
+            let b_row = &b[p * ldb..p * ldb + n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += s * bv;
+            }
+        }
+    }
+}
+
+/// `C += alpha · A · Bᵀ` in f64 over strided row-major views (`A:
+/// [m,k]`, `B: [n,k]`, `C: [m,n]`) — the f64/strided sibling of
+/// [`gemm_nt_acc`], with the same row-dot inner loop via [`dot_f64`].
+/// This is the trailing-update (SYRK-shaped) kernel of the blocked
+/// Cholesky: both operands are panels of the factor, traversed row-wise.
+pub fn gemm_nt_acc_f64(
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f64,
+) {
+    debug_assert!(m == 0 || (lda >= k && a.len() >= (m - 1) * lda + k));
+    debug_assert!(n == 0 || (ldb >= k && b.len() >= (n - 1) * ldb + k));
+    debug_assert!(m == 0 || (ldc >= n && c.len() >= (m - 1) * ldc + n));
+    for i in 0..m {
+        let a_row = &a[i * lda..i * lda + k];
+        let c_row = &mut c[i * ldc..i * ldc + n];
+        for (j, cv) in c_row.iter_mut().enumerate() {
+            let b_row = &b[j * ldb..j * ldb + k];
+            *cv += alpha * dot_f64(a_row, b_row);
+        }
+    }
+}
+
+/// `C += alpha · Aᵀ · B` in f64 over strided row-major views (`A:
+/// [k,m]`, `B: [k,n]`, `C: [m,n]`). Outer loop walks the shared `k`
+/// dimension so every inner access — the coefficient row of A and the
+/// axpy rows of B and C — stays contiguous; the blocked back
+/// substitution uses this to apply `Lᵀ` panels without materializing a
+/// transpose.
+pub fn gemm_tn_acc_f64(
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f64,
+) {
+    debug_assert!(k == 0 || (lda >= m && a.len() >= (k - 1) * lda + m));
+    debug_assert!(k == 0 || (ldb >= n && b.len() >= (k - 1) * ldb + n));
+    debug_assert!(m == 0 || (ldc >= n && c.len() >= (m - 1) * ldc + n));
+    for p in 0..k {
+        let a_row = &a[p * lda..p * lda + m];
+        let b_row = &b[p * ldb..p * ldb + n];
+        for (i, &a_pi) in a_row.iter().enumerate() {
+            let s = alpha * a_pi;
+            let c_row = &mut c[i * ldc..i * ldc + n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += s * bv;
+            }
+        }
+    }
+}
+
+/// f64 dot product with 4 independent accumulators (same pipelining
+/// trick as [`dot`]).
+#[inline]
+pub fn dot_f64(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        let xi = &x[c * 4..c * 4 + 4];
+        let yi = &y[c * 4..c * 4 + 4];
+        acc[0] += xi[0] * yi[0];
+        acc[1] += xi[1] * yi[1];
+        acc[2] += xi[2] * yi[2];
+        acc[3] += xi[3] * yi[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
 /// `C = A · Bᵀ` for `A: [m,k]`, `B: [n,k]` — both operands traversed
 /// row-wise, so this is the preferred layout for linear layers
 /// (`y = x Wᵀ`).
@@ -462,6 +583,100 @@ mod tests {
         // More shards than rows clamps to one row each.
         assert_eq!(split_rows(&x, 99).len(), 5);
         assert_eq!(split_rows(&x, 1).len(), 1);
+    }
+
+    /// Naive strided f64 reference: C += alpha·op(A)·op(B).
+    fn gemm_ref_f64(
+        a: &[f64],
+        lda: usize,
+        b: &[f64],
+        ldb: usize,
+        c: &mut [f64],
+        ldc: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        alpha: f64,
+        ta: bool,
+        tb: bool,
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    let av = if ta { a[p * lda + i] } else { a[i * lda + p] };
+                    let bv = if tb { b[j * ldb + p] } else { b[p * ldb + j] };
+                    s += av * bv;
+                }
+                c[i * ldc + j] += alpha * s;
+            }
+        }
+    }
+
+    #[test]
+    fn f64_kernels_match_reference_strided() {
+        let mut r = Pcg64::seed(50);
+        // Deliberately over-wide leading dimensions to exercise strides.
+        let (m, k, n) = (7usize, 5usize, 6usize);
+        let (lda, ldb, ldc) = (k + 3, n + 2, n + 4);
+        let mk: Vec<f64> = (0..m * lda).map(|_| r.normal() as f64).collect();
+        let kn: Vec<f64> = (0..k * ldb).map(|_| r.normal() as f64).collect();
+        let mut c1 = vec![0.1f64; m * ldc];
+        let mut c2 = c1.clone();
+        gemm_acc_f64(&mk, lda, &kn, ldb, &mut c1, ldc, m, k, n, 0.7);
+        gemm_ref_f64(&mk, lda, &kn, ldb, &mut c2, ldc, m, k, n, 0.7, false, false);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+
+        // nt: B is [n, k] with stride ldb >= k.
+        let ldb_nt = k + 1;
+        let nk: Vec<f64> = (0..n * ldb_nt).map(|_| r.normal() as f64).collect();
+        let mut c1 = vec![-0.3f64; m * ldc];
+        let mut c2 = c1.clone();
+        gemm_nt_acc_f64(&mk, lda, &nk, ldb_nt, &mut c1, ldc, m, k, n, -1.0);
+        gemm_ref_f64(&mk, lda, &nk, ldb_nt, &mut c2, ldc, m, k, n, -1.0, false, true);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+
+        // tn: A is [k, m] with stride lda >= m.
+        let lda_tn = m + 2;
+        let km: Vec<f64> = (0..k * lda_tn).map(|_| r.normal() as f64).collect();
+        let mut c1 = vec![0.0f64; m * ldc];
+        let mut c2 = c1.clone();
+        gemm_tn_acc_f64(&km, lda_tn, &kn, ldb, &mut c1, ldc, m, k, n, 2.5);
+        gemm_ref_f64(&km, lda_tn, &kn, ldb, &mut c2, ldc, m, k, n, 2.5, true, false);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn f64_kernels_degenerate_dims() {
+        // Zero-sized m/k/n must be no-ops, not panics.
+        let a = [1.0f64; 4];
+        let b = [2.0f64; 4];
+        let mut c = [3.0f64; 4];
+        gemm_acc_f64(&a, 2, &b, 2, &mut c, 2, 0, 2, 2, 1.0);
+        gemm_acc_f64(&a, 2, &b, 2, &mut c, 2, 2, 0, 2, 1.0);
+        gemm_nt_acc_f64(&a, 2, &b, 2, &mut c, 2, 2, 2, 0, 1.0);
+        gemm_tn_acc_f64(&a, 2, &b, 2, &mut c, 2, 2, 0, 2, 1.0);
+        assert_eq!(c, [3.0; 4]);
+        // k=1 single-column panels (the K=1 solver edge).
+        let mut c = [0.0f64; 1];
+        gemm_nt_acc_f64(&[2.0], 1, &[3.0], 1, &mut c, 1, 1, 1, 1, 1.0);
+        assert_eq!(c, [6.0]);
+    }
+
+    #[test]
+    fn dot_f64_matches_scalar() {
+        for n in 0..9 {
+            let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let y: Vec<f64> = (0..n).map(|i| (i * 2) as f64).collect();
+            let want: f64 = (0..n).map(|i| (i * i * 2) as f64).sum();
+            assert_eq!(dot_f64(&x, &y), want, "n={n}");
+        }
     }
 
     #[test]
