@@ -176,6 +176,16 @@ pub fn probe_items(task: ProbeTask, text: &SynthText, n: usize, seed: u64) -> Ve
     items
 }
 
+/// All six probe tasks' items concatenated in [`ProbeTask::ALL`] order
+/// — the aggregate suite whose accuracy `grail tune --eval` reports
+/// before/after executing a searched plan. Deterministic in `seed`.
+pub fn probe_suite(text: &SynthText, per_task: usize, seed: u64) -> Vec<ProbeItem> {
+    ProbeTask::ALL
+        .iter()
+        .flat_map(|&t| probe_items(t, text, per_task, seed))
+        .collect()
+}
+
 fn likely_next(probs: &[f32], tok: usize, vocab: usize) -> usize {
     (0..vocab)
         .max_by(|&a, &b| probs[tok * vocab + a].total_cmp(&probs[tok * vocab + b]))
@@ -297,6 +307,22 @@ mod tests {
         let items = probe_items(ProbeTask::Cloze, &text, 24, 3);
         let acc = probe_accuracy(&m, &items);
         assert!(acc < 0.8, "untrained acc={acc} suspiciously high");
+    }
+
+    #[test]
+    fn suite_concatenates_all_tasks_deterministically() {
+        let text = SynthText::new(4);
+        let a = probe_suite(&text, 4, 9);
+        let b = probe_suite(&text, 4, 9);
+        assert_eq!(a.len(), 6 * 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.candidates, y.candidates);
+            assert_eq!(x.answer, y.answer);
+        }
+        // The per-task prefix matches the standalone generator.
+        let cloze = probe_items(ProbeTask::Cloze, &text, 4, 9);
+        assert_eq!(a[0].context, cloze[0].context);
     }
 
     #[test]

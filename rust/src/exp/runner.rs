@@ -19,8 +19,10 @@ use crate::cli::Args;
 use crate::config::Config;
 use crate::coordinator::scheduler::{default_threads, run_grid};
 use crate::eval::lm_perplexity;
+use crate::eval::probes::{probe_accuracy, probe_suite};
 use crate::grail::{
-    compress_model, plan_for_model, CompressionPlan, CompressionSpec, Report,
+    compress_model, execute_plan, plan_for_model, search_plan, BudgetMode, CompressionPlan,
+    CompressionSpec, Report, SearchOutcome,
 };
 use crate::nn::models::LmBatch;
 use anyhow::{anyhow, bail, Context, Result};
@@ -181,13 +183,21 @@ pub fn resolve_job_plan(
     }
 }
 
-/// Compress `ckpt` under `spec` and evaluate it before/after.
-pub fn execute_job(
+/// What a compression job applies: resolve-and-run a spec, or execute
+/// an already-resolved plan verbatim.
+enum Compression<'a> {
+    Spec(&'a CompressionSpec),
+    Plan(&'a CompressionPlan),
+}
+
+/// Shared job scaffolding: load the checkpoint and calibration data,
+/// evaluate before, apply `how`, evaluate after.
+fn run_compression_job(
     opts: &ExpOptions,
     family: Family,
     ckpt: &str,
-    spec: &CompressionSpec,
-    spec_path: &str,
+    how: Compression<'_>,
+    label: &str,
 ) -> Result<JobOutcome> {
     let zoo = opts.zoo()?;
     let (metric, before, after, report) = if let Some(vf) = family.vision() {
@@ -196,7 +206,10 @@ pub fn execute_job(
         let test = crate::data::io::read_images(&opts.artifacts.data("vision_test.imgs"))?;
         let mut m = VisionModel::load(&zoo, vf, ckpt)?;
         let before = m.accuracy(&test);
-        let report = m.compress(&calib.x, spec);
+        let report = match how {
+            Compression::Spec(spec) => m.compress(&calib.x, spec),
+            Compression::Plan(plan) => m.execute(&calib.x, plan),
+        };
         ("acc", before, m.accuracy(&test), report)
     } else {
         let mut m = zoo.lm(ckpt)?;
@@ -206,11 +219,14 @@ pub fn execute_job(
         let eval_toks =
             crate::data::io::read_tokens(&opts.artifacts.data("text_wt2s.tokens"))?;
         let before = lm_perplexity(&m, &eval_toks, LM_SEQ, LM_EVAL_WINDOWS, 16);
-        let report = compress_model(&mut m, &calib, spec);
+        let report = match how {
+            Compression::Spec(spec) => compress_model(&mut m, &calib, spec),
+            Compression::Plan(plan) => execute_plan(&mut m, &calib, plan),
+        };
         ("ppl", before, lm_perplexity(&m, &eval_toks, LM_SEQ, LM_EVAL_WINDOWS, 16), report)
     };
     Ok(JobOutcome {
-        spec_path: spec_path.to_string(),
+        spec_path: label.to_string(),
         family,
         ckpt: ckpt.to_string(),
         metric,
@@ -218,6 +234,30 @@ pub fn execute_job(
         after,
         report,
     })
+}
+
+/// Compress `ckpt` under `spec` and evaluate it before/after.
+pub fn execute_job(
+    opts: &ExpOptions,
+    family: Family,
+    ckpt: &str,
+    spec: &CompressionSpec,
+    spec_path: &str,
+) -> Result<JobOutcome> {
+    run_compression_job(opts, family, ckpt, Compression::Spec(spec), spec_path)
+}
+
+/// Compress `ckpt` with an already-resolved plan and evaluate it
+/// before/after — the consumer of the plan TOMLs `grail tune` emits
+/// (`grail run --plan <plan.toml>`).
+pub fn execute_plan_job(
+    opts: &ExpOptions,
+    family: Family,
+    ckpt: &str,
+    plan: &CompressionPlan,
+    label: &str,
+) -> Result<JobOutcome> {
+    run_compression_job(opts, family, ckpt, Compression::Plan(plan), label)
 }
 
 /// Per-site lines + parameter summary for CLI output.
@@ -237,10 +277,44 @@ pub fn print_report(report: &Report) {
     println!("  {}", report.summary());
 }
 
-/// `grail run --spec spec.toml [--family f] [--ckpt c]`.
+/// `grail run --spec spec.toml [--family f] [--ckpt c]`, or
+/// `grail run --plan plan.toml --family f [--ckpt c]` to execute an
+/// already-resolved plan (e.g. a `grail tune` winner) verbatim.
 pub fn run_cli(args: &Args) -> Result<()> {
-    let spec_path =
-        args.opt("spec").ok_or_else(|| anyhow!("usage: grail run --spec <spec.toml>"))?;
+    if let Some(plan_path) = args.opt("plan") {
+        let opts = ExpOptions::from_args(args)?;
+        let text = std::fs::read_to_string(plan_path)
+            .with_context(|| format!("reading {plan_path}"))?;
+        let plan =
+            CompressionPlan::parse(&text).with_context(|| format!("parsing {plan_path}"))?;
+        // Plan files carry no model metadata, and executing a plan
+        // against the wrong family only fails deep in the pipeline —
+        // demand the family up front.
+        let fam_name = args.opt("family").ok_or_else(|| {
+            anyhow!("--plan needs --family <mlp|resnet|vit|lm> (plan files name no model)")
+        })?;
+        let family = Family::from_name(fam_name)
+            .ok_or_else(|| anyhow!("--family: unknown family `{fam_name}`"))?;
+        let ckpt = args
+            .opt("ckpt")
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| family.default_ckpt().to_string());
+        let out = execute_plan_job(&opts, family, &ckpt, &plan, plan_path)?;
+        println!(
+            "{} {} [{}]: {} {:.4} -> {:.4}",
+            out.family.name(),
+            out.ckpt,
+            plan_path,
+            out.metric,
+            out.before,
+            out.after
+        );
+        print_report(&out.report);
+        return Ok(());
+    }
+    let spec_path = args
+        .opt("spec")
+        .ok_or_else(|| anyhow!("usage: grail run --spec <spec.toml> | --plan <plan.toml>"))?;
     let opts = ExpOptions::from_args(args)?;
     let mut job = SpecJob::load(spec_path)?;
     job.apply_overrides(args)?;
@@ -340,6 +414,147 @@ pub fn batch_cli(args: &Args) -> Result<()> {
     table.write_csv(&opts.out_path("batch.csv")?)?;
     if failures > 0 {
         bail!("{failures} of {} jobs failed", results.len());
+    }
+    Ok(())
+}
+
+/// Outcome of one `grail tune` job.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub family: Family,
+    pub ckpt: String,
+    pub search: SearchOutcome,
+    /// Where the winning plan's TOML was written.
+    pub plan_path: String,
+    /// `--eval` metrics: `(name, before, after)` on the executed
+    /// winning plan — accuracy for vision, probe-suite accuracy for lm.
+    pub eval: Option<(&'static str, f64, f64)>,
+}
+
+/// Run the calibration-driven search for one checkpoint and emit the
+/// winning plan as TOML under the output directory.
+pub fn tune_job(
+    opts: &ExpOptions,
+    family: Family,
+    ckpt: &str,
+    spec: &CompressionSpec,
+    eval: bool,
+) -> Result<TuneOutcome> {
+    let zoo = opts.zoo()?;
+    let (search, eval_out) = if let Some(vf) = family.vision() {
+        let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
+            .slice(0, 128);
+        let mut m = VisionModel::load(&zoo, vf, ckpt)?;
+        let search = m.tune(&calib.x, spec)?;
+        let ev = if eval {
+            let test = crate::data::io::read_images(&opts.artifacts.data("vision_test.imgs"))?;
+            let before = m.accuracy(&test);
+            m.execute(&calib.x, &search.plan);
+            Some(("acc", before, m.accuracy(&test)))
+        } else {
+            None
+        };
+        (search, ev)
+    } else {
+        let m = zoo.lm(ckpt)?;
+        let calib_toks =
+            crate::data::io::read_tokens(&opts.artifacts.data("text_calib.tokens"))?;
+        let calib = LmBatch::from_tokens(&calib_toks, LM_SEQ, LM_CALIB_WINDOWS);
+        let search = search_plan(&m, &calib, spec)?;
+        let ev = if eval {
+            let text = crate::data::SynthText::new(crate::coordinator::datagen::TASK_SEED);
+            let items = probe_suite(&text, 32, opts.seed + 7);
+            let before = probe_accuracy(&m, &items);
+            let mut mm = m.clone();
+            execute_plan(&mut mm, &calib, &search.plan);
+            Some(("probe-acc", before, probe_accuracy(&mm, &items)))
+        } else {
+            None
+        };
+        (search, ev)
+    };
+    let plan_path = opts.out_path(&format!("tune_{}_{}.plan.toml", family.name(), ckpt))?;
+    std::fs::write(&plan_path, search.plan.to_toml())
+        .with_context(|| format!("writing {plan_path}"))?;
+    Ok(TuneOutcome { family, ckpt: ckpt.to_string(), search, plan_path, eval: eval_out })
+}
+
+/// `grail tune --spec spec.toml [--family f] [--ckpt c] [--jobs N]
+/// [--out results] [--eval]` — run the calibration-driven plan search
+/// and emit the winning plan(s) as TOML. A spec without `model.ckpt`
+/// fans over every checkpoint of its family (the batch mode); `--eval`
+/// additionally executes each winning plan and reports model quality
+/// before/after.
+pub fn tune_cli(args: &Args) -> Result<()> {
+    let spec_path = args
+        .opt("spec")
+        .ok_or_else(|| anyhow!("usage: grail tune --spec <spec.toml> [--eval]"))?;
+    let opts = ExpOptions::from_args(args)?;
+    let mut job = SpecJob::load(spec_path)?;
+    job.apply_overrides(args)?;
+    if !matches!(job.spec.budget, BudgetMode::Search { .. }) {
+        bail!(
+            "{spec_path}: `grail tune` needs `[budget] mode = \"search\"` (got `{}`)",
+            job.spec.budget.name()
+        );
+    }
+    let zoo = opts.zoo()?;
+    let ckpts = match &job.ckpt {
+        Some(c) => vec![c.clone()],
+        None => zoo.list(job.family.zoo_prefix()),
+    };
+    if ckpts.is_empty() {
+        bail!(
+            "{spec_path}: no `{}` checkpoints in the zoo (run `make artifacts`)",
+            job.family.name()
+        );
+    }
+    let eval = args.has("eval");
+    let threads = args.opt_usize("jobs", default_threads().min(ckpts.len()))?;
+    println!("tune: {} checkpoint(s) from {spec_path} on {} workers", ckpts.len(), threads);
+    let opts_ref = &opts;
+    let spec_ref = &job.spec;
+    let family = job.family;
+    let results: Vec<std::result::Result<TuneOutcome, String>> =
+        run_grid(ckpts, threads, |_, ckpt| {
+            tune_job(opts_ref, family, ckpt, spec_ref, eval).map_err(|e| format!("{e:#}"))
+        });
+
+    let mut table = Table::new(&[
+        "family", "ckpt", "err_before", "err_after", "alpha_moves", "keep_moves", "metric",
+        "before", "after", "plan",
+    ]);
+    let mut failures = 0usize;
+    for r in &results {
+        match r {
+            Ok(o) => {
+                let (metric, before, after) = match o.eval {
+                    Some((m, b, a)) => (m.to_string(), format!("{b:.4}"), format!("{a:.4}")),
+                    None => ("-".into(), "-".into(), "-".into()),
+                };
+                table.row(vec![
+                    o.family.name().to_string(),
+                    o.ckpt.clone(),
+                    format!("{:.5}", o.search.initial_err),
+                    format!("{:.5}", o.search.final_err),
+                    o.search.alpha_moves.to_string(),
+                    o.search.keep_moves.to_string(),
+                    metric,
+                    before,
+                    after,
+                    o.plan_path.clone(),
+                ]);
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("tune job failed: {e}");
+            }
+        }
+    }
+    println!("{}", table.render());
+    table.write_csv(&opts.out_path("tune.csv")?)?;
+    if failures > 0 {
+        bail!("{failures} of {} tune jobs failed", results.len());
     }
     Ok(())
 }

@@ -6,7 +6,8 @@ use crate::coordinator::Zoo;
 use crate::data::VisionSet;
 use crate::eval::vision_accuracy;
 use crate::grail::{
-    compress_model, execute_plan, plan_for_model, CompressionPlan, CompressionSpec, Method,
+    compress_model, execute_plan, plan_for_model, search_plan, CompressionPlan, CompressionSpec,
+    Method, SearchOutcome,
 };
 use crate::nn::models::{MiniResNet, MlpNet, TinyViT};
 use crate::tensor::Tensor;
@@ -74,6 +75,16 @@ impl VisionModel {
             VisionModel::Mlp(m) => plan_for_model(m, calib_x, spec),
             VisionModel::Resnet(m) => plan_for_model(m, calib_x, spec),
             VisionModel::Vit(m) => plan_for_model(m, calib_x, spec),
+        }
+    }
+
+    /// Run the calibration-driven plan search (`grail tune`) — needs a
+    /// spec with `budget.mode = "search"`.
+    pub fn tune(&self, calib_x: &Tensor, spec: &CompressionSpec) -> Result<SearchOutcome> {
+        match self {
+            VisionModel::Mlp(m) => search_plan(m, calib_x, spec),
+            VisionModel::Resnet(m) => search_plan(m, calib_x, spec),
+            VisionModel::Vit(m) => search_plan(m, calib_x, spec),
         }
     }
 

@@ -12,15 +12,17 @@
 //! recomputed on the output of the already-compressed prefix.
 
 pub mod pipeline;
+pub mod search;
 pub mod spec;
 
 pub use pipeline::{
     compress_model, compress_model_rescan, execute_plan, execute_plan_rescan, plan_for_model,
     site_sensitivities, Method, Report, SiteOutcome, DEFAULT_SHARDS,
 };
+pub use search::{score_plan, search_plan, SearchOutcome};
 pub use spec::{
     BudgetMode, CompressionPlan, CompressionSpec, PlannedSite, PolicyOverrides, PolicyRule,
-    SiteMatcher, SitePolicy,
+    SiteMatcher, SitePolicy, DEFAULT_ALPHA_GRID, DEFAULT_SEARCH_ROUNDS,
 };
 
 use crate::compress::Reducer;
@@ -172,17 +174,17 @@ pub fn reconstruction_error(
     diff.frobenius() / denom
 }
 
-/// Relative reconstruction error computed from the Gram matrix alone:
-/// with `E = I − M·Bᵀ`, `‖X − X·M·Bᵀ‖²_F = tr(Eᵀ·G·E)` and
-/// `‖X‖²_F = tr(G)`, so the streamed pipeline never has to materialize
-/// raw activations to report the same diagnostic as
-/// [`reconstruction_error`].
-pub fn reconstruction_error_from_gram(
+/// The raw quadratic forms behind [`reconstruction_error_from_gram`]:
+/// `(tr(Eᵀ·G·E), tr(G))` with `E = I − M·Bᵀ` — numerator and
+/// denominator of the *squared* relative reconstruction error. The
+/// plan search ([`search`]) sums these across sites to score candidate
+/// plans on held-out Gram statistics.
+pub fn reconstruction_err2_terms(
     gram: &Tensor,
     reducer: &Reducer,
     unit_dim: usize,
     b_map: &Tensor,
-) -> f32 {
+) -> (f64, f64) {
     let h = gram.dim(0);
     assert_eq!(gram.dim(1), h, "gram must be square");
     let m = reducer.lift(unit_dim).matrix(h); // [H, K]
@@ -200,7 +202,22 @@ pub fn reconstruction_error_from_gram(
         err2 += (ev as f64) * (gv as f64); // tr(Eᵀ·G·E)
     }
     let denom2: f64 = (0..h).map(|i| gram.at2(i, i) as f64).sum();
-    (err2.max(0.0).sqrt() / denom2.max(1e-24).sqrt()) as f32
+    (err2.max(0.0), denom2)
+}
+
+/// Relative reconstruction error computed from the Gram matrix alone:
+/// with `E = I − M·Bᵀ`, `‖X − X·M·Bᵀ‖²_F = tr(Eᵀ·G·E)` and
+/// `‖X‖²_F = tr(G)`, so the streamed pipeline never has to materialize
+/// raw activations to report the same diagnostic as
+/// [`reconstruction_error`].
+pub fn reconstruction_error_from_gram(
+    gram: &Tensor,
+    reducer: &Reducer,
+    unit_dim: usize,
+    b_map: &Tensor,
+) -> f32 {
+    let (err2, denom2) = reconstruction_err2_terms(gram, reducer, unit_dim, b_map);
+    (err2.sqrt() / denom2.max(1e-24).sqrt()) as f32
 }
 
 #[cfg(test)]

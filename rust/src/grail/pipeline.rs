@@ -31,7 +31,7 @@
 //! bit-identical `Report::sites`, which the equivalence tests and
 //! `benches/hotpath.rs` rely on.
 
-use super::spec::{CompressionPlan, CompressionSpec};
+use super::spec::{BudgetMode, CompressionPlan, CompressionSpec};
 use crate::compress::baselines::{baseline_plan, Baseline};
 use crate::compress::heads::validate_head_reducer;
 use crate::compress::select::{self, ScoreInputs, Selector};
@@ -248,11 +248,14 @@ where
 /// Resolve a spec into a concrete per-site plan for `model` without
 /// mutating anything. Budget allocators that need activation statistics
 /// (Gram-diagonal sensitivity) run one streamed open-loop pass over the
-/// dense model here; all other specs resolve from site metadata alone.
-/// (Known duplication: gram-sensitivity combined with
-/// `closed_loop = false` pays a second dense pass inside
-/// [`execute_plan`] for the open-loop statistics — keeping plan
-/// resolution side-effect free is worth the extra O(L) forwards.)
+/// dense model here, and the `search` budget mode runs the full
+/// calibration-driven α/keep search
+/// ([`search_plan`](super::search::search_plan)); all other specs
+/// resolve from site metadata alone. (Known duplication:
+/// statistics-driven budgets combined with `closed_loop = false` pay a
+/// second dense pass inside [`execute_plan`] for the open-loop
+/// statistics — keeping plan resolution side-effect free is worth the
+/// extra O(L) forwards.)
 pub fn plan_for_model<M>(
     model: &M,
     calib: &M::Input,
@@ -263,6 +266,9 @@ where
     M::Input: Sync,
     M::CalibState: Send,
 {
+    if matches!(spec.budget, BudgetMode::Search { .. }) {
+        return Ok(super::search::search_plan(model, calib, spec)?.plan);
+    }
     let sites = model.sites();
     let sens = if spec.needs_sensitivity() {
         Some(site_sensitivities(model, calib, spec.shards, spec.workers))
@@ -270,6 +276,38 @@ where
         None
     };
     spec.resolve(&sites, sens.as_deref())
+}
+
+/// One streamed open-loop pass over the dense model: per-shard
+/// [`super::ActStats`] for every site, in shard order. Shared by the
+/// open-loop engine and the plan search's train/held-out scoring
+/// ([`super::search`]); callers merge the per-shard partials in shard
+/// order, which keeps the result independent of the worker count.
+pub(crate) fn per_shard_site_stats<M>(
+    model: &M,
+    shard_inputs: &[M::Input],
+    workers: usize,
+) -> Vec<Vec<super::ActStats>>
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    let widths: Vec<usize> = model.sites().iter().map(|s| s.feat_width()).collect();
+    let widths_ref = &widths;
+    run_grid(shard_inputs.iter().collect(), workers, |_, inp| {
+        let mut st = model.calib_begin(inp);
+        let mut local: Vec<super::ActStats> =
+            widths_ref.iter().map(|&w| super::ActStats::new(w)).collect();
+        for si in 0..widths_ref.len() {
+            let tap = model.site_tap(&mut st, si);
+            local[si].update(&tap);
+            if si + 1 < widths_ref.len() {
+                model.forward_segment(&mut st, si, si + 1);
+            }
+        }
+        local
+    })
 }
 
 /// Per-site mean activation energy (mean Gram diagonal) on the *dense*
@@ -380,22 +418,7 @@ where
         Vec::new()
     } else {
         let widths: Vec<usize> = model.sites().iter().map(|s| s.feat_width()).collect();
-        let widths_ref = &widths;
-        let mref: &M = &*model;
-        let per_shard: Vec<Vec<super::ActStats>> =
-            run_grid(shard_inputs.iter().collect(), workers, |_, inp| {
-                let mut st = mref.calib_begin(inp);
-                let mut local: Vec<super::ActStats> =
-                    widths_ref.iter().map(|&w| super::ActStats::new(w)).collect();
-                for si in 0..widths_ref.len() {
-                    let tap = mref.site_tap(&mut st, si);
-                    local[si].update(&tap);
-                    if si + 1 < widths_ref.len() {
-                        mref.forward_segment(&mut st, si, si + 1);
-                    }
-                }
-                local
-            });
+        let per_shard = per_shard_site_stats(&*model, &shard_inputs, workers);
         (0..widths.len())
             .map(|si| {
                 let mut s = super::ActStats::new(widths[si]);

@@ -1,0 +1,669 @@
+//! Calibration-driven plan search: per-site α tuning and keep
+//! reallocation behind the spec surface (`budget.mode = "search"`).
+//!
+//! The ridge compensation is data-aware by construction — the same few
+//! calibration forwards that build the Gram matrices can score
+//! candidate plans with zero extra labels. [`search_plan`] turns that
+//! into a closed, gradient-free optimization loop over resolved
+//! [`CompressionPlan`]s:
+//!
+//! 1. **Statistics pass** — one streamed open-loop pass over the dense
+//!    model accumulates per-shard [`ActStats`] at every site. Shards
+//!    split into a *train* set (whose merged Grams the candidate ridge
+//!    solves use) and a *held-out* set (whose Grams candidates are
+//!    scored on), so α tuning measures generalization instead of
+//!    in-sample fit — in-sample, the ridge residual is monotone in λ
+//!    and the sweep would degenerate to "always pick the smallest α".
+//! 2. **α sweep** — every GRAIL site whose rule set does not pin α is
+//!    scored over the spec's log-grid; the per-site argmin wins (ties
+//!    break toward the earlier grid entry).
+//! 3. **Keep reallocation** — under the fixed weighted-unit budget
+//!    `Σ keep·unit_dim` of the seed plan, units move from the site
+//!    with the cheapest marginal error increase to the site with the
+//!    largest marginal error decrease. Only strictly improving moves
+//!    are accepted, so the loop terminates and the winning plan never
+//!    scores worse than the seed.
+//!
+//! Candidate evaluations fan out over
+//! [`run_grid`](crate::coordinator::scheduler::run_grid) with the same
+//! disjoint-output discipline as the blocked solver: every job writes
+//! its own result slot, each job is internally deterministic (pure
+//! function of the spec seed and the shard-ordered statistics), and
+//! all accept/reject decisions happen serially on the gathered
+//! results — so the winning plan is **bit-identical at any worker
+//! count** (`rust/tests/tune.rs`).
+
+use super::pipeline::{per_shard_site_stats, Method, DEFAULT_SHARDS};
+use super::spec::{keep_floor, keep_step, BudgetMode, CompressionPlan, CompressionSpec};
+use super::ActStats;
+use crate::compress::select::{self, ScoreInputs, Selector};
+use crate::compress::{fold, Compressible, Reducer, SiteInfo};
+use crate::coordinator::scheduler::{default_threads, run_grid};
+use crate::rng::Pcg64;
+use crate::tensor::{ops, Tensor};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Outcome of one plan search.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    /// The winning plan — execute with [`super::execute_plan`], or
+    /// persist via [`CompressionPlan::to_toml`] (`grail tune`).
+    pub plan: CompressionPlan,
+    /// Held-out global relative reconstruction error of the seed plan.
+    pub initial_err: f64,
+    /// Held-out global relative reconstruction error of the winner.
+    pub final_err: f64,
+    /// Search rounds actually run (≤ the spec's `rounds`; the loop
+    /// stops early once a round accepts nothing).
+    pub rounds_run: usize,
+    /// Sites whose α moved off the seed value.
+    pub alpha_moves: usize,
+    /// Accepted keep-reallocation moves (grows, shrinks, and pairs
+    /// each count once).
+    pub keep_moves: usize,
+    /// Candidate evaluations performed.
+    pub evals: usize,
+}
+
+/// Per-site calibration statistics and selector inputs, gathered once
+/// on the dense model.
+struct SiteCal {
+    info: SiteInfo,
+    /// Finalized Gram statistics over the train shards.
+    train: ActStats,
+    /// Finalized Gram statistics over the held-out shards (a clone of
+    /// `train` when only one shard exists).
+    hold: ActStats,
+    /// Diagonal of the train Gram (selector scores).
+    gram_diag: Vec<f32>,
+    l1: Vec<f32>,
+    l2: Vec<f32>,
+    consumer_cols: Vec<f32>,
+    /// Producer features, only for folding-method sites.
+    feats: Option<Tensor>,
+}
+
+/// One streamed open-loop pass over the dense model: per-site train +
+/// held-out statistics plus the static selector inputs, and the
+/// *actual* shard count the input split into (models clamp the
+/// requested count to the available samples). Shard partial statistics
+/// merge in shard order, so the result is independent of the worker
+/// count.
+fn gather_stats<M>(
+    model: &M,
+    calib: &M::Input,
+    shards: usize,
+    workers: usize,
+) -> (Vec<SiteCal>, usize)
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    let sites = model.sites();
+    let widths: Vec<usize> = sites.iter().map(|s| s.feat_width()).collect();
+    let shard_inputs: Vec<M::Input> = model.split_input(calib, shards);
+    let per_shard = per_shard_site_stats(model, &shard_inputs, workers);
+    // Last quarter of the shards (at least one, once two exist) holds
+    // out; the split depends only on the shard count, never on worker
+    // scheduling. With a single shard the score degrades to in-sample
+    // fit (hold = train) — `search_plan` rejects that outright.
+    let n_shards = per_shard.len();
+    let n_hold = if n_shards >= 2 { (n_shards / 4).max(1) } else { 0 };
+    let n_train = n_shards - n_hold;
+    let cals = sites
+        .into_iter()
+        .enumerate()
+        .map(|(si, info)| {
+            let mut train = ActStats::new(widths[si]);
+            for shard in &per_shard[..n_train] {
+                train.merge(&shard[si]);
+            }
+            train.finalize();
+            let hold = if n_hold == 0 {
+                train.clone()
+            } else {
+                let mut h = ActStats::new(widths[si]);
+                for shard in &per_shard[n_train..] {
+                    h.merge(&shard[si]);
+                }
+                h.finalize();
+                h
+            };
+            let gram_diag = select::gram_diag(&train.gram);
+            let l1 = model.producer_row_norm(si, 1);
+            let l2 = model.producer_row_norm(si, 2);
+            let consumer_cols = ops::col_l2(&model.consumer_matrix(si));
+            SiteCal { info, train, hold, gram_diag, l1, l2, consumer_cols, feats: None }
+        })
+        .collect();
+    (cals, n_shards)
+}
+
+/// Deterministic reducer for a `(site, keep)` candidate — a pure
+/// function of the plan seed, so evaluation order and worker count
+/// cannot change it.
+fn reducer_for(cal: &SiteCal, method: Method, keep: usize, seed: u64, site_idx: usize) -> Reducer {
+    let mut rng =
+        Pcg64::seed_stream(seed ^ 0x7E57_5EA4C, ((site_idx as u64) << 32) ^ keep as u64);
+    let inputs = ScoreInputs {
+        site: &cal.info,
+        producer_l1: &cal.l1,
+        producer_l2: &cal.l2,
+        gram_diag: &cal.gram_diag,
+        consumer_cols: &cal.consumer_cols,
+    };
+    match method {
+        Method::Prune(sel) => select::select_reducer(sel, &inputs, keep, &mut rng),
+        Method::Fold => fold::fold_reducer(
+            cal.feats.as_ref().expect("fold-method site needs producer features"),
+            &cal.info,
+            keep,
+            &mut rng,
+        ),
+        Method::RandomFold => fold::random_fold(&cal.info, keep, &mut rng),
+        // Baselines carry their own recovery mechanism the search
+        // cannot cheaply re-run per candidate; score them through the
+        // Gram-energy selection proxy instead.
+        Method::Baseline(_) => select::select_reducer(Selector::GramDiag, &inputs, keep, &mut rng),
+    }
+}
+
+/// Held-out squared reconstruction error `tr(Eᵀ·G_hold·E)` of one
+/// `(keep, α)` candidate at a site; `0` for untouched sites.
+fn candidate_err2(
+    cal: &SiteCal,
+    method: Method,
+    grail_on: bool,
+    keep: usize,
+    alpha: f64,
+    seed: u64,
+    site_idx: usize,
+) -> f64 {
+    if keep >= cal.info.units {
+        return 0.0;
+    }
+    let reducer = reducer_for(cal, method, keep, seed, site_idx);
+    let ud = cal.info.unit_dim;
+    let b = if grail_on {
+        // Serial inner solve: parallelism lives at the candidate
+        // level, and the solver is bit-invariant at any width anyway.
+        super::reconstruction_with(&cal.train.gram, &reducer, ud, alpha as f32, 1)
+    } else {
+        reducer.lift(ud).consumer_matrix(cal.info.feat_width())
+    };
+    let (err2, _) = super::reconstruction_err2_terms(&cal.hold.gram, &reducer, ud, &b);
+    err2
+}
+
+fn trace(g: &Tensor) -> f64 {
+    (0..g.dim(0)).map(|i| g.at2(i, i) as f64).sum()
+}
+
+fn rel_err(err2: f64, denom2: f64) -> f64 {
+    (err2.max(0.0) / denom2.max(1e-24)).sqrt()
+}
+
+/// Attach producer features to every folding-method site of `plan`.
+fn attach_fold_features<M: Compressible>(model: &M, plan: &CompressionPlan, cals: &mut [SiteCal]) {
+    for (si, cal) in cals.iter_mut().enumerate() {
+        if plan.sites[si].policy.method == Method::Fold {
+            cal.feats = Some(model.producer_features(si));
+        }
+    }
+}
+
+/// Score an arbitrary resolved plan with the search's held-out
+/// objective: the global relative reconstruction error
+/// `sqrt(Σᵢ tr(Eᵢᵀ·G_hold·Eᵢ) / Σᵢ tr(G_hold))` of its per-site
+/// `(keep, α)` choices, using the same train/held-out shard split as
+/// [`search_plan`]. Plans with equal `shards` are directly comparable;
+/// the winner of a search never scores worse than its seed.
+pub fn score_plan<M>(model: &M, calib: &M::Input, plan: &CompressionPlan) -> f64
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    let workers = if plan.workers != 0 { plan.workers } else { default_threads() };
+    let shard_target = if plan.shards != 0 { plan.shards } else { DEFAULT_SHARDS };
+    let (mut cals, _) = gather_stats(model, calib, shard_target, workers);
+    assert_eq!(plan.sites.len(), cals.len(), "plan resolved against a different model");
+    attach_fold_features(model, plan, &mut cals);
+    let n = cals.len();
+    let plan_ref = &plan;
+    let cals_ref = &cals;
+    let idx: Vec<usize> = (0..n).collect();
+    let err2: Vec<f64> = run_grid(idx, workers, |_, &i| {
+        let ps = &plan_ref.sites[i];
+        candidate_err2(
+            &cals_ref[i],
+            ps.policy.method,
+            ps.policy.grail,
+            ps.keep,
+            ps.policy.alpha as f64,
+            plan_ref.seed,
+            i,
+        )
+    });
+    let denom2: f64 = cals.iter().map(|c| trace(&c.hold.gram)).sum();
+    rel_err(err2.iter().sum(), denom2)
+}
+
+/// Run the calibration-driven coordinate search for a spec with
+/// `budget.mode = "search"` and return the winning plan plus search
+/// diagnostics. See the module docs for the algorithm; the result is
+/// deterministic in `(spec, calib)` and bit-identical at any worker
+/// count.
+pub fn search_plan<M>(model: &M, calib: &M::Input, spec: &CompressionSpec) -> Result<SearchOutcome>
+where
+    M: Compressible + Sync,
+    M::Input: Sync,
+    M::CalibState: Send,
+{
+    let BudgetMode::Search { alpha_grid, rounds, .. } = &spec.budget else {
+        bail!("search_plan needs `budget.mode = \"search\"` (got `{}`)", spec.budget.name());
+    };
+    let alpha_grid: Vec<f64> = if alpha_grid.is_empty() {
+        super::spec::DEFAULT_ALPHA_GRID.to_vec()
+    } else {
+        alpha_grid.clone()
+    };
+    if alpha_grid.iter().any(|a| !a.is_finite() || *a <= 0.0) {
+        bail!("alpha_grid must be positive and finite: {alpha_grid:?}");
+    }
+    let rounds = *rounds;
+    let sites = model.sites();
+    let n = sites.len();
+    let mut plan = spec.resolve(&sites, None)?;
+    let seed = plan.seed;
+    let workers = if spec.workers != 0 { spec.workers } else { default_threads() };
+    let shard_target = if spec.shards != 0 { spec.shards } else { DEFAULT_SHARDS };
+    let (mut cals, n_shards) = gather_stats(model, calib, shard_target, workers);
+    if n_shards < 2 {
+        // A single shard — whether requested via `shards = 1` or
+        // forced by a one-sample calibration input — leaves nothing to
+        // hold out: candidates would be scored in-sample, where the
+        // ridge residual is monotone in λ and the α sweep degenerates
+        // to "smallest grid value".
+        bail!(
+            "search scoring needs at least 2 calibration shards for the held-out split \
+             (input split into {n_shards})"
+        );
+    }
+    attach_fold_features(model, &plan, &mut cals);
+
+    // Which sites the search may touch: rule-pinned ratios freeze the
+    // keep count, rule-pinned αs (and non-GRAIL sites) freeze the α.
+    let mut ratio_free = vec![false; n];
+    let mut alpha_free = vec![false; n];
+    for (i, s) in sites.iter().enumerate() {
+        let (rp, ap) = spec.rule_pins(s, i);
+        ratio_free[i] = !rp && plan.sites[i].units > 0;
+        alpha_free[i] = !ap && plan.sites[i].policy.grail;
+    }
+
+    // Seed scores.
+    let cals_ref = &cals;
+    let plan_ref = &plan;
+    let idx: Vec<usize> = (0..n).collect();
+    let mut err2: Vec<f64> = run_grid(idx, workers, |_, &i| {
+        let ps = &plan_ref.sites[i];
+        candidate_err2(
+            &cals_ref[i],
+            ps.policy.method,
+            ps.policy.grail,
+            ps.keep,
+            ps.policy.alpha as f64,
+            seed,
+            i,
+        )
+    });
+    let denom2: f64 = cals.iter().map(|c| trace(&c.hold.gram)).sum();
+    let initial_err = rel_err(err2.iter().sum::<f64>(), denom2);
+    let seed_alphas: Vec<f32> = plan.sites.iter().map(|s| s.policy.alpha).collect();
+    let mut evals = n;
+    let mut keep_moves = 0usize;
+    let mut rounds_run = 0usize;
+
+    // Weighted-unit budget over the reallocatable sites; moves must
+    // never push `used_w` above the seed plan's footprint.
+    let budget_w: usize = (0..n)
+        .filter(|&i| ratio_free[i])
+        .map(|i| plan.sites[i].keep * plan.sites[i].unit_dim)
+        .sum();
+    let mut used_w = budget_w;
+
+    // α-sweep evaluations memoized across rounds by
+    // `(site, keep, α bits)`: rounds repeat the sweep after keep
+    // moves, but an already-scored `(keep, α)` pair never changes, so
+    // converged sites cost nothing on later rounds.
+    let mut sweep_memo: BTreeMap<(usize, usize, u64), f64> = BTreeMap::new();
+
+    for _ in 0..rounds {
+        rounds_run += 1;
+        let mut improved = false;
+
+        // --- per-site α sweep over the grid, held-out scored.
+        let sweep_sites: Vec<usize> = (0..n)
+            .filter(|&i| alpha_free[i] && plan.sites[i].keep < plan.sites[i].units)
+            .collect();
+        let jobs: Vec<(usize, usize)> = sweep_sites
+            .iter()
+            .flat_map(|&i| (0..alpha_grid.len()).map(move |ai| (i, ai)))
+            .filter(|&(i, ai)| {
+                !sweep_memo.contains_key(&(i, plan.sites[i].keep, alpha_grid[ai].to_bits()))
+            })
+            .collect();
+        let grid_ref = &alpha_grid;
+        let plan_ref = &plan;
+        let sweep: Vec<f64> = run_grid(jobs.clone(), workers, |_, &(i, ai)| {
+            let ps = &plan_ref.sites[i];
+            candidate_err2(&cals_ref[i], ps.policy.method, true, ps.keep, grid_ref[ai], seed, i)
+        });
+        evals += sweep.len();
+        for (&(i, ai), &e) in jobs.iter().zip(&sweep) {
+            sweep_memo.insert((i, plan.sites[i].keep, alpha_grid[ai].to_bits()), e);
+        }
+        for &i in &sweep_sites {
+            let keep = plan.sites[i].keep;
+            let mut best: Option<(f64, usize)> = None;
+            for (ai, a) in alpha_grid.iter().enumerate() {
+                let e = sweep_memo[&(i, keep, a.to_bits())];
+                let better = match best {
+                    None => true,
+                    Some((be, _)) => e < be,
+                };
+                if better {
+                    best = Some((e, ai));
+                }
+            }
+            if let Some((e, ai)) = best {
+                if e < err2[i] {
+                    plan.sites[i].policy.alpha = alpha_grid[ai] as f32;
+                    err2[i] = e;
+                    improved = true;
+                }
+            }
+        }
+
+        // --- keep reallocation under the weighted-unit budget.
+        let movable: Vec<usize> = (0..n).filter(|&i| ratio_free[i]).collect();
+        if !movable.is_empty() {
+            // Admissible neighbour keeps for every movable site.
+            let mut grow_to: Vec<Option<usize>> = vec![None; n];
+            let mut shrink_to: Vec<Option<usize>> = vec![None; n];
+            for &i in &movable {
+                let ps = &plan.sites[i];
+                let step = keep_step(ps.units, ps.groups);
+                grow_to[i] = (ps.keep + step <= ps.units).then_some(ps.keep + step);
+                shrink_to[i] =
+                    (ps.keep >= keep_floor(ps.units, ps.groups) + step).then_some(ps.keep - step);
+            }
+            let mut cand_jobs: Vec<(usize, usize)> = Vec::new();
+            for &i in &movable {
+                if let Some(kk) = grow_to[i] {
+                    cand_jobs.push((i, kk));
+                }
+                if let Some(kk) = shrink_to[i] {
+                    cand_jobs.push((i, kk));
+                }
+            }
+            let plan_ref = &plan;
+            let cand_err: Vec<f64> = run_grid(cand_jobs.clone(), workers, |_, &(i, kk)| {
+                let ps = &plan_ref.sites[i];
+                candidate_err2(
+                    &cals_ref[i],
+                    ps.policy.method,
+                    ps.policy.grail,
+                    kk,
+                    ps.policy.alpha as f64,
+                    seed,
+                    i,
+                )
+            });
+            evals += cand_err.len();
+            let mut err_at: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+            for (&key, &e) in cand_jobs.iter().zip(&cand_err) {
+                err_at.insert(key, e);
+            }
+
+            // Greedy move loop: bounded, strictly improving, with
+            // index tie-breaks — entirely serial on gathered scores.
+            enum Move {
+                Grow(usize),
+                Shrink(usize),
+                Pair(usize, usize),
+            }
+            let max_moves = 2 * movable.len();
+            for _ in 0..max_moves {
+                let slack = budget_w - used_w;
+                let mut action: Option<Move> = None;
+
+                // 1) A shrink that *improves* the held-out error is a
+                // free budget win (noise-level sites) — take the best.
+                let mut neg_shrink: Option<(f64, usize)> = None;
+                for &i in &movable {
+                    let Some(sk) = shrink_to[i] else { continue };
+                    let Some(&e) = err_at.get(&(i, sk)) else { continue };
+                    let cost = e - err2[i];
+                    if cost < 0.0 {
+                        let better = match neg_shrink {
+                            None => true,
+                            Some((bc, _)) => cost < bc,
+                        };
+                        if better {
+                            neg_shrink = Some((cost, i));
+                        }
+                    }
+                }
+                if let Some((_, d)) = neg_shrink {
+                    action = Some(Move::Shrink(d));
+                }
+
+                // 2) Otherwise: receivers in descending gain per
+                // weighted unit; for each, either grow from slack or
+                // find the cheapest single donor that frees enough
+                // budget. Sites whose step no donor can fund (e.g. an
+                // attention head vs one-unit donors) fall through to
+                // the next receiver instead of stalling the loop.
+                if action.is_none() {
+                    let mut receivers: Vec<(f64, usize)> = Vec::new();
+                    for &i in &movable {
+                        let Some(kk) = grow_to[i] else { continue };
+                        let Some(&e) = err_at.get(&(i, kk)) else { continue };
+                        let gain = err2[i] - e;
+                        if gain <= 0.0 {
+                            continue;
+                        }
+                        let w = ((kk - plan.sites[i].keep) * plan.sites[i].unit_dim) as f64;
+                        receivers.push((gain / w, i));
+                    }
+                    receivers.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                    for &(_, r) in &receivers {
+                        let gk = grow_to[r].unwrap();
+                        let grow_w = (gk - plan.sites[r].keep) * plan.sites[r].unit_dim;
+                        if grow_w <= slack {
+                            action = Some(Move::Grow(r));
+                            break;
+                        }
+                        let gain = err2[r] - err_at[&(r, gk)];
+                        // Cheapest donor (absolute held-out cost) that
+                        // frees enough weighted units for this step.
+                        let mut best_d: Option<(f64, usize)> = None;
+                        for &d in &movable {
+                            if d == r {
+                                continue;
+                            }
+                            let Some(sk) = shrink_to[d] else { continue };
+                            let Some(&e) = err_at.get(&(d, sk)) else { continue };
+                            let freed_w =
+                                (plan.sites[d].keep - sk) * plan.sites[d].unit_dim;
+                            if freed_w + slack < grow_w {
+                                continue;
+                            }
+                            let cost = e - err2[d];
+                            let better = match best_d {
+                                None => true,
+                                Some((bc, _)) => cost < bc,
+                            };
+                            if better {
+                                best_d = Some((cost, d));
+                            }
+                        }
+                        if let Some((cost, d)) = best_d {
+                            if gain > cost {
+                                action = Some(Move::Pair(d, r));
+                                break;
+                            }
+                        }
+                    }
+                }
+                let Some(action) = action else { break };
+                // Resolve the touched (site, new-keep) targets before
+                // `apply` mutably captures the candidate tables. For a
+                // pair, both targets come from the pre-move state.
+                let targets: Vec<(usize, usize)> = match action {
+                    Move::Grow(r) => vec![(r, grow_to[r].unwrap())],
+                    Move::Shrink(d) => vec![(d, shrink_to[d].unwrap())],
+                    Move::Pair(d, r) => {
+                        vec![(d, shrink_to[d].unwrap()), (r, grow_to[r].unwrap())]
+                    }
+                };
+
+                // Apply the move and refresh the touched sites'
+                // neighbour candidates (serial, deterministic).
+                let mut apply = |i: usize, kk: usize| {
+                    let old_w = plan.sites[i].keep * plan.sites[i].unit_dim;
+                    plan.sites[i].keep = kk;
+                    plan.sites[i].policy.ratio = 1.0 - kk as f64 / plan.sites[i].units as f64;
+                    err2[i] = err_at[&(i, kk)];
+                    used_w = used_w + kk * plan.sites[i].unit_dim - old_w;
+                    let ps = &plan.sites[i];
+                    let step = keep_step(ps.units, ps.groups);
+                    grow_to[i] = (ps.keep + step <= ps.units).then_some(ps.keep + step);
+                    shrink_to[i] = (ps.keep >= keep_floor(ps.units, ps.groups) + step)
+                        .then_some(ps.keep - step);
+                    for kk2 in [grow_to[i], shrink_to[i]].into_iter().flatten() {
+                        if let std::collections::btree_map::Entry::Vacant(slot) =
+                            err_at.entry((i, kk2))
+                        {
+                            let e = candidate_err2(
+                                &cals[i],
+                                ps.policy.method,
+                                ps.policy.grail,
+                                kk2,
+                                ps.policy.alpha as f64,
+                                seed,
+                                i,
+                            );
+                            evals += 1;
+                            slot.insert(e);
+                        }
+                    }
+                };
+                for (i, kk) in targets {
+                    apply(i, kk);
+                }
+                keep_moves += 1;
+                improved = true;
+            }
+        }
+
+        if !improved {
+            break;
+        }
+    }
+
+    let final_err = rel_err(err2.iter().sum::<f64>(), denom2);
+    let alpha_moves = (0..n).filter(|&i| plan.sites[i].policy.alpha != seed_alphas[i]).count();
+    Ok(SearchOutcome {
+        plan,
+        initial_err,
+        final_err,
+        rounds_run,
+        alpha_moves,
+        keep_moves,
+        evals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthVision;
+    use crate::nn::models::MlpNet;
+
+    fn fixture() -> (MlpNet, Tensor) {
+        let mut rng = Pcg64::seed(31);
+        let m = MlpNet::init(768, 32, 10, &mut rng);
+        let x = SynthVision::new(13).generate(96).x;
+        (m, x)
+    }
+
+    fn search_spec(ratio: f64) -> CompressionSpec {
+        let mut spec =
+            CompressionSpec::uniform(Method::Prune(Selector::Wanda), ratio, true);
+        spec.budget = BudgetMode::Search {
+            target_ratio: ratio,
+            alpha_grid: vec![1e-6, 1e-4, 5e-3],
+            rounds: 2,
+        };
+        spec
+    }
+
+    #[test]
+    fn search_never_worse_than_seed_and_conserves_budget() {
+        let (m, x) = fixture();
+        let spec = search_spec(0.5);
+        let out = search_plan(&m, &x, &spec).unwrap();
+        assert!(out.final_err.is_finite() && out.initial_err.is_finite());
+        assert!(out.final_err <= out.initial_err, "{} > {}", out.final_err, out.initial_err);
+        assert!(out.rounds_run >= 1 && out.evals >= 2);
+        // Budget: the winner spends no more weighted units than the
+        // budget-conserving seed plan.
+        let seed_plan = spec.resolve(&m.sites(), None).unwrap();
+        assert!(out.plan.total_keep_weighted() <= seed_plan.total_keep_weighted());
+        for ps in &out.plan.sites {
+            assert!(ps.keep >= 1 && ps.keep <= ps.units);
+        }
+    }
+
+    #[test]
+    fn search_requires_search_budget() {
+        let (m, x) = fixture();
+        let spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+        assert!(search_plan(&m, &x, &spec).is_err());
+    }
+
+    #[test]
+    fn score_plan_matches_search_bookkeeping() {
+        // The outcome's final_err is exactly score_plan of the winner.
+        let (m, x) = fixture();
+        let out = search_plan(&m, &x, &search_spec(0.5)).unwrap();
+        let rescored = score_plan(&m, &x, &out.plan);
+        assert_eq!(rescored.to_bits(), out.final_err.to_bits());
+    }
+
+    #[test]
+    fn rule_pinned_sites_are_frozen() {
+        let (m, x) = fixture();
+        let mut spec = search_spec(0.5);
+        // Pin the first site's ratio and α by rule.
+        spec.rules = vec![crate::grail::PolicyRule {
+            matcher: crate::grail::SiteMatcher {
+                depth: Some((0, 0)),
+                ..Default::default()
+            },
+            set: crate::grail::PolicyOverrides {
+                ratio: Some(0.25),
+                alpha: Some(2e-3),
+                ..Default::default()
+            },
+        }];
+        let out = search_plan(&m, &x, &spec).unwrap();
+        assert_eq!(out.plan.sites[0].policy.ratio, 0.25);
+        assert_eq!(out.plan.sites[0].policy.alpha, 2e-3);
+    }
+}

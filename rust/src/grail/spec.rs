@@ -122,8 +122,24 @@ pub struct PolicyRule {
     pub set: PolicyOverrides,
 }
 
+/// Which policy fields some rule pinned explicitly for a site.
+#[derive(Clone, Copy, Debug)]
+struct PinnedFields {
+    ratio: bool,
+    alpha: bool,
+}
+
+/// Default per-site ridge-α grid for `budget.mode = "search"`:
+/// log-spaced through the paper's α range around the crate default
+/// ([`super::DEFAULT_ALPHA`]).
+pub const DEFAULT_ALPHA_GRID: [f64; 6] = [1e-6, 1e-5, 1e-4, 1e-3, 5e-3, 5e-2];
+
+/// Default number of search rounds (one α sweep plus one keep
+/// reallocation pass per round).
+pub const DEFAULT_SEARCH_ROUNDS: usize = 2;
+
 /// Global keep-count allocation across sites.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum BudgetMode {
     /// Every site uses its own resolved ratio (layer-wise uniform
     /// unless rules say otherwise) — the legacy behaviour.
@@ -139,6 +155,20 @@ pub enum BudgetMode {
     /// mean Gram-diagonal activation energy on the dense model —
     /// high-energy sites keep more units.
     GramSensitivity { target_ratio: f64 },
+    /// Calibration-driven plan search ([`super::search`]): start from
+    /// a budget-conserving uniform allocation at `target_ratio`, then
+    /// tune per-site ridge α over `alpha_grid` and reallocate keep
+    /// counts across sites under the fixed weighted-unit budget,
+    /// scored by held-out Gram-domain reconstruction error.
+    ///
+    /// [`CompressionSpec::resolve`] produces only the *seed* plan (it
+    /// has no model to calibrate on);
+    /// [`plan_for_model`](super::pipeline::plan_for_model) — and
+    /// therefore `grail tune` / `grail plan` / [`super::compress_model`]
+    /// — runs the full search via
+    /// [`search_plan`](super::search::search_plan). An empty
+    /// `alpha_grid` means [`DEFAULT_ALPHA_GRID`].
+    Search { target_ratio: f64, alpha_grid: Vec<f64>, rounds: usize },
 }
 
 impl BudgetMode {
@@ -148,6 +178,7 @@ impl BudgetMode {
             BudgetMode::PerSite => "per-site",
             BudgetMode::DepthRamp { .. } => "depth-ramp",
             BudgetMode::GramSensitivity { .. } => "gram-sensitivity",
+            BudgetMode::Search { .. } => "search",
         }
     }
 }
@@ -198,21 +229,29 @@ impl CompressionSpec {
     }
 
     /// Resolved policy for one site, plus the indices of the rules
-    /// that fired and whether any rule pinned the ratio explicitly.
-    fn policy_for(&self, site: &SiteInfo, index: usize) -> (SitePolicy, Vec<usize>, bool) {
+    /// that fired and which policy fields a rule pinned explicitly.
+    fn policy_for(&self, site: &SiteInfo, index: usize) -> (SitePolicy, Vec<usize>, PinnedFields) {
         let mut p = self.defaults;
         let mut applied = Vec::new();
-        let mut ratio_pinned = false;
+        let mut pinned = PinnedFields { ratio: false, alpha: false };
         for (ri, rule) in self.rules.iter().enumerate() {
             if rule.matcher.matches(site, index) {
                 rule.set.apply(&mut p);
-                if rule.set.ratio.is_some() {
-                    ratio_pinned = true;
-                }
+                pinned.ratio |= rule.set.ratio.is_some();
+                pinned.alpha |= rule.set.alpha.is_some();
                 applied.push(ri);
             }
         }
-        (p, applied, ratio_pinned)
+        (p, applied, pinned)
+    }
+
+    /// Which policy fields the spec's rules pin for `site` —
+    /// `(ratio_pinned, alpha_pinned)`. The plan search freezes exactly
+    /// these, mirroring the resolve-time contract that explicit rules
+    /// win over budget allocation.
+    pub(super) fn rule_pins(&self, site: &SiteInfo, index: usize) -> (bool, bool) {
+        let (_, _, pinned) = self.policy_for(site, index);
+        (pinned.ratio, pinned.alpha)
     }
 
     /// Resolve the spec into a concrete plan for `sites`.
@@ -228,12 +267,13 @@ impl CompressionSpec {
         let mut planned: Vec<PlannedSite> = Vec::with_capacity(n);
         let mut pinned = vec![false; n];
         for (i, s) in sites.iter().enumerate() {
-            let (policy, rules_applied, ratio_pinned) = self.policy_for(s, i);
-            pinned[i] = ratio_pinned;
+            let (policy, rules_applied, pins) = self.policy_for(s, i);
+            pinned[i] = pins.ratio;
             planned.push(PlannedSite {
                 id: s.id.clone(),
                 index: i,
                 units: s.units,
+                unit_dim: s.unit_dim,
                 groups: s.groups,
                 kind: s.kind,
                 keep: uniform_keep(s.units, s.groups, policy.ratio),
@@ -241,7 +281,7 @@ impl CompressionSpec {
                 rules_applied,
             });
         }
-        match self.budget {
+        match &self.budget {
             BudgetMode::PerSite => {}
             BudgetMode::DepthRamp { target_ratio, gamma } => {
                 for ps in planned.iter_mut() {
@@ -262,7 +302,16 @@ impl CompressionSpec {
                 if sens.len() != n {
                     bail!("got {} sensitivities for {n} sites", sens.len());
                 }
-                allocate_by_sensitivity(&mut planned, &pinned, sens, target_ratio);
+                allocate_by_sensitivity(&mut planned, &pinned, sens, *target_ratio);
+            }
+            BudgetMode::Search { target_ratio, .. } => {
+                // Seed allocation only: uniform at `target_ratio` with
+                // the per-site rounding drift walked back to the exact
+                // unit budget (equal weights — allocation proportional
+                // to site size). The α/keep search itself needs model
+                // statistics and runs in `plan_for_model`.
+                let ones = vec![1.0f64; n];
+                allocate_by_sensitivity(&mut planned, &pinned, &ones, *target_ratio);
             }
         }
         Ok(CompressionPlan {
@@ -288,7 +337,7 @@ impl CompressionSpec {
                     bail!("unknown spec key `{key}`");
                 }
             } else if let Some(field) = key.strip_prefix("budget.") {
-                if !matches!(field, "mode" | "target_ratio" | "gamma") {
+                if !matches!(field, "mode" | "target_ratio" | "gamma" | "alpha_grid" | "rounds") {
                     bail!("unknown spec key `{key}`");
                 }
             }
@@ -319,6 +368,24 @@ impl CompressionSpec {
             "gram-sensitivity" => BudgetMode::GramSensitivity {
                 target_ratio: cfg.f64_or("budget.target_ratio", ratio),
             },
+            "search" => {
+                let alpha_grid = match cfg.get("budget.alpha_grid") {
+                    Some(_) => cfg.f64_array("budget.alpha_grid")?,
+                    None => DEFAULT_ALPHA_GRID.to_vec(),
+                };
+                if alpha_grid.is_empty()
+                    || alpha_grid.iter().any(|&a| !a.is_finite() || a <= 0.0)
+                {
+                    bail!(
+                        "budget.alpha_grid: need a non-empty list of positive finite α values"
+                    );
+                }
+                BudgetMode::Search {
+                    target_ratio: cfg.f64_or("budget.target_ratio", ratio),
+                    alpha_grid,
+                    rounds: cfg.usize_or("budget.rounds", DEFAULT_SEARCH_ROUNDS),
+                }
+            }
             other => bail!("budget.mode: unknown allocator `{other}`"),
         };
         spec.rules = parse_rules(cfg)?;
@@ -405,12 +472,16 @@ fn parse_rules(cfg: &Config) -> Result<Vec<PolicyRule>> {
 }
 
 /// One site of a resolved plan.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PlannedSite {
     pub id: String,
     /// Forward position of the site.
     pub index: usize,
     pub units: usize,
+    /// Features per unit (`d_head` for attention heads, 1 otherwise) —
+    /// the per-unit parameter weight the search's budget accounting
+    /// uses.
+    pub unit_dim: usize,
     pub groups: usize,
     pub kind: SiteKind,
     /// Concrete unit count kept at this site (group-constrained).
@@ -423,7 +494,7 @@ pub struct PlannedSite {
 /// A fully resolved compression plan: one [`PlannedSite`] per model
 /// site, in forward order. Nothing is mutated until
 /// [`execute_plan`](super::pipeline::execute_plan) runs it.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CompressionPlan {
     pub sites: Vec<PlannedSite>,
     pub seed: u64,
@@ -441,6 +512,17 @@ impl CompressionPlan {
     /// Total units before compression.
     pub fn total_units(&self) -> usize {
         self.sites.iter().map(|s| s.units).sum()
+    }
+
+    /// Kept units weighted by per-unit feature width `Σ keep·unit_dim`
+    /// — the parameter-proportional budget the plan search conserves.
+    pub fn total_keep_weighted(&self) -> usize {
+        self.sites.iter().map(|s| s.keep * s.unit_dim).sum()
+    }
+
+    /// Pre-compression weighted units `Σ units·unit_dim`.
+    pub fn total_units_weighted(&self) -> usize {
+        self.sites.iter().map(|s| s.units * s.unit_dim).sum()
     }
 
     /// Human-readable table for `grail plan`.
@@ -486,10 +568,20 @@ impl CompressionPlan {
         out
     }
 
-    /// Serialize to the TOML subset (round-trips through
-    /// [`Config::parse`]).
+    /// Serialize to the TOML subset. Lossless: floats print in their
+    /// shortest round-trip form and ids escape `\`, `"`, newline, and
+    /// tab, so [`Self::parse`] reconstructs an identical plan
+    /// (`rust/tests/plan_invariants.rs::prop_plan_toml_roundtrip`).
+    /// One bound: the config layer stores integers as `i64`, so seeds
+    /// above `i64::MAX` serialize but fail to parse back — loudly, not
+    /// lossily.
     pub fn to_toml(&self) -> String {
-        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let esc = |s: &str| {
+            s.replace('\\', "\\\\")
+                .replace('"', "\\\"")
+                .replace('\n', "\\n")
+                .replace('\t', "\\t")
+        };
         let mut out = String::new();
         out.push_str("[plan]\n");
         out.push_str(&format!("seed = {}\n", self.seed));
@@ -497,17 +589,120 @@ impl CompressionPlan {
         out.push_str(&format!("shards = {}\n", self.shards));
         out.push_str(&format!("workers = {}\n\n", self.workers));
         for s in &self.sites {
+            let rules = s
+                .rules_applied
+                .iter()
+                .map(|r| r.to_string())
+                .collect::<Vec<_>>()
+                .join(", ");
             out.push_str(&format!("[site.{}]\n", s.index));
             out.push_str(&format!("id = \"{}\"\n", esc(&s.id)));
             out.push_str(&format!("kind = \"{}\"\n", s.kind.name()));
             out.push_str(&format!("units = {}\n", s.units));
+            out.push_str(&format!("unit_dim = {}\n", s.unit_dim));
+            out.push_str(&format!("groups = {}\n", s.groups));
             out.push_str(&format!("keep = {}\n", s.keep));
             out.push_str(&format!("method = \"{}\"\n", esc(&s.policy.method.name())));
-            out.push_str(&format!("ratio = {:.6}\n", s.policy.ratio));
+            // `{}` prints the shortest decimal that parses back to the
+            // same float — `{:.6}` truncated and broke round-trips.
+            out.push_str(&format!("ratio = {}\n", s.policy.ratio));
             out.push_str(&format!("grail = {}\n", s.policy.grail));
-            out.push_str(&format!("alpha = {:.6e}\n\n", s.policy.alpha));
+            out.push_str(&format!("alpha = {}\n", s.policy.alpha));
+            out.push_str(&format!("rules = [{rules}]\n\n"));
         }
         out
+    }
+
+    /// Parse a serialized plan text ([`Self::to_toml`]'s inverse).
+    pub fn parse(text: &str) -> Result<CompressionPlan> {
+        Self::from_config(&Config::parse(text)?)
+    }
+
+    /// Reconstruct a plan from parsed config (`[plan]` + `[site.N]`
+    /// sections). Rejects unknown keys, non-contiguous site indices,
+    /// and out-of-range keep counts.
+    pub fn from_config(cfg: &Config) -> Result<CompressionPlan> {
+        let mut indices: Vec<usize> = Vec::new();
+        for key in cfg.keys() {
+            if let Some(field) = key.strip_prefix("plan.") {
+                if !matches!(field, "seed" | "closed_loop" | "shards" | "workers") {
+                    bail!("unknown plan key `{key}`");
+                }
+            } else if let Some(rest) = key.strip_prefix("site.") {
+                let (idx, field) = rest
+                    .split_once('.')
+                    .ok_or_else(|| anyhow!("`{key}`: expected `site.<index>.<field>`"))?;
+                if !matches!(
+                    field,
+                    "id" | "kind" | "units" | "unit_dim" | "groups" | "keep" | "method"
+                        | "ratio" | "grail" | "alpha" | "rules"
+                ) {
+                    bail!("unknown plan key `{key}`");
+                }
+                let n: usize = idx
+                    .parse()
+                    .map_err(|_| anyhow!("`{key}`: site index `{idx}` is not an integer"))?;
+                if !indices.contains(&n) {
+                    indices.push(n);
+                }
+            }
+        }
+        indices.sort_unstable();
+        let mut sites = Vec::with_capacity(indices.len());
+        for (pos, &n) in indices.iter().enumerate() {
+            if n != pos {
+                bail!("plan site indices must be contiguous from 0 (missing site.{pos})");
+            }
+            let k = |f: &str| format!("site.{n}.{f}");
+            let kind_name = cfg.str(&k("kind"))?;
+            let kind = SiteKind::from_name(kind_name)
+                .ok_or_else(|| anyhow!("site.{n}.kind: unknown kind `{kind_name}`"))?;
+            let method_name = cfg.str(&k("method"))?;
+            let method = Method::from_name(method_name)
+                .ok_or_else(|| anyhow!("site.{n}.method: unknown method `{method_name}`"))?;
+            let units = cfg.usize(&k("units"))?;
+            let unit_dim = cfg.usize(&k("unit_dim"))?;
+            let groups = cfg.usize(&k("groups"))?;
+            let keep = cfg.usize(&k("keep"))?;
+            if units == 0 || unit_dim == 0 || groups == 0 {
+                bail!("site.{n}: units/unit_dim/groups must be positive");
+            }
+            if keep == 0 || keep > units {
+                bail!("site.{n}: keep {keep} out of range for {units} units");
+            }
+            let mut rules_applied = Vec::new();
+            if cfg.get(&k("rules")).is_some() {
+                for v in cfg.f64_array(&k("rules"))? {
+                    if v.fract() != 0.0 || v < 0.0 {
+                        bail!("site.{n}.rules: `{v}` is not a rule index");
+                    }
+                    rules_applied.push(v as usize);
+                }
+            }
+            sites.push(PlannedSite {
+                id: cfg.str(&k("id"))?.to_string(),
+                index: n,
+                units,
+                unit_dim,
+                groups,
+                kind,
+                keep,
+                policy: SitePolicy {
+                    method,
+                    ratio: cfg.f64(&k("ratio"))?,
+                    grail: cfg.bool(&k("grail"))?,
+                    alpha: cfg.f64(&k("alpha"))? as f32,
+                },
+                rules_applied,
+            });
+        }
+        Ok(CompressionPlan {
+            sites,
+            seed: cfg.usize("plan.seed")? as u64,
+            closed_loop: cfg.bool("plan.closed_loop")?,
+            shards: cfg.usize("plan.shards")?,
+            workers: cfg.usize("plan.workers")?,
+        })
     }
 }
 
@@ -525,7 +720,7 @@ fn constrain_keep(units: usize, groups: usize, keep: usize) -> usize {
 }
 
 /// Smallest step by which a site's keep count can change.
-fn keep_step(units: usize, groups: usize) -> usize {
+pub(super) fn keep_step(units: usize, groups: usize) -> usize {
     let g = groups.max(1);
     if g > 1 && units % g == 0 {
         g
@@ -535,7 +730,7 @@ fn keep_step(units: usize, groups: usize) -> usize {
 }
 
 /// Smallest admissible keep count for a site.
-fn keep_floor(units: usize, groups: usize) -> usize {
+pub(super) fn keep_floor(units: usize, groups: usize) -> usize {
     let g = groups.max(1);
     if g > 1 && units % g == 0 {
         g
@@ -990,5 +1185,76 @@ ratio = 0.7
         let sites = vec![site("a", 10, 1, SiteKind::Dense)];
         let plan = spec.resolve(&sites, None).unwrap();
         assert_eq!(plan.sites[0].policy.ratio, 0.7, "later (numeric) rule wins");
+    }
+
+    #[test]
+    fn search_mode_parses_and_seeds_uniformly() {
+        let text = r#"
+[pipeline]
+method = "prune-wanda"
+ratio = 0.5
+
+[budget]
+mode = "search"
+target_ratio = 0.5
+alpha_grid = [1e-5, 1e-3]
+rounds = 3
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let spec = CompressionSpec::from_config(&cfg).unwrap();
+        assert_eq!(
+            spec.budget,
+            BudgetMode::Search {
+                target_ratio: 0.5,
+                alpha_grid: vec![1e-5, 1e-3],
+                rounds: 3
+            }
+        );
+        // Defaults: grid + rounds.
+        let cfg = Config::parse("[budget]\nmode = \"search\"").unwrap();
+        let spec2 = CompressionSpec::from_config(&cfg).unwrap();
+        match &spec2.budget {
+            BudgetMode::Search { alpha_grid, rounds, .. } => {
+                assert_eq!(alpha_grid, &DEFAULT_ALPHA_GRID.to_vec());
+                assert_eq!(*rounds, DEFAULT_SEARCH_ROUNDS);
+            }
+            other => panic!("wrong budget {other:?}"),
+        }
+        // Bad grids are rejected.
+        let bad = Config::parse("[budget]\nmode = \"search\"\nalpha_grid = [0.0]").unwrap();
+        assert!(CompressionSpec::from_config(&bad).is_err());
+        let bad = Config::parse("[budget]\nmode = \"search\"\nalpha_grid = []").unwrap();
+        assert!(CompressionSpec::from_config(&bad).is_err());
+
+        // The seed plan is budget-conserving uniform at target_ratio.
+        let sites: Vec<SiteInfo> =
+            (0..3).map(|i| site(&format!("s{i}"), 30, 1, SiteKind::Dense)).collect();
+        let plan = spec.resolve(&sites, None).unwrap();
+        assert_eq!(plan.total_keep(), 45);
+        for ps in &plan.sites {
+            assert_eq!(ps.keep, 15);
+        }
+    }
+
+    #[test]
+    fn plan_toml_parses_back_identical() {
+        let sites = vec![
+            site("block0.attn", 8, 4, SiteKind::AttnHeads),
+            site(r#"odd "id" \ with*glob"#, 32, 1, SiteKind::MlpPair),
+        ];
+        let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.37, true);
+        spec.seed = 11;
+        spec.rules = vec![PolicyRule {
+            matcher: SiteMatcher { kind: Some(SiteKind::AttnHeads), ..Default::default() },
+            set: PolicyOverrides { alpha: Some(1.5e-4), ..Default::default() },
+        }];
+        let plan = spec.resolve(&sites, None).unwrap();
+        let back = CompressionPlan::parse(&plan.to_toml()).unwrap();
+        assert_eq!(back, plan);
+        // Malformed inputs are rejected, not mangled.
+        assert!(CompressionPlan::parse("[plan]\nseed = 0").is_err());
+        let mut missing = plan.clone();
+        missing.sites[1].index = 2; // hole at index 1
+        assert!(CompressionPlan::parse(&missing.to_toml()).is_err());
     }
 }

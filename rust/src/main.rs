@@ -7,6 +7,7 @@
 //! grail plan --spec spec.toml              resolve + print a compression plan
 //! grail run --spec spec.toml               execute a declarative spec
 //! grail batch <spec.toml>...               fan specs over the model zoo
+//! grail tune --spec spec.toml              calibration-driven plan search
 //! grail info                               artifact / runtime inventory
 //! ```
 
@@ -35,6 +36,7 @@ fn run() -> Result<()> {
         "plan" => grail::exp::runner::plan_cli(&args),
         "run" => grail::exp::runner::run_cli(&args),
         "batch" => grail::exp::runner::batch_cli(&args),
+        "tune" => grail::exp::runner::tune_cli(&args),
         "info" => {
             let art = Artifacts::at(args.opt_or("out", "artifacts"));
             println!("artifacts root: {:?}", art.root);
@@ -71,7 +73,10 @@ USAGE:
             --ratio <0..1> [--grail] [--alpha 1e-3]
   grail plan  --spec <spec.toml> [--family f] [--ckpt c] [--toml]
   grail run   --spec <spec.toml> [--family f] [--ckpt c]
+  grail run   --plan <plan.toml> --family <f> [--ckpt c]
   grail batch <spec.toml>... [--jobs N] [--out results]
+  grail tune  --spec <spec.toml> [--family f] [--ckpt c] [--jobs N]
+              [--out results] [--eval]
   grail info
 
 SPEC FILES (TOML subset; full reference in EXPERIMENTS.md, commented
@@ -92,6 +97,12 @@ example in examples/lm_depth_ramp.spec.toml):
               mode = \"gram-sensitivity\" target_ratio: keep counts
                 allocated from the global unit budget by each site's mean
                 Gram-diagonal activation energy (dense model)
+              mode = \"search\"           target_ratio, alpha_grid, rounds:
+                calibration-driven coordinate search — per-site ridge α
+                tuned over the grid and keep counts reallocated across
+                sites at a fixed weighted-unit budget, scored by held-out
+                Gram reconstruction error (`grail tune` emits the winner
+                as a plan TOML; results are worker-count invariant)
               Budget allocators re-assign every ratio no rule pinned.
 
 METHOD NAMES:

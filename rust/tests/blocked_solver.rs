@@ -5,33 +5,14 @@
 //! jitter-rescue path — and its parallel RHS fan-out must be
 //! bit-invariant to the worker count.
 
+mod common;
+
+use common::{randn, spd};
 use grail::linalg::{solve_spd_multi, solve_spd_multi_ref, BlockedCholesky};
 use grail::linalg::{FACTOR_BLOCK, RHS_PANEL};
 use grail::rng::Pcg64;
 use grail::tensor::ops::{gram, matmul};
-use grail::tensor::Tensor;
 use grail::testing::{check, Config};
-
-fn randn(r: &mut Pcg64, shape: &[usize]) -> Tensor {
-    let mut t = Tensor::zeros(shape);
-    r.fill_normal(t.data_mut(), 1.0);
-    t
-}
-
-/// Well-conditioned SPD matrix: XᵀX/rows + I.
-fn spd(r: &mut Pcg64, n: usize) -> Tensor {
-    let rows = 2 * n + 3;
-    let x = randn(r, &[rows, n]);
-    let mut g = gram(&x);
-    for v in g.data_mut().iter_mut() {
-        *v /= rows as f32;
-    }
-    for i in 0..n {
-        let v = g.at2(i, i) + 1.0;
-        g.set2(i, i, v);
-    }
-    g
-}
 
 /// Property: blocked and scalar solves agree within f32 round-off for
 /// random sizes straddling the factor-panel and RHS-panel boundaries,

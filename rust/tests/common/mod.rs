@@ -1,0 +1,111 @@
+//! Shared seeded fixtures for the integration-test binaries: model
+//! family constructors, calibration batches, random linear-algebra
+//! helpers, and report assertions. Each test binary compiles this
+//! module independently (`mod common;`), so helpers unused by one
+//! binary are expected.
+#![allow(dead_code)]
+
+use grail::data::{SynthText, SynthVision, TextSplit, VisionSet};
+use grail::grail::Report;
+use grail::nn::models::{LmBatch, LmConfig, MiniResNet, MlpNet, TinyLm, TinyViT, VitConfig};
+use grail::rng::Pcg64;
+use grail::tensor::ops::gram;
+use grail::tensor::Tensor;
+
+/// The standard MLP fixture: `MlpNet::init(768, 32, 10)` from a fresh
+/// generator seeded with `seed`.
+pub fn mlp(seed: u64) -> MlpNet {
+    mlp_sized(768, 32, 10, seed)
+}
+
+/// An MLP with explicit geometry (wider/narrower sweeps).
+pub fn mlp_sized(in_dim: usize, hidden: usize, out: usize, seed: u64) -> MlpNet {
+    MlpNet::init(in_dim, hidden, out, &mut Pcg64::seed(seed))
+}
+
+/// The standard MiniResNet fixture.
+pub fn resnet(seed: u64) -> MiniResNet {
+    MiniResNet::init(&mut Pcg64::seed(seed))
+}
+
+/// The standard TinyViT fixture (default config).
+pub fn vit(seed: u64) -> TinyViT {
+    TinyViT::init(VitConfig::default(), &mut Pcg64::seed(seed))
+}
+
+/// A TinyLm with the given config from a fresh seeded generator.
+pub fn lm(cfg: LmConfig, seed: u64) -> TinyLm {
+    TinyLm::init(cfg, &mut Pcg64::seed(seed))
+}
+
+/// A TinyLm with `n_layers` layers and otherwise-default (MHA) config.
+pub fn lm_layers(n_layers: usize, seed: u64) -> TinyLm {
+    lm(LmConfig { n_layers, ..Default::default() }, seed)
+}
+
+/// Synthetic vision calibration images `[n, 768]`.
+pub fn vision_calib(seed: u64, n: usize) -> Tensor {
+    vision_set(seed, n).x
+}
+
+/// Synthetic labelled vision set (accuracy / REPAIR fixtures).
+pub fn vision_set(seed: u64, n: usize) -> VisionSet {
+    SynthVision::new(seed).generate(n)
+}
+
+/// Synthetic LM batch from an arbitrary grammar split.
+pub fn lm_batch(
+    text_seed: u64,
+    split: TextSplit,
+    tokens: usize,
+    seq: usize,
+    windows: usize,
+) -> LmBatch {
+    let ts = SynthText::new(text_seed).generate(split, tokens);
+    LmBatch::from_tokens(&ts, seq, windows)
+}
+
+/// Synthetic LM calibration batch (the `Calib` split).
+pub fn lm_calib(text_seed: u64, tokens: usize, seq: usize, windows: usize) -> LmBatch {
+    lm_batch(text_seed, TextSplit::Calib, tokens, seq, windows)
+}
+
+/// Standard-normal tensor of the given shape.
+pub fn randn(r: &mut Pcg64, shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    r.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+/// Well-conditioned SPD matrix: `XᵀX/rows + I`.
+pub fn spd(r: &mut Pcg64, n: usize) -> Tensor {
+    let rows = 2 * n + 3;
+    let x = randn(r, &[rows, n]);
+    let mut g = gram(&x);
+    for v in g.data_mut().iter_mut() {
+        *v /= rows as f32;
+    }
+    for i in 0..n {
+        let v = g.at2(i, i) + 1.0;
+        g.set2(i, i, v);
+    }
+    g
+}
+
+/// Site-by-site bitwise equality of two pipeline reports.
+pub fn assert_reports_identical(a: &Report, b: &Report) {
+    assert_eq!(a.sites.len(), b.sites.len(), "site counts");
+    for (x, y) in a.sites.iter().zip(&b.sites) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.units_before, y.units_before);
+        assert_eq!(x.units_after, y.units_after);
+        assert_eq!(
+            x.recon_err.to_bits(),
+            y.recon_err.to_bits(),
+            "site {}: recon_err {} vs {}",
+            x.id,
+            x.recon_err,
+            y.recon_err
+        );
+    }
+}

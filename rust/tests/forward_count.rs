@@ -5,21 +5,18 @@
 //! the process-global counter in `bench_util` sees no concurrent
 //! increments from other tests.
 
+mod common;
+
 use grail::bench_util::{layer_forwards, layer_forwards_reset};
 use grail::compress::Selector;
-use grail::data::{SynthText, TextSplit};
-use grail::grail::{compress_model, compress_model_rescan, Method, CompressionSpec};
-use grail::nn::models::{LmBatch, LmConfig, TinyLm};
-use grail::rng::Pcg64;
+use grail::grail::{compress_model, compress_model_rescan, CompressionSpec, Method};
 
 #[test]
 fn closed_loop_layer_forwards_are_linear_in_depth() {
     let layers = 3usize;
     let n_sites = 2 * layers; // one attention + one MLP site per block
-    let mut rng = Pcg64::seed(11);
-    let lm = TinyLm::init(LmConfig { n_layers: layers, ..Default::default() }, &mut rng);
-    let ts = SynthText::new(5).generate(TextSplit::Calib, 2000);
-    let calib = LmBatch::from_tokens(&ts, 16, 8);
+    let lm = common::lm_layers(layers, 11);
+    let calib = common::lm_calib(5, 2000, 16, 8);
 
     // Single shard / single worker so the counter reflects segment
     // executions of the whole batch, independent of sharding.

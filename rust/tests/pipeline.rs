@@ -3,18 +3,16 @@
 //! combination, plus property-based invariants via the in-tree
 //! framework (no proptest offline).
 
+mod common;
+
 use grail::compress::baselines::Baseline;
 use grail::compress::Selector;
-use grail::data::{SynthText, SynthVision, TextSplit};
+use grail::data::{SynthText, TextSplit};
 use grail::eval::{lm_perplexity, vision_accuracy};
-use grail::grail::{compress_model, Method, CompressionSpec};
-use grail::nn::models::{LmBatch, LmConfig, MiniResNet, MlpNet, TinyLm, TinyViT, VitConfig};
+use grail::grail::{compress_model, CompressionSpec, Method};
+use grail::nn::models::{LmConfig, MlpNet};
 use grail::rng::Pcg64;
 use grail::testing::{check, Config};
-
-fn vision_calib() -> grail::tensor::Tensor {
-    SynthVision::new(9).generate(64).x
-}
 
 /// `Compressible::param_count` must agree with the serialized
 /// checkpoint size for every family (guards drift between the
@@ -22,15 +20,14 @@ fn vision_calib() -> grail::tensor::Tensor {
 #[test]
 fn param_count_matches_bundle_for_all_families() {
     use grail::compress::Compressible;
-    let mut rng = Pcg64::seed(99);
-    let mlp = MlpNet::init(768, 32, 10, &mut rng);
+    let mlp = common::mlp(99);
     assert_eq!(mlp.param_count(), mlp.to_bundle().num_params());
-    let resnet = MiniResNet::init(&mut rng);
+    let resnet = common::resnet(99);
     assert_eq!(resnet.param_count(), resnet.to_bundle().num_params());
-    let vit = TinyViT::init(VitConfig::default(), &mut rng);
+    let vit = common::vit(99);
     assert_eq!(vit.param_count(), vit.to_bundle().num_params());
     for cfg in [LmConfig::default(), LmConfig::gqa()] {
-        let lm = TinyLm::init(cfg, &mut rng);
+        let lm = common::lm(cfg, 99);
         assert_eq!(lm.param_count(), lm.to_bundle().num_params());
     }
 }
@@ -38,7 +35,6 @@ fn param_count_matches_bundle_for_all_families() {
 /// Every (method, grail) combination leaves every model functional.
 #[test]
 fn all_methods_all_models_stay_finite() {
-    let mut rng = Pcg64::seed(1);
     let methods = [
         Method::Prune(Selector::MagnitudeL1),
         Method::Prune(Selector::MagnitudeL2),
@@ -53,10 +49,10 @@ fn all_methods_all_models_stay_finite() {
         Method::Baseline(Baseline::ZipLM),
         Method::Baseline(Baseline::Flap),
     ];
-    let x = vision_calib();
-    let mlp = MlpNet::init(768, 32, 10, &mut rng);
-    let resnet = MiniResNet::init(&mut rng);
-    let vit = TinyViT::init(VitConfig::default(), &mut rng);
+    let x = common::vision_calib(9, 64);
+    let mlp = common::mlp(1);
+    let resnet = common::resnet(1);
+    let vit = common::vit(1);
     for method in methods {
         for grail_on in [false, true] {
             let cfg = CompressionSpec::uniform(method, 0.5, grail_on);
@@ -76,11 +72,9 @@ fn all_methods_all_models_stay_finite() {
 /// The LM pipeline handles head sites (MHA and GQA) for every method.
 #[test]
 fn lm_pipeline_mha_and_gqa() {
-    let mut rng = Pcg64::seed(2);
-    let ts = SynthText::new(3).generate(TextSplit::Train, 4000);
-    let calib = LmBatch::from_tokens(&ts, 16, 16);
+    let calib = common::lm_batch(3, TextSplit::Train, 4000, 16, 16);
     for cfg_lm in [LmConfig::default(), LmConfig::gqa()] {
-        let lm = TinyLm::init(cfg_lm, &mut rng);
+        let lm = common::lm(cfg_lm, 2);
         for method in [
             Method::Prune(Selector::Wanda),
             Method::Fold,
@@ -107,9 +101,8 @@ fn lm_pipeline_mha_and_gqa() {
 /// output fidelity — across selectors and architectures.
 #[test]
 fn grail_beats_bare_on_output_fidelity() {
-    let mut rng = Pcg64::seed(4);
-    let model = MlpNet::init(768, 64, 10, &mut rng);
-    let x = SynthVision::new(5).generate(96).x;
+    let model = common::mlp_sized(768, 64, 10, 4);
+    let x = common::vision_calib(5, 96);
     let y_ref = model.forward(&x);
     for method in [
         Method::Prune(Selector::MagnitudeL2),
@@ -189,9 +182,8 @@ fn prop_identity_gram_recovers_selection() {
 /// check relative output distortion rather than accuracy.
 #[test]
 fn resnet_grail_repair_reduces_distortion() {
-    let mut rng = Pcg64::seed(6);
-    let model = MiniResNet::init(&mut rng);
-    let calib_set = SynthVision::new(7).generate(48);
+    let model = common::resnet(6);
+    let calib_set = common::vision_set(7, 48);
     let y_ref = model.forward(&calib_set.x);
     let run = |grail_on: bool, repair: bool| {
         let mut m = model.clone();
@@ -215,10 +207,9 @@ fn resnet_grail_repair_reduces_distortion() {
 /// makes an untrained model's perplexity dramatically worse).
 #[test]
 fn lm_grail_does_not_explode_perplexity() {
-    let mut rng = Pcg64::seed(8);
-    let lm = TinyLm::init(LmConfig { n_layers: 2, ..Default::default() }, &mut rng);
+    let lm = common::lm_layers(2, 8);
     let text = SynthText::new(10);
-    let calib = LmBatch::from_tokens(&text.generate(TextSplit::Calib, 3000), 16, 16);
+    let calib = common::lm_batch(10, TextSplit::Calib, 3000, 16, 16);
     let eval = text.generate(TextSplit::Wt2s, 2000);
     let base = lm_perplexity(&lm, &eval, 16, 16, 8);
     let mut m = lm.clone();
@@ -236,9 +227,8 @@ fn lm_grail_does_not_explode_perplexity() {
 /// evaluation (guards the experiment engine's batching).
 #[test]
 fn sweep_eval_matches_direct() {
-    let mut rng = Pcg64::seed(11);
-    let m = MlpNet::init(768, 24, 10, &mut rng);
-    let set = SynthVision::new(12).generate(100);
+    let m = common::mlp_sized(768, 24, 10, 11);
+    let set = common::vision_set(12, 100);
     let direct = {
         let logits = m.forward(&set.x);
         grail::eval::accuracy_from_logits(&logits, &set.y)
@@ -251,19 +241,25 @@ fn sweep_eval_matches_direct() {
 /// head per KV group) and still produces a working model.
 #[test]
 fn extreme_ratios_clamp_safely() {
-    let mut rng = Pcg64::seed(20);
-    let x = vision_calib();
+    let x = common::vision_calib(9, 64);
     for ratio in [0.95, 0.99] {
-        let mut m = MlpNet::init(768, 16, 10, &mut rng);
-        compress_model(&mut m, &x, &CompressionSpec::uniform(Method::Prune(Selector::Wanda), ratio, true));
+        let mut m = common::mlp_sized(768, 16, 10, 20);
+        compress_model(
+            &mut m,
+            &x,
+            &CompressionSpec::uniform(Method::Prune(Selector::Wanda), ratio, true),
+        );
         assert!(m.fc1.out_dim() >= 1);
         assert!(m.forward(&x).all_finite());
     }
     // GQA: never below one query head per group.
-    let ts = SynthText::new(21).generate(TextSplit::Train, 2000);
-    let calib = LmBatch::from_tokens(&ts, 16, 8);
-    let mut lm = TinyLm::init(LmConfig::gqa(), &mut rng);
-    compress_model(&mut lm, &calib, &CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.99, true));
+    let calib = common::lm_batch(21, TextSplit::Train, 2000, 16, 8);
+    let mut lm = common::lm(LmConfig::gqa(), 20);
+    compress_model(
+        &mut lm,
+        &calib,
+        &CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.99, true),
+    );
     for blk in &lm.blocks {
         assert_eq!(blk.attn.n_heads, 4); // 4 groups × 1 head floor
         assert_eq!(blk.attn.n_kv, 4);
@@ -275,9 +271,8 @@ fn extreme_ratios_clamp_safely() {
 /// least as good on deep-model output fidelity.
 #[test]
 fn closed_loop_no_worse_than_open() {
-    let mut rng = Pcg64::seed(22);
-    let model = MlpNet::init(768, 64, 10, &mut rng);
-    let x = SynthVision::new(23).generate(96).x;
+    let model = common::mlp_sized(768, 64, 10, 22);
+    let x = common::vision_calib(23, 96);
     let y_ref = model.forward(&x);
     let run = |closed: bool| {
         let mut m = model.clone();
@@ -300,12 +295,9 @@ fn closed_loop_no_worse_than_open() {
 #[test]
 fn full_pipeline_bitwise_deterministic() {
     let run = || {
-        let mut rng = Pcg64::seed(30);
-        let mut m = TinyLm::init(LmConfig::default(), &mut rng);
-        let ts = SynthText::new(31).generate(TextSplit::Calib, 2000);
-        let calib = LmBatch::from_tokens(&ts, 16, 8);
-        let mut cfg =
-            CompressionSpec::uniform(Method::Baseline(Baseline::Flap), 0.5, true);
+        let mut m = common::lm(LmConfig::default(), 30);
+        let calib = common::lm_calib(31, 2000, 16, 8);
+        let mut cfg = CompressionSpec::uniform(Method::Baseline(Baseline::Flap), 0.5, true);
         cfg.seed = 99;
         compress_model(&mut m, &calib, &cfg);
         m.forward(&calib)

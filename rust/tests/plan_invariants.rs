@@ -1,0 +1,267 @@
+//! Property tests over the `Spec → Plan` surface: every `BudgetMode`
+//! allocator must conserve its budget, respect per-site keep floors
+//! and group divisibility, ramp monotonically where it promises to,
+//! and resolve deterministically — over seeded random site lists and
+//! specs. Plus the serializer fuzz: `CompressionPlan → TOML → parse`
+//! must reconstruct an identical plan for arbitrary (nasty) site ids
+//! and full-precision policies.
+
+mod common;
+
+use grail::compress::{SiteInfo, SiteKind};
+use grail::grail::pipeline::uniform_keep;
+use grail::grail::{
+    BudgetMode, CompressionPlan, CompressionSpec, Method, PlannedSite, PolicyOverrides,
+    PolicyRule, SiteMatcher, SitePolicy,
+};
+use grail::rng::Pcg64;
+use grail::testing::{check, Config, Size};
+
+const KINDS: [SiteKind; 4] =
+    [SiteKind::Dense, SiteKind::Conv, SiteKind::MlpPair, SiteKind::AttnHeads];
+
+/// Smallest admissible keep / smallest keep step of a site (mirrors
+/// the resolver's group constraints: divisible grouped sites move in
+/// whole groups, everything else unit by unit).
+fn floor_and_step(units: usize, groups: usize) -> (usize, usize) {
+    if groups > 1 && units % groups == 0 {
+        (groups, groups)
+    } else {
+        (1, 1)
+    }
+}
+
+fn random_sites(rng: &mut Pcg64, size: Size) -> Vec<SiteInfo> {
+    let n = 1 + rng.below(size.scale(10, 2));
+    (0..n)
+        .map(|i| {
+            let groups = 1 + rng.below(4);
+            let units = if rng.below(2) == 0 {
+                groups * (1 + rng.below(16)) // group-divisible
+            } else {
+                1 + rng.below(64) // arbitrary (often non-divisible)
+            };
+            SiteInfo {
+                id: format!("s{i}"),
+                units,
+                unit_dim: 1 + rng.below(4),
+                groups,
+                kind: KINDS[rng.below(4)],
+            }
+        })
+        .collect()
+}
+
+/// Per-site structural floor: keep within `[1, units]`, whole groups
+/// on divisible grouped sites.
+fn assert_site_keeps_valid(plan: &CompressionPlan) {
+    for ps in &plan.sites {
+        assert!(ps.keep >= 1 && ps.keep <= ps.units, "{}: keep {}", ps.id, ps.keep);
+        let (floor, _) = floor_and_step(ps.units, ps.groups);
+        assert!(ps.keep >= floor, "{}: keep {} under floor {floor}", ps.id, ps.keep);
+        if ps.groups > 1 && ps.units % ps.groups == 0 {
+            assert_eq!(ps.keep % ps.groups, 0, "{}: keep {} not whole groups", ps.id, ps.keep);
+        }
+    }
+}
+
+/// Budget conservation for the global allocators: the total keep over
+/// the non-pinned sites lands on the clamped unit target, within one
+/// group step of it.
+fn assert_budget_conserved(plan: &CompressionPlan, free: &[usize], target_ratio: f64) {
+    let total_units: usize = free.iter().map(|&i| plan.sites[i].units).sum();
+    let min_total: usize = free
+        .iter()
+        .map(|&i| floor_and_step(plan.sites[i].units, plan.sites[i].groups).0)
+        .sum();
+    let target = (((total_units as f64) * (1.0 - target_ratio)).round() as usize)
+        .clamp(min_total, total_units);
+    let kept: usize = free.iter().map(|&i| plan.sites[i].keep).sum();
+    let max_step = free
+        .iter()
+        .map(|&i| floor_and_step(plan.sites[i].units, plan.sites[i].groups).1)
+        .max()
+        .unwrap_or(1);
+    assert!(
+        kept <= target + max_step && kept + max_step >= target,
+        "kept {kept} vs target {target} (max step {max_step})"
+    );
+}
+
+#[test]
+fn prop_per_site_matches_uniform_keep() {
+    check(Config { cases: 48, seed: 0x9AAA }, |rng, size| {
+        let sites = random_sites(rng, size);
+        let ratio = 0.05 + 0.9 * rng.next_f64();
+        let spec = CompressionSpec::uniform(Method::Fold, ratio, true);
+        let plan = spec.resolve(&sites, None).map_err(|e| e.to_string())?;
+        assert_site_keeps_valid(&plan);
+        for (ps, s) in plan.sites.iter().zip(&sites) {
+            if ps.keep != uniform_keep(s.units, s.groups, ratio) {
+                return Err(format!("{}: keep {} != uniform", ps.id, ps.keep));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_global_allocators_conserve_budget() {
+    check(Config { cases: 48, seed: 0x9BBB }, |rng, size| {
+        let sites = random_sites(rng, size);
+        let target = 0.05 + 0.9 * rng.next_f64();
+        // Half the cases pin site 0 by rule: allocators must leave it
+        // alone and conserve over the rest.
+        let pin = rng.below(2) == 0;
+        let pin_ratio = 0.1 + 0.5 * rng.next_f64();
+        let budgets = [
+            BudgetMode::GramSensitivity { target_ratio: target },
+            BudgetMode::Search {
+                target_ratio: target,
+                alpha_grid: vec![1e-4, 5e-3],
+                rounds: 1,
+            },
+        ];
+        for budget in budgets {
+            let mut spec = CompressionSpec::uniform(Method::Fold, 0.5, true);
+            spec.budget = budget;
+            if pin {
+                spec.rules = vec![PolicyRule {
+                    matcher: SiteMatcher { id_glob: Some("s0".into()), ..Default::default() },
+                    set: PolicyOverrides { ratio: Some(pin_ratio), ..Default::default() },
+                }];
+            }
+            let sens: Vec<f64> = sites.iter().map(|_| rng.next_f64() * 4.0).collect();
+            let plan = spec.resolve(&sites, Some(&sens)).map_err(|e| e.to_string())?;
+            assert_site_keeps_valid(&plan);
+            let free: Vec<usize> = (0..sites.len()).skip(usize::from(pin)).collect();
+            assert_budget_conserved(&plan, &free, target);
+            if pin {
+                let s0 = &plan.sites[0];
+                if s0.keep != uniform_keep(s0.units, s0.groups, pin_ratio) {
+                    return Err(format!("pinned site moved: keep {}", s0.keep));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_depth_ramp_monotone_in_depth_and_gamma() {
+    check(Config { cases: 48, seed: 0x9CCC }, |rng, size| {
+        let sites = random_sites(rng, size);
+        let target = 0.1 + 0.6 * rng.next_f64();
+        let g1 = 1.5 * rng.next_f64();
+        let g2 = g1 + rng.next_f64();
+        let resolve = |gamma: f64| {
+            let mut spec = CompressionSpec::uniform(Method::Fold, 0.5, true);
+            spec.budget = BudgetMode::DepthRamp { target_ratio: target, gamma };
+            spec.resolve(&sites, None).unwrap()
+        };
+        let (a, b) = (resolve(g1), resolve(g2));
+        assert_site_keeps_valid(&a);
+        assert_site_keeps_valid(&b);
+        let n = sites.len();
+        for i in 0..n {
+            // Within one plan: ratios non-decreasing in depth.
+            if i + 1 < n && a.sites[i + 1].policy.ratio < a.sites[i].policy.ratio {
+                return Err(format!("gamma {g1}: ratio dips at {i}"));
+            }
+            // Across gammas: larger gamma prunes the deep half at
+            // least as hard and the shallow half at most as hard.
+            let pos = if n <= 1 { 0.5 } else { i as f64 / (n - 1) as f64 };
+            let (ra, rb) = (a.sites[i].policy.ratio, b.sites[i].policy.ratio);
+            if 2.0 * pos - 1.0 >= 0.0 {
+                if rb < ra {
+                    return Err(format!("site {i}: deep ratio fell {ra} -> {rb}"));
+                }
+            } else if rb > ra {
+                return Err(format!("site {i}: shallow ratio rose {ra} -> {rb}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resolve_is_deterministic() {
+    check(Config { cases: 32, seed: 0x9DDD }, |rng, size| {
+        let sites = random_sites(rng, size);
+        let target = 0.05 + 0.9 * rng.next_f64();
+        let budgets = [
+            BudgetMode::PerSite,
+            BudgetMode::DepthRamp { target_ratio: target, gamma: 0.7 },
+            BudgetMode::GramSensitivity { target_ratio: target },
+            BudgetMode::Search { target_ratio: target, alpha_grid: vec![1e-4], rounds: 2 },
+        ];
+        let sens: Vec<f64> = sites.iter().map(|_| rng.next_f64()).collect();
+        for budget in budgets {
+            let mut spec = CompressionSpec::uniform(Method::Fold, target, true);
+            spec.budget = budget;
+            let a = spec.resolve(&sites, Some(&sens)).map_err(|e| e.to_string())?;
+            let b = spec.resolve(&sites, Some(&sens)).map_err(|e| e.to_string())?;
+            if a != b {
+                return Err(format!("{}: resolve not deterministic", spec.budget.name()));
+            }
+            if a.to_toml() != b.to_toml() {
+                return Err(format!("{}: serialization not deterministic", spec.budget.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Serializer fuzz: arbitrary plans — nasty ids with globs, quotes,
+/// escapes, whitespace; full-precision float policies — must round-trip
+/// through `to_toml` + `parse` bit-for-bit.
+#[test]
+fn prop_plan_toml_roundtrip() {
+    const POOL: &[char] = &[
+        'a', 'b', 'z', 'A', '0', '7', '.', '-', '_', '>', '*', '?', '"', '\\', '#', ' ', '\n',
+        '\t',
+    ];
+    check(Config { cases: 64, seed: 0x9EEE }, |rng, size| {
+        let n = 1 + rng.below(size.scale(6, 2));
+        let methods = Method::all();
+        let sites: Vec<PlannedSite> = (0..n)
+            .map(|i| {
+                let units = 1 + rng.below(64);
+                let keep = 1 + rng.below(units);
+                let id: String =
+                    (0..rng.below(14)).map(|_| POOL[rng.below(POOL.len())]).collect();
+                PlannedSite {
+                    id,
+                    index: i,
+                    units,
+                    unit_dim: 1 + rng.below(8),
+                    groups: 1 + rng.below(8),
+                    kind: KINDS[rng.below(4)],
+                    keep,
+                    policy: SitePolicy {
+                        method: methods[rng.below(methods.len())],
+                        ratio: rng.next_f64(),
+                        grail: rng.below(2) == 0,
+                        alpha: (rng.next_f32() + 1e-6)
+                            * 10f32.powi(-(rng.below(7) as i32)),
+                    },
+                    rules_applied: (0..rng.below(4)).map(|_| rng.below(40)).collect(),
+                }
+            })
+            .collect();
+        let plan = CompressionPlan {
+            sites,
+            seed: rng.next_u64() >> 16,
+            closed_loop: rng.below(2) == 0,
+            shards: rng.below(32),
+            workers: rng.below(16),
+        };
+        let text = plan.to_toml();
+        let back = CompressionPlan::parse(&text)
+            .map_err(|e| format!("parse failed: {e:#}\n--- toml ---\n{text}"))?;
+        if back != plan {
+            return Err(format!("round trip changed the plan\n--- toml ---\n{text}"));
+        }
+        Ok(())
+    });
+}

@@ -3,32 +3,17 @@
 //! family, in both closed- and open-loop modes — same selections, same
 //! reconstruction errors, same compressed weights.
 
+mod common;
+
+use common::assert_reports_identical;
 use grail::compress::{Compressible, Selector, SiteKind};
-use grail::data::{SynthText, SynthVision, TextSplit};
 use grail::grail::{
     compress_model, compress_model_rescan, plan_for_model, BudgetMode, CompressionSpec, Method,
-    PolicyOverrides, PolicyRule, Report, SiteMatcher,
+    PolicyOverrides, PolicyRule, SiteMatcher,
 };
-use grail::nn::models::{LmBatch, LmConfig, MiniResNet, MlpNet, TinyLm, TinyViT, VitConfig};
+use grail::nn::models::{LmConfig, MlpNet};
 use grail::rng::Pcg64;
 use grail::testing::{check, Config};
-
-fn assert_reports_identical(a: &Report, b: &Report) {
-    assert_eq!(a.sites.len(), b.sites.len(), "site counts");
-    for (x, y) in a.sites.iter().zip(&b.sites) {
-        assert_eq!(x.id, y.id);
-        assert_eq!(x.units_before, y.units_before);
-        assert_eq!(x.units_after, y.units_after);
-        assert_eq!(
-            x.recon_err.to_bits(),
-            y.recon_err.to_bits(),
-            "site {}: recon_err {} vs {}",
-            x.id,
-            x.recon_err,
-            y.recon_err
-        );
-    }
-}
 
 fn configs() -> Vec<CompressionSpec> {
     let mut out = Vec::new();
@@ -44,9 +29,8 @@ fn configs() -> Vec<CompressionSpec> {
 
 #[test]
 fn staged_matches_rescan_mlp() {
-    let mut rng = Pcg64::seed(1);
-    let m0 = MlpNet::init(768, 32, 10, &mut rng);
-    let x = SynthVision::new(9).generate(48).x;
+    let m0 = common::mlp(1);
+    let x = common::vision_calib(9, 48);
     for cfg in configs() {
         let mut a = m0.clone();
         let ra = compress_model(&mut a, &x, &cfg);
@@ -59,9 +43,8 @@ fn staged_matches_rescan_mlp() {
 
 #[test]
 fn staged_matches_rescan_resnet() {
-    let mut rng = Pcg64::seed(2);
-    let m0 = MiniResNet::init(&mut rng);
-    let x = SynthVision::new(9).generate(12).x;
+    let m0 = common::resnet(2);
+    let x = common::vision_calib(9, 12);
     for cfg in configs() {
         let mut a = m0.clone();
         let ra = compress_model(&mut a, &x, &cfg);
@@ -74,9 +57,8 @@ fn staged_matches_rescan_resnet() {
 
 #[test]
 fn staged_matches_rescan_vit() {
-    let mut rng = Pcg64::seed(3);
-    let m0 = TinyViT::init(VitConfig::default(), &mut rng);
-    let x = SynthVision::new(9).generate(16).x;
+    let m0 = common::vit(3);
+    let x = common::vision_calib(9, 16);
     for cfg in configs() {
         let mut a = m0.clone();
         let ra = compress_model(&mut a, &x, &cfg);
@@ -89,11 +71,9 @@ fn staged_matches_rescan_vit() {
 
 #[test]
 fn staged_matches_rescan_lm_mha_and_gqa() {
-    let mut rng = Pcg64::seed(4);
-    let ts = SynthText::new(5).generate(TextSplit::Calib, 3000);
-    let calib = LmBatch::from_tokens(&ts, 16, 12);
+    let calib = common::lm_calib(5, 3000, 16, 12);
     for lm_cfg in [LmConfig::default(), LmConfig::gqa()] {
-        let m0 = TinyLm::init(lm_cfg, &mut rng);
+        let m0 = common::lm(lm_cfg, 4);
         for cfg in configs() {
             let mut a = m0.clone();
             let ra = compress_model(&mut a, &calib, &cfg);
@@ -110,34 +90,32 @@ fn staged_matches_rescan_lm_mha_and_gqa() {
 /// every family — the invariant the next closed-loop run relies on.
 #[test]
 fn staged_prefix_matches_taps_after_compression_all_families() {
-    let mut rng = Pcg64::seed(6);
     let cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
-    let x = SynthVision::new(9).generate(10).x;
+    let x = common::vision_calib(9, 10);
 
-    let mut mlp = MlpNet::init(768, 32, 10, &mut rng);
+    let mut mlp = common::mlp(6);
     compress_model(&mut mlp, &x, &cfg);
     let (_, taps) = mlp.forward_with_taps(&x);
     for (site, tap) in taps.iter().enumerate() {
         assert_eq!(&mlp.site_activations(&x, site), tap, "mlp site {site}");
     }
 
-    let mut resnet = MiniResNet::init(&mut rng);
+    let mut resnet = common::resnet(6);
     compress_model(&mut resnet, &x, &cfg);
     let (_, taps) = resnet.forward_with_taps(&x);
     for (site, tap) in taps.iter().enumerate() {
         assert_eq!(&resnet.site_activations(&x, site), tap, "resnet site {site}");
     }
 
-    let mut vit = TinyViT::init(VitConfig::default(), &mut rng);
+    let mut vit = common::vit(6);
     compress_model(&mut vit, &x, &cfg);
     let (_, taps) = vit.forward_with_taps(&x);
     for (site, tap) in taps.iter().enumerate() {
         assert_eq!(&vit.site_activations(&x, site), tap, "vit site {site}");
     }
 
-    let ts = SynthText::new(5).generate(TextSplit::Calib, 2000);
-    let calib = LmBatch::from_tokens(&ts, 16, 8);
-    let mut lm = TinyLm::init(LmConfig::default(), &mut rng);
+    let calib = common::lm_calib(5, 2000, 16, 8);
+    let mut lm = common::lm(LmConfig::default(), 6);
     compress_model(&mut lm, &calib, &cfg);
     let (_, taps) = lm.forward_with_taps(&calib);
     for (site, tap) in taps.iter().enumerate() {
@@ -209,10 +187,8 @@ fn rule_built_uniform(target: &CompressionSpec) -> CompressionSpec {
 /// both engines, closed- and open-loop.
 #[test]
 fn uniform_spec_equivalence_all_families() {
-    let mut rng = Pcg64::seed(41);
-    let x = SynthVision::new(9).generate(16).x;
-    let ts = SynthText::new(5).generate(TextSplit::Calib, 2000);
-    let lm_calib = LmBatch::from_tokens(&ts, 16, 8);
+    let x = common::vision_calib(9, 16);
+    let lm_calib = common::lm_calib(5, 2000, 16, 8);
 
     macro_rules! check_family {
         ($m0:expr, $calib:expr) => {
@@ -234,13 +210,13 @@ fn uniform_spec_equivalence_all_families() {
         };
     }
 
-    let mlp = MlpNet::init(768, 32, 10, &mut rng);
+    let mlp = common::mlp(41);
     check_family!(mlp, &x);
-    let resnet = MiniResNet::init(&mut rng);
+    let resnet = common::resnet(41);
     check_family!(resnet, &x);
-    let vit = TinyViT::init(VitConfig::default(), &mut rng);
+    let vit = common::vit(41);
     check_family!(vit, &x);
-    let lm = TinyLm::init(LmConfig::default(), &mut rng);
+    let lm = common::lm(LmConfig::default(), 41);
     check_family!(lm, &lm_calib);
 }
 
@@ -249,10 +225,8 @@ fn uniform_spec_equivalence_all_families() {
 /// and runs end-to-end on TinyLm through both engines.
 #[test]
 fn heterogeneous_spec_on_tinylm() {
-    let mut rng = Pcg64::seed(42);
-    let ts = SynthText::new(5).generate(TextSplit::Calib, 3000);
-    let calib = LmBatch::from_tokens(&ts, 16, 12);
-    let m0 = TinyLm::init(LmConfig { n_layers: 3, ..Default::default() }, &mut rng);
+    let calib = common::lm_calib(5, 3000, 16, 12);
+    let m0 = common::lm_layers(3, 42);
 
     let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
     // Attention sites fold instead of prune; the deepest block is
@@ -308,10 +282,8 @@ fn heterogeneous_spec_on_tinylm() {
 /// track the global budget and the compressed model still works.
 #[test]
 fn gram_sensitivity_budget_on_tinylm() {
-    let mut rng = Pcg64::seed(43);
-    let ts = SynthText::new(5).generate(TextSplit::Calib, 3000);
-    let calib = LmBatch::from_tokens(&ts, 16, 12);
-    let m0 = TinyLm::init(LmConfig::default(), &mut rng);
+    let calib = common::lm_calib(5, 3000, 16, 12);
+    let m0 = common::lm(LmConfig::default(), 43);
 
     let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
     spec.budget = BudgetMode::GramSensitivity { target_ratio: 0.5 };
@@ -335,10 +307,8 @@ fn gram_sensitivity_budget_on_tinylm() {
 /// (selected widths) and produces working models at every shard count.
 #[test]
 fn shard_counts_agree_on_selections() {
-    let mut rng = Pcg64::seed(7);
-    let ts = SynthText::new(5).generate(TextSplit::Calib, 3000);
-    let calib = LmBatch::from_tokens(&ts, 16, 12);
-    let m0 = TinyLm::init(LmConfig::default(), &mut rng);
+    let calib = common::lm_calib(5, 3000, 16, 12);
+    let m0 = common::lm(LmConfig::default(), 7);
     let mut widths: Vec<Vec<usize>> = Vec::new();
     for (shards, workers) in [(1usize, 1usize), (4, 2), (12, 4)] {
         let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);

@@ -1,0 +1,160 @@
+//! `grail tune` acceptance tests: at a matched parameter budget the
+//! searched plan beats the uniform spec's held-out reconstruction
+//! error on multiple model families, the winning plan is bit-identical
+//! at any worker count (the same contract as the blocked solver), and
+//! winners survive the TOML round trip.
+
+mod common;
+
+use grail::compress::Selector;
+use grail::grail::{
+    execute_plan, plan_for_model, score_plan, search_plan, BudgetMode, CompressionPlan,
+    CompressionSpec, Method,
+};
+use grail::nn::models::LmConfig;
+use grail::nn::Linear;
+
+/// A search spec sharing every default with the uniform spec, so the
+/// seed plan and the uniform plan coincide and their held-out scores
+/// are directly comparable.
+fn search_spec(ratio: f64) -> CompressionSpec {
+    let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), ratio, true);
+    spec.budget = BudgetMode::Search {
+        target_ratio: ratio,
+        alpha_grid: vec![1e-6, 1e-4, 5e-3, 5e-2],
+        rounds: 2,
+    };
+    spec
+}
+
+/// Scale the producer rows `from..` of a layer to ~zero: those units
+/// carry almost no activation energy, so a uniform keep allocation
+/// wastes budget on them — exactly the situation keep reallocation
+/// must exploit.
+fn dampen_rows(l: &mut Linear, from: usize) {
+    let (out, inn) = (l.w.dim(0), l.w.dim(1));
+    for u in from..out {
+        for v in &mut l.w.data_mut()[u * inn..(u + 1) * inn] {
+            *v *= 1e-3;
+        }
+        l.b.data_mut()[u] *= 1e-3;
+    }
+}
+
+#[test]
+fn tuned_plan_beats_uniform_on_mlp() {
+    let mut m = common::mlp(51);
+    // Site 1's producer (fc2) is three-quarters dead; site 0 is full.
+    dampen_rows(&mut m.fc2, 8);
+    let x = common::vision_calib(52, 96);
+
+    let uniform = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+    let plan_u = plan_for_model(&m, &x, &uniform).unwrap();
+    let out = search_plan(&m, &x, &search_spec(0.5)).unwrap();
+
+    // Matched parameter budget: the winner spends no more weighted
+    // units than the uniform plan.
+    assert!(
+        out.plan.total_keep_weighted() <= plan_u.total_keep_weighted(),
+        "tuned {} vs uniform {} weighted units",
+        out.plan.total_keep_weighted(),
+        plan_u.total_keep_weighted()
+    );
+    // The search starts from the uniform allocation and only accepts
+    // strictly improving moves; with a mostly-dead site to donate from
+    // it must find at least one.
+    assert!(out.keep_moves >= 1, "no keep reallocation accepted");
+    let uniform_score = score_plan(&m, &x, &plan_u);
+    assert!(
+        out.final_err < uniform_score,
+        "tuned {} !< uniform {}",
+        out.final_err,
+        uniform_score
+    );
+
+    // Both plans execute into working models, and the tuned execution
+    // honours the searched keep counts.
+    let mut a = m.clone();
+    execute_plan(&mut a, &x, &plan_u);
+    assert!(a.forward(&x).all_finite());
+    let mut b = m.clone();
+    let rep = execute_plan(&mut b, &x, &out.plan);
+    assert!(b.forward(&x).all_finite());
+    for (o, ps) in rep.sites.iter().zip(&out.plan.sites) {
+        assert_eq!(o.units_after, ps.keep, "{}", o.id);
+    }
+}
+
+#[test]
+fn tuned_plan_beats_uniform_on_tinylm() {
+    let mut m = common::lm(LmConfig::default(), 53);
+    // block0.mlp's producer is three-quarters dead.
+    dampen_rows(&mut m.blocks[0].fc, 48);
+    let calib = common::lm_calib(54, 12_000, 16, 32);
+
+    let uniform = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+    let plan_u = plan_for_model(&m, &calib, &uniform).unwrap();
+    let out = search_plan(&m, &calib, &search_spec(0.5)).unwrap();
+
+    assert!(out.plan.total_keep_weighted() <= plan_u.total_keep_weighted());
+    assert!(out.keep_moves >= 1, "no keep reallocation accepted");
+    let uniform_score = score_plan(&m, &calib, &plan_u);
+    assert!(
+        out.final_err < uniform_score,
+        "tuned {} !< uniform {}",
+        out.final_err,
+        uniform_score
+    );
+
+    let mut b = m.clone();
+    let rep = execute_plan(&mut b, &calib, &out.plan);
+    assert!(b.forward(&calib).all_finite());
+    for (o, ps) in rep.sites.iter().zip(&out.plan.sites) {
+        assert_eq!(o.units_after, ps.keep, "{}", o.id);
+    }
+}
+
+/// The winning plan must be byte-identical at any worker count: every
+/// candidate evaluation is a pure function fanned over disjoint result
+/// slots, and all accept/reject decisions run serially on the gathered
+/// scores. (`workers` itself is an execution knob recorded in the
+/// plan, so it is normalized before comparing.)
+#[test]
+fn worker_count_bit_invariance() {
+    let mut m = common::mlp(51);
+    dampen_rows(&mut m.fc2, 8);
+    let x = common::vision_calib(52, 96);
+
+    let plan_for_workers = |workers: usize| -> (CompressionPlan, f64) {
+        let mut spec = search_spec(0.5);
+        spec.workers = workers;
+        let out = search_plan(&m, &x, &spec).unwrap();
+        let mut plan = out.plan;
+        plan.workers = 0;
+        (plan, out.final_err)
+    };
+    let (serial, serial_err) = plan_for_workers(1);
+    for workers in [2usize, 3, 8] {
+        let (par, par_err) = plan_for_workers(workers);
+        assert_eq!(par, serial, "workers={workers}");
+        assert_eq!(
+            par.to_toml().into_bytes(),
+            serial.to_toml().into_bytes(),
+            "workers={workers}: serialized plans differ"
+        );
+        assert_eq!(par_err.to_bits(), serial_err.to_bits(), "workers={workers}");
+    }
+}
+
+/// A searched winner survives the TOML round trip bit-for-bit — the
+/// contract behind `grail tune` emitting plan files that `grail run`
+/// can execute later.
+#[test]
+fn tuned_plan_roundtrips_through_toml() {
+    let mut m = common::mlp(51);
+    dampen_rows(&mut m.fc2, 8);
+    let x = common::vision_calib(52, 96);
+    let out = search_plan(&m, &x, &search_spec(0.5)).unwrap();
+    let back = CompressionPlan::parse(&out.plan.to_toml()).unwrap();
+    assert_eq!(back, out.plan);
+}
