@@ -1,19 +1,22 @@
 //! Hot-path microbenchmarks (custom harness — no criterion offline).
 //!
-//! Covers the kernels on the GRAIL critical path: Gram accumulation
-//! (SYRK), the ridge solve, GEMM variants, conv-block forward,
-//! attention forward, and the end-to-end compensation pipeline on an
-//! in-memory model. Perf targets and before/after history live in
-//! EXPERIMENTS.md §Perf.
+//! Covers the kernels on the GRAIL critical path: the packed GEMM/SYRK
+//! engine vs its scalar `*_ref` oracles (parity + speedup asserted, so
+//! CI fails on a kernel or dispatch regression), Gram accumulation,
+//! the ridge solve, conv-block forward, attention forward, and the
+//! end-to-end compensation pipeline with packed kernels on vs off.
+//! Results are also written machine-readably to `BENCH_hotpath.json`
+//! so the perf trajectory is tracked across PRs. Perf targets and
+//! before/after history live in EXPERIMENTS.md §Perf.
 
-use grail::bench_util::{bench, layer_forwards, layer_forwards_reset, report_gflops};
+use grail::bench_util::{bench, layer_forwards, layer_forwards_reset, report_gflops, BenchResult};
 use grail::compress::{Reducer, Selector};
 use grail::grail::{
-    compress_model, compress_model_rescan, reconstruction, ActStats, Method, CompressionSpec,
+    compress_model, compress_model_rescan, reconstruction, ActStats, CompressionSpec, Method,
 };
 use grail::nn::models::{LmBatch, LmConfig, MlpNet, TinyLm};
 use grail::rng::Pcg64;
-use grail::tensor::{ops, Tensor};
+use grail::tensor::{gemm, ops, Tensor};
 
 fn randn(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
     let mut t = Tensor::zeros(shape);
@@ -21,11 +24,170 @@ fn randn(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
     t
 }
 
+/// Collects every measurement and derived metric for the
+/// machine-readable `BENCH_hotpath.json` trajectory file.
+#[derive(Default)]
+struct Recorder {
+    benches: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl Recorder {
+    fn push(&mut self, r: &BenchResult) {
+        self.benches.push(r.clone());
+    }
+
+    fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    fn write_json(&self, path: &str) {
+        let mut s = String::from("{\n  \"schema\": \"grail-hotpath-v1\",\n  \"benches\": [\n");
+        for (i, b) in self.benches.iter().enumerate() {
+            let sep = if i + 1 < self.benches.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"p10_ns\": {:.1}, \
+                 \"p90_ns\": {:.1}, \"iters\": {}}}{sep}\n",
+                b.name, b.median_ns, b.p10_ns, b.p90_ns, b.iters
+            ));
+        }
+        s.push_str("  ],\n  \"metrics\": [\n");
+        for (i, (name, value)) in self.metrics.iter().enumerate() {
+            let sep = if i + 1 < self.metrics.len() { "," } else { "" };
+            s.push_str(&format!("    {{\"name\": \"{name}\", \"value\": {value}}}{sep}\n"));
+        }
+        s.push_str("  ]\n}\n");
+        match std::fs::write(path, &s) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => println!("\ncould not write {path}: {e}"),
+        }
+    }
+}
+
 fn main() {
     let mut rng = Pcg64::seed(42);
+    let mut rec = Recorder::default();
     println!("== grail hotpath benchmarks ==\n");
 
-    // --- Gram accumulation (the paper's O(N·H²) calibration step)
+    // --- Packed GEMM engine vs scalar reference (the kernel surface).
+    // Parity and speedup are *asserted*: a broken microkernel, packing
+    // bug, or dispatch regression fails the bench (CI runs it).
+    let gemm_shapes =
+        [(64usize, 64usize, 64usize), (128, 128, 128), (256, 256, 256), (512, 512, 512)];
+    for &(m, k, n) in &gemm_shapes {
+        let a = randn(&mut rng, &[m, k]);
+        let b = randn(&mut rng, &[k, n]);
+        let bt = randn(&mut rng, &[n, k]);
+
+        let mut c_ref = Tensor::zeros(&[m, n]);
+        ops::gemm_acc_ref(a.data(), b.data(), c_ref.data_mut(), m, k, n, 1.0);
+        let c_pack = ops::matmul(&a, &b);
+        let diff = c_pack.max_abs_diff(&c_ref);
+        assert!(diff < 1e-4 * (k as f32), "packed/scalar parity {m}x{k}x{n}: {diff}");
+
+        let packed = bench(&format!("gemm_packed {m}x{k}x{n}"), 400, || ops::matmul(&a, &b));
+        report_gflops(&packed, (2 * m * k * n) as f64);
+        let scalar = bench(&format!("gemm_scalar {m}x{k}x{n}"), 400, || {
+            let mut c = Tensor::zeros(&[m, n]);
+            ops::gemm_acc_ref(a.data(), b.data(), c.data_mut(), m, k, n, 1.0);
+            c
+        });
+        let speedup = scalar.median_ns / packed.median_ns;
+        println!("{:<44} {:.2}x", format!("packed gemm speedup {m}x{k}x{n}"), speedup);
+        rec.push(&packed);
+        rec.push(&scalar);
+        rec.metric(&format!("gemm_packed_speedup_{m}"), speedup);
+        if m >= 256 {
+            assert!(packed.median_ns < scalar.median_ns, "packed must win at {m}-dim GEMM");
+        }
+        if m == 512 {
+            assert!(speedup >= 2.0, "packed must be >= 2x on 512-dim GEMM, got {speedup:.2}x");
+        }
+
+        let packed_nt =
+            bench(&format!("gemm_nt_packed {m}x{k}x{n}"), 400, || ops::matmul_nt(&a, &bt));
+        let scalar_nt = bench(&format!("gemm_nt_scalar {m}x{k}x{n}"), 400, || {
+            let mut c = Tensor::zeros(&[m, n]);
+            ops::gemm_nt_acc_ref(a.data(), bt.data(), c.data_mut(), m, k, n);
+            c
+        });
+        let nt_speedup = scalar_nt.median_ns / packed_nt.median_ns;
+        println!("{:<44} {:.2}x", format!("packed gemm_nt speedup {m}x{k}x{n}"), nt_speedup);
+        rec.push(&packed_nt);
+        rec.push(&scalar_nt);
+        rec.metric(&format!("gemm_nt_packed_speedup_{m}"), nt_speedup);
+        if m >= 256 {
+            assert!(
+                packed_nt.median_ns < scalar_nt.median_ns,
+                "packed must win at {m}-dim GEMM-NT"
+            );
+        }
+    }
+
+    // --- Packed SYRK vs scalar reference (streamed Gram accumulation).
+    for &(n, h) in &[(2048usize, 64usize), (1024, 128), (1024, 256)] {
+        let x = randn(&mut rng, &[n, h]);
+        let mut g_ref = Tensor::zeros(&[h, h]);
+        ops::syrk_upper_acc_ref(&x, &mut g_ref);
+        let mut g_pack = Tensor::zeros(&[h, h]);
+        ops::syrk_upper_acc(&x, &mut g_pack);
+        let diff = g_pack.max_abs_diff(&g_ref);
+        assert!(diff < 1e-4 * (n as f32), "packed/scalar SYRK parity n={n} h={h}: {diff}");
+
+        let packed = bench(&format!("syrk_packed n={n} h={h}"), 300, || {
+            let mut g = Tensor::zeros(&[h, h]);
+            ops::syrk_upper_acc(&x, &mut g);
+            g
+        });
+        report_gflops(&packed, (n * h * (h + 1)) as f64);
+        let scalar = bench(&format!("syrk_scalar n={n} h={h}"), 300, || {
+            let mut g = Tensor::zeros(&[h, h]);
+            ops::syrk_upper_acc_ref(&x, &mut g);
+            g
+        });
+        let speedup = scalar.median_ns / packed.median_ns;
+        println!("{:<44} {:.2}x", format!("packed syrk speedup n={n} h={h}"), speedup);
+        rec.push(&packed);
+        rec.push(&scalar);
+        rec.metric(&format!("syrk_packed_speedup_h{h}"), speedup);
+        if h >= 256 {
+            assert!(packed.median_ns < scalar.median_ns, "packed must win at h={h} SYRK");
+        }
+    }
+
+    // --- Zero-heavy (post-ReLU-shaped) Gram accumulation must cost
+    // what dense accumulation costs: the packed kernels have no
+    // data-dependent branch, so there is no rescan to pay (the old
+    // zero-skip re-scanned the whole buffer for finiteness on every
+    // zero-bearing call).
+    {
+        let (n, h) = (2048usize, 128usize);
+        let dense = randn(&mut rng, &[n, h]);
+        let mut relu = dense.clone();
+        for v in relu.data_mut().iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let d = bench("syrk dense n=2048 h=128", 300, || {
+            let mut g = Tensor::zeros(&[h, h]);
+            ops::syrk_upper_acc(&dense, &mut g);
+            g
+        });
+        let z = bench("syrk zero-heavy n=2048 h=128", 300, || {
+            let mut g = Tensor::zeros(&[h, h]);
+            ops::syrk_upper_acc(&relu, &mut g);
+            g
+        });
+        let ratio = z.median_ns / d.median_ns;
+        println!("{:<44} {:.2}x", "zero-heavy / dense syrk cost ratio", ratio);
+        rec.push(&d);
+        rec.push(&z);
+        rec.metric("syrk_zero_heavy_cost_ratio", ratio);
+        assert!(ratio < 1.5, "zero-heavy Gram accumulation must not pay a rescan: {ratio:.2}x");
+    }
+
+    // --- Gram accumulation at pipeline tap geometries.
     for &(n, h) in &[(1024usize, 64usize), (1024, 192), (4096, 256)] {
         let x = randn(&mut rng, &[n, h]);
         let r = bench(&format!("gram_syrk n={n} h={h}"), 300, || {
@@ -36,17 +198,7 @@ fn main() {
         });
         // SYRK flops: n·h·(h+1) (half matrix, fma=2 flops).
         report_gflops(&r, (n * h * (h + 1)) as f64);
-    }
-
-    // --- GEMM variants
-    for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512)] {
-        let a = randn(&mut rng, &[m, k]);
-        let b = randn(&mut rng, &[k, n]);
-        let r = bench(&format!("gemm {m}x{k}x{n}"), 400, || ops::matmul(&a, &b));
-        report_gflops(&r, (2 * m * k * n) as f64);
-        let bt = randn(&mut rng, &[n, k]);
-        let r = bench(&format!("gemm_nt {m}x{k}x{n}"), 400, || ops::matmul_nt(&a, &bt));
-        report_gflops(&r, (2 * m * k * n) as f64);
+        rec.push(&r);
     }
 
     // --- Ridge reconstruction solve (B = G_PH^T (G_PP+λI)^-1)
@@ -54,9 +206,10 @@ fn main() {
         let x = randn(&mut rng, &[512, h]);
         let stats = ActStats::from_acts(&x);
         let reducer = Reducer::Select((0..kk).collect());
-        bench(&format!("ridge_reconstruction h={h} k={kk}"), 300, || {
+        let r = bench(&format!("ridge_reconstruction h={h} k={kk}"), 300, || {
             reconstruction(&stats.gram, &reducer, 1, 1e-3)
         });
+        rec.push(&r);
     }
 
     // --- Blocked vs scalar SPD solve on solve-dominated deep-model
@@ -83,6 +236,9 @@ fn main() {
             format!("blocked solve speedup n={n} rhs={m}"),
             scalar.median_ns / blocked.median_ns
         );
+        rec.push(&blocked);
+        rec.push(&scalar);
+        rec.metric(&format!("blocked_solve_speedup_n{n}"), scalar.median_ns / blocked.median_ns);
         let fast = grail::linalg::solve_spd_multi(&a, &b);
         let slow = grail::linalg::solve_spd_multi_ref(&a, &b);
         let diff = fast.max_abs_diff(&slow);
@@ -97,24 +253,60 @@ fn main() {
         let r = bench("conv2d 32x32x16x16 k3", 400, || conv.forward(&x, 16, 16));
         // 2 * N * O * C * kh * kw * OH * OW
         report_gflops(&r, 2.0 * 32.0 * 32.0 * 32.0 * 9.0 * 256.0);
+        rec.push(&r);
     }
 
     // --- Attention forward (TinyLm block geometry)
     {
         let attn = grail::nn::MultiHeadAttention::init(64, 8, 8, 8, true, &mut rng);
         let x = randn(&mut rng, &[16 * 32, 64]);
-        bench("attention b=16 t=32 h=8 dh=8", 400, || attn.forward(&x, 16, 32));
+        let r = bench("attention b=16 t=32 h=8 dh=8", 400, || attn.forward(&x, 16, 32));
+        rec.push(&r);
+    }
+
+    // --- End-to-end staged pipeline, packed kernels on vs off. Same
+    // spec, same shards, same solver — only the f32 forward/Gram
+    // kernels differ, so this is the tentpole's wall-clock bottom line.
+    {
+        let model = MlpNet::init(768, 256, 10, &mut rng);
+        let calib = randn(&mut rng, &[512, 768]);
+        let mut cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+        cfg.shards = 8;
+        let packed = bench("pipeline mlp staged packed kernels", 800, || {
+            let mut m = model.clone();
+            compress_model(&mut m, &calib, &cfg)
+        });
+        gemm::set_packed_enabled(false);
+        let scalar = bench("pipeline mlp staged scalar kernels", 800, || {
+            let mut m = model.clone();
+            compress_model(&mut m, &calib, &cfg)
+        });
+        gemm::set_packed_enabled(true);
+        let speedup = scalar.median_ns / packed.median_ns;
+        println!("{:<44} {:.2}x", "staged pipeline packed-kernel speedup", speedup);
+        rec.push(&packed);
+        rec.push(&scalar);
+        rec.metric("staged_pipeline_packed_speedup", speedup);
+        // 5% noise allowance: the pipeline mixes GEMM with solves and
+        // selection, so on a loaded shared runner the medians can sit
+        // closer than the kernel-level sweeps; the gate still catches
+        // any real end-to-end regression.
+        assert!(
+            packed.median_ns < scalar.median_ns * 1.05,
+            "packed kernels must not lose the staged pipeline end-to-end ({speedup:.2}x)"
+        );
     }
 
     // --- End-to-end compensation pipeline (MLP, both sites)
     {
         let model = MlpNet::init(768, 256, 10, &mut rng);
         let calib = randn(&mut rng, &[128, 768]);
-        bench("pipeline mlp wanda+grail r=0.5", 500, || {
+        let r = bench("pipeline mlp wanda+grail r=0.5", 500, || {
             let mut m = model.clone();
             let cfg = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
             compress_model(&mut m, &calib, &cfg)
         });
+        rec.push(&r);
     }
 
     // --- TinyLm forward (the eval hot path)
@@ -123,7 +315,8 @@ fn main() {
         let toks: Vec<u16> = (0..16 * 33).map(|i| (i % 64) as u16).collect();
         let ts = grail::data::TokenSet { tokens: toks, vocab: 64 };
         let batch = LmBatch::from_tokens(&ts, 32, 16);
-        bench("tinylm_forward b=16 t=32", 500, || lm.forward(&batch));
+        let r = bench("tinylm_forward b=16 t=32", 500, || lm.forward(&batch));
+        rec.push(&r);
     }
 
     // --- Closed-loop calibration: staged O(L) segment executor vs the
@@ -151,6 +344,12 @@ fn main() {
             "{:<44} {:.2}x",
             format!("staged speedup over rescan sites={n_sites}"),
             rescan.median_ns / staged.median_ns
+        );
+        rec.push(&staged);
+        rec.push(&rescan);
+        rec.metric(
+            &format!("staged_vs_rescan_speedup_sites{n_sites}"),
+            rescan.median_ns / staged.median_ns,
         );
 
         // Layer-forward counts (single shard/worker so the counter
@@ -184,5 +383,7 @@ fn main() {
             );
         }
     }
+
+    rec.write_json("BENCH_hotpath.json");
     println!("\ndone");
 }

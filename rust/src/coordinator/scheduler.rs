@@ -4,9 +4,45 @@
 //! parallel; [`run_grid`] fans the job list over scoped worker threads
 //! (std::thread — no tokio in the offline build) with a shared atomic
 //! cursor, preserving input order in the output.
+//!
+//! The scheduler also owns the crate's **thread-budget policy**: every
+//! thread carries a budget of worker threads its nested fan-outs may
+//! use (the whole machine for fresh threads; `GRAIL_THREADS` caps it).
+//! When a fan-out actually goes parallel, each worker inherits an
+//! equal share `max(1, budget / workers)` of its caller's budget, so
+//! auto-sized nested parallelism — shard calibration inside `grail
+//! batch` jobs, the packed GEMM/SYRK engine
+//! ([`crate::tensor::gemm`]), the blocked solver's RHS fan-out —
+//! fills the machine without oversubscribing it: a 2-job batch on 16
+//! cores gives each job 8 threads for its shards, whose workers in
+//! turn run their kernels serially. Single-stream callers (CLI
+//! inference, probe suites, plain `model.forward`) keep the full
+//! budget, so big GEMMs from those paths get the threads. The budget
+//! only ever affects *scheduling*: every consumer is bit-identical at
+//! any worker count.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+thread_local! {
+    /// Worker-thread budget for nested fan-outs on this thread.
+    /// `None` = the machine-level budget ([`machine_threads`]); set to
+    /// an equal share of the caller's budget for the lifetime of the
+    /// scoped worker threads spawned by [`run_grid`] / [`run_grid_mut`].
+    static THREAD_BUDGET: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// Machine-level worker count: `GRAIL_THREADS` env (the total-thread
+/// cap) or available parallelism.
+fn machine_threads() -> usize {
+    if let Ok(v) = std::env::var("GRAIL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 /// One grid cell result.
 #[derive(Debug, Clone)]
@@ -25,18 +61,30 @@ where
 {
     let n = jobs.len();
     let threads = threads.clamp(1, n.max(1));
+    if threads == 1 {
+        // Serial fan-out runs on the caller's thread and inherits its
+        // thread budget (a single big job may still want the machine
+        // for its own kernels).
+        return jobs.iter().enumerate().map(|(i, j)| worker(i, j)).collect();
+    }
+    // Each worker gets an equal share of this thread's budget for its
+    // own nested fan-outs (kernels, solves, deeper grids).
+    let share = (default_threads() / threads).max(1);
     let cursor = AtomicUsize::new(0);
     let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
     let jobs_ref = &jobs;
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                THREAD_BUDGET.with(|c| c.set(Some(share)));
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = worker(i, &jobs_ref[i]);
+                    results.lock().unwrap()[i] = Some(out);
                 }
-                let out = worker(i, &jobs_ref[i]);
-                results.lock().unwrap()[i] = Some(out);
             });
         }
     });
@@ -69,6 +117,7 @@ where
         return jobs.iter_mut().enumerate().map(|(i, j)| worker(i, j)).collect();
     }
     let chunk = (n + threads - 1) / threads;
+    let share = (default_threads() / threads).max(1);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
         for (ci, (job_chunk, out_chunk)) in
@@ -76,6 +125,7 @@ where
         {
             let worker = &worker;
             scope.spawn(move || {
+                THREAD_BUDGET.with(|c| c.set(Some(share)));
                 for (off, (j, o)) in
                     job_chunk.iter_mut().zip(out_chunk.iter_mut()).enumerate()
                 {
@@ -87,14 +137,15 @@ where
     out.into_iter().map(|r| r.expect("worker completed")).collect()
 }
 
-/// Worker-thread count: `GRAIL_THREADS` env or available parallelism.
+/// Worker-thread count for auto-sized fan-outs: the current thread's
+/// budget — the machine-level count (`GRAIL_THREADS` env or available
+/// parallelism) on fresh threads, an equal share of the caller's
+/// budget inside [`run_grid`] / [`run_grid_mut`] workers. Nested
+/// fan-outs thus fill the machine without oversubscribing it (see the
+/// module docs). Scheduling only: all consumers are worker-count
+/// invariant.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("GRAIL_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    THREAD_BUDGET.with(|c| c.get()).unwrap_or_else(machine_threads)
 }
 
 #[cfg(test)]
@@ -143,6 +194,31 @@ mod tests {
             assert_eq!(*idx, i as u64);
             assert_eq!(*v, 100 + i as u64);
         }
+    }
+
+    #[test]
+    fn thread_budget_divides_across_parallel_workers() {
+        let total = default_threads();
+        assert!(total >= 1, "fresh test thread owns the machine budget");
+        // Parallel fan-outs hand each worker an equal budget share…
+        let expect = (total / 4).max(1);
+        let inner = run_grid(vec![(); 8], 4, |_, _| default_threads());
+        assert!(inner.iter().all(|&t| t == expect), "{inner:?} vs share {expect}");
+        // …so workers × nested budget never oversubscribes (beyond the
+        // ≥ 1-thread floor each worker keeps).
+        assert!(4 * expect <= total.max(4));
+        let expect_mut = (total / 3).max(1);
+        let mut jobs = [0u8; 6];
+        let inner = run_grid_mut(&mut jobs, 3, |_, _| default_threads());
+        assert!(inner.iter().all(|&t| t == expect_mut));
+        // Serial fan-outs inherit the caller's full budget…
+        let inner = run_grid(vec![(); 3], 1, |_, _| default_threads());
+        assert!(inner.iter().all(|&t| t == total));
+        let mut jobs = [0u8; 3];
+        let inner = run_grid_mut(&mut jobs, 1, |_, _| default_threads());
+        assert!(inner.iter().all(|&t| t == total));
+        // …and the caller's own budget is never touched.
+        assert_eq!(default_threads(), total);
     }
 
     #[test]

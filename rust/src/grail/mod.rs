@@ -22,7 +22,7 @@ pub use pipeline::{
 pub use search::{score_plan, search_plan, SearchOutcome};
 pub use spec::{
     BudgetMode, CompressionPlan, CompressionSpec, PlannedSite, PolicyOverrides, PolicyRule,
-    SiteMatcher, SitePolicy, DEFAULT_ALPHA_GRID, DEFAULT_SEARCH_ROUNDS,
+    SearchSeed, SiteMatcher, SitePolicy, DEFAULT_ALPHA_GRID, DEFAULT_SEARCH_ROUNDS,
 };
 
 use crate::compress::Reducer;

@@ -250,12 +250,15 @@ where
 /// (Gram-diagonal sensitivity) run one streamed open-loop pass over the
 /// dense model here, and the `search` budget mode runs the full
 /// calibration-driven α/keep search
-/// ([`search_plan`](super::search::search_plan)); all other specs
-/// resolve from site metadata alone. (Known duplication:
-/// statistics-driven budgets combined with `closed_loop = false` pay a
-/// second dense pass inside [`execute_plan`] for the open-loop
-/// statistics — keeping plan resolution side-effect free is worth the
-/// extra O(L) forwards.)
+/// ([`search_plan`](super::search::search_plan)) — which derives a
+/// gram-sensitivity *seed* allocation from its own statistics pass when
+/// `budget.seed = "gram-sensitivity"`, so composing the two allocators
+/// still costs exactly one pass (asserted via the layer-forward counter
+/// in `rust/tests/forward_count.rs`). All other specs resolve from site
+/// metadata alone. (Known duplication: statistics-driven budgets
+/// combined with `closed_loop = false` pay a second dense pass inside
+/// [`execute_plan`] for the open-loop statistics — keeping plan
+/// resolution side-effect free is worth the extra O(L) forwards.)
 pub fn plan_for_model<M>(
     model: &M,
     calib: &M::Input,

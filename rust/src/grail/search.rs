@@ -34,7 +34,9 @@
 //! count** (`rust/tests/tune.rs`).
 
 use super::pipeline::{per_shard_site_stats, Method, DEFAULT_SHARDS};
-use super::spec::{keep_floor, keep_step, BudgetMode, CompressionPlan, CompressionSpec};
+use super::spec::{
+    keep_floor, keep_step, BudgetMode, CompressionPlan, CompressionSpec, SearchSeed,
+};
 use super::ActStats;
 use crate::compress::select::{self, ScoreInputs, Selector};
 use crate::compress::{fold, Compressible, Reducer, SiteInfo};
@@ -276,8 +278,11 @@ where
     let rounds = *rounds;
     let sites = model.sites();
     let n = sites.len();
+    // Fail fast on an unresolvable spec (bad rules, infeasible budget)
+    // *before* paying the streamed statistics pass; the uniform-seed
+    // plan this produces is final unless a gram-sensitivity seed
+    // re-resolves it below.
     let mut plan = spec.resolve(&sites, None)?;
-    let seed = plan.seed;
     let workers = if spec.workers != 0 { spec.workers } else { default_threads() };
     let shard_target = if spec.shards != 0 { spec.shards } else { DEFAULT_SHARDS };
     let (mut cals, n_shards) = gather_stats(model, calib, shard_target, workers);
@@ -292,6 +297,26 @@ where
              (input split into {n_shards})"
         );
     }
+    // Seed weights for the initial allocation. The gram-sensitivity
+    // seed (`budget.seed = "gram-sensitivity"`) derives each site's
+    // mean Gram-diagonal activation energy from the statistics pass
+    // just gathered — the sensitivity allocator composes with search
+    // at **no extra streamed pass** (asserted by the layer-forward
+    // counter in `rust/tests/forward_count.rs`). Train and held-out
+    // shards together cover the full calibration input, matching the
+    // dense-model signal `site_sensitivities` measures.
+    if spec.search_seed == SearchSeed::GramSensitivity {
+        let sens: Vec<f64> = cals
+            .iter()
+            .map(|c| {
+                let rows = (c.train.rows + c.hold.rows).max(1) as f64;
+                let width = c.info.feat_width().max(1) as f64;
+                (trace(&c.train.gram) + trace(&c.hold.gram)) / (rows * width)
+            })
+            .collect();
+        plan = spec.resolve(&sites, Some(&sens))?;
+    }
+    let seed = plan.seed;
     attach_fold_features(model, &plan, &mut cals);
 
     // Which sites the search may touch: rule-pinned ratios freeze the
@@ -644,6 +669,24 @@ mod tests {
         let out = search_plan(&m, &x, &search_spec(0.5)).unwrap();
         let rescored = score_plan(&m, &x, &out.plan);
         assert_eq!(rescored.to_bits(), out.final_err.to_bits());
+    }
+
+    #[test]
+    fn gram_sensitivity_seed_composes_with_search() {
+        let (m, x) = fixture();
+        let mut spec = search_spec(0.5);
+        spec.search_seed = SearchSeed::GramSensitivity;
+        let out = search_plan(&m, &x, &spec).unwrap();
+        assert!(out.final_err.is_finite());
+        assert!(out.final_err <= out.initial_err, "{} > {}", out.final_err, out.initial_err);
+        // The sensitivity seed conserves the same unit budget the
+        // uniform seed would (unit_dim = 1 on the MLP fixture), so the
+        // winner's footprint is bounded by it.
+        let uniform_seed = search_spec(0.5).resolve(&m.sites(), None).unwrap();
+        assert!(out.plan.total_keep_weighted() <= uniform_seed.total_keep_weighted());
+        for ps in &out.plan.sites {
+            assert!(ps.keep >= 1 && ps.keep <= ps.units);
+        }
     }
 
     #[test]

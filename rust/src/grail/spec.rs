@@ -138,6 +138,23 @@ pub const DEFAULT_ALPHA_GRID: [f64; 6] = [1e-6, 1e-5, 1e-4, 1e-3, 5e-3, 5e-2];
 /// reallocation pass per round).
 pub const DEFAULT_SEARCH_ROUNDS: usize = 2;
 
+/// How `budget.mode = "search"` seeds its initial keep allocation
+/// (config key `budget.seed`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SearchSeed {
+    /// Budget-conserving uniform allocation at the target ratio
+    /// (allocation proportional to site size).
+    #[default]
+    Uniform,
+    /// Seed keeps proportional to per-site mean Gram-diagonal
+    /// activation energy — the gram-sensitivity allocator composed
+    /// with search. The sensitivities are derived from the search's
+    /// *own* streamed statistics pass
+    /// ([`search_plan`](super::search::search_plan)), so the
+    /// composition costs no extra pass over the model.
+    GramSensitivity,
+}
+
 /// Global keep-count allocation across sites.
 #[derive(Clone, Debug, PartialEq)]
 pub enum BudgetMode {
@@ -202,9 +219,16 @@ pub struct CompressionSpec {
     /// [`DEFAULT_SHARDS`](super::pipeline::DEFAULT_SHARDS) (models
     /// clamp to the available sample count).
     pub shards: usize,
-    /// Worker threads for calibration forwards. `0` = auto
-    /// (`GRAIL_THREADS` env or available parallelism).
+    /// Worker threads for calibration forwards. `0` = auto: the
+    /// scheduler's thread budget for the current thread — the machine
+    /// (`GRAIL_THREADS` env or available parallelism) on single-stream
+    /// paths, an equal share of it inside an outer parallel fan-out
+    /// such as `grail batch`
+    /// ([`default_threads`](crate::coordinator::scheduler::default_threads)).
     pub workers: usize,
+    /// Seed-allocation mode for `budget.mode = "search"`; ignored by
+    /// every other budget mode.
+    pub search_seed: SearchSeed,
 }
 
 impl CompressionSpec {
@@ -219,6 +243,7 @@ impl CompressionSpec {
             closed_loop: true,
             shards: 0,
             workers: 0,
+            search_seed: SearchSeed::Uniform,
         }
     }
 
@@ -258,6 +283,10 @@ impl CompressionSpec {
     /// `sensitivities` (per-site, same order) is required exactly when
     /// [`needs_sensitivity`](Self::needs_sensitivity) — the pipeline's
     /// [`plan_for_model`](super::pipeline::plan_for_model) computes it.
+    /// The `search` budget mode accepts them *optionally* as seed
+    /// weights ([`SearchSeed::GramSensitivity`], supplied by
+    /// [`search_plan`](super::search::search_plan) from its own
+    /// statistics pass); `None` seeds uniformly.
     pub fn resolve(
         &self,
         sites: &[SiteInfo],
@@ -305,13 +334,27 @@ impl CompressionSpec {
                 allocate_by_sensitivity(&mut planned, &pinned, sens, *target_ratio);
             }
             BudgetMode::Search { target_ratio, .. } => {
-                // Seed allocation only: uniform at `target_ratio` with
-                // the per-site rounding drift walked back to the exact
-                // unit budget (equal weights — allocation proportional
-                // to site size). The α/keep search itself needs model
-                // statistics and runs in `plan_for_model`.
-                let ones = vec![1.0f64; n];
-                allocate_by_sensitivity(&mut planned, &pinned, &ones, *target_ratio);
+                // Seed allocation only: budget-conserving at
+                // `target_ratio` with the per-site rounding drift
+                // walked back to the exact unit budget. Weights are
+                // uniform (allocation proportional to site size) unless
+                // the caller supplies per-site sensitivities —
+                // `search_plan` does for the gram-sensitivity seed,
+                // derived from its own statistics pass. The α/keep
+                // search itself needs model statistics and runs in
+                // `plan_for_model`.
+                match sensitivities {
+                    Some(sens) => {
+                        if sens.len() != n {
+                            bail!("got {} sensitivities for {n} sites", sens.len());
+                        }
+                        allocate_by_sensitivity(&mut planned, &pinned, sens, *target_ratio);
+                    }
+                    None => {
+                        let ones = vec![1.0f64; n];
+                        allocate_by_sensitivity(&mut planned, &pinned, &ones, *target_ratio);
+                    }
+                }
             }
         }
         Ok(CompressionPlan {
@@ -337,7 +380,10 @@ impl CompressionSpec {
                     bail!("unknown spec key `{key}`");
                 }
             } else if let Some(field) = key.strip_prefix("budget.") {
-                if !matches!(field, "mode" | "target_ratio" | "gamma" | "alpha_grid" | "rounds") {
+                if !matches!(
+                    field,
+                    "mode" | "target_ratio" | "gamma" | "alpha_grid" | "rounds" | "seed"
+                ) {
                     bail!("unknown spec key `{key}`");
                 }
             }
@@ -388,6 +434,19 @@ impl CompressionSpec {
             }
             other => bail!("budget.mode: unknown allocator `{other}`"),
         };
+        spec.search_seed = match cfg.str_or("budget.seed", "uniform") {
+            "uniform" => SearchSeed::Uniform,
+            "gram-sensitivity" => SearchSeed::GramSensitivity,
+            other => bail!(
+                "budget.seed: unknown seed mode `{other}` (expected `uniform` or \
+                 `gram-sensitivity`)"
+            ),
+        };
+        if spec.search_seed != SearchSeed::Uniform
+            && !matches!(spec.budget, BudgetMode::Search { .. })
+        {
+            bail!("budget.seed applies only to `budget.mode = \"search\"`");
+        }
         spec.rules = parse_rules(cfg)?;
         Ok(spec)
     }
@@ -1234,6 +1293,40 @@ rounds = 3
         for ps in &plan.sites {
             assert_eq!(ps.keep, 15);
         }
+    }
+
+    #[test]
+    fn search_seed_parses_and_seeds_allocation() {
+        let cfg =
+            Config::parse("[budget]\nmode = \"search\"\nseed = \"gram-sensitivity\"").unwrap();
+        let spec = CompressionSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.search_seed, SearchSeed::GramSensitivity);
+        // Default is the uniform seed.
+        let cfg = Config::parse("[budget]\nmode = \"search\"").unwrap();
+        let spec = CompressionSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.search_seed, SearchSeed::Uniform);
+        // Unknown seed modes and non-search budgets are rejected.
+        let bad = Config::parse("[budget]\nmode = \"search\"\nseed = \"psychic\"").unwrap();
+        assert!(CompressionSpec::from_config(&bad).is_err());
+        let bad =
+            Config::parse("[budget]\nmode = \"per-site\"\nseed = \"gram-sensitivity\"").unwrap();
+        let err = CompressionSpec::from_config(&bad).unwrap_err().to_string();
+        assert!(err.contains("budget.seed"), "{err}");
+
+        // When sensitivities are supplied, the search seed allocates
+        // toward energy under the same conserved unit budget.
+        let sites: Vec<SiteInfo> =
+            (0..2).map(|i| site(&format!("s{i}"), 20, 1, SiteKind::Dense)).collect();
+        let mut spec = CompressionSpec::uniform(Method::Fold, 0.5, true);
+        spec.budget =
+            BudgetMode::Search { target_ratio: 0.5, alpha_grid: vec![1e-4], rounds: 1 };
+        let plan = spec.resolve(&sites, Some(&[4.0, 1.0])).unwrap();
+        assert_eq!(plan.total_keep(), 20, "seed conserves the unit budget");
+        assert!(plan.sites[0].keep > plan.sites[1].keep, "{plan:?}");
+        // Without sensitivities the seed stays uniform.
+        let plan = spec.resolve(&sites, None).unwrap();
+        assert_eq!(plan.sites[0].keep, 10);
+        assert_eq!(plan.sites[1].keep, 10);
     }
 
     #[test]

@@ -183,6 +183,11 @@ impl BlockedCholesky {
         } else if flops < PARALLEL_MIN_FLOPS {
             1
         } else {
+            // `default_threads` is the scheduler's divided thread
+            // budget: auto-sized solves inside an already-parallel
+            // fan-out get that worker's share — typically serial —
+            // same policy as the packed GEMM engine. Scheduling only:
+            // the result is bit-identical either way.
             default_threads()
         };
         if threads <= 1 || jobs.len() <= 1 {

@@ -102,7 +102,9 @@ example in examples/lm_depth_ramp.spec.toml):
                 tuned over the grid and keep counts reallocated across
                 sites at a fixed weighted-unit budget, scored by held-out
                 Gram reconstruction error (`grail tune` emits the winner
-                as a plan TOML; results are worker-count invariant)
+                as a plan TOML; results are worker-count invariant);
+                seed = \"gram-sensitivity\" seeds the search allocation
+                by activation energy from the same statistics pass
               Budget allocators re-assign every ratio no rule pinned.
 
 METHOD NAMES:

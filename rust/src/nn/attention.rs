@@ -9,6 +9,7 @@
 
 use super::{softmax_rows, Linear, Tensor};
 use crate::rng::Pcg64;
+use crate::tensor::ops;
 
 /// Self-attention block. Weight layout (matching the Python side):
 /// `wq: [n_heads·d_head, d_model]`, `wk/wv: [n_kv·d_head, d_model]`,
@@ -72,6 +73,17 @@ impl MultiHeadAttention {
     /// Returns `(output [b*t, d_model], tap [b*t, n_heads*d_head])`
     /// where the tap is the concatenated per-head context — the
     /// consumer input of `w_o`.
+    ///
+    /// Score and context products run as per-(batch, head) GEMMs
+    /// (`ops::matmul_nt` / `ops::matmul`) over contiguous head panels
+    /// gathered from the projection outputs, so long-sequence shapes
+    /// reach the packed engine instead of strided per-element dot
+    /// loops; the causal mask is applied on the score matrix before the
+    /// softmax, exactly as the strided loops did. Deliberate tradeoff:
+    /// the causal path computes the full `t×t` product and discards the
+    /// masked half — branch-free GEMM beats triangular skip loops at
+    /// these sequence lengths; a triangular-blocked variant is the
+    /// upgrade path if `t` grows past that crossover.
     pub fn forward(&self, x: &Tensor, b: usize, t: usize) -> (Tensor, Tensor) {
         let rows = b * t;
         assert_eq!(x.dim(0), rows, "rows must equal b*t");
@@ -82,40 +94,43 @@ impl MultiHeadAttention {
         let scale = 1.0 / (dh as f32).sqrt();
         let mut tap = Tensor::zeros(&[rows, self.n_heads * dh]);
         let gs = self.group_size();
+        let mut qh = Tensor::zeros(&[t, dh]);
+        let mut kh = Tensor::zeros(&[t, dh]);
+        let mut vh = Tensor::zeros(&[t, dh]);
         for bi in 0..b {
             for h in 0..self.n_heads {
                 let kvh = h / gs;
-                // Scores for this (batch, head): [t, t].
-                let mut scores = Tensor::zeros(&[t, t]);
                 for ti in 0..t {
-                    let qrow = &q.row(bi * t + ti)[h * dh..(h + 1) * dh];
+                    let r = bi * t + ti;
+                    qh.row_mut(ti).copy_from_slice(&q.row(r)[h * dh..(h + 1) * dh]);
+                }
+                // Query heads of one KV group are consecutive, so the
+                // shared K/V panels only need gathering once per group.
+                if h % gs == 0 {
+                    for ti in 0..t {
+                        let r = bi * t + ti;
+                        kh.row_mut(ti).copy_from_slice(&k.row(r)[kvh * dh..(kvh + 1) * dh]);
+                        vh.row_mut(ti).copy_from_slice(&v.row(r)[kvh * dh..(kvh + 1) * dh]);
+                    }
+                }
+                // Scores for this (batch, head): [t, t] = Qh · Khᵀ.
+                let mut scores = ops::matmul_nt(&qh, &kh);
+                for ti in 0..t {
                     let srow = scores.row_mut(ti);
                     let lim = if self.causal { ti + 1 } else { t };
-                    for tj in 0..t {
-                        if tj < lim {
-                            let krow = &k.row(bi * t + tj)[kvh * dh..(kvh + 1) * dh];
-                            srow[tj] = crate::tensor::ops::dot(qrow, krow) * scale;
-                        } else {
-                            srow[tj] = f32::NEG_INFINITY;
-                        }
+                    for sv in srow[..lim].iter_mut() {
+                        *sv *= scale;
+                    }
+                    for sv in srow[lim..].iter_mut() {
+                        *sv = f32::NEG_INFINITY;
                     }
                 }
                 softmax_rows(&mut scores);
-                // Context = scores · V_head.
+                // Context = scores · V_head, back into the tap panel.
+                let ctx = ops::matmul(&scores, &vh);
                 for ti in 0..t {
-                    let srow = scores.row(ti);
-                    let out = &mut tap.row_mut(bi * t + ti)[h * dh..(h + 1) * dh];
-                    let lim = if self.causal { ti + 1 } else { t };
-                    for tj in 0..lim {
-                        let w = srow[tj];
-                        if w == 0.0 {
-                            continue;
-                        }
-                        let vrow = &v.row(bi * t + tj)[kvh * dh..(kvh + 1) * dh];
-                        for (o, &vv) in out.iter_mut().zip(vrow) {
-                            *o += w * vv;
-                        }
-                    }
+                    tap.row_mut(bi * t + ti)[h * dh..(h + 1) * dh]
+                        .copy_from_slice(ctx.row(ti));
                 }
             }
         }

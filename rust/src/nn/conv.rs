@@ -93,7 +93,9 @@ impl Conv2d {
         cols
     }
 
-    /// Forward: `[n, c*h*w] -> [n, o*oh*ow]` (CHW layout).
+    /// Forward: `[n, c*h*w] -> [n, o*oh*ow]` (CHW layout). The im2col
+    /// GEMM (`ops::matmul_nt`) dispatches to the packed engine
+    /// ([`crate::tensor::gemm`]) at conv-block shapes.
     ///
     /// Perf pass note (EXPERIMENTS.md §Perf): an image-chunked im2col
     /// variant was tried and reverted — the monolithic buffer stays

@@ -1,0 +1,575 @@
+//! Packed, cache-blocked, register-tiled f32 GEMM/SYRK engine.
+//!
+//! Every forward-path matmul in the crate — `Linear::forward`
+//! (`ops::matmul_nt`), `Conv2d::forward`'s im2col GEMM, the attention
+//! score/context matmuls, the GRAIL reducer/absorb algebra, and the
+//! streamed `ops::syrk_upper_acc` Gram accumulation — lands here via
+//! the dispatching entries in [`super::ops`]. The design mirrors the
+//! contract the blocked Cholesky engine proved out
+//! ([`crate::linalg::BlockedCholesky`]):
+//!
+//! - **Packing** — the shared operand `B` is packed once per call into
+//!   [`KC`]-deep, [`NR`]-wide column panels; each row-panel job packs
+//!   its own [`MC`]×[`KC`] block of `A` into [`MR`]-wide strips (with
+//!   `alpha` folded in). Packed panels make every microkernel access
+//!   contiguous and edge tiles zero-padded, so there is **no
+//!   data-dependent branch** in the inner loops: `0·NaN` / `0·∞`
+//!   propagate by construction (the old per-element zero-skip and its
+//!   whole-buffer finiteness rescan are gone).
+//! - **Register tiling** — an [`MR`]×[`NR`] accumulator tile lives in
+//!   registers across the k loop. On x86-64 the microkernel is
+//!   additionally monomorphized under `avx2,fma` (selected by runtime
+//!   feature detection) so LLVM emits 256-bit FMAs; elsewhere the
+//!   generic version autovectorizes at the baseline ISA.
+//! - **Deterministic accumulation** — for every output element the k
+//!   dimension accumulates in increasing order in a single chain
+//!   (the tile is reloaded from `C` per [`KC`] strip), so results are a
+//!   pure function of the operands and tile geometry.
+//! - **Parallel row panels** — work is pre-split into fixed [`MC`]-row
+//!   jobs writing disjoint `C` panels and fanned over
+//!   [`run_grid_mut`](crate::coordinator::scheduler::run_grid_mut).
+//!   Job boundaries never depend on the worker count, so results are
+//!   **bit-identical at any parallelism**. Auto worker resolution
+//!   defers to the scheduler's divided thread budget
+//!   ([`default_threads`]): big GEMMs from single-stream paths get the
+//!   machine, kernels inside shard-level calibration workers get that
+//!   worker's share (typically serial), and `GRAIL_THREADS` caps the
+//!   total.
+//!
+//! The scalar loops survive in [`super::ops`] as `*_ref` oracles; the
+//! property suite in `rust/tests/gemm_engine.rs` sweeps panel-boundary
+//! shapes, NaN/∞ propagation, and worker-count bit-invariance, and
+//! `benches/hotpath.rs` asserts the packed path wins (and by ≥ 2× on
+//! 512-dim GEMM) on every CI run.
+
+use crate::coordinator::scheduler::{default_threads, run_grid_mut};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Microkernel row count (rows of `C` held in registers).
+pub const MR: usize = 4;
+/// Microkernel column count (columns of `C` held in registers).
+pub const NR: usize = 16;
+/// Depth of one packed k strip (shared dimension blocking).
+pub const KC: usize = 256;
+/// Rows per parallel row-panel job (also the A-block height).
+pub const MC: usize = 64;
+
+/// Minimum `2·m·k·n` flop volume before the dispatching entries in
+/// [`super::ops`] take the packed path; below it the packing overhead
+/// dominates and the scalar `*_ref` loops win.
+pub const PACKED_MIN_FLOPS: usize = 1 << 18;
+
+/// Minimum flop volume before row panels fan over worker threads
+/// (same spirit as the blocked solver's `PARALLEL_MIN_FLOPS`).
+const PARALLEL_MIN_FLOPS: usize = 1 << 23;
+
+/// Global packed-path switch. Only `benches/hotpath.rs` flips it, to
+/// measure end-to-end packed-vs-scalar pipeline wall-clock; it must
+/// stay `true` everywhere else (tests compare against the `*_ref`
+/// oracles directly instead).
+static PACKED_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable the packed dispatch globally. Bench-only: the
+/// hotpath bench flips it to measure end-to-end packed-vs-scalar
+/// pipeline wall-clock; leave it `true` everywhere else.
+pub fn set_packed_enabled(on: bool) {
+    PACKED_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the dispatching entries currently use the packed engine.
+pub fn packed_enabled() -> bool {
+    PACKED_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Shape-based dispatch: should an `m×k×n` product take the packed
+/// path? Deterministic in the shape alone.
+pub(crate) fn use_packed(m: usize, k: usize, n: usize) -> bool {
+    packed_enabled() && m != 0 && k != 0 && n != 0 && flops(m, k, n) >= PACKED_MIN_FLOPS
+}
+
+#[inline]
+fn flops(m: usize, k: usize, n: usize) -> usize {
+    2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn fma_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn fma_available() -> bool {
+    false
+}
+
+/// The microkernel body: `acc[r][j] += Σ_p ap[p·MR+r] · bp[p·NR+j]`
+/// with `p` ascending — a single accumulation chain per element.
+/// `FUSED` selects `mul_add` (one rounding per step) vs separate
+/// multiply-and-add (two roundings): Rust never contracts `a*b + c`
+/// into an FMA on its own, so the fused variant must be explicit —
+/// and is only used where runtime detection guarantees a hardware FMA
+/// instruction (a libm soft fall-back would be ruinously slow).
+#[inline(always)]
+fn microkernel_body<const FUSED: bool>(
+    kl: usize,
+    ap: &[f32],
+    bp: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    debug_assert!(ap.len() >= kl * MR);
+    debug_assert!(bp.len() >= kl * NR);
+    for p in 0..kl {
+        let a = &ap[p * MR..p * MR + MR];
+        let b = &bp[p * NR..p * NR + NR];
+        for (r, arow) in acc.iter_mut().enumerate() {
+            let av = a[r];
+            for (j, cv) in arow.iter_mut().enumerate() {
+                if FUSED {
+                    *cv = av.mul_add(b[j], *cv);
+                } else {
+                    *cv += av * b[j];
+                }
+            }
+        }
+    }
+}
+
+/// Portable microkernel: plain multiply-and-add, autovectorized at the
+/// target's baseline ISA.
+#[inline(always)]
+fn microkernel_generic(kl: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    microkernel_body::<false>(kl, ap, bp, acc);
+}
+
+/// The microkernel monomorphized under AVX2+FMA with explicit
+/// `mul_add`, so LLVM emits 256-bit `vfmadd` instructions.
+///
+/// # Safety
+/// Callers must have verified `avx2` and `fma` via runtime detection.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn microkernel_avx2(kl: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    microkernel_body::<true>(kl, ap, bp, acc);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn microkernel(use_fma: bool, kl: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    if use_fma {
+        // SAFETY: `use_fma` is only set by `fma_available()`.
+        unsafe { microkernel_avx2(kl, ap, bp, acc) }
+    } else {
+        microkernel_generic(kl, ap, bp, acc);
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn microkernel(use_fma: bool, kl: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    let _ = use_fma;
+    microkernel_generic(kl, ap, bp, acc);
+}
+
+/// `(start, len)` blocking of `0..len` in `chunk`-sized strips.
+fn strips(len: usize, chunk: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(len / chunk + 1);
+    let mut start = 0usize;
+    while start < len {
+        let l = chunk.min(len - start);
+        out.push((start, l));
+        start += l;
+    }
+    out
+}
+
+/// Pack one KC strip of row-major `B: [k, n]` into `nblk` column panels
+/// of layout `[p][j]` (`NR`-wide, zero-padded at the right edge).
+fn pack_b_strip_kn(b: &[f32], n: usize, k0: usize, kl: usize, nblk: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), nblk * kl * NR);
+    out.fill(0.0);
+    for jb in 0..nblk {
+        let j0 = jb * NR;
+        let nl = NR.min(n - j0);
+        let dst = &mut out[jb * kl * NR..(jb + 1) * kl * NR];
+        for p in 0..kl {
+            let src = &b[(k0 + p) * n + j0..(k0 + p) * n + j0 + nl];
+            dst[p * NR..p * NR + nl].copy_from_slice(src);
+        }
+    }
+}
+
+/// Pack one KC strip of `Bᵀ` where `B: [n, k]` row-major (the
+/// `matmul_nt` layout): `out[p·NR + j] = B[j0+j][k0+p]`. Reads are
+/// contiguous rows of `B`; the transpose happens in the strided write.
+fn pack_b_strip_nk(
+    b: &[f32],
+    k: usize,
+    n: usize,
+    k0: usize,
+    kl: usize,
+    nblk: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), nblk * kl * NR);
+    out.fill(0.0);
+    for jb in 0..nblk {
+        let j0 = jb * NR;
+        let nl = NR.min(n - j0);
+        let dst = &mut out[jb * kl * NR..(jb + 1) * kl * NR];
+        for jj in 0..nl {
+            let src = &b[(j0 + jj) * k + k0..(j0 + jj) * k + k0 + kl];
+            for (p, &v) in src.iter().enumerate() {
+                dst[p * NR + jj] = v;
+            }
+        }
+    }
+}
+
+/// Pack `rl ≤ MR` rows of `A: [m, k]` for one KC strip into `[p][r]`
+/// layout with `alpha` folded in (zero-padded below `MR`).
+fn pack_a_strip(
+    a: &[f32],
+    k: usize,
+    r0: usize,
+    rl: usize,
+    k0: usize,
+    kl: usize,
+    alpha: f32,
+    out: &mut [f32],
+) {
+    debug_assert!(out.len() >= kl * MR);
+    out[..kl * MR].fill(0.0);
+    for rr in 0..rl {
+        let src = &a[(r0 + rr) * k + k0..(r0 + rr) * k + k0 + kl];
+        for (p, &v) in src.iter().enumerate() {
+            out[p * MR + rr] = alpha * v;
+        }
+    }
+}
+
+/// Pack `rl ≤ MR` *columns* of row-major `X: [rows, h]` (i.e. rows of
+/// `Xᵀ`) for one KC strip of the sample dimension — the SYRK "A"
+/// operand: `out[p·MR + r] = X[k0+p][r0+r]`.
+fn pack_a_strip_t(
+    x: &[f32],
+    h: usize,
+    r0: usize,
+    rl: usize,
+    k0: usize,
+    kl: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(out.len() >= kl * MR);
+    out[..kl * MR].fill(0.0);
+    for p in 0..kl {
+        let src = &x[(k0 + p) * h + r0..(k0 + p) * h + r0 + rl];
+        out[p * MR..p * MR + rl].copy_from_slice(src);
+    }
+}
+
+/// Resolve the effective worker count for a row-panel fan-out:
+/// explicit `workers` wins; auto (`0`) applies a flop threshold and
+/// then defers to [`default_threads`] — the current thread's share of
+/// the scheduler's divided budget (the machine on single-stream paths,
+/// typically 1 inside parallel calibration workers). Purely a
+/// scheduling decision — results are bit-identical at every value.
+fn resolve_workers(workers: usize, m: usize, k: usize, n: usize) -> usize {
+    let blocks = (m + MC - 1) / MC;
+    let w = if workers != 0 {
+        workers
+    } else if flops(m, k, n) < PARALLEL_MIN_FLOPS {
+        1
+    } else {
+        default_threads()
+    };
+    w.clamp(1, blocks.max(1))
+}
+
+/// `C += alpha · A · B` on row-major buffers (`A: [m,k]`, `B: [k,n]`,
+/// `C: [m,n]`) through the packed engine. `workers = 0` resolves
+/// automatically under the thread-budget policy.
+pub fn gemm_nn_packed(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+    workers: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    gemm_packed(a, b, c, m, k, n, alpha, false, workers);
+}
+
+/// `C += A · Bᵀ` on row-major buffers (`A: [m,k]`, `B: [n,k]`,
+/// `C: [m,n]`) through the packed engine — the linear-layer layout.
+pub fn gemm_nt_packed(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    workers: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    gemm_packed(a, b, c, m, k, n, 1.0, true, workers);
+}
+
+fn gemm_packed(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+    b_is_nk: bool,
+    workers: usize,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let use_fma = fma_available();
+    let nblk = (n + NR - 1) / NR;
+    let kc_strips = strips(k, KC);
+
+    // Shared packed B: one panel set per KC strip, packed once on the
+    // calling thread so every row-panel job reads identical data.
+    let mut bpack = vec![0.0f32; k * nblk * NR];
+    let mut off = 0usize;
+    for &(k0, kl) in &kc_strips {
+        let out = &mut bpack[off..off + kl * nblk * NR];
+        if b_is_nk {
+            pack_b_strip_nk(b, k, n, k0, kl, nblk, out);
+        } else {
+            pack_b_strip_kn(b, n, k0, kl, nblk, out);
+        }
+        off += kl * nblk * NR;
+    }
+
+    let workers = resolve_workers(workers, m, k, n);
+    let bpack_ref = &bpack;
+    let kc_ref = &kc_strips;
+    // Fixed MC-row jobs with disjoint C panels: job boundaries are a
+    // function of the shape alone, so any worker count produces the
+    // same bits.
+    let mut jobs: Vec<(usize, &mut [f32])> = c.chunks_mut(MC * n).enumerate().collect();
+    run_grid_mut(&mut jobs, workers, |_, job| {
+        let i0 = job.0 * MC;
+        let cblk: &mut [f32] = &mut *job.1;
+        gemm_block(a, k, n, alpha, i0, cblk, bpack_ref, kc_ref, nblk, use_fma);
+    });
+}
+
+/// Compute one MC-row panel of `C += alpha·A·op(B)` from the shared
+/// packed B.
+fn gemm_block(
+    a: &[f32],
+    k: usize,
+    n: usize,
+    alpha: f32,
+    i0: usize,
+    cblk: &mut [f32],
+    bpack: &[f32],
+    kc_strips: &[(usize, usize)],
+    nblk: usize,
+    use_fma: bool,
+) {
+    let ml = cblk.len() / n;
+    let rstrips = strips(ml, MR);
+    let mut abuf = vec![0.0f32; rstrips.len() * MR * KC];
+    let mut boff = 0usize;
+    for &(k0, kl) in kc_strips {
+        for (rbi, &(r0, rl)) in rstrips.iter().enumerate() {
+            pack_a_strip(
+                a,
+                k,
+                i0 + r0,
+                rl,
+                k0,
+                kl,
+                alpha,
+                &mut abuf[rbi * MR * KC..rbi * MR * KC + kl * MR],
+            );
+        }
+        let bstrip = &bpack[boff..boff + kl * nblk * NR];
+        for jb in 0..nblk {
+            let j0 = jb * NR;
+            let nl = NR.min(n - j0);
+            let bp = &bstrip[jb * kl * NR..(jb + 1) * kl * NR];
+            for (rbi, &(r0, rl)) in rstrips.iter().enumerate() {
+                let ap = &abuf[rbi * MR * KC..rbi * MR * KC + kl * MR];
+                // The tile is reloaded from C per KC strip, keeping a
+                // single ascending-k accumulation chain per element.
+                let mut acc = [[0.0f32; NR]; MR];
+                for rr in 0..rl {
+                    let crow = &cblk[(r0 + rr) * n + j0..(r0 + rr) * n + j0 + nl];
+                    acc[rr][..nl].copy_from_slice(crow);
+                }
+                microkernel(use_fma, kl, ap, bp, &mut acc);
+                for rr in 0..rl {
+                    let crow = &mut cblk[(r0 + rr) * n + j0..(r0 + rr) * n + j0 + nl];
+                    crow.copy_from_slice(&acc[rr][..nl]);
+                }
+            }
+        }
+        boff += kl * nblk * NR;
+    }
+}
+
+/// `G += Xᵀ·X` restricted to the upper triangle (`X: [rows, h]`,
+/// `G: [h, h]`) through the packed engine — the streamed Gram
+/// accumulation kernel. Only upper-triangle entries of `G` are
+/// written; sample order accumulates ascending, so batching and worker
+/// count never change the bits.
+pub fn syrk_upper_packed(x: &[f32], g: &mut [f32], rows: usize, h: usize, workers: usize) {
+    debug_assert_eq!(x.len(), rows * h);
+    debug_assert_eq!(g.len(), h * h);
+    if rows == 0 || h == 0 {
+        return;
+    }
+    let use_fma = fma_available();
+    let nblk = (h + NR - 1) / NR;
+    let kc_strips = strips(rows, KC);
+    let mut bpack = vec![0.0f32; rows * nblk * NR];
+    let mut off = 0usize;
+    for &(k0, kl) in &kc_strips {
+        pack_b_strip_kn(x, h, k0, kl, nblk, &mut bpack[off..off + kl * nblk * NR]);
+        off += kl * nblk * NR;
+    }
+    let workers = resolve_workers(workers, h, rows, h);
+    let bpack_ref = &bpack;
+    let kc_ref = &kc_strips;
+    let mut jobs: Vec<(usize, &mut [f32])> = g.chunks_mut(MC * h).enumerate().collect();
+    run_grid_mut(&mut jobs, workers, |_, job| {
+        let i0 = job.0 * MC;
+        let gblk: &mut [f32] = &mut *job.1;
+        syrk_block(x, h, i0, gblk, bpack_ref, kc_ref, nblk, use_fma);
+    });
+}
+
+/// One MC-row panel of the upper-triangular SYRK update.
+fn syrk_block(
+    x: &[f32],
+    h: usize,
+    i0: usize,
+    gblk: &mut [f32],
+    bpack: &[f32],
+    kc_strips: &[(usize, usize)],
+    nblk: usize,
+    use_fma: bool,
+) {
+    let ml = gblk.len() / h;
+    let rstrips = strips(ml, MR);
+    let mut abuf = vec![0.0f32; rstrips.len() * MR * KC];
+    let mut boff = 0usize;
+    for &(k0, kl) in kc_strips {
+        for (rbi, &(r0, rl)) in rstrips.iter().enumerate() {
+            pack_a_strip_t(
+                x,
+                h,
+                i0 + r0,
+                rl,
+                k0,
+                kl,
+                &mut abuf[rbi * MR * KC..rbi * MR * KC + kl * MR],
+            );
+        }
+        let bstrip = &bpack[boff..boff + kl * nblk * NR];
+        for jb in 0..nblk {
+            let j0 = jb * NR;
+            let nl = NR.min(h - j0);
+            let bp = &bstrip[jb * kl * NR..(jb + 1) * kl * NR];
+            for (rbi, &(r0, rl)) in rstrips.iter().enumerate() {
+                let i_base = i0 + r0;
+                // Tiles strictly below the diagonal contribute nothing
+                // to the upper triangle of these rows.
+                if j0 + nl <= i_base {
+                    continue;
+                }
+                let ap = &abuf[rbi * MR * KC..rbi * MR * KC + kl * MR];
+                let mut acc = [[0.0f32; NR]; MR];
+                for rr in 0..rl {
+                    let grow = &gblk[(r0 + rr) * h + j0..(r0 + rr) * h + j0 + nl];
+                    acc[rr][..nl].copy_from_slice(grow);
+                }
+                microkernel(use_fma, kl, ap, bp, &mut acc);
+                for rr in 0..rl {
+                    let gi = i_base + rr;
+                    // First tile column on/above the diagonal for this
+                    // row; lower-triangle lanes are computed but never
+                    // stored.
+                    let lo = gi.saturating_sub(j0).min(nl);
+                    let grow = &mut gblk[(r0 + rr) * h + j0 + lo..(r0 + rr) * h + j0 + nl];
+                    grow.copy_from_slice(&acc[rr][lo..nl]);
+                }
+            }
+        }
+        boff += kl * nblk * NR;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_cover_range_in_order() {
+        assert_eq!(strips(0, 4), vec![]);
+        assert_eq!(strips(3, 4), vec![(0, 3)]);
+        assert_eq!(strips(8, 4), vec![(0, 4), (4, 4)]);
+        assert_eq!(strips(9, 4), vec![(0, 4), (4, 4), (8, 1)]);
+        let s = strips(KC * 2 + 7, KC);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[2], (2 * KC, 7));
+    }
+
+    #[test]
+    fn use_packed_respects_threshold() {
+        // Note: the global switch itself is NOT toggled here — lib
+        // tests share one process, and flipping it would silently
+        // reroute concurrently running dispatch tests to the scalar
+        // path. The switch is exercised by `benches/hotpath.rs`
+        // (single-threaded main), which toggles it around the
+        // end-to-end pipeline comparison.
+        assert!(packed_enabled(), "packed dispatch is on by default");
+        assert!(!use_packed(0, 8, 8));
+        assert!(!use_packed(4, 4, 4), "tiny shapes stay on the scalar path");
+        assert!(use_packed(128, 128, 128));
+    }
+
+    #[test]
+    fn microkernel_matches_naive_tile() {
+        // One packed strip, exact integer values: the kernel must equal
+        // the naive tile product bit-for-bit.
+        let kl = 5usize;
+        let ap: Vec<f32> = (0..kl * MR).map(|i| (i % 7) as f32 - 3.0).collect();
+        let bp: Vec<f32> = (0..kl * NR).map(|i| (i % 5) as f32 - 2.0).collect();
+        let mut acc = [[1.0f32; NR]; MR];
+        microkernel(fma_available(), kl, &ap, &bp, &mut acc);
+        for r in 0..MR {
+            for j in 0..NR {
+                let mut want = 1.0f32;
+                for p in 0..kl {
+                    want += ap[p * MR + r] * bp[p * NR + j];
+                }
+                assert_eq!(acc[r][j], want, "tile ({r},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_workers_clamps_to_blocks() {
+        // Explicit worker counts are honoured but never exceed jobs.
+        assert_eq!(resolve_workers(8, MC, 1024, 1024), 1, "one block, one worker");
+        assert_eq!(resolve_workers(3, 4 * MC, 1024, 1024), 3);
+        // Tiny auto shapes stay serial.
+        assert_eq!(resolve_workers(0, 4 * MC, 4, 4), 1);
+    }
+}

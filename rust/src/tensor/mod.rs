@@ -7,6 +7,7 @@
 //! `f32` storage, explicit shapes, no broadcasting magic — every op the
 //! library needs is implemented (and tested) in [`ops`].
 
+pub mod gemm;
 pub mod ops;
 
 use std::fmt;

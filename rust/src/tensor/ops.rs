@@ -2,12 +2,16 @@
 //!
 //! These are the Rust-side hot paths: compressed-model evaluation and
 //! all GRAIL algebra (Gram accumulation, reducer application, weight
-//! merges) run through the GEMM/SYRK routines here. The loop orders are
-//! chosen so the inner loop is a contiguous fused-multiply-add over
-//! rows (auto-vectorizes well on a single core); see EXPERIMENTS.md
-//! §Perf for measurements.
+//! merges) run through the GEMM/SYRK routines here. Shapes above
+//! [`gemm::PACKED_MIN_FLOPS`] dispatch to the packed, cache-blocked,
+//! register-tiled engine in [`super::gemm`] (parallel row panels,
+//! bit-identical at any worker count); smaller shapes use the scalar
+//! loops, which also survive as the `*_ref` oracles the packed engine
+//! is property-tested against (`rust/tests/gemm_engine.rs`). No kernel
+//! has a data-dependent branch: `0·NaN` / `0·∞` propagate as NaN by
+//! construction. See EXPERIMENTS.md §Perf for measurements.
 
-use super::Tensor;
+use super::{gemm, Tensor};
 
 /// `C = A · B` for `A: [m,k]`, `B: [k,n]`.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -19,26 +23,33 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// `C += alpha * A · B` on raw row-major buffers (ikj loop order: the
-/// inner `j` loop is a contiguous axpy over a row of B and C).
+/// `C += alpha * A · B` on raw row-major buffers. Large shapes run the
+/// packed engine ([`gemm::gemm_nn_packed`]); small ones the scalar
+/// reference ([`gemm_acc_ref`]).
 pub fn gemm_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, alpha: f32) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    // The `s == 0` sparse fast path is only sound when B is finite:
-    // IEEE 0·NaN and 0·∞ are NaN and must propagate. The finiteness
-    // scan is lazy (first zero hit) so dense-A GEMMs never pay it.
-    let mut b_finite: Option<bool> = None;
+    if gemm::use_packed(m, k, n) {
+        gemm::gemm_nn_packed(a, b, c, m, k, n, alpha, 0);
+    } else {
+        gemm_acc_ref(a, b, c, m, k, n, alpha);
+    }
+}
+
+/// Scalar `C += alpha · A · B` (ikj loop order: the inner `j` loop is a
+/// contiguous axpy over a row of B and C) — the small-shape path and
+/// the packed engine's test oracle. Every product is computed, so
+/// `0·NaN` / `0·∞` propagate exactly like the packed path.
+pub fn gemm_acc_ref(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, alpha: f32) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
     for i in 0..m {
         let a_row = &a[i * k..(i + 1) * k];
         let c_row = &mut c[i * n..(i + 1) * n];
         for (p, &a_ip) in a_row.iter().enumerate() {
             let s = alpha * a_ip;
-            if s == 0.0
-                && *b_finite.get_or_insert_with(|| b.iter().all(|v| v.is_finite()))
-            {
-                continue;
-            }
             let b_row = &b[p * n..(p + 1) * n];
             for (cv, &bv) in c_row.iter_mut().zip(b_row) {
                 *cv += s * bv;
@@ -180,9 +191,24 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// `C += A · Bᵀ` on raw buffers; inner loop is a dot of two contiguous
-/// rows, unrolled 4-wide into independent accumulators.
+/// `C += A · Bᵀ` on raw buffers. Large shapes run the packed engine
+/// ([`gemm::gemm_nt_packed`], which transposes B while packing); small
+/// ones the scalar reference ([`gemm_nt_acc_ref`]).
 pub fn gemm_nt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if gemm::use_packed(m, k, n) {
+        gemm::gemm_nt_packed(a, b, c, m, k, n, 0);
+    } else {
+        gemm_nt_acc_ref(a, b, c, m, k, n);
+    }
+}
+
+/// Scalar `C += A · Bᵀ`: the inner loop is a dot of two contiguous
+/// rows, unrolled 4-wide into independent accumulators — the
+/// small-shape path and the packed engine's test oracle.
+pub fn gemm_nt_acc_ref(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
@@ -219,28 +245,36 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
 }
 
 /// `G += Xᵀ·X` for `X: [n,h]` — the Gram accumulation kernel (paper §3:
-/// `G = Σ x xᵀ`). Row-major SYRK: each sample row performs a rank-1
-/// update over the upper triangle; the mirror is filled at the end by
-/// [`symmetrize_from_upper`]. Callers stream batches through this and
-/// symmetrize once.
+/// `G = Σ x xᵀ`). Only the upper triangle is written; the mirror is
+/// filled at the end by [`symmetrize_from_upper`]. Callers stream
+/// batches through this and symmetrize once. Large shapes run the
+/// packed SYRK ([`gemm::syrk_upper_packed`]); small ones the scalar
+/// reference. Neither path has a data-dependent branch — post-ReLU
+/// zero-heavy shards cost exactly what dense shards cost, and `0·NaN`
+/// / `0·∞` cross terms propagate (the old zero-skip re-scanned the
+/// whole buffer for finiteness on every zero-bearing call).
 pub fn syrk_upper_acc(x: &Tensor, g: &mut Tensor) {
+    let (n, h) = (x.dim(0), x.dim(1));
+    assert_eq!(g.shape(), &[h, h], "gram shape");
+    if gemm::use_packed(h, n, h) {
+        gemm::syrk_upper_packed(x.data(), g.data_mut(), n, h, 0);
+    } else {
+        syrk_upper_acc_ref(x, g);
+    }
+}
+
+/// Scalar upper-triangular SYRK: each sample row performs a rank-1
+/// update over the upper triangle — the small-shape path and the
+/// packed engine's test oracle.
+pub fn syrk_upper_acc_ref(x: &Tensor, g: &mut Tensor) {
     let (n, h) = (x.dim(0), x.dim(1));
     assert_eq!(g.shape(), &[h, h], "gram shape");
     let xd = x.data();
     let gd = g.data_mut();
-    // Like `gemm_acc`, the zero skip must not swallow 0·NaN / 0·∞ from
-    // other entries of the same sample row; the finiteness scan is
-    // lazy so zero-free inputs never pay it.
-    let mut x_finite: Option<bool> = None;
     for s in 0..n {
         let row = &xd[s * h..(s + 1) * h];
         for i in 0..h {
             let xi = row[i];
-            if xi == 0.0
-                && *x_finite.get_or_insert_with(|| xd.iter().all(|v| v.is_finite()))
-            {
-                continue;
-            }
             let g_row = &mut gd[i * h + i..(i + 1) * h];
             let r = &row[i..];
             for (gv, &xv) in g_row.iter_mut().zip(r) {
@@ -533,8 +567,8 @@ mod tests {
 
     #[test]
     fn gemm_zero_times_nonfinite_propagates() {
-        // 0·NaN and 0·∞ must be NaN, not silently dropped by the
-        // sparse fast path.
+        // 0·NaN and 0·∞ must be NaN — every kernel path computes every
+        // product (no data-dependent skip exists to get this wrong).
         let a = Tensor::from_vec(&[1, 2], vec![0.0, 1.0]);
         let b = Tensor::from_vec(&[2, 2], vec![f32::NAN, 1.0, 2.0, 3.0]);
         let c = matmul(&a, &b);
@@ -546,10 +580,10 @@ mod tests {
     }
 
     #[test]
-    fn gemm_finite_fast_path_unchanged() {
+    fn gemm_zero_entries_match_reference() {
         let mut r = Pcg64::seed(40);
         let mut a = randn(&mut r, &[5, 7]);
-        // Inject exact zeros so the skip actually fires.
+        // Exact zeros in A must behave like any other value.
         for i in 0..5 {
             a.set2(i, i % 7, 0.0);
         }
@@ -557,6 +591,38 @@ mod tests {
         let c = matmul(&a, &b);
         let cr = matmul_ref(&a, &b);
         assert!(c.max_abs_diff(&cr) < 1e-4);
+    }
+
+    #[test]
+    fn dispatching_entries_agree_with_refs_above_threshold() {
+        // A shape comfortably above `gemm::PACKED_MIN_FLOPS`: the
+        // dispatching entries take the packed engine and must agree
+        // with the scalar oracles to rounding.
+        let mut r = Pcg64::seed(41);
+        let (m, k, n) = (96usize, 80usize, 72usize);
+        let a = randn(&mut r, &[m, k]);
+        let b = randn(&mut r, &[k, n]);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm_acc(a.data(), b.data(), &mut c1, m, k, n, 1.0);
+        gemm_acc_ref(a.data(), b.data(), &mut c2, m, k, n, 1.0);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+        let bt = randn(&mut r, &[n, k]);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm_nt_acc(a.data(), bt.data(), &mut c1, m, k, n);
+        gemm_nt_acc_ref(a.data(), bt.data(), &mut c2, m, k, n);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+        let x = randn(&mut r, &[512, 64]);
+        let mut g1 = Tensor::zeros(&[64, 64]);
+        let mut g2 = Tensor::zeros(&[64, 64]);
+        syrk_upper_acc(&x, &mut g1);
+        syrk_upper_acc_ref(&x, &mut g2);
+        assert!(g1.max_abs_diff(&g2) < 1e-2);
     }
 
     #[test]

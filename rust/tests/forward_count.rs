@@ -9,7 +9,10 @@ mod common;
 
 use grail::bench_util::{layer_forwards, layer_forwards_reset};
 use grail::compress::Selector;
-use grail::grail::{compress_model, compress_model_rescan, CompressionSpec, Method};
+use grail::grail::{
+    compress_model, compress_model_rescan, plan_for_model, BudgetMode, CompressionSpec, Method,
+    SearchSeed,
+};
 
 #[test]
 fn closed_loop_layer_forwards_are_linear_in_depth() {
@@ -53,4 +56,37 @@ fn closed_loop_layer_forwards_are_linear_in_depth() {
 
     // And the two strategies still agree on the compressed model.
     assert_eq!(a.forward(&calib), b.forward(&calib));
+
+    // Statistics-driven plan resolution is one streamed pass: the
+    // gram-sensitivity allocator costs exactly one open-loop pass over
+    // the dense model (S taps + S−1 segment steps per shard).
+    let mut sens_cfg = cfg.clone();
+    sens_cfg.budget = BudgetMode::GramSensitivity { target_ratio: 0.5 };
+    layer_forwards_reset();
+    let plan = plan_for_model(&lm, &calib, &sens_cfg).unwrap();
+    assert_eq!(plan.sites.len(), n_sites);
+    assert_eq!(
+        layer_forwards(),
+        (2 * n_sites - 1) as u64,
+        "gram-sensitivity resolution must be one streamed pass"
+    );
+
+    // And when the gram-sensitivity allocator composes with the plan
+    // search (`budget.seed = "gram-sensitivity"`), the seed
+    // sensitivities come from the search's own statistics pass: one
+    // pass total, not a sensitivity pass followed by a search pass.
+    let mut tune_cfg = cfg.clone();
+    tune_cfg.shards = 4; // the held-out split needs ≥ 2 shards
+    tune_cfg.workers = 1;
+    tune_cfg.budget =
+        BudgetMode::Search { target_ratio: 0.5, alpha_grid: vec![1e-4, 5e-3], rounds: 1 };
+    tune_cfg.search_seed = SearchSeed::GramSensitivity;
+    layer_forwards_reset();
+    let plan = plan_for_model(&lm, &calib, &tune_cfg).unwrap();
+    assert_eq!(plan.sites.len(), n_sites);
+    assert_eq!(
+        layer_forwards(),
+        4 * (2 * n_sites - 1) as u64,
+        "sensitivity-seeded search must reuse its single statistics pass"
+    );
 }

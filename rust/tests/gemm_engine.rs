@@ -1,0 +1,233 @@
+//! Property suite for the packed GEMM/SYRK engine
+//! (`grail::tensor::gemm`): packed kernels vs the scalar `*_ref`
+//! oracles across microkernel/panel boundary shapes, NaN/∞ propagation
+//! through zero entries, worker-count bit-invariance of the parallel
+//! row-panel fan-out, and exact agreement (no data-dependent path) on
+//! zero-heavy integer-valued inputs.
+
+mod common;
+
+use grail::rng::Pcg64;
+use grail::tensor::gemm::{self, KC, MC, MR, NR};
+use grail::tensor::{ops, Tensor};
+
+/// Max |packed − ref| tolerance for random-normal operands of depth
+/// `k`: both paths accumulate ascending-k, so the only divergence is
+/// FMA contraction in the packed microkernel.
+fn tol(k: usize) -> f32 {
+    1e-4 * (1.0 + (k as f32).sqrt())
+}
+
+fn assert_close(packed: &[f32], reference: &[f32], k: usize, ctx: &str) {
+    assert_eq!(packed.len(), reference.len(), "{ctx}");
+    let t = tol(k);
+    for (i, (p, r)) in packed.iter().zip(reference).enumerate() {
+        assert!((p - r).abs() <= t, "{ctx}: element {i}: packed {p} vs ref {r}");
+    }
+}
+
+#[test]
+fn packed_gemm_matches_reference_across_panel_boundaries() {
+    let mut rng = Pcg64::seed(1);
+    let ms = [1usize, 3, MR, MR + 1, 2 * MR + 1, MC, MC + 3];
+    let ns = [1usize, NR - 1, NR, NR + 1, 2 * NR + 5];
+    let ks = [1usize, 7, KC, KC + 9];
+    for &m in &ms {
+        for &n in &ns {
+            for &k in &ks {
+                let a = common::randn(&mut rng, &[m, k]);
+                let b = common::randn(&mut rng, &[k, n]);
+                let c0 = common::randn(&mut rng, &[m, n]); // nonzero: tests accumulate
+                let mut c_ref = c0.clone();
+                let mut c_pack = c0.clone();
+                ops::gemm_acc_ref(a.data(), b.data(), c_ref.data_mut(), m, k, n, 0.7);
+                gemm::gemm_nn_packed(a.data(), b.data(), c_pack.data_mut(), m, k, n, 0.7, 1);
+                assert_close(c_pack.data(), c_ref.data(), k, &format!("nn {m}x{k}x{n}"));
+
+                let bt = common::randn(&mut rng, &[n, k]);
+                let mut c_ref = c0.clone();
+                let mut c_pack = c0.clone();
+                ops::gemm_nt_acc_ref(a.data(), bt.data(), c_ref.data_mut(), m, k, n);
+                gemm::gemm_nt_packed(a.data(), bt.data(), c_pack.data_mut(), m, k, n, 1);
+                assert_close(c_pack.data(), c_ref.data(), k, &format!("nt {m}x{k}x{n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_gemm_k_zero_and_empty_dims_are_noops() {
+    let mut c = vec![1.5f32; 6];
+    gemm::gemm_nn_packed(&[], &[], &mut c, 2, 0, 3, 1.0, 1);
+    gemm::gemm_nt_packed(&[], &[], &mut c, 2, 0, 3, 1);
+    assert_eq!(c, vec![1.5f32; 6]);
+    let mut empty: Vec<f32> = Vec::new();
+    gemm::gemm_nn_packed(&[], &[1.0, 2.0], &mut empty, 0, 1, 2, 1.0, 1);
+    gemm::syrk_upper_packed(&[], &mut [], 0, 0, 1);
+    let mut g = vec![2.0f32; 4];
+    gemm::syrk_upper_packed(&[], &mut g, 0, 2, 1);
+    assert_eq!(g, vec![2.0f32; 4]);
+}
+
+#[test]
+fn packed_syrk_matches_reference_and_writes_upper_only() {
+    let mut rng = Pcg64::seed(2);
+    for &(rows, h) in &[
+        (1usize, 1usize),
+        (5, 7),
+        (17, NR),
+        (64, NR + 3),
+        (KC + 5, 2 * NR + 3),
+        (33, MC + 9),
+    ] {
+        let x = common::randn(&mut rng, &[rows, h]);
+        // Sentinel-filled G: the packed SYRK must leave the strict
+        // lower triangle untouched, like the scalar kernel.
+        let g0 = common::randn(&mut rng, &[h, h]);
+        let mut g_ref = g0.clone();
+        let mut g_pack = g0.clone();
+        ops::syrk_upper_acc_ref(&x, &mut g_ref);
+        gemm::syrk_upper_packed(x.data(), g_pack.data_mut(), rows, h, 1);
+        for i in 0..h {
+            for j in 0..h {
+                let p = g_pack.at2(i, j);
+                if j >= i {
+                    let r = g_ref.at2(i, j);
+                    assert!(
+                        (p - r).abs() <= tol(rows),
+                        "({rows},{h}) upper ({i},{j}): {p} vs {r}"
+                    );
+                } else {
+                    assert_eq!(
+                        p.to_bits(),
+                        g0.at2(i, j).to_bits(),
+                        "({rows},{h}) lower ({i},{j}) must be untouched"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_parallel_fanout_is_bit_identical_at_any_worker_count() {
+    let mut rng = Pcg64::seed(3);
+    let (m, k, n) = (3 * MC + 7, KC + 3, 2 * NR + 5);
+    let a = common::randn(&mut rng, &[m, k]);
+    let b = common::randn(&mut rng, &[k, n]);
+    let mut base = Tensor::zeros(&[m, n]);
+    gemm::gemm_nn_packed(a.data(), b.data(), base.data_mut(), m, k, n, 1.0, 1);
+    for workers in [2usize, 3, 7, 16] {
+        let mut c = Tensor::zeros(&[m, n]);
+        gemm::gemm_nn_packed(a.data(), b.data(), c.data_mut(), m, k, n, 1.0, workers);
+        for (x, y) in c.data().iter().zip(base.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "gemm workers={workers}");
+        }
+    }
+
+    let h = 2 * MC + 5;
+    let x = common::randn(&mut rng, &[64, h]);
+    let mut gbase = Tensor::zeros(&[h, h]);
+    gemm::syrk_upper_packed(x.data(), gbase.data_mut(), 64, h, 1);
+    for workers in [2usize, 5, 11] {
+        let mut g = Tensor::zeros(&[h, h]);
+        gemm::syrk_upper_packed(x.data(), g.data_mut(), 64, h, workers);
+        for (p, q) in g.data().iter().zip(gbase.data()) {
+            assert_eq!(p.to_bits(), q.to_bits(), "syrk workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn nan_and_inf_propagate_through_zero_entries() {
+    // A zero coefficient against a non-finite B entry must produce NaN
+    // (IEEE 0·NaN = 0·∞ = NaN): the packed path computes every product,
+    // so there is no sparse skip to get this wrong.
+    let m = MR + 1; // straddle one row-strip boundary
+    let k = 3usize;
+    let n = NR + 2; // straddle one column-panel boundary
+    let mut a = Tensor::zeros(&[m, k]);
+    for i in 0..m {
+        a.set2(i, 1, 1.0); // row i = [0, 1, 0]
+    }
+    let mut b = Tensor::full(&[k, n], 2.0);
+    b.set2(0, 0, f32::NAN); // hit by a 0 coefficient
+    b.set2(2, n - 1, f32::INFINITY); // hit by a 0 coefficient
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm::gemm_nn_packed(a.data(), b.data(), c.data_mut(), m, k, n, 1.0, 1);
+    for i in 0..m {
+        assert!(c.at2(i, 0).is_nan(), "0·NaN must be NaN at ({i},0)");
+        assert!(c.at2(i, n - 1).is_nan(), "0·∞ must be NaN at ({i},{})", n - 1);
+        assert_eq!(c.at2(i, 1), 2.0, "finite columns unaffected");
+    }
+
+    // Same for the SYRK cross terms: x = [0, NaN, 1, …].
+    let h = NR + 1;
+    let mut x = Tensor::zeros(&[1, h]);
+    x.data_mut()[1] = f32::NAN;
+    x.data_mut()[2] = 1.0;
+    let mut g = Tensor::zeros(&[h, h]);
+    gemm::syrk_upper_packed(x.data(), g.data_mut(), 1, h, 1);
+    assert!(g.at2(0, 1).is_nan(), "0·NaN cross term must be NaN");
+    assert!(g.at2(1, 2).is_nan(), "NaN·1 cross term must be NaN");
+    assert!(g.at2(1, 1).is_nan());
+    assert_eq!(g.at2(0, 0), 0.0);
+    assert_eq!(g.at2(2, 2), 1.0);
+}
+
+#[test]
+fn zero_heavy_inputs_agree_exactly_with_reference() {
+    // Regression for the removed finiteness rescan: the old kernels
+    // took a data-dependent fast path on zero entries (and re-scanned
+    // the whole operand for finiteness to keep it sound). The packed
+    // engine has no data-dependent branch at all, so on integer-valued
+    // inputs — where every product and partial sum is exact in f32 —
+    // zero-heavy operands must agree with the scalar oracle to the bit.
+    let mut rng = Pcg64::seed(4);
+    let int_tensor = |rng: &mut Pcg64, shape: &[usize]| {
+        let mut t = Tensor::zeros(shape);
+        for v in t.data_mut().iter_mut() {
+            // ~50% exact zeros (post-ReLU shape), rest small ints.
+            let r = rng.normal();
+            *v = if r < 0.0 { 0.0 } else { (r * 3.0).round().min(3.0) };
+        }
+        t
+    };
+    let (m, k, n) = (MC + 3, 64usize, NR + 7);
+    let a = int_tensor(&mut rng, &[m, k]);
+    let b = int_tensor(&mut rng, &[k, n]);
+    let mut c_ref = Tensor::zeros(&[m, n]);
+    let mut c_pack = Tensor::zeros(&[m, n]);
+    ops::gemm_acc_ref(a.data(), b.data(), c_ref.data_mut(), m, k, n, 1.0);
+    gemm::gemm_nn_packed(a.data(), b.data(), c_pack.data_mut(), m, k, n, 1.0, 2);
+    for (p, r) in c_pack.data().iter().zip(c_ref.data()) {
+        assert_eq!(p.to_bits(), r.to_bits(), "zero-heavy gemm must be exact");
+    }
+
+    let x = int_tensor(&mut rng, &[96, MC + 5]);
+    let mut g_ref = Tensor::zeros(&[MC + 5, MC + 5]);
+    let mut g_pack = Tensor::zeros(&[MC + 5, MC + 5]);
+    ops::syrk_upper_acc_ref(&x, &mut g_ref);
+    gemm::syrk_upper_packed(x.data(), g_pack.data_mut(), 96, MC + 5, 2);
+    for (p, r) in g_pack.data().iter().zip(g_ref.data()) {
+        assert_eq!(p.to_bits(), r.to_bits(), "zero-heavy syrk must be exact");
+    }
+}
+
+#[test]
+fn dispatch_entries_and_direct_calls_agree() {
+    // Above the flop threshold the `ops` entries route to the packed
+    // engine with auto workers; explicit-worker calls must produce the
+    // same bits (worker resolution is scheduling only).
+    let mut rng = Pcg64::seed(5);
+    let (m, k, n) = (2 * MC, 96usize, 48usize);
+    let a = common::randn(&mut rng, &[m, k]);
+    let b = common::randn(&mut rng, &[k, n]);
+    let mut c1 = vec![0.0f32; m * n];
+    let mut c2 = vec![0.0f32; m * n];
+    ops::gemm_acc(a.data(), b.data(), &mut c1, m, k, n, 1.0);
+    gemm::gemm_nn_packed(a.data(), b.data(), &mut c2, m, k, n, 1.0, 3);
+    for (x, y) in c1.iter().zip(&c2) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
