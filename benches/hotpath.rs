@@ -9,7 +9,7 @@
 //! so the perf trajectory is tracked across PRs. Perf targets and
 //! before/after history live in EXPERIMENTS.md §Perf.
 
-use grail::bench_util::{bench, layer_forwards, layer_forwards_reset, report_gflops, BenchResult};
+use grail::bench_util::{bench, layer_forwards, layer_forwards_reset, report_gflops, Recorder};
 use grail::compress::{Reducer, Selector};
 use grail::grail::{
     compress_model, compress_model_rescan, reconstruction, ActStats, CompressionSpec, Method,
@@ -22,46 +22,6 @@ fn randn(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
     let mut t = Tensor::zeros(shape);
     rng.fill_normal(t.data_mut(), 1.0);
     t
-}
-
-/// Collects every measurement and derived metric for the
-/// machine-readable `BENCH_hotpath.json` trajectory file.
-#[derive(Default)]
-struct Recorder {
-    benches: Vec<BenchResult>,
-    metrics: Vec<(String, f64)>,
-}
-
-impl Recorder {
-    fn push(&mut self, r: &BenchResult) {
-        self.benches.push(r.clone());
-    }
-
-    fn metric(&mut self, name: &str, value: f64) {
-        self.metrics.push((name.to_string(), value));
-    }
-
-    fn write_json(&self, path: &str) {
-        let mut s = String::from("{\n  \"schema\": \"grail-hotpath-v1\",\n  \"benches\": [\n");
-        for (i, b) in self.benches.iter().enumerate() {
-            let sep = if i + 1 < self.benches.len() { "," } else { "" };
-            s.push_str(&format!(
-                "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"p10_ns\": {:.1}, \
-                 \"p90_ns\": {:.1}, \"iters\": {}}}{sep}\n",
-                b.name, b.median_ns, b.p10_ns, b.p90_ns, b.iters
-            ));
-        }
-        s.push_str("  ],\n  \"metrics\": [\n");
-        for (i, (name, value)) in self.metrics.iter().enumerate() {
-            let sep = if i + 1 < self.metrics.len() { "," } else { "" };
-            s.push_str(&format!("    {{\"name\": \"{name}\", \"value\": {value}}}{sep}\n"));
-        }
-        s.push_str("  ]\n}\n");
-        match std::fs::write(path, &s) {
-            Ok(()) => println!("\nwrote {path}"),
-            Err(e) => println!("\ncould not write {path}: {e}"),
-        }
-    }
 }
 
 fn main() {
@@ -384,6 +344,6 @@ fn main() {
         }
     }
 
-    rec.write_json("BENCH_hotpath.json");
+    rec.write_json("BENCH_hotpath.json", "grail-hotpath-v1");
     println!("\ndone");
 }

@@ -1,0 +1,279 @@
+//! Serving-path benchmarks (custom harness — no criterion offline).
+//!
+//! Measures the inference surfaces this repo serves compressed models
+//! through: fused GEMM epilogues vs unfused bias/activation sweeps,
+//! prepacked vs per-call weight packing at decode row counts, batched
+//! vs reference attention, KV-cache decode vs full-forward rescan
+//! generation, and a concurrent prefill+decode fleet that pushes many
+//! requests through the scheduler's divided thread budget for dense vs
+//! 50%-kept compressed TinyLm. Every fast path is first asserted
+//! bit-identical to (or token-identical with) its reference, then the
+//! speed claims are *asserted* so CI fails on a serving regression.
+//! Results land machine-readably in `BENCH_serve.json`
+//! (schema `grail-serve-v1`); reproduction steps in EXPERIMENTS.md
+//! §Serving.
+
+use std::time::Instant;
+
+use grail::bench_util::{bench, Recorder};
+use grail::compress::Selector;
+use grail::coordinator::scheduler::{default_threads, run_grid};
+use grail::grail::{compress_model, CompressionSpec, Method};
+use grail::nn::models::{LmBatch, LmConfig, TinyLm};
+use grail::nn::{Activation, Linear, MultiHeadAttention};
+use grail::rng::Pcg64;
+use grail::tensor::gemm::Epilogue;
+use grail::tensor::{ops, Tensor};
+
+fn randn(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+/// The pre-fusion linear forward: serve GEMM with no epilogue, then
+/// separate bias and activation sweeps over the output.
+fn linear_unfused(l: &Linear, x: &Tensor, act: Activation) -> Tensor {
+    let (m, k, n) = (x.dim(0), l.in_dim(), l.out_dim());
+    let mut y = Tensor::zeros(&[m, n]);
+    ops::gemm_nt_serve(x.data(), l.w.data(), y.data_mut(), m, k, n, Epilogue::None);
+    ops::add_bias(&mut y, l.b.data());
+    match act {
+        Activation::Identity => {}
+        Activation::Relu => grail::nn::relu(&mut y),
+        Activation::Gelu => grail::nn::gelu(&mut y),
+    }
+    y
+}
+
+fn assert_bits_eq(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for (x, y) in a.data().iter().zip(b.data()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bits diverged");
+    }
+}
+
+/// Deterministic prompt `len` tokens long, distinct per request id.
+fn prompt(id: usize, len: usize) -> Vec<u16> {
+    (0..len).map(|i| ((id * 13 + i * 7 + 3) % grail::data::text::VOCAB) as u16).collect()
+}
+
+/// Percentile over an already-sorted sample.
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
+/// Push `requests` prefill+decode generations through the scheduler and
+/// return (requests/sec, sorted per-request latencies in ms).
+fn serve_fleet(m: &TinyLm, requests: usize, p_len: usize, n_new: usize) -> (f64, Vec<f64>) {
+    let prompts: Vec<Vec<u16>> = (0..requests).map(|i| prompt(i, p_len)).collect();
+    let threads = default_threads().clamp(1, requests);
+    let t0 = Instant::now();
+    let mut lat = run_grid(prompts, threads, |_, p| {
+        let t = Instant::now();
+        std::hint::black_box(m.generate(p, n_new));
+        t.elapsed().as_secs_f64() * 1e3
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    (requests as f64 / wall, lat)
+}
+
+fn main() {
+    let mut rng = Pcg64::seed(4242);
+    let mut rec = Recorder::default();
+    println!("== grail serving benchmarks ==\n");
+
+    // --- Fused GEMM epilogue vs unfused bias/activation sweeps. The
+    // shape is epilogue-bound on purpose (small k, wide n): the fused
+    // path's win is exactly the two extra passes over C it removes.
+    for (act, name, gate) in
+        [(Activation::Relu, "relu", true), (Activation::Gelu, "gelu", false)]
+    {
+        let (m, k, n) = (512usize, 32usize, 1024usize);
+        let l = Linear::init(n, k, &mut rng);
+        let x = randn(&mut rng, &[m, k]);
+        assert_bits_eq(
+            &l.forward_act(&x, act),
+            &linear_unfused(&l, &x, act),
+            &format!("fused {name} epilogue vs unfused sweeps"),
+        );
+        let fused = bench(&format!("linear_fused {name} {m}x{k}x{n}"), 400, || {
+            l.forward_act(&x, act)
+        });
+        let unfused = bench(&format!("linear_unfused {name} {m}x{k}x{n}"), 400, || {
+            linear_unfused(&l, &x, act)
+        });
+        let speedup = unfused.median_ns / fused.median_ns;
+        println!("{:<44} {:.2}x", format!("fused {name} epilogue speedup"), speedup);
+        rec.push(&fused);
+        rec.push(&unfused);
+        rec.metric(&format!("fused_epilogue_speedup_{name}"), speedup);
+        if gate {
+            assert!(
+                fused.median_ns < unfused.median_ns,
+                "fused {name} epilogue must beat unfused sweeps ({speedup:.2}x)"
+            );
+        }
+    }
+
+    // --- Prepacked weights at decode row counts: a 1-row GEMM is
+    // dominated by packing B, which prepack hoists out of the loop.
+    {
+        let (k, n) = (512usize, 512usize);
+        let l = Linear::init(n, k, &mut rng);
+        let pb = l.prepack();
+        assert!(pb.is_some(), "512x512 layer must take the packed serving path");
+        let x = randn(&mut rng, &[1, k]);
+        assert_bits_eq(
+            &l.forward_prepacked(pb.as_ref(), &x, Activation::Identity),
+            &l.forward_act(&x, Activation::Identity),
+            "prepacked vs per-call packing",
+        );
+        let pre = bench(&format!("linear_prepacked m=1 {k}x{n}"), 300, || {
+            l.forward_prepacked(pb.as_ref(), &x, Activation::Identity)
+        });
+        let percall = bench(&format!("linear_percall   m=1 {k}x{n}"), 300, || {
+            l.forward_act(&x, Activation::Identity)
+        });
+        let speedup = percall.median_ns / pre.median_ns;
+        println!("{:<44} {:.2}x", "prepacked decode-GEMM speedup", speedup);
+        rec.push(&pre);
+        rec.push(&percall);
+        rec.metric("prepack_speedup_m1", speedup);
+        assert!(
+            pre.median_ns < percall.median_ns,
+            "prepacked weights must beat per-call packing at m=1 ({speedup:.2}x)"
+        );
+    }
+
+    // --- Batched attention vs the serial per-head reference.
+    {
+        let attn = MultiHeadAttention::init(64, 8, 8, 8, true, &mut rng);
+        let x = randn(&mut rng, &[16 * 32, 64]);
+        let (y, tap) = attn.forward(&x, 16, 32);
+        let (yr, tapr) = attn.forward_ref(&x, 16, 32);
+        assert_bits_eq(&y, &yr, "batched attention output vs reference");
+        assert_bits_eq(&tap, &tapr, "batched attention tap vs reference");
+        let batched = bench("attention_batched b=16 t=32 h=8", 400, || attn.forward(&x, 16, 32));
+        let reference = bench("attention_ref     b=16 t=32 h=8", 400, || {
+            attn.forward_ref(&x, 16, 32)
+        });
+        let speedup = reference.median_ns / batched.median_ns;
+        println!("{:<44} {:.2}x", "batched attention speedup", speedup);
+        rec.push(&batched);
+        rec.push(&reference);
+        rec.metric("batched_attention_speedup", speedup);
+        // On one worker the two paths do the same work modulo batching
+        // overhead; the gate only forbids the fan-out *losing*.
+        assert!(
+            batched.median_ns < reference.median_ns * 1.10,
+            "batched attention must not lose to the serial reference ({speedup:.2}x)"
+        );
+    }
+
+    // --- KV-cache decode vs full-forward rescan generation, dense and
+    // 50%-kept compressed TinyLm. Sequence length 8 + 56 = 64 (the
+    // config's max_seq), where the rescan pays O(t) full forwards.
+    let dense = TinyLm::init(LmConfig::default(), &mut rng);
+    let compressed = {
+        let mut m = dense.clone();
+        let toks: Vec<u16> = (0..16 * 33).map(|i| (i % 64) as u16).collect();
+        let ts = grail::data::TokenSet { tokens: toks, vocab: 64 };
+        let calib = LmBatch::from_tokens(&ts, 32, 16);
+        let spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+        let report = compress_model(&mut m, &calib, &spec);
+        assert!(!report.sites.is_empty(), "compression must touch every site");
+        m
+    };
+    let (p_len, n_new) = (8usize, 56usize);
+    for (m, label) in [(&dense, "dense"), (&compressed, "compressed")] {
+        let p = prompt(1, p_len);
+        // Token-exact agreement between the KV-cache path and the
+        // full-rescan oracle is the serving contract.
+        assert_eq!(
+            m.generate(&p, n_new),
+            m.generate_rescan(&p, n_new),
+            "{label}: decode and rescan generations must emit identical tokens"
+        );
+        let decode = bench(&format!("lm_generate_decode {label} p={p_len} new={n_new}"), 900, || {
+            m.generate(&p, n_new)
+        });
+        let rescan = bench(&format!("lm_generate_rescan {label} p={p_len} new={n_new}"), 900, || {
+            m.generate_rescan(&p, n_new)
+        });
+        let speedup = rescan.median_ns / decode.median_ns;
+        println!("{:<44} {:.2}x", format!("kv-decode speedup ({label})"), speedup);
+        rec.push(&decode);
+        rec.push(&rescan);
+        rec.metric(&format!("kv_decode_speedup_{label}"), speedup);
+        assert!(
+            speedup >= 2.0,
+            "{label}: KV-cache decode must be >= 2x over rescan at seq 64, got {speedup:.2}x"
+        );
+    }
+
+    // --- Worker-count invariance of the serving path: the same prompt
+    // must generate the same tokens at any thread budget.
+    {
+        let p = prompt(2, p_len);
+        let want = dense.generate(&p, n_new);
+        for threads in ["1", "2", "4", "8"] {
+            std::env::set_var("GRAIL_THREADS", threads);
+            assert_eq!(
+                dense.generate(&p, n_new),
+                want,
+                "generation must be identical at GRAIL_THREADS={threads}"
+            );
+        }
+        std::env::remove_var("GRAIL_THREADS");
+        println!("{:<44} ok", "worker-count invariance (1/2/4/8 threads)");
+    }
+
+    // --- Concurrent prefill+decode fleet: many requests fanned over
+    // the scheduler's divided thread budget. The compressed model's
+    // smaller GEMMs and K/V caches must buy real throughput.
+    {
+        let (requests, fleet_new) = (32usize, 24usize);
+        // Warm (page in caches, settle the pool), then measure twice
+        // and keep the better run per model to damp scheduler noise.
+        serve_fleet(&dense, requests, p_len, fleet_new);
+        let (dense_rps, dense_lat) = {
+            let a = serve_fleet(&dense, requests, p_len, fleet_new);
+            let b = serve_fleet(&dense, requests, p_len, fleet_new);
+            if a.0 >= b.0 { a } else { b }
+        };
+        serve_fleet(&compressed, requests, p_len, fleet_new);
+        let (comp_rps, comp_lat) = {
+            let a = serve_fleet(&compressed, requests, p_len, fleet_new);
+            let b = serve_fleet(&compressed, requests, p_len, fleet_new);
+            if a.0 >= b.0 { a } else { b }
+        };
+        println!(
+            "{:<44} {dense_rps:.1} req/s  p50 {:.2} ms  p99 {:.2} ms",
+            format!("fleet dense {requests} req"),
+            pct(&dense_lat, 0.5),
+            pct(&dense_lat, 0.99)
+        );
+        println!(
+            "{:<44} {comp_rps:.1} req/s  p50 {:.2} ms  p99 {:.2} ms",
+            format!("fleet compressed {requests} req"),
+            pct(&comp_lat, 0.5),
+            pct(&comp_lat, 0.99)
+        );
+        rec.metric("fleet_dense_rps", dense_rps);
+        rec.metric("fleet_dense_p50_ms", pct(&dense_lat, 0.5));
+        rec.metric("fleet_dense_p99_ms", pct(&dense_lat, 0.99));
+        rec.metric("fleet_compressed_rps", comp_rps);
+        rec.metric("fleet_compressed_p50_ms", pct(&comp_lat, 0.5));
+        rec.metric("fleet_compressed_p99_ms", pct(&comp_lat, 0.99));
+        rec.metric("fleet_compressed_rps_gain", comp_rps / dense_rps);
+        assert!(
+            comp_rps > dense_rps,
+            "50%-kept compressed TinyLm must out-serve dense: {comp_rps:.1} vs {dense_rps:.1} req/s"
+        );
+    }
+
+    rec.write_json("BENCH_serve.json", "grail-serve-v1");
+    println!("\ndone");
+}

@@ -82,6 +82,66 @@ pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchRe
     r
 }
 
+/// Collects measurements and derived metrics for a machine-readable
+/// `BENCH_*.json` trajectory file. Shared by every `[[bench]]` target
+/// so they all ship the same schema shape:
+/// `{"schema": ..., "benches": [...], "metrics": [...]}`.
+///
+/// Fails loudly: [`Recorder::write_json`] panics if nothing was
+/// recorded or the file cannot be written, so a bench that silently
+/// skipped its measurements (the way `BENCH_hotpath.json` once shipped
+/// empty arrays) fails CI instead of committing an empty trajectory.
+#[derive(Default)]
+pub struct Recorder {
+    benches: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl Recorder {
+    /// Record one measurement.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.benches.push(r.clone());
+    }
+
+    /// Record one derived metric (a speedup, a ratio, a throughput).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        assert!(value.is_finite(), "metric {name} is not finite: {value}");
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Write the trajectory file. Panics if the recorder is empty
+    /// (benches *and* metrics) or the write fails — an empty or
+    /// missing trajectory must never look like success.
+    pub fn write_json(&self, path: &str, schema: &str) {
+        assert!(
+            !self.benches.is_empty() && !self.metrics.is_empty(),
+            "Recorder for {path} has {} benches and {} metrics — a bench target must \
+             record measurements and derived metrics before writing its trajectory",
+            self.benches.len(),
+            self.metrics.len()
+        );
+        let mut s = format!("{{\n  \"schema\": \"{schema}\",\n  \"benches\": [\n");
+        for (i, b) in self.benches.iter().enumerate() {
+            let sep = if i + 1 < self.benches.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"p10_ns\": {:.1}, \
+                 \"p90_ns\": {:.1}, \"iters\": {}}}{sep}\n",
+                b.name, b.median_ns, b.p10_ns, b.p90_ns, b.iters
+            ));
+        }
+        s.push_str("  ],\n  \"metrics\": [\n");
+        for (i, (name, value)) in self.metrics.iter().enumerate() {
+            let sep = if i + 1 < self.metrics.len() { "," } else { "" };
+            s.push_str(&format!("    {{\"name\": \"{name}\", \"value\": {value}}}{sep}\n"));
+        }
+        s.push_str("  ]\n}\n");
+        if let Err(e) = std::fs::write(path, &s) {
+            panic!("could not write {path}: {e}");
+        }
+        println!("\nwrote {path}");
+    }
+}
+
 /// Human-readable nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -129,6 +189,46 @@ mod tests {
         count_layer_forward();
         count_layer_forward();
         assert!(layer_forwards() >= before + 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "must record measurements")]
+    fn empty_recorder_refuses_to_write() {
+        Recorder::default().write_json("/tmp/grail_recorder_empty_test.json", "test-v0");
+    }
+
+    #[test]
+    #[should_panic(expected = "must record measurements")]
+    fn recorder_without_metrics_refuses_to_write() {
+        let mut rec = Recorder::default();
+        rec.push(&BenchResult {
+            name: "x".into(),
+            median_ns: 1.0,
+            p10_ns: 1.0,
+            p90_ns: 1.0,
+            iters: 3,
+        });
+        rec.write_json("/tmp/grail_recorder_nometrics_test.json", "test-v0");
+    }
+
+    #[test]
+    fn recorder_writes_schema_and_entries() {
+        let mut rec = Recorder::default();
+        rec.push(&BenchResult {
+            name: "k".into(),
+            median_ns: 2.5,
+            p10_ns: 2.0,
+            p90_ns: 3.0,
+            iters: 7,
+        });
+        rec.metric("speedup", 2.0);
+        let path = "/tmp/grail_recorder_roundtrip_test.json";
+        rec.write_json(path, "test-v1");
+        let s = std::fs::read_to_string(path).unwrap();
+        assert!(s.contains("\"schema\": \"test-v1\""));
+        assert!(s.contains("\"name\": \"k\""));
+        assert!(s.contains("\"name\": \"speedup\""));
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -7,9 +7,115 @@
 //! the concatenated per-head feature vector just before `w_o`, which
 //! [`MultiHeadAttention::forward`] exposes as a tap.
 
-use super::{softmax_rows, Linear, Tensor};
+use super::{Linear, Tensor};
+use crate::coordinator::scheduler::{default_threads, run_grid_mut};
 use crate::rng::Pcg64;
+use crate::tensor::gemm::Epilogue;
 use crate::tensor::ops;
+
+/// Copy a `rows × width` block out of a row-major matrix (`stride`
+/// columns per row, starting at row `r0`, column `off`) into a
+/// contiguous `dst` — the strided head-gather primitive shared by the
+/// batched forward, the reference forward, and the KV-cache decode
+/// path (which uses it to append projected K/V rows into per-head
+/// cache panels).
+pub(crate) fn gather_block(
+    src: &[f32],
+    stride: usize,
+    r0: usize,
+    off: usize,
+    rows: usize,
+    width: usize,
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(dst.len(), rows * width);
+    for r in 0..rows {
+        let s = (r0 + r) * stride + off;
+        dst[r * width..(r + 1) * width].copy_from_slice(&src[s..s + width]);
+    }
+}
+
+/// Inverse of [`gather_block`]: write a contiguous `rows × width`
+/// block into a strided destination.
+pub(crate) fn scatter_block(
+    src: &[f32],
+    dst: &mut [f32],
+    stride: usize,
+    r0: usize,
+    off: usize,
+    rows: usize,
+    width: usize,
+) {
+    debug_assert_eq!(src.len(), rows * width);
+    for r in 0..rows {
+        let d = (r0 + r) * stride + off;
+        dst[d..d + width].copy_from_slice(&src[r * width..(r + 1) * width]);
+    }
+}
+
+/// Fused masked softmax over one score row: the `lim` live entries are
+/// scaled and max-reduced in one in-place sweep, exponentiated and
+/// summed in a second, normalized in a third, and the masked tail is
+/// zeroed — no materialized `-∞` mask row, no per-row temporaries, no
+/// separate scale pass. Bit-identical to the old mask-then-
+/// [`softmax_rows`](super::softmax_rows) sequence: `exp(-∞) = +0.0`
+/// contributes nothing to the max or the sum, and the zeroed tail is
+/// exactly what those entries normalized to.
+pub(crate) fn softmax_row_masked(row: &mut [f32], lim: usize, scale: f32) {
+    debug_assert!(lim > 0 && lim <= row.len());
+    let mut mx = f32::NEG_INFINITY;
+    for v in row[..lim].iter_mut() {
+        *v *= scale;
+        mx = mx.max(*v);
+    }
+    let mut z = 0.0f32;
+    for v in row[..lim].iter_mut() {
+        *v = (*v - mx).exp();
+        z += *v;
+    }
+    let inv = 1.0 / z;
+    for v in row[..lim].iter_mut() {
+        *v *= inv;
+    }
+    row[lim..].fill(0.0);
+}
+
+/// Attend a gathered query panel `qp: [t, dh]` holding absolute
+/// positions `p0..p0+t` over key/value panels `kc`/`vc: [len, dh]`
+/// (the first `len` cached positions), accumulating the context into
+/// `ctx: [t, dh]` (which must arrive zeroed — the GEMMs accumulate).
+///
+/// This one function is the entire attention math of the crate: the
+/// batched forward calls it with `len == t, p0 == 0`, the serial
+/// reference forward calls it identically, and `TinyLm` decode calls
+/// it against cache prefixes. Score (`Q·Kᵀ`) and context
+/// (`softmax·V`) products go through the row-count-invariant serving
+/// GEMMs, so a 1-row decode step reproduces the forward's bits.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_cached(
+    qp: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    t: usize,
+    len: usize,
+    dh: usize,
+    p0: usize,
+    causal: bool,
+    ctx: &mut [f32],
+) {
+    debug_assert_eq!(qp.len(), t * dh);
+    debug_assert_eq!(kc.len(), len * dh);
+    debug_assert_eq!(vc.len(), len * dh);
+    debug_assert_eq!(ctx.len(), t * dh);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut scores = vec![0.0f32; t * len];
+    ops::gemm_nt_serve(qp, kc, &mut scores, t, dh, len, Epilogue::None);
+    for (i, row) in scores.chunks_mut(len).enumerate() {
+        let lim = if causal { (p0 + i + 1).min(len) } else { len };
+        softmax_row_masked(row, lim, scale);
+    }
+    ops::gemm_nn_serve(&scores, vc, ctx, t, len, dh);
+}
 
 /// Self-attention block. Weight layout (matching the Python side):
 /// `wq: [n_heads·d_head, d_model]`, `wk/wv: [n_kv·d_head, d_model]`,
@@ -74,64 +180,112 @@ impl MultiHeadAttention {
     /// where the tap is the concatenated per-head context — the
     /// consumer input of `w_o`.
     ///
-    /// Score and context products run as per-(batch, head) GEMMs
-    /// (`ops::matmul_nt` / `ops::matmul`) over contiguous head panels
-    /// gathered from the projection outputs, so long-sequence shapes
-    /// reach the packed engine instead of strided per-element dot
-    /// loops; the causal mask is applied on the score matrix before the
-    /// softmax, exactly as the strided loops did. Deliberate tradeoff:
-    /// the causal path computes the full `t×t` product and discards the
-    /// masked half — branch-free GEMM beats triangular skip loops at
-    /// these sequence lengths; a triangular-blocked variant is the
-    /// upgrade path if `t` grows past that crossover.
+    /// Batched execution: every `(batch, head)` Q/K/V panel is gathered
+    /// once into contiguous head-major buffers (strided block copies,
+    /// [`gather_block`]), then the score/context products run as one
+    /// [`attend_cached`] job per `(batch, head)` fanned over
+    /// [`run_grid_mut`] under the scheduler's divided thread budget.
+    /// Each job owns a disjoint context panel and reads only its own
+    /// input panels, so the fan-out is bit-identical at any worker
+    /// count. Deliberate tradeoff: the causal path computes the full
+    /// `t×t` score product and discards the masked half — branch-free
+    /// GEMM beats triangular skip loops at these sequence lengths; a
+    /// triangular-blocked variant is the upgrade path if `t` grows
+    /// past that crossover.
     pub fn forward(&self, x: &Tensor, b: usize, t: usize) -> (Tensor, Tensor) {
         let rows = b * t;
         assert_eq!(x.dim(0), rows, "rows must equal b*t");
-        let dh = self.d_head;
         let q = self.wq.forward(x); // [rows, n_heads*dh]
         let k = self.wk.forward(x); // [rows, n_kv*dh]
         let v = self.wv.forward(x);
-        let scale = 1.0 / (dh as f32).sqrt();
-        let mut tap = Tensor::zeros(&[rows, self.n_heads * dh]);
+        let tap = self.attend_batched(&q, &k, &v, b, t);
+        let y = self.wo.forward(&tap);
+        (y, tap)
+    }
+
+    /// The batched attention core: head-major gathers, then one
+    /// [`attend_cached`] job per `(batch, head)` context panel.
+    fn attend_batched(&self, q: &Tensor, k: &Tensor, v: &Tensor, b: usize, t: usize) -> Tensor {
+        let (nh, nkv, dh) = (self.n_heads, self.n_kv, self.d_head);
+        let rows = b * t;
+        let mut tap = Tensor::zeros(&[rows, nh * dh]);
+        if rows == 0 {
+            return tap;
+        }
         let gs = self.group_size();
-        let mut qh = Tensor::zeros(&[t, dh]);
-        let mut kh = Tensor::zeros(&[t, dh]);
-        let mut vh = Tensor::zeros(&[t, dh]);
+        let hd = t * dh; // elements per (batch, head) panel
+        let mut qg = vec![0.0f32; b * nh * hd];
+        let mut kg = vec![0.0f32; b * nkv * hd];
+        let mut vg = vec![0.0f32; b * nkv * hd];
         for bi in 0..b {
-            for h in 0..self.n_heads {
-                let kvh = h / gs;
-                for ti in 0..t {
-                    let r = bi * t + ti;
-                    qh.row_mut(ti).copy_from_slice(&q.row(r)[h * dh..(h + 1) * dh]);
-                }
+            for h in 0..nh {
+                let dst = &mut qg[(bi * nh + h) * hd..(bi * nh + h + 1) * hd];
+                gather_block(q.data(), nh * dh, bi * t, h * dh, t, dh, dst);
+            }
+            for h in 0..nkv {
+                let dst = &mut kg[(bi * nkv + h) * hd..(bi * nkv + h + 1) * hd];
+                gather_block(k.data(), nkv * dh, bi * t, h * dh, t, dh, dst);
+                let dst = &mut vg[(bi * nkv + h) * hd..(bi * nkv + h + 1) * hd];
+                gather_block(v.data(), nkv * dh, bi * t, h * dh, t, dh, dst);
+            }
+        }
+        // One job per (batch, head): disjoint output panels whose
+        // values depend only on that job's own input panels — the
+        // worker count can never change the bits.
+        let mut ctx = vec![0.0f32; b * nh * hd];
+        let (qg, kg, vg) = (&qg, &kg, &vg);
+        let mut jobs: Vec<(usize, &mut [f32])> = ctx.chunks_mut(hd).enumerate().collect();
+        let workers = default_threads().clamp(1, jobs.len());
+        run_grid_mut(&mut jobs, workers, |_, job| {
+            let (bi, h) = (job.0 / nh, job.0 % nh);
+            let qp = &qg[(bi * nh + h) * hd..(bi * nh + h + 1) * hd];
+            let kp = &kg[(bi * nkv + h / gs) * hd..(bi * nkv + h / gs + 1) * hd];
+            let vp = &vg[(bi * nkv + h / gs) * hd..(bi * nkv + h / gs + 1) * hd];
+            let cp: &mut [f32] = &mut *job.1;
+            attend_cached(qp, kp, vp, t, t, dh, 0, self.causal, cp);
+        });
+        for bi in 0..b {
+            for h in 0..nh {
+                let src = &ctx[(bi * nh + h) * hd..(bi * nh + h + 1) * hd];
+                scatter_block(src, tap.data_mut(), nh * dh, bi * t, h * dh, t, dh);
+            }
+        }
+        tap
+    }
+
+    /// Reference forward: the same gathers, serving GEMMs, and fused
+    /// softmax as [`Self::forward`], executed serially per
+    /// `(batch, head)` with no fan-out — the conformance oracle the
+    /// batched path is asserted **bit-identical** against (it shares
+    /// [`gather_block`] / [`attend_cached`] verbatim, so the only
+    /// thing it checks — and the only thing that could differ — is the
+    /// batching and scheduling structure).
+    pub fn forward_ref(&self, x: &Tensor, b: usize, t: usize) -> (Tensor, Tensor) {
+        let rows = b * t;
+        assert_eq!(x.dim(0), rows, "rows must equal b*t");
+        let (nh, nkv, dh) = (self.n_heads, self.n_kv, self.d_head);
+        let gs = self.group_size();
+        let q = self.wq.forward(x);
+        let k = self.wk.forward(x);
+        let v = self.wv.forward(x);
+        let mut tap = Tensor::zeros(&[rows, nh * dh]);
+        let mut qp = vec![0.0f32; t * dh];
+        let mut kp = vec![0.0f32; t * dh];
+        let mut vp = vec![0.0f32; t * dh];
+        let mut ctx = vec![0.0f32; t * dh];
+        for bi in 0..b {
+            for h in 0..nh {
+                gather_block(q.data(), nh * dh, bi * t, h * dh, t, dh, &mut qp);
                 // Query heads of one KV group are consecutive, so the
                 // shared K/V panels only need gathering once per group.
                 if h % gs == 0 {
-                    for ti in 0..t {
-                        let r = bi * t + ti;
-                        kh.row_mut(ti).copy_from_slice(&k.row(r)[kvh * dh..(kvh + 1) * dh]);
-                        vh.row_mut(ti).copy_from_slice(&v.row(r)[kvh * dh..(kvh + 1) * dh]);
-                    }
+                    let kvh = h / gs;
+                    gather_block(k.data(), nkv * dh, bi * t, kvh * dh, t, dh, &mut kp);
+                    gather_block(v.data(), nkv * dh, bi * t, kvh * dh, t, dh, &mut vp);
                 }
-                // Scores for this (batch, head): [t, t] = Qh · Khᵀ.
-                let mut scores = ops::matmul_nt(&qh, &kh);
-                for ti in 0..t {
-                    let srow = scores.row_mut(ti);
-                    let lim = if self.causal { ti + 1 } else { t };
-                    for sv in srow[..lim].iter_mut() {
-                        *sv *= scale;
-                    }
-                    for sv in srow[lim..].iter_mut() {
-                        *sv = f32::NEG_INFINITY;
-                    }
-                }
-                softmax_rows(&mut scores);
-                // Context = scores · V_head, back into the tap panel.
-                let ctx = ops::matmul(&scores, &vh);
-                for ti in 0..t {
-                    tap.row_mut(bi * t + ti)[h * dh..(h + 1) * dh]
-                        .copy_from_slice(ctx.row(ti));
-                }
+                ctx.fill(0.0);
+                attend_cached(&qp, &kp, &vp, t, t, dh, 0, self.causal, &mut ctx);
+                scatter_block(&ctx, tap.data_mut(), nh * dh, bi * t, h * dh, t, dh);
             }
         }
         let y = self.wo.forward(&tap);
@@ -233,6 +387,65 @@ mod tests {
         let mut x = Tensor::zeros(&[rows, d]);
         rng.fill_normal(x.data_mut(), 1.0);
         x
+    }
+
+    #[test]
+    fn batched_forward_matches_reference_bitwise() {
+        // MHA and true GQA, causal and not: the run_grid_mut fan-out
+        // must reproduce the serial per-head loop exactly.
+        for (nh, nkv, causal, seed) in [(4, 4, true, 11), (4, 2, true, 12), (4, 2, false, 13)] {
+            let mut rng = Pcg64::seed(seed);
+            let a = MultiHeadAttention::init(8, nh, nkv, 2, causal, &mut rng);
+            let x = randx(3 * 5, 8, seed + 100);
+            let (y, tap) = a.forward(&x, 3, 5);
+            let (yr, tapr) = a.forward_ref(&x, 3, 5);
+            for (p, q) in y.data().iter().zip(yr.data()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "y nh={nh} nkv={nkv} causal={causal}");
+            }
+            for (p, q) in tap.data().iter().zip(tapr.data()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "tap nh={nh} nkv={nkv}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_softmax_matches_mask_then_softmax_rows() {
+        let mut rng = Pcg64::seed(21);
+        for lim in 1..=7usize {
+            let n = 7usize;
+            let mut row = vec![0.0f32; n];
+            rng.fill_normal(&mut row, 2.0);
+            let scale = 0.37f32;
+            // Old path: scale live entries, -∞ the tail, softmax_rows.
+            let mut old = Tensor::from_vec(&[1, n], row.clone());
+            for v in old.row_mut(0)[..lim].iter_mut() {
+                *v *= scale;
+            }
+            for v in old.row_mut(0)[lim..].iter_mut() {
+                *v = f32::NEG_INFINITY;
+            }
+            crate::nn::softmax_rows(&mut old);
+            softmax_row_masked(&mut row, lim, scale);
+            for (f, o) in row.iter().zip(old.data()) {
+                assert_eq!(f.to_bits(), o.to_bits(), "lim={lim}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let stride = 6usize;
+        let src: Vec<f32> = (0..5 * stride).map(|i| i as f32).collect();
+        let mut blk = vec![0.0f32; 3 * 2];
+        gather_block(&src, stride, 1, 4, 3, 2, &mut blk);
+        assert_eq!(blk, vec![10.0, 11.0, 16.0, 17.0, 22.0, 23.0]);
+        let mut back = vec![-1.0f32; 5 * stride];
+        scatter_block(&blk, &mut back, stride, 1, 4, 3, 2);
+        for r in 1..4 {
+            assert_eq!(back[r * stride + 4], src[r * stride + 4]);
+            assert_eq!(back[r * stride + 5], src[r * stride + 5]);
+        }
+        assert_eq!(back[0], -1.0, "untouched rows stay put");
     }
 
     #[test]

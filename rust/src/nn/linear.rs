@@ -2,7 +2,24 @@
 
 use super::Tensor;
 use crate::rng::Pcg64;
+use crate::tensor::gemm::{self, Epilogue, PackedB};
 use crate::tensor::ops;
+
+/// An activation fused into [`Linear::forward_act`]'s GEMM epilogue.
+///
+/// The fused forward is bit-identical to the unfused GEMM + `add_bias`
+/// + activation-sweep sequence (see [`Epilogue`]), so model forwards
+/// can adopt it without perturbing any calibration or conformance
+/// result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// No activation — plain `x Wᵀ + b`.
+    Identity,
+    /// `max(·, 0)`, matching [`crate::nn::relu`].
+    Relu,
+    /// The tanh-approximation GELU, matching [`crate::nn::gelu`].
+    Gelu,
+}
 
 /// `y = x Wᵀ + b` with `W: [out, in]`, `b: [out]`.
 ///
@@ -40,11 +57,60 @@ impl Linear {
         self.w.dim(1)
     }
 
-    /// Forward over a batch `[n, in] -> [n, out]`.
+    /// Forward over a batch `[n, in] -> [n, out]`: one fused pass (the
+    /// bias rides the GEMM epilogue).
     pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_act(x, Activation::Identity)
+    }
+
+    /// Forward with the following activation fused into the GEMM
+    /// epilogue: one pass over the output instead of GEMM + `add_bias`
+    /// + an activation sweep. Dispatches on the row-count-free serving
+    /// rule ([`gemm::use_packed_cols`]), so a 1-row decode call takes
+    /// the same kernel — and produces the same bits — as a multi-row
+    /// forward through the same layer.
+    pub fn forward_act(&self, x: &Tensor, act: Activation) -> Tensor {
         assert_eq!(x.dim(1), self.in_dim(), "linear input width");
-        let mut y = ops::matmul_nt(x, &self.w);
-        ops::add_bias(&mut y, self.b.data());
+        let (m, k, n) = (x.dim(0), self.in_dim(), self.out_dim());
+        let mut y = Tensor::zeros(&[m, n]);
+        ops::gemm_nt_serve(x.data(), self.w.data(), y.data_mut(), m, k, n, self.epilogue(act));
+        y
+    }
+
+    fn epilogue(&self, act: Activation) -> Epilogue<'_> {
+        match act {
+            Activation::Identity => Epilogue::Bias(self.b.data()),
+            Activation::Relu => Epilogue::BiasRelu(self.b.data()),
+            Activation::Gelu => Epilogue::BiasGelu(self.b.data()),
+        }
+    }
+
+    /// Prepack the weight operand for repeated serving calls. Returns
+    /// `Some` exactly when the serving dispatch takes the packed path
+    /// for this layer's `(in, out)` shape, so
+    /// [`Self::forward_prepacked`] stays bit-identical to
+    /// [`Self::forward_act`] on either side of the threshold.
+    pub fn prepack(&self) -> Option<PackedB> {
+        if gemm::use_packed_cols(self.in_dim(), self.out_dim()) {
+            Some(PackedB::pack_nt(self.w.data(), self.in_dim(), self.out_dim()))
+        } else {
+            None
+        }
+    }
+
+    /// [`Self::forward_act`] against a weight operand prepacked by
+    /// [`Self::prepack`] on this same layer — skips the per-call B
+    /// packing that dominates single-row decode GEMMs.
+    pub fn forward_prepacked(&self, pb: Option<&PackedB>, x: &Tensor, act: Activation) -> Tensor {
+        let Some(pb) = pb else {
+            return self.forward_act(x, act);
+        };
+        assert_eq!(x.dim(1), self.in_dim(), "linear input width");
+        assert_eq!(pb.k(), self.in_dim(), "prepacked weight is stale");
+        assert_eq!(pb.n(), self.out_dim(), "prepacked weight is stale");
+        let m = x.dim(0);
+        let mut y = Tensor::zeros(&[m, self.out_dim()]);
+        gemm::gemm_nt_prepacked(x.data(), pb, y.data_mut(), m, self.epilogue(act), 0);
         y
     }
 
@@ -119,6 +185,48 @@ mod tests {
         let x = Tensor::from_vec(&[1, 2], vec![2., 3.]);
         let y = l.forward(&x);
         assert_eq!(y.data(), &[2.5, 2.5, 5.0]);
+    }
+
+    #[test]
+    fn fused_activation_matches_unfused_sweeps_bitwise() {
+        let mut rng = Pcg64::seed(7);
+        // One shape on each side of the serving threshold
+        // (8·16 = 128 < PACKED_MIN_COLS ≤ 64·64).
+        for &(m, ind, out) in &[(5usize, 8usize, 16usize), (9, 64, 64)] {
+            let l = Linear::init(out, ind, &mut rng);
+            let mut x = Tensor::zeros(&[m, ind]);
+            rng.fill_normal(x.data_mut(), 1.0);
+            for act in [Activation::Identity, Activation::Relu, Activation::Gelu] {
+                let fused = l.forward_act(&x, act);
+                // Unfused oracle: the same serve GEMM, then separate
+                // bias and activation sweeps.
+                let mut y = Tensor::zeros(&[m, out]);
+                ops::gemm_nt_serve(
+                    x.data(),
+                    l.w.data(),
+                    y.data_mut(),
+                    m,
+                    ind,
+                    out,
+                    Epilogue::None,
+                );
+                ops::add_bias(&mut y, l.b.data());
+                match act {
+                    Activation::Identity => {}
+                    Activation::Relu => crate::nn::relu(&mut y),
+                    Activation::Gelu => crate::nn::gelu(&mut y),
+                }
+                for (f, u) in fused.data().iter().zip(y.data()) {
+                    assert_eq!(f.to_bits(), u.to_bits(), "{act:?} ({m},{ind},{out})");
+                }
+                // Prepacked forward must match too, on both sides of
+                // the threshold (prepack is None below it).
+                let pre = l.forward_prepacked(l.prepack().as_ref(), &x, act);
+                for (p, f) in pre.data().iter().zip(fused.data()) {
+                    assert_eq!(p.to_bits(), f.to_bits(), "prepacked {act:?}");
+                }
+            }
+        }
     }
 
     #[test]

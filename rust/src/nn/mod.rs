@@ -16,7 +16,7 @@ pub mod weights;
 
 pub use attention::MultiHeadAttention;
 pub use conv::{BatchNorm2d, Conv2d};
-pub use linear::Linear;
+pub use linear::{Activation, Linear};
 pub use norm::LayerNorm;
 
 use crate::tensor::Tensor;

@@ -7,9 +7,11 @@
 
 use crate::compress::{Compressible, ReductionPlan, Reducer, SiteInfo, SiteKind};
 use crate::data::TokenSet;
+use crate::nn::attention::{attend_cached, gather_block, scatter_block};
 use crate::nn::weights::WeightBundle;
-use crate::nn::{gelu, LayerNorm, Linear, MultiHeadAttention};
+use crate::nn::{argmax_rows, Activation, LayerNorm, Linear, MultiHeadAttention};
 use crate::rng::Pcg64;
+use crate::tensor::gemm::PackedB;
 use crate::tensor::{ops, Tensor};
 use anyhow::Result;
 
@@ -174,8 +176,7 @@ impl TinyLm {
             taps.push(attn_tap);
             ops::axpy(&mut cur, 1.0, &attn_out);
             let normed = blk.ln2.forward(&cur);
-            let mut hid = blk.fc.forward(&normed);
-            gelu(&mut hid);
+            let hid = blk.fc.forward_act(&normed, Activation::Gelu);
             taps.push(hid.clone());
             let mlp_out = blk.proj.forward(&hid);
             ops::axpy(&mut cur, 1.0, &mlp_out);
@@ -223,6 +224,222 @@ impl TinyLm {
             lm_head: pull_lin(b, "lm_head")?,
         })
     }
+
+    /// Fresh incremental-decoding state for one sequence: per-block
+    /// K/V caches sized by each block's *current* (possibly
+    /// compressed) head layout, plus the model's linear weights
+    /// prepacked once for the whole sequence.
+    pub fn decode_state(&self) -> DecodeState {
+        let cap = self.cfg.max_seq;
+        let mut k_cache = Vec::with_capacity(self.blocks.len());
+        let mut v_cache = Vec::with_capacity(self.blocks.len());
+        let mut packs = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            // Pruned/folded heads shrink the cache with the model —
+            // the memory saving the paper's serving pitch is about.
+            let sz = blk.attn.n_kv * cap * blk.attn.d_head;
+            k_cache.push(vec![0.0f32; sz]);
+            v_cache.push(vec![0.0f32; sz]);
+            packs.push(BlockPack {
+                wq: blk.attn.wq.prepack(),
+                wk: blk.attn.wk.prepack(),
+                wv: blk.attn.wv.prepack(),
+                wo: blk.attn.wo.prepack(),
+                fc: blk.fc.prepack(),
+                proj: blk.proj.prepack(),
+            });
+        }
+        DecodeState {
+            len: 0,
+            cap,
+            k_cache,
+            v_cache,
+            packs,
+            head_pack: self.lm_head.prepack(),
+        }
+    }
+
+    /// Run the prompt through the model once, filling the K/V caches.
+    /// Returns logits `[prompt.len(), vocab]` — bit-identical to
+    /// [`Self::forward`] over the same tokens.
+    pub fn prefill(&self, state: &mut DecodeState, prompt: &[u16]) -> Tensor {
+        assert!(state.is_empty(), "prefill on a used DecodeState");
+        self.decode_append(state, prompt)
+    }
+
+    /// Append one token and return its logits `[1, vocab]` — bit-
+    /// identical to the last row of [`Self::forward`] over the whole
+    /// sequence so far. Costs one 1-row pass over the layers plus one
+    /// attention row per cached position, instead of a full `t`-row
+    /// forward.
+    pub fn decode_step(&self, state: &mut DecodeState, token: u16) -> Tensor {
+        self.decode_append(state, &[token])
+    }
+
+    /// The shared prefill/decode body: embed `tokens` at absolute
+    /// positions `state.len()..`, append their K/V rows to the caches,
+    /// and attend against the cache prefixes via the same
+    /// [`attend_cached`] the batch forward uses.
+    ///
+    /// Every step here is row-count-invariant — embedding, LayerNorm,
+    /// the serving GEMMs (row-count-free dispatch, prepacked weights
+    /// sharing the per-call compute body), [`attend_cached`] at
+    /// matching `(k, n)` shapes, and the elementwise residual adds —
+    /// which is what makes incremental decode reproduce the full
+    /// forward's bits exactly (`rust/tests/decode.rs` asserts it for
+    /// dense, pruned, folded, and GQA models).
+    fn decode_append(&self, state: &mut DecodeState, tokens: &[u16]) -> Tensor {
+        let t = tokens.len();
+        assert!(t > 0, "decode_append needs at least one token");
+        let p0 = state.len;
+        let len = p0 + t;
+        assert!(len <= state.cap, "decode past cache capacity {}", state.cap);
+        assert_eq!(state.packs.len(), self.blocks.len(), "DecodeState from another model");
+        let d = self.cfg.d_model;
+        let cap = state.cap;
+        // Embed at absolute positions p0..p0+t — for b = 1 this is
+        // exactly what `embed_batch` computes.
+        let mut cur = Tensor::zeros(&[t, d]);
+        for (r, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            assert!(tok < self.embed.dim(0), "token out of vocab");
+            let dst = cur.row_mut(r);
+            let e = self.embed.row(tok);
+            let p = self.pos.row(p0 + r);
+            for j in 0..d {
+                dst[j] = e[j] + p[j];
+            }
+        }
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let pack = &state.packs[bi];
+            let (nh, nkv, dh) = (blk.attn.n_heads, blk.attn.n_kv, blk.attn.d_head);
+            let gs = blk.attn.group_size();
+            let normed = blk.ln1.forward(&cur);
+            let q = blk.attn.wq.forward_prepacked(pack.wq.as_ref(), &normed, Activation::Identity);
+            let k = blk.attn.wk.forward_prepacked(pack.wk.as_ref(), &normed, Activation::Identity);
+            let v = blk.attn.wv.forward_prepacked(pack.wv.as_ref(), &normed, Activation::Identity);
+            // Append the new K/V rows into each head's cache panel
+            // (head-major `[n_kv][cap][d_head]`, so a head's live
+            // prefix is one contiguous `[len, d_head]` slice).
+            for h in 0..nkv {
+                let kc = &mut state.k_cache[bi][(h * cap + p0) * dh..(h * cap + len) * dh];
+                gather_block(k.data(), nkv * dh, 0, h * dh, t, dh, kc);
+                let vc = &mut state.v_cache[bi][(h * cap + p0) * dh..(h * cap + len) * dh];
+                gather_block(v.data(), nkv * dh, 0, h * dh, t, dh, vc);
+            }
+            // Attend each query head over its KV group's cache prefix.
+            let mut tap = Tensor::zeros(&[t, nh * dh]);
+            let mut qp = vec![0.0f32; t * dh];
+            let mut ctx = vec![0.0f32; t * dh];
+            for h in 0..nh {
+                gather_block(q.data(), nh * dh, 0, h * dh, t, dh, &mut qp);
+                let kvh = h / gs;
+                let kc = &state.k_cache[bi][kvh * cap * dh..kvh * cap * dh + len * dh];
+                let vc = &state.v_cache[bi][kvh * cap * dh..kvh * cap * dh + len * dh];
+                ctx.fill(0.0);
+                attend_cached(&qp, kc, vc, t, len, dh, p0, blk.attn.causal, &mut ctx);
+                scatter_block(&ctx, tap.data_mut(), nh * dh, 0, h * dh, t, dh);
+            }
+            let attn_out =
+                blk.attn.wo.forward_prepacked(pack.wo.as_ref(), &tap, Activation::Identity);
+            ops::axpy(&mut cur, 1.0, &attn_out);
+            let normed = blk.ln2.forward(&cur);
+            let hid = blk.fc.forward_prepacked(pack.fc.as_ref(), &normed, Activation::Gelu);
+            let mlp_out = blk.proj.forward_prepacked(pack.proj.as_ref(), &hid, Activation::Identity);
+            ops::axpy(&mut cur, 1.0, &mlp_out);
+        }
+        state.len = len;
+        let normed = self.ln_f.forward(&cur);
+        self.lm_head.forward_prepacked(state.head_pack.as_ref(), &normed, Activation::Identity)
+    }
+
+    /// Greedy generation through the KV-cache decode path: one prefill
+    /// over the prompt, then one [`Self::decode_step`] per new token.
+    /// Produces exactly the tokens [`Self::generate_rescan`] produces
+    /// (asserted by `benches/serve.rs` and `rust/tests/decode.rs`),
+    /// at a fraction of the cost.
+    pub fn generate(&self, prompt: &[u16], n_new: usize) -> Vec<u16> {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(prompt.len() + n_new <= self.cfg.max_seq, "generation would exceed max_seq");
+        let mut state = self.decode_state();
+        let mut out = Vec::with_capacity(prompt.len() + n_new);
+        out.extend_from_slice(prompt);
+        let mut logits = self.prefill(&mut state, prompt);
+        for step in 0..n_new {
+            let next = argmax_last(&logits);
+            out.push(next);
+            if step + 1 < n_new {
+                logits = self.decode_step(&mut state, next);
+            }
+        }
+        out
+    }
+
+    /// Greedy generation the pre-decode way: re-run the full forward
+    /// over the whole sequence for every new token. Kept as the
+    /// decode path's correctness oracle and the baseline the serve
+    /// bench measures the KV-cache speedup against.
+    pub fn generate_rescan(&self, prompt: &[u16], n_new: usize) -> Vec<u16> {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(prompt.len() + n_new <= self.cfg.max_seq, "generation would exceed max_seq");
+        let mut out = prompt.to_vec();
+        for _ in 0..n_new {
+            let t = out.len();
+            let batch = LmBatch { inputs: out.clone(), targets: vec![0; t], b: 1, t };
+            out.push(argmax_last(&self.forward(&batch)));
+        }
+        out
+    }
+}
+
+/// Greedy pick from the last row of a logits tensor.
+fn argmax_last(logits: &Tensor) -> u16 {
+    argmax_rows(logits)[logits.dim(0) - 1] as u16
+}
+
+/// One block's prepacked serving weights (`None` where the layer's
+/// shape dispatches to the scalar path anyway).
+#[derive(Clone)]
+struct BlockPack {
+    wq: Option<PackedB>,
+    wk: Option<PackedB>,
+    wv: Option<PackedB>,
+    wo: Option<PackedB>,
+    fc: Option<PackedB>,
+    proj: Option<PackedB>,
+}
+
+/// Incremental-decoding state for one sequence: per-block head-major
+/// K/V caches (`[n_kv][capacity][d_head]`, sized by the model's
+/// compressed layout) plus prepacked linear weights. Create with
+/// [`TinyLm::decode_state`], fill with [`TinyLm::prefill`], extend
+/// with [`TinyLm::decode_step`].
+#[derive(Clone)]
+pub struct DecodeState {
+    len: usize,
+    cap: usize,
+    k_cache: Vec<Vec<f32>>,
+    v_cache: Vec<Vec<f32>>,
+    packs: Vec<BlockPack>,
+    head_pack: Option<PackedB>,
+}
+
+impl DecodeState {
+    /// Number of positions currently cached.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True until the first prefill.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum sequence length the caches hold (the model's
+    /// `max_seq` — the positional table is the binding limit).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
 }
 
 /// Segment-executor state: the residual stream at the current site's
@@ -253,9 +470,7 @@ impl Compressible for TinyLm {
             tap
         } else {
             let normed = blk.ln2.forward(&state.cur);
-            let mut hid = blk.fc.forward(&normed);
-            gelu(&mut hid);
-            hid
+            blk.fc.forward_act(&normed, Activation::Gelu)
         }
     }
 
@@ -272,8 +487,7 @@ impl Compressible for TinyLm {
                 ops::axpy(&mut state.cur, 1.0, &attn_out);
             } else {
                 let normed = blk.ln2.forward(&state.cur);
-                let mut hid = blk.fc.forward(&normed);
-                gelu(&mut hid);
+                let hid = blk.fc.forward_act(&normed, Activation::Gelu);
                 let mlp_out = blk.proj.forward(&hid);
                 ops::axpy(&mut state.cur, 1.0, &mlp_out);
             }

@@ -3,7 +3,7 @@
 
 use crate::compress::{Compressible, ReductionPlan, Reducer, SiteInfo, SiteKind};
 use crate::nn::weights::WeightBundle;
-use crate::nn::{relu, Linear};
+use crate::nn::{Activation, Linear};
 use crate::rng::Pcg64;
 use crate::tensor::Tensor;
 use anyhow::Result;
@@ -34,10 +34,8 @@ impl MlpNet {
     /// Logits plus consumer-input activations per site:
     /// `taps[0]` = input of `fc2`, `taps[1]` = input of `head`.
     pub fn forward_with_taps(&self, x: &Tensor) -> (Tensor, Vec<Tensor>) {
-        let mut h1 = self.fc1.forward(x);
-        relu(&mut h1);
-        let mut h2 = self.fc2.forward(&h1);
-        relu(&mut h2);
+        let h1 = self.fc1.forward_act(x, Activation::Relu);
+        let h2 = self.fc2.forward_act(&h1, Activation::Relu);
         let y = self.head.forward(&h2);
         (y, vec![h1, h2])
     }
@@ -83,18 +81,14 @@ impl Compressible for MlpNet {
     fn site_tap(&self, state: &mut MlpCalibState, site: usize) -> Tensor {
         crate::bench_util::count_layer_forward();
         let p = if site == 0 { &self.fc1 } else { &self.fc2 };
-        let mut h = p.forward(&state.cur);
-        relu(&mut h);
-        h
+        p.forward_act(&state.cur, Activation::Relu)
     }
 
     fn forward_segment(&self, state: &mut MlpCalibState, from_site: usize, to_site: usize) {
         for s in from_site..to_site {
             crate::bench_util::count_layer_forward();
             let p = if s == 0 { &self.fc1 } else { &self.fc2 };
-            let mut h = p.forward(&state.cur);
-            relu(&mut h);
-            state.cur = h;
+            state.cur = p.forward_act(&state.cur, Activation::Relu);
         }
     }
 

@@ -7,7 +7,7 @@
 
 use crate::compress::{Compressible, ReductionPlan, SiteInfo, SiteKind};
 use crate::nn::weights::WeightBundle;
-use crate::nn::{gelu, LayerNorm, Linear, MultiHeadAttention};
+use crate::nn::{Activation, LayerNorm, Linear, MultiHeadAttention};
 use crate::rng::Pcg64;
 use crate::tensor::{ops, Tensor};
 use anyhow::Result;
@@ -163,8 +163,7 @@ impl TinyViT {
             ops::axpy(&mut cur, 1.0, &attn_out);
             // Pre-LN MLP with residual.
             let normed = blk.ln2.forward(&cur);
-            let mut hid = blk.fc.forward(&normed);
-            gelu(&mut hid);
+            let hid = blk.fc.forward_act(&normed, Activation::Gelu);
             taps.push(hid.clone());
             let mlp_out = blk.proj.forward(&hid);
             ops::axpy(&mut cur, 1.0, &mlp_out);
@@ -322,8 +321,7 @@ impl Compressible for TinyViT {
         let mid = self.mlp_boundary(state, site);
         let blk = &self.blocks[site];
         let normed = blk.ln2.forward(&mid);
-        let mut hid = blk.fc.forward(&normed);
-        gelu(&mut hid);
+        let hid = blk.fc.forward_act(&normed, Activation::Gelu);
         state.attn_mid = Some((site, mid));
         hid
     }
@@ -334,8 +332,7 @@ impl Compressible for TinyViT {
             let mid = self.mlp_boundary(state, s);
             let blk = &self.blocks[s];
             let normed = blk.ln2.forward(&mid);
-            let mut hid = blk.fc.forward(&normed);
-            gelu(&mut hid);
+            let hid = blk.fc.forward_act(&normed, Activation::Gelu);
             let mlp_out = blk.proj.forward(&hid);
             let mut out = mid;
             ops::axpy(&mut out, 1.0, &mlp_out);

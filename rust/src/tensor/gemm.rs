@@ -36,9 +36,23 @@
 //!   worker's share (typically serial), and `GRAIL_THREADS` caps the
 //!   total.
 //!
+//! - **Fused epilogues** — the serving path attaches an [`Epilogue`]
+//!   (`None | Bias | BiasRelu | BiasGelu`) that is applied to the
+//!   accumulator tile on the final KC strip, while it is still in
+//!   registers: an activation-following `Linear::forward` is one pass
+//!   over `C` instead of GEMM + `add_bias` + activation sweeps, and
+//!   the result is bit-identical to the unfused sequence (same scalar
+//!   ops, same order, one shared [`Epilogue::apply`]).
+//! - **Prepacked weights** — [`PackedB`] holds a weight operand packed
+//!   once for repeated serving calls ([`gemm_nt_prepacked`]); KV-cache
+//!   decode pushes one row at a time through the same weights, where
+//!   per-call packing would dominate. Packing and compute bodies are
+//!   shared with the per-call entries, so results match to the bit.
+//!
 //! The scalar loops survive in [`super::ops`] as `*_ref` oracles; the
 //! property suite in `rust/tests/gemm_engine.rs` sweeps panel-boundary
-//! shapes, NaN/∞ propagation, and worker-count bit-invariance, and
+//! shapes, NaN/∞ propagation, worker-count bit-invariance, epilogue
+//! conformance, and prepacked-vs-per-call equality, and
 //! `benches/hotpath.rs` asserts the packed path wins (and by ≥ 2× on
 //! 512-dim GEMM) on every CI run.
 
@@ -58,6 +72,16 @@ pub const MC: usize = 64;
 /// [`super::ops`] take the packed path; below it the packing overhead
 /// dominates and the scalar `*_ref` loops win.
 pub const PACKED_MIN_FLOPS: usize = 1 << 18;
+
+/// Minimum `k·n` weight volume before the *serving* entries in
+/// [`super::ops`] (`gemm_nt_serve` / `gemm_nn_serve`) take the packed
+/// path. This is [`PACKED_MIN_FLOPS`] evaluated at one [`MC`]-row
+/// panel (`2·MC·k·n`), so the two rules agree on calibration-sized
+/// batches — but unlike the flop rule it is independent of the row
+/// count `m`. That row-invariance is what lets a 1-row KV-cache decode
+/// step take the same kernel — and produce the same bits — as the
+/// multi-row forward it must match.
+pub const PACKED_MIN_COLS: usize = PACKED_MIN_FLOPS / (2 * MC);
 
 /// Minimum flop volume before row panels fan over worker threads
 /// (same spirit as the blocked solver's `PARALLEL_MIN_FLOPS`).
@@ -87,9 +111,69 @@ pub(crate) fn use_packed(m: usize, k: usize, n: usize) -> bool {
     packed_enabled() && m != 0 && k != 0 && n != 0 && flops(m, k, n) >= PACKED_MIN_FLOPS
 }
 
+/// Row-count-invariant dispatch for the serving path: packed iff the
+/// `k·n` weight volume is large enough, regardless of how many rows
+/// are being pushed through. See [`PACKED_MIN_COLS`].
+pub fn use_packed_cols(k: usize, n: usize) -> bool {
+    packed_enabled() && k != 0 && n != 0 && k.saturating_mul(n) >= PACKED_MIN_COLS
+}
+
 #[inline]
 fn flops(m: usize, k: usize, n: usize) -> usize {
     2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n)
+}
+
+/// A fused GEMM epilogue: bias and activation applied to the
+/// accumulator tile on the *final* KC strip — while it is still in
+/// registers — so an activation-following linear layer is one pass
+/// over `C` instead of GEMM + `add_bias` + activation sweeps.
+///
+/// The fused result is **bit-identical** to the unfused sequence: the
+/// epilogue performs the same scalar ops (`v + bias[j]`, then the
+/// activation) in the same order on the same accumulated values, and
+/// [`Epilogue::apply`] is the single shared implementation used both
+/// inside [`gemm_block`] and by the scalar fallback sweep in
+/// `ops::gemm_nt_serve` — so there is no second epilogue codepath to
+/// drift.
+#[derive(Clone, Copy, Debug, Default)]
+pub enum Epilogue<'a> {
+    /// Plain accumulate-and-store (the calibration/algebra default).
+    #[default]
+    None,
+    /// `c[i][j] += bias[j]`.
+    Bias(&'a [f32]),
+    /// `c[i][j] = max(c[i][j] + bias[j], 0)`.
+    BiasRelu(&'a [f32]),
+    /// `c[i][j] = gelu(c[i][j] + bias[j])` — the tanh approximation,
+    /// exactly [`crate::nn::gelu_scalar`].
+    BiasGelu(&'a [f32]),
+}
+
+impl Epilogue<'_> {
+    /// Apply to a run of output columns starting at absolute column
+    /// `j0`. Shared by the packed register-tile path and the scalar
+    /// fallback so both produce the same bits.
+    #[inline]
+    pub fn apply(&self, j0: usize, row: &mut [f32]) {
+        match *self {
+            Epilogue::None => {}
+            Epilogue::Bias(bias) => {
+                for (v, &bj) in row.iter_mut().zip(&bias[j0..]) {
+                    *v += bj;
+                }
+            }
+            Epilogue::BiasRelu(bias) => {
+                for (v, &bj) in row.iter_mut().zip(&bias[j0..]) {
+                    *v = (*v + bj).max(0.0);
+                }
+            }
+            Epilogue::BiasGelu(bias) => {
+                for (v, &bj) in row.iter_mut().zip(&bias[j0..]) {
+                    *v = crate::nn::gelu_scalar(*v + bj);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -267,6 +351,71 @@ fn pack_a_strip_t(
     }
 }
 
+/// Pack every KC strip of `B` (`[k, n]` row-major, or `[n, k]` when
+/// `b_is_nk`) into the engine's panel layout. Returns the packed
+/// buffer, the strip list, and the column-panel count. Single shared
+/// implementation for per-call packing ([`gemm_packed`]) and ahead-of-
+/// time packing ([`PackedB::pack_nt`]), so prepacked weights are
+/// byte-identical to what a per-call GEMM would have packed.
+fn pack_b_full(
+    b: &[f32],
+    k: usize,
+    n: usize,
+    b_is_nk: bool,
+) -> (Vec<f32>, Vec<(usize, usize)>, usize) {
+    let nblk = (n + NR - 1) / NR;
+    let kc_strips = strips(k, KC);
+    let mut bpack = vec![0.0f32; k * nblk * NR];
+    let mut off = 0usize;
+    for &(k0, kl) in &kc_strips {
+        let out = &mut bpack[off..off + kl * nblk * NR];
+        if b_is_nk {
+            pack_b_strip_nk(b, k, n, k0, kl, nblk, out);
+        } else {
+            pack_b_strip_kn(b, n, k0, kl, nblk, out);
+        }
+        off += kl * nblk * NR;
+    }
+    (bpack, kc_strips, nblk)
+}
+
+/// The shared `B` operand of an NT GEMM (`B: [n, k]` row-major — a
+/// linear layer's `[out, in]` weight), prepacked once into the
+/// engine's KC-strip × NR-panel layout for repeated serving calls via
+/// [`gemm_nt_prepacked`]. Decode steps push one row at a time through
+/// the same weights hundreds of times; packing per call would dominate
+/// the m=1 GEMM. Packing here goes through [`pack_b_full`] — the exact
+/// code the per-call path uses — so prepacked and per-call results
+/// match to the bit.
+#[derive(Clone)]
+pub struct PackedB {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+    nblk: usize,
+    kc_strips: Vec<(usize, usize)>,
+}
+
+impl PackedB {
+    /// Pack `b: [n, k]` row-major (the `matmul_nt` weight layout).
+    pub fn pack_nt(b: &[f32], k: usize, n: usize) -> PackedB {
+        assert!(k > 0 && n > 0, "PackedB needs non-empty operands");
+        assert_eq!(b.len(), n * k);
+        let (data, kc_strips, nblk) = pack_b_full(b, k, n, true);
+        PackedB { data, k, n, nblk, kc_strips }
+    }
+
+    /// Inner (shared) dimension `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output dimension `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
 /// Resolve the effective worker count for a row-panel fan-out:
 /// explicit `workers` wins; auto (`0`) applies a flop threshold and
 /// then defers to [`default_threads`] — the current thread's share of
@@ -318,9 +467,48 @@ pub fn gemm_nt_packed(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
-    gemm_packed(a, b, c, m, k, n, 1.0, true, workers);
+    gemm_packed(a, b, c, m, k, n, 1.0, true, Epilogue::None, workers);
 }
 
+/// `C += A · Bᵀ` with a fused epilogue — the serving-path entry behind
+/// `ops::gemm_nt_serve`. Callers dispatch via [`use_packed_cols`], so
+/// `k > 0` here (an all-bias `k = 0` product takes the scalar path,
+/// where the epilogue sweep still runs).
+pub fn gemm_nt_packed_ep(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ep: Epilogue<'_>,
+    workers: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    gemm_packed(a, b, c, m, k, n, 1.0, true, ep, workers);
+}
+
+/// `C += A · Bᵀ` against a [`PackedB`] with a fused epilogue — the
+/// decode path's entry: the weight operand is packed once per sequence
+/// (not per step), and the compute body is the same
+/// [`gemm_with_packed_b`] the per-call entries use, so results are
+/// bit-identical to [`gemm_nt_packed_ep`].
+pub fn gemm_nt_prepacked(
+    a: &[f32],
+    pb: &PackedB,
+    c: &mut [f32],
+    m: usize,
+    ep: Epilogue<'_>,
+    workers: usize,
+) {
+    debug_assert_eq!(a.len(), m * pb.k);
+    debug_assert_eq!(c.len(), m * pb.n);
+    gemm_with_packed_b(a, c, m, pb.k, pb.n, 1.0, &pb.data, &pb.kc_strips, pb.nblk, ep, workers);
+}
+
+#[allow(clippy::too_many_arguments)]
 fn gemm_packed(
     a: &[f32],
     b: &[f32],
@@ -330,32 +518,39 @@ fn gemm_packed(
     n: usize,
     alpha: f32,
     b_is_nk: bool,
+    ep: Epilogue<'_>,
+    workers: usize,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    // Shared packed B: one panel set per KC strip, packed once on the
+    // calling thread so every row-panel job reads identical data.
+    let (bpack, kc_strips, nblk) = pack_b_full(b, k, n, b_is_nk);
+    gemm_with_packed_b(a, c, m, k, n, alpha, &bpack, &kc_strips, nblk, ep, workers);
+}
+
+/// The row-panel fan-out over an already-packed B — shared by per-call
+/// packing and [`PackedB`] reuse.
+#[allow(clippy::too_many_arguments)]
+fn gemm_with_packed_b(
+    a: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+    bpack: &[f32],
+    kc_strips: &[(usize, usize)],
+    nblk: usize,
+    ep: Epilogue<'_>,
     workers: usize,
 ) {
     if m == 0 || n == 0 || k == 0 {
         return;
     }
     let use_fma = fma_available();
-    let nblk = (n + NR - 1) / NR;
-    let kc_strips = strips(k, KC);
-
-    // Shared packed B: one panel set per KC strip, packed once on the
-    // calling thread so every row-panel job reads identical data.
-    let mut bpack = vec![0.0f32; k * nblk * NR];
-    let mut off = 0usize;
-    for &(k0, kl) in &kc_strips {
-        let out = &mut bpack[off..off + kl * nblk * NR];
-        if b_is_nk {
-            pack_b_strip_nk(b, k, n, k0, kl, nblk, out);
-        } else {
-            pack_b_strip_kn(b, n, k0, kl, nblk, out);
-        }
-        off += kl * nblk * NR;
-    }
-
     let workers = resolve_workers(workers, m, k, n);
-    let bpack_ref = &bpack;
-    let kc_ref = &kc_strips;
     // Fixed MC-row jobs with disjoint C panels: job boundaries are a
     // function of the shape alone, so any worker count produces the
     // same bits.
@@ -363,12 +558,13 @@ fn gemm_packed(
     run_grid_mut(&mut jobs, workers, |_, job| {
         let i0 = job.0 * MC;
         let cblk: &mut [f32] = &mut *job.1;
-        gemm_block(a, k, n, alpha, i0, cblk, bpack_ref, kc_ref, nblk, use_fma);
+        gemm_block(a, k, n, alpha, i0, cblk, bpack, kc_strips, nblk, ep, use_fma);
     });
 }
 
 /// Compute one MC-row panel of `C += alpha·A·op(B)` from the shared
-/// packed B.
+/// packed B, applying `ep` to the register tile on the final KC strip.
+#[allow(clippy::too_many_arguments)]
 fn gemm_block(
     a: &[f32],
     k: usize,
@@ -379,13 +575,18 @@ fn gemm_block(
     bpack: &[f32],
     kc_strips: &[(usize, usize)],
     nblk: usize,
+    ep: Epilogue<'_>,
     use_fma: bool,
 ) {
     let ml = cblk.len() / n;
     let rstrips = strips(ml, MR);
     let mut abuf = vec![0.0f32; rstrips.len() * MR * KC];
     let mut boff = 0usize;
-    for &(k0, kl) in kc_strips {
+    for (si, &(k0, kl)) in kc_strips.iter().enumerate() {
+        // The epilogue belongs to the last KC strip only: earlier
+        // strips hold partial sums that later strips still accumulate
+        // onto.
+        let last = si + 1 == kc_strips.len();
         for (rbi, &(r0, rl)) in rstrips.iter().enumerate() {
             pack_a_strip(
                 a,
@@ -414,8 +615,14 @@ fn gemm_block(
                 }
                 microkernel(use_fma, kl, ap, bp, &mut acc);
                 for rr in 0..rl {
+                    let arow = &mut acc[rr][..nl];
+                    if last {
+                        // Bias + activation on the accumulator while it
+                        // is still hot: one pass over C total.
+                        ep.apply(j0, arow);
+                    }
                     let crow = &mut cblk[(r0 + rr) * n + j0..(r0 + rr) * n + j0 + nl];
-                    crow.copy_from_slice(&acc[rr][..nl]);
+                    crow.copy_from_slice(arow);
                 }
             }
         }
@@ -435,14 +642,7 @@ pub fn syrk_upper_packed(x: &[f32], g: &mut [f32], rows: usize, h: usize, worker
         return;
     }
     let use_fma = fma_available();
-    let nblk = (h + NR - 1) / NR;
-    let kc_strips = strips(rows, KC);
-    let mut bpack = vec![0.0f32; rows * nblk * NR];
-    let mut off = 0usize;
-    for &(k0, kl) in &kc_strips {
-        pack_b_strip_kn(x, h, k0, kl, nblk, &mut bpack[off..off + kl * nblk * NR]);
-        off += kl * nblk * NR;
-    }
+    let (bpack, kc_strips, nblk) = pack_b_full(x, rows, h, false);
     let workers = resolve_workers(workers, h, rows, h);
     let bpack_ref = &bpack;
     let kc_ref = &kc_strips;
@@ -562,6 +762,59 @@ mod tests {
                 assert_eq!(acc[r][j], want, "tile ({r},{j})");
             }
         }
+    }
+
+    #[test]
+    fn use_packed_cols_is_row_count_free() {
+        assert!(packed_enabled());
+        assert!(!use_packed_cols(0, 4096), "empty k stays scalar");
+        assert!(!use_packed_cols(4096, 0), "empty n stays scalar");
+        assert!(!use_packed_cols(8, 64), "8·64 = 512 < {PACKED_MIN_COLS}");
+        assert!(use_packed_cols(64, 64), "64·64 = 4096 ≥ {PACKED_MIN_COLS}");
+        assert!(use_packed_cols(PACKED_MIN_COLS, 1));
+        // The whole point: the rule has no m argument, so decode (m=1)
+        // and batch forward (m=t) agree by construction.
+    }
+
+    #[test]
+    fn epilogue_apply_matches_unfused_ops() {
+        let bias: Vec<f32> = (0..8).map(|i| 0.25 * i as f32 - 1.0).collect();
+        let vals: Vec<f32> = (0..6).map(|i| 0.7 * i as f32 - 2.0).collect();
+        // Bias at a column offset.
+        let mut r = vals.clone();
+        Epilogue::Bias(&bias).apply(2, &mut r);
+        for (i, v) in r.iter().enumerate() {
+            assert_eq!(v.to_bits(), (vals[i] + bias[2 + i]).to_bits());
+        }
+        // BiasRelu == add then clamp.
+        let mut r = vals.clone();
+        Epilogue::BiasRelu(&bias).apply(0, &mut r);
+        for (i, v) in r.iter().enumerate() {
+            assert_eq!(v.to_bits(), (vals[i] + bias[i]).max(0.0).to_bits());
+        }
+        // BiasGelu == add then the shared scalar gelu.
+        let mut r = vals.clone();
+        Epilogue::BiasGelu(&bias).apply(0, &mut r);
+        for (i, v) in r.iter().enumerate() {
+            assert_eq!(v.to_bits(), crate::nn::gelu_scalar(vals[i] + bias[i]).to_bits());
+        }
+        // None is the identity.
+        let mut r = vals.clone();
+        Epilogue::None.apply(3, &mut r);
+        assert_eq!(r, vals);
+    }
+
+    #[test]
+    fn prepacked_b_matches_per_call_packing() {
+        let (k, n) = (KC + 5, NR + 3);
+        let b: Vec<f32> = (0..n * k).map(|i| ((i * 37 % 19) as f32) - 9.0).collect();
+        let pb = PackedB::pack_nt(&b, k, n);
+        assert_eq!(pb.k(), k);
+        assert_eq!(pb.n(), n);
+        let (direct, kc_strips, nblk) = pack_b_full(&b, k, n, true);
+        assert_eq!(pb.kc_strips, kc_strips);
+        assert_eq!(pb.nblk, nblk);
+        assert_eq!(pb.data, direct, "PackedB must reuse the per-call packing");
     }
 
     #[test]

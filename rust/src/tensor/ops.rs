@@ -7,9 +7,14 @@
 //! register-tiled engine in [`super::gemm`] (parallel row panels,
 //! bit-identical at any worker count); smaller shapes use the scalar
 //! loops, which also survive as the `*_ref` oracles the packed engine
-//! is property-tested against (`rust/tests/gemm_engine.rs`). No kernel
-//! has a data-dependent branch: `0·NaN` / `0·∞` propagate as NaN by
-//! construction. See EXPERIMENTS.md §Perf for measurements.
+//! is property-tested against (`rust/tests/gemm_engine.rs`). The
+//! *serving* entries ([`gemm_nt_serve`] / [`gemm_nn_serve`]) dispatch
+//! on the row-count-free `k·n` rule ([`gemm::use_packed_cols`]) and
+//! carry a fused [`gemm::Epilogue`], so single-row decode steps pick
+//! the same kernel as multi-row forwards and stay bit-identical to
+//! them. No kernel has a data-dependent branch: `0·NaN` / `0·∞`
+//! propagate as NaN by construction. See EXPERIMENTS.md §Perf and
+//! §Serving for measurements.
 
 use super::{gemm, Tensor};
 
@@ -202,6 +207,50 @@ pub fn gemm_nt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
         gemm::gemm_nt_packed(a, b, c, m, k, n, 0);
     } else {
         gemm_nt_acc_ref(a, b, c, m, k, n);
+    }
+}
+
+/// `C += A · Bᵀ` with a fused [`gemm::Epilogue`] under the **serving
+/// dispatch**: packed iff [`gemm::use_packed_cols`] says the `k·n`
+/// weight volume warrants it. Unlike the flop rule in [`gemm_nt_acc`],
+/// this rule never looks at the row count `m`, so a 1-row KV-cache
+/// decode step takes the same kernel — and produces the same bits — as
+/// the multi-row forward it must match. The scalar fallback applies
+/// the epilogue as a per-row sweep *after* [`gemm_nt_acc_ref`], via
+/// the same [`gemm::Epilogue::apply`] the packed tile uses, so fused
+/// and unfused agree to the bit on either side of the threshold.
+pub fn gemm_nt_serve(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ep: gemm::Epilogue<'_>,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if gemm::use_packed_cols(k, n) {
+        gemm::gemm_nt_packed_ep(a, b, c, m, k, n, ep, 0);
+    } else {
+        gemm_nt_acc_ref(a, b, c, m, k, n);
+        for row in c.chunks_mut(n.max(1)) {
+            ep.apply(0, row);
+        }
+    }
+}
+
+/// `C += A · B` under the serving dispatch (row-count-invariant, see
+/// [`gemm_nt_serve`]) — the attention context product's entry.
+pub fn gemm_nn_serve(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if gemm::use_packed_cols(k, n) {
+        gemm::gemm_nn_packed(a, b, c, m, k, n, 1.0, 0);
+    } else {
+        gemm_acc_ref(a, b, c, m, k, n, 1.0);
     }
 }
 

@@ -1,0 +1,139 @@
+//! KV-cache decode conformance (`TinyLm::prefill` / `decode_step` /
+//! `generate`).
+//!
+//! The serving contract is *bitwise*: prefill must reproduce the full
+//! forward exactly, and every incremental decode step must reproduce
+//! the last row of the full forward over the sequence so far — for
+//! dense, GQA, pruned, and folded models, at any worker count. The
+//! chain that makes this hold (row-count-invariant GEMM dispatch,
+//! prepacked weights sharing the per-call compute body, shared
+//! `attend_cached`/fused-softmax kernels) is documented on
+//! `TinyLm::decode_append`; these tests are the enforcement.
+
+mod common;
+
+use grail::compress::{Compressible, ReductionPlan, Reducer};
+use grail::coordinator::scheduler::run_grid;
+use grail::nn::models::{LmBatch, LmConfig, TinyLm};
+use grail::tensor::Tensor;
+
+/// Single-sequence batch (targets unused by `forward`).
+fn batch_of(tokens: &[u16]) -> LmBatch {
+    LmBatch { inputs: tokens.to_vec(), targets: vec![0; tokens.len()], b: 1, t: tokens.len() }
+}
+
+/// Deterministic in-vocab prompt.
+fn prompt(len: usize) -> Vec<u16> {
+    (0..len).map(|i| ((i * 5 + 2) % 64) as u16).collect()
+}
+
+fn assert_rows_bits_eq(a: &Tensor, ar: usize, b: &Tensor, br: usize, what: &str) {
+    assert_eq!(a.dim(1), b.dim(1), "{what}: width");
+    for (x, y) in a.row(ar).iter().zip(b.row(br)) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bits diverged");
+    }
+}
+
+/// The four serving configurations the decode path must cover: plain
+/// MHA, true GQA, head/MLP-pruned, and head/MLP-folded models (the
+/// reductions change head counts, cache widths, and every GEMM shape).
+fn variants() -> Vec<(&'static str, TinyLm)> {
+    let dense = common::lm(LmConfig::default(), 31);
+    let gqa = common::lm(LmConfig::gqa(), 32);
+    let mut pruned = dense.clone();
+    pruned.apply(0, &ReductionPlan::bare(Reducer::Select(vec![0, 2, 5, 7])));
+    pruned.apply(3, &ReductionPlan::bare(Reducer::Select((0..96).collect())));
+    let mut folded = dense.clone();
+    folded.apply(
+        2,
+        &ReductionPlan::bare(Reducer::Fold { assign: vec![0, 0, 1, 1, 2, 2, 3, 3], k: 4 }),
+    );
+    folded.apply(
+        5,
+        &ReductionPlan::bare(Reducer::Fold { assign: (0..192).map(|i| i / 2).collect(), k: 96 }),
+    );
+    vec![("dense", dense), ("gqa", gqa), ("pruned", pruned), ("folded", folded)]
+}
+
+#[test]
+fn prefill_matches_full_forward_bitwise() {
+    for (name, m) in variants() {
+        let toks = prompt(12);
+        let full = m.forward(&batch_of(&toks));
+        let mut state = m.decode_state();
+        let pre = m.prefill(&mut state, &toks);
+        assert_eq!(state.len(), toks.len(), "{name}: cached length");
+        assert_eq!(pre.shape(), full.shape(), "{name}: logits shape");
+        for r in 0..toks.len() {
+            assert_rows_bits_eq(&pre, r, &full, r, &format!("{name}: prefill row {r}"));
+        }
+    }
+}
+
+#[test]
+fn incremental_decode_matches_prefix_forwards_bitwise() {
+    for (name, m) in variants() {
+        let toks = prompt(10);
+        let mut state = m.decode_state();
+        let mut logits = m.prefill(&mut state, &toks[..1]);
+        for p in 0..toks.len() {
+            if p > 0 {
+                logits = m.decode_step(&mut state, toks[p]);
+            }
+            let full = m.forward(&batch_of(&toks[..p + 1]));
+            assert_rows_bits_eq(
+                &logits,
+                logits.dim(0) - 1,
+                &full,
+                p,
+                &format!("{name}: decode step at position {p}"),
+            );
+            assert_eq!(state.len(), p + 1, "{name}: cache length after step {p}");
+        }
+    }
+}
+
+#[test]
+fn generate_matches_rescan_at_any_worker_count() {
+    for (name, m) in variants() {
+        let p = prompt(6);
+        let want = m.generate_rescan(&p, 10);
+        assert_eq!(m.generate(&p, 10), want, "{name}: decode vs rescan generation");
+        // Nested fan-outs hand workers different thread-budget shares;
+        // the generated tokens must not notice.
+        for workers in [2usize, 4, 8] {
+            let outs = run_grid(vec![(); workers], workers, |_, _| m.generate(&p, 10));
+            for out in outs {
+                assert_eq!(out, want, "{name}: generation drifted at {workers} workers");
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_state_reports_capacity() {
+    let m = common::lm(LmConfig::default(), 33);
+    let state = m.decode_state();
+    assert!(state.is_empty());
+    assert_eq!(state.len(), 0);
+    assert_eq!(state.capacity(), m.cfg.max_seq);
+}
+
+#[test]
+#[should_panic(expected = "decode past cache capacity")]
+fn decode_past_capacity_panics() {
+    let m = common::lm(LmConfig::default(), 34);
+    let mut state = m.decode_state();
+    let toks = prompt(m.cfg.max_seq);
+    m.prefill(&mut state, &toks);
+    m.decode_step(&mut state, 0);
+}
+
+#[test]
+#[should_panic(expected = "prefill on a used DecodeState")]
+fn prefill_twice_panics() {
+    let m = common::lm(LmConfig::default(), 35);
+    let mut state = m.decode_state();
+    m.prefill(&mut state, &prompt(4));
+    m.prefill(&mut state, &prompt(4));
+}

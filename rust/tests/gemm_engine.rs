@@ -231,3 +231,126 @@ fn dispatch_entries_and_direct_calls_agree() {
         assert_eq!(x.to_bits(), y.to_bits());
     }
 }
+
+#[test]
+fn fused_epilogues_match_unfused_sweeps_bitwise() {
+    // The fused epilogue applies act(v + bias) to the finished
+    // accumulator tile; the oracle runs the same packed GEMM with no
+    // epilogue, then separate bias/activation sweeps. Same scalar ops
+    // in the same order => bitwise equality, across tile boundaries
+    // and for every epilogue kind.
+    let mut rng = Pcg64::seed(6);
+    for &(m, k, n) in &[
+        (1usize, 64usize, 48usize),
+        (MR + 1, KC + 9, NR + 1),
+        (MC + 3, 96, 2 * NR + 5),
+    ] {
+        let a = common::randn(&mut rng, &[m, k]);
+        let bt = common::randn(&mut rng, &[n, k]);
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(&mut bias, 1.0);
+        for kind in 0..3usize {
+            let ep = match kind {
+                0 => gemm::Epilogue::Bias(&bias),
+                1 => gemm::Epilogue::BiasRelu(&bias),
+                _ => gemm::Epilogue::BiasGelu(&bias),
+            };
+            let mut fused = vec![0.0f32; m * n];
+            gemm::gemm_nt_packed_ep(a.data(), bt.data(), &mut fused, m, k, n, ep, 2);
+            let mut want = vec![0.0f32; m * n];
+            gemm::gemm_nt_packed(a.data(), bt.data(), &mut want, m, k, n, 2);
+            for row in want.chunks_mut(n) {
+                for (v, &bj) in row.iter_mut().zip(&bias) {
+                    match kind {
+                        0 => *v += bj,
+                        1 => *v = (*v + bj).max(0.0),
+                        _ => *v = grail::nn::gelu_scalar(*v + bj),
+                    }
+                }
+            }
+            for (f, w) in fused.iter().zip(&want) {
+                assert_eq!(f.to_bits(), w.to_bits(), "epilogue {kind} {m}x{k}x{n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prepacked_matches_per_call_packing_bitwise() {
+    // PackedB::pack_nt shares the packing routine with the per-call
+    // path and gemm_nt_prepacked shares the compute body, so the two
+    // entries must agree exactly — at any worker count.
+    let mut rng = Pcg64::seed(7);
+    for &(m, k, n) in &[(1usize, KC + 9, 2 * NR + 5), (MC + 7, 96, 48)] {
+        let a = common::randn(&mut rng, &[m, k]);
+        let bt = common::randn(&mut rng, &[n, k]);
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(&mut bias, 1.0);
+        let pb = gemm::PackedB::pack_nt(bt.data(), k, n);
+        assert_eq!(pb.k(), k);
+        assert_eq!(pb.n(), n);
+        for workers in [1usize, 2, 5] {
+            let mut pre = vec![0.0f32; m * n];
+            gemm::gemm_nt_prepacked(a.data(), &pb, &mut pre, m, gemm::Epilogue::Bias(&bias), workers);
+            let mut percall = vec![0.0f32; m * n];
+            gemm::gemm_nt_packed_ep(
+                a.data(),
+                bt.data(),
+                &mut percall,
+                m,
+                k,
+                n,
+                gemm::Epilogue::Bias(&bias),
+                workers,
+            );
+            for (p, q) in pre.iter().zip(&percall) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{m}x{k}x{n} workers={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_entries_are_row_count_invariant() {
+    // The serving dispatch (use_packed_cols) ignores m, and both the
+    // packed engine and the scalar refs compute each output row from
+    // row-local state — so an m-row serve call must equal m separate
+    // 1-row calls, bitwise. This is the property that lets KV-cache
+    // decode (m=1) reproduce the full forward (m=t) exactly.
+    let mut rng = Pcg64::seed(8);
+    // One shape on the packed side of the col threshold, one scalar.
+    for &(m, k, n) in &[(MC + 7, 64usize, 64usize), (9, 8, 40)] {
+        let a = common::randn(&mut rng, &[m, k]);
+        let bt = common::randn(&mut rng, &[n, k]);
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(&mut bias, 1.0);
+        let mut full = vec![0.0f32; m * n];
+        ops::gemm_nt_serve(a.data(), bt.data(), &mut full, m, k, n, gemm::Epilogue::BiasRelu(&bias));
+        for r in 0..m {
+            let mut one = vec![0.0f32; n];
+            ops::gemm_nt_serve(
+                &a.data()[r * k..(r + 1) * k],
+                bt.data(),
+                &mut one,
+                1,
+                k,
+                n,
+                gemm::Epilogue::BiasRelu(&bias),
+            );
+            for (x, y) in one.iter().zip(&full[r * n..(r + 1) * n]) {
+                assert_eq!(x.to_bits(), y.to_bits(), "nt row {r} of {m}x{k}x{n}");
+            }
+        }
+
+        let b = common::randn(&mut rng, &[k, n]);
+        let mut full = vec![0.0f32; m * n];
+        ops::gemm_nn_serve(a.data(), b.data(), &mut full, m, k, n);
+        for r in 0..m {
+            let mut one = vec![0.0f32; n];
+            ops::gemm_nn_serve(&a.data()[r * k..(r + 1) * k], b.data(), &mut one, 1, k, n);
+            for (x, y) in one.iter().zip(&full[r * n..(r + 1) * n]) {
+                assert_eq!(x.to_bits(), y.to_bits(), "nn row {r} of {m}x{k}x{n}");
+            }
+        }
+    }
+}
