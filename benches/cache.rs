@@ -1,0 +1,119 @@
+//! Statistics-cache benchmarks (custom harness — no criterion
+//! offline).
+//!
+//! Measures what the content-addressed ActStats cache actually buys:
+//! warm-cache plan resolution (gram-sensitivity allocator and the full
+//! calibration-driven search) against the cold streamed pass over the
+//! dense model. The warm path is first *asserted* forward-free (the
+//! global layer-forward counter stays at zero) and bit-identical to
+//! the cold plan; then the ≥ 2× speed claim is asserted so CI fails if
+//! the cache ever stops paying for itself. Results land
+//! machine-readably in `BENCH_cache.json` (schema `grail-cache-v1`);
+//! reproduction steps in EXPERIMENTS.md §Serve daemon.
+
+use std::sync::Arc;
+
+use grail::bench_util::{bench, layer_forwards, layer_forwards_reset, Recorder};
+use grail::compress::Selector;
+use grail::data::SynthVision;
+use grail::grail::{plan_for_model, BudgetMode, CompressionSpec, Method, SearchSeed};
+use grail::nn::models::MlpNet;
+use grail::rng::Pcg64;
+use grail::serve::digest::digest_bytes;
+use grail::serve::provider::{self, StatsContext};
+use grail::serve::StatsCache;
+
+fn main() {
+    println!("== statistics cache: warm vs cold plan resolution ==\n");
+    let mut rec = Recorder::default();
+
+    // Statistics-dominated workload: a wide calibration batch makes
+    // the streamed pass (GEMM forwards + Gram accumulation) the cost
+    // center, while the allocator/search arithmetic on the tiny
+    // per-site Grams is cheap — exactly the serving regime the cache
+    // targets.
+    let m = MlpNet::init(768, 48, 10, &mut Pcg64::seed(7));
+    let x = SynthVision::new(9).generate(1024).x;
+
+    let mut sens = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+    sens.budget = BudgetMode::GramSensitivity { target_ratio: 0.5 };
+    sens.shards = 4;
+    sens.workers = 1;
+
+    let mut tune = sens.clone();
+    tune.budget =
+        BudgetMode::Search { target_ratio: 0.5, alpha_grid: vec![1e-4, 5e-3], rounds: 1 };
+    tune.search_seed = SearchSeed::GramSensitivity;
+
+    // Cold reference plans and timings: no provider installed, every
+    // iteration pays the full calibration pass.
+    let cold_sens_plan = plan_for_model(&m, &x, &sens).unwrap();
+    let cold_tune_plan = plan_for_model(&m, &x, &tune).unwrap();
+    let cold_sens = bench("plan/gram-sensitivity/cold", 400, || {
+        plan_for_model(&m, &x, &sens).unwrap()
+    });
+    let cold_tune = bench("tune/search/cold", 400, || plan_for_model(&m, &x, &tune).unwrap());
+
+    // Warm side: install the provider, populate on the first pass,
+    // then verify the contract before timing it — zero calibration
+    // layer forwards and bit-identical plans.
+    let root = std::env::temp_dir().join(format!("grail_bench_cache_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let cache = Arc::new(StatsCache::open(&root).unwrap());
+    let _scope = provider::install(StatsContext::new(
+        cache.clone(),
+        digest_bytes(b"bench-mlp-768x48"),
+        digest_bytes(b"bench-vision-1024"),
+    ));
+    plan_for_model(&m, &x, &sens).unwrap();
+    plan_for_model(&m, &x, &tune).unwrap();
+    assert!(cache.misses() > 0, "populate pass must go through the cache");
+
+    layer_forwards_reset();
+    let warm_sens_plan = plan_for_model(&m, &x, &sens).unwrap();
+    let warm_tune_plan = plan_for_model(&m, &x, &tune).unwrap();
+    assert_eq!(
+        layer_forwards(),
+        0,
+        "warm-cache plan resolution must skip every calibration layer forward"
+    );
+    assert_eq!(
+        warm_sens_plan.to_toml(),
+        cold_sens_plan.to_toml(),
+        "warm gram-sensitivity plan diverged from cold"
+    );
+    assert_eq!(
+        warm_tune_plan.to_toml(),
+        cold_tune_plan.to_toml(),
+        "warm search winner diverged from cold"
+    );
+    assert!(cache.hits() > 0, "verification passes must be served from the cache");
+
+    let warm_sens = bench("plan/gram-sensitivity/warm", 400, || {
+        plan_for_model(&m, &x, &sens).unwrap()
+    });
+    let warm_tune = bench("tune/search/warm", 400, || plan_for_model(&m, &x, &tune).unwrap());
+
+    let sens_speedup = cold_sens.median_ns / warm_sens.median_ns;
+    let tune_speedup = cold_tune.median_ns / warm_tune.median_ns;
+    println!("\nplan warm speedup {sens_speedup:.1}x · tune warm speedup {tune_speedup:.1}x");
+    assert!(
+        sens_speedup >= 2.0,
+        "warm gram-sensitivity resolution must be ≥ 2x cold (got {sens_speedup:.2}x)"
+    );
+    assert!(
+        tune_speedup >= 2.0,
+        "warm search must be ≥ 2x cold (got {tune_speedup:.2}x)"
+    );
+
+    rec.push(&cold_sens);
+    rec.push(&warm_sens);
+    rec.push(&cold_tune);
+    rec.push(&warm_tune);
+    rec.metric("plan_warm_speedup", sens_speedup);
+    rec.metric("tune_warm_speedup", tune_speedup);
+    rec.metric("cache_entry_hits", cache.hits() as f64);
+    rec.metric("cache_entry_misses", cache.misses() as f64);
+    rec.write_json("BENCH_cache.json", "grail-cache-v1");
+    std::fs::remove_dir_all(&root).ok();
+}

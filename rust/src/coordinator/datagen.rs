@@ -52,6 +52,42 @@ pub fn generate_all(art: &Artifacts, log: &mut dyn FnMut(&str)) -> Result<()> {
     Ok(())
 }
 
+/// `grail datagen --dev-ckpts` — seed the zoo with untrained (randomly
+/// initialized, fixed-seed) checkpoints of every family, so spec/plan/
+/// serve workflows run end-to-end without the Python training step
+/// (CI, smoke tests). The activation statistics are real even if the
+/// weights are untrained. Existing checkpoints are never overwritten —
+/// a trained zoo wins.
+pub fn write_dev_checkpoints(art: &Artifacts, log: &mut dyn FnMut(&str)) -> Result<()> {
+    use crate::nn::models::{LmConfig, MiniResNet, MlpNet, TinyLm, TinyViT, VitConfig};
+    use crate::nn::weights::WeightBundle;
+    use crate::rng::Pcg64;
+    std::fs::create_dir_all(art.ckpt_dir()).context("creating checkpoints dir")?;
+    let mut write = |name: &str, bundle: WeightBundle| -> Result<()> {
+        let path = art.ckpt(name);
+        if std::path::Path::new(&path).exists() {
+            log(&format!("kept {path} (already present)"));
+            return Ok(());
+        }
+        bundle.save(&path)?;
+        log(&format!("wrote {path}"));
+        Ok(())
+    };
+    write("mlp_dev", MlpNet::init(768, 32, 10, &mut Pcg64::seed(TASK_SEED ^ 0xD0)).to_bundle())?;
+    write("resnet_dev", MiniResNet::init(&mut Pcg64::seed(TASK_SEED ^ 0xD1)).to_bundle())?;
+    write(
+        "vit_dev",
+        TinyViT::init(VitConfig::default(), &mut Pcg64::seed(TASK_SEED ^ 0xD2)).to_bundle(),
+    )?;
+    // `tinylm_mha` doubles as the family-default checkpoint and the
+    // marker `Artifacts::ensure_ready` looks for.
+    write(
+        "tinylm_mha",
+        TinyLm::init(LmConfig::default(), &mut Pcg64::seed(TASK_SEED ^ 0xD3)).to_bundle(),
+    )?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

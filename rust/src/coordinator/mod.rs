@@ -13,7 +13,7 @@ pub mod paths;
 pub mod scheduler;
 pub mod zoo;
 
-pub use datagen::generate_all;
+pub use datagen::{generate_all, write_dev_checkpoints};
 pub use paths::Artifacts;
 pub use scheduler::{run_grid, GridResult};
 pub use zoo::Zoo;

@@ -36,6 +36,12 @@ impl Artifacts {
         self.root.join("hlo")
     }
 
+    /// `artifacts/serve/` — default root of the `grail serve` daemon
+    /// spool (queue, job records, results, statistics cache).
+    pub fn serve_dir(&self) -> PathBuf {
+        self.root.join("serve")
+    }
+
     /// Path of a data file.
     pub fn data(&self, name: &str) -> String {
         self.data_dir().join(name).to_string_lossy().into_owned()

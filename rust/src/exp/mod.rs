@@ -41,6 +41,10 @@ pub struct ExpOptions {
     /// Trim grids for smoke runs.
     pub quick: bool,
     pub seed: u64,
+    /// Content-addressed statistics cache (`--cache <dir>`); when set,
+    /// spec jobs serve calibration statistics through
+    /// [`crate::serve::provider`] instead of recomputing them.
+    pub cache: Option<std::sync::Arc<crate::serve::StatsCache>>,
 }
 
 impl ExpOptions {
@@ -50,6 +54,14 @@ impl ExpOptions {
         let file = match args.opt("config") {
             Some(path) => crate::config::Config::load(path)?,
             None => crate::config::Config::default(),
+        };
+        let cache_dir = args
+            .opt("cache")
+            .map(|s| s.to_string())
+            .or_else(|| file.str("exp.cache").ok().map(|s| s.to_string()));
+        let cache = match cache_dir {
+            Some(dir) => Some(std::sync::Arc::new(crate::serve::StatsCache::open(&dir)?)),
+            None => None,
         };
         Ok(ExpOptions {
             out_dir: args
@@ -64,6 +76,7 @@ impl ExpOptions {
                 Some(_) => args.opt_u64("seed", 0)?,
                 None => file.usize_or("exp.seed", 0) as u64,
             },
+            cache,
         })
     }
 

@@ -25,7 +25,10 @@ use crate::grail::{
     CompressionSpec, Report, SearchOutcome,
 };
 use crate::nn::models::LmBatch;
+use crate::serve::digest::{digest_file, Hasher128};
+use crate::serve::provider::{self, CacheScope, StatsContext};
 use anyhow::{anyhow, bail, Context, Result};
+use std::time::Instant;
 
 /// LM calibration/evaluation geometry (matches `grail compress
 /// --family lm`, so a uniform spec reproduces its results exactly).
@@ -159,6 +162,44 @@ pub struct JobOutcome {
     pub before: f64,
     pub after: f64,
     pub report: Report,
+    /// Wall time of the whole job (load + evaluate + compress).
+    pub wall_seconds: f64,
+    /// Statistics-cache entry hits/misses accounted to this job's
+    /// thread (0/0 without `--cache`).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Install the statistics-cache provider for a job when `--cache` is
+/// active. The model identity is the checkpoint file's bytes; the
+/// corpus identity is the calibration file's bytes plus the slicing
+/// geometry the job applies to it (so changing `LM_SEQ` or the vision
+/// calib slice retires the entries). Returns `None` — run cold — when
+/// no cache is configured or the checkpoint file is absent (the model
+/// loader owns that error).
+pub(crate) fn stats_scope(
+    opts: &ExpOptions,
+    family: Family,
+    ckpt: &str,
+) -> Result<Option<CacheScope>> {
+    let Some(cache) = &opts.cache else { return Ok(None) };
+    let ckpt_path = opts.artifacts.ckpt(ckpt);
+    if !std::path::Path::new(&ckpt_path).exists() {
+        return Ok(None);
+    }
+    let model = digest_file(&ckpt_path)?;
+    let mut h = Hasher128::new();
+    if family.vision().is_some() {
+        h.update(b"vision-calib");
+        h.update(&digest_file(&opts.artifacts.data("vision_calib.imgs"))?.0);
+        h.update(&128u64.to_le_bytes());
+    } else {
+        h.update(b"lm-calib");
+        h.update(&digest_file(&opts.artifacts.data("text_calib.tokens"))?.0);
+        h.update(&(LM_SEQ as u64).to_le_bytes());
+        h.update(&(LM_CALIB_WINDOWS as u64).to_le_bytes());
+    }
+    Ok(Some(provider::install(StatsContext::new(cache.clone(), model, h.finish()))))
 }
 
 /// Resolve the plan for a job without mutating anything.
@@ -169,6 +210,7 @@ pub fn resolve_job_plan(
     spec: &CompressionSpec,
 ) -> Result<CompressionPlan> {
     let zoo = opts.zoo()?;
+    let _cache = stats_scope(opts, family, ckpt)?;
     if let Some(vf) = family.vision() {
         let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
             .slice(0, 128);
@@ -200,6 +242,9 @@ fn run_compression_job(
     label: &str,
 ) -> Result<JobOutcome> {
     let zoo = opts.zoo()?;
+    let t0 = Instant::now();
+    let (tally_h0, tally_m0) = provider::tally();
+    let _cache = stats_scope(opts, family, ckpt)?;
     let (metric, before, after, report) = if let Some(vf) = family.vision() {
         let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
             .slice(0, 128);
@@ -225,6 +270,7 @@ fn run_compression_job(
         };
         ("ppl", before, lm_perplexity(&m, &eval_toks, LM_SEQ, LM_EVAL_WINDOWS, 16), report)
     };
+    let (tally_h1, tally_m1) = provider::tally();
     Ok(JobOutcome {
         spec_path: label.to_string(),
         family,
@@ -233,6 +279,9 @@ fn run_compression_job(
         before,
         after,
         report,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        cache_hits: tally_h1 - tally_h0,
+        cache_misses: tally_m1 - tally_m0,
     })
 }
 
@@ -275,6 +324,12 @@ pub fn print_report(report: &Report) {
         );
     }
     println!("  {}", report.summary());
+    if report.cache_hits + report.cache_misses > 0 {
+        println!(
+            "  stats cache: {} hits, {} misses",
+            report.cache_hits, report.cache_misses
+        );
+    }
 }
 
 /// `grail run --spec spec.toml [--family f] [--ckpt c]`, or
@@ -343,7 +398,10 @@ pub fn plan_cli(args: &Args) -> Result<()> {
     job.apply_overrides(args)?;
     let ckpt = job.ckpt_or_default();
     let plan = resolve_job_plan(&opts, job.family, &ckpt, &job.spec)?;
-    if args.has("toml") {
+    if let Some(out) = args.opt("plan-out") {
+        std::fs::write(out, plan.to_toml()).with_context(|| format!("writing {out}"))?;
+        println!("plan for {} {} [{}] -> {}", job.family.name(), ckpt, spec_path, out);
+    } else if args.has("toml") {
         print!("{}", plan.to_toml());
     } else {
         println!("plan for {} {} [{}]:", job.family.name(), ckpt, spec_path);
@@ -388,7 +446,7 @@ pub fn batch_cli(args: &Args) -> Result<()> {
 
     let mut table = Table::new(&[
         "spec", "family", "ckpt", "metric", "before", "after", "params_before", "params_after",
-        "removed",
+        "removed", "secs", "c_hit", "c_miss",
     ]);
     let mut failures = 0usize;
     for r in &results {
@@ -403,6 +461,9 @@ pub fn batch_cli(args: &Args) -> Result<()> {
                 o.report.params_before.to_string(),
                 o.report.params_after.to_string(),
                 format!("{:.1}%", 100.0 * o.report.compression_ratio()),
+                format!("{:.2}", o.wall_seconds),
+                o.cache_hits.to_string(),
+                o.cache_misses.to_string(),
             ]),
             Err(e) => {
                 failures += 1;
@@ -429,6 +490,12 @@ pub struct TuneOutcome {
     /// `--eval` metrics: `(name, before, after)` on the executed
     /// winning plan — accuracy for vision, probe-suite accuracy for lm.
     pub eval: Option<(&'static str, f64, f64)>,
+    /// Wall time of the whole tune job.
+    pub wall_seconds: f64,
+    /// Statistics-cache entry hits/misses accounted to this job's
+    /// thread (0/0 without `--cache`).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 /// Run the calibration-driven search for one checkpoint and emit the
@@ -441,6 +508,9 @@ pub fn tune_job(
     eval: bool,
 ) -> Result<TuneOutcome> {
     let zoo = opts.zoo()?;
+    let t0 = Instant::now();
+    let (tally_h0, tally_m0) = provider::tally();
+    let _cache = stats_scope(opts, family, ckpt)?;
     let (search, eval_out) = if let Some(vf) = family.vision() {
         let calib = crate::data::io::read_images(&opts.artifacts.data("vision_calib.imgs"))?
             .slice(0, 128);
@@ -476,7 +546,17 @@ pub fn tune_job(
     let plan_path = opts.out_path(&format!("tune_{}_{}.plan.toml", family.name(), ckpt))?;
     std::fs::write(&plan_path, search.plan.to_toml())
         .with_context(|| format!("writing {plan_path}"))?;
-    Ok(TuneOutcome { family, ckpt: ckpt.to_string(), search, plan_path, eval: eval_out })
+    let (tally_h1, tally_m1) = provider::tally();
+    Ok(TuneOutcome {
+        family,
+        ckpt: ckpt.to_string(),
+        search,
+        plan_path,
+        eval: eval_out,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        cache_hits: tally_h1 - tally_h0,
+        cache_misses: tally_m1 - tally_m0,
+    })
 }
 
 /// `grail tune --spec spec.toml [--family f] [--ckpt c] [--jobs N]
@@ -522,7 +602,7 @@ pub fn tune_cli(args: &Args) -> Result<()> {
 
     let mut table = Table::new(&[
         "family", "ckpt", "err_before", "err_after", "alpha_moves", "keep_moves", "metric",
-        "before", "after", "plan",
+        "before", "after", "secs", "c_hit", "c_miss", "plan",
     ]);
     let mut failures = 0usize;
     for r in &results {
@@ -542,6 +622,9 @@ pub fn tune_cli(args: &Args) -> Result<()> {
                     metric,
                     before,
                     after,
+                    format!("{:.2}", o.wall_seconds),
+                    o.cache_hits.to_string(),
+                    o.cache_misses.to_string(),
                     o.plan_path.clone(),
                 ]);
             }

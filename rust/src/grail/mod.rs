@@ -103,6 +103,47 @@ impl ActStats {
         self.mean.len()
     }
 
+    /// Serialize into `out` (little-endian, byte-exact): width `u32`,
+    /// rows `u64`, then the mean and Gram f32 bit patterns. The Gram is
+    /// written verbatim — un-finalized accumulators stay un-finalized —
+    /// so a decoded accumulator is byte-identical to the original and
+    /// downstream merges/solves reproduce the cold path bit for bit.
+    /// This is the payload unit of the statistics cache
+    /// ([`crate::serve::cache`]).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let h = self.width();
+        out.extend_from_slice(&(h as u32).to_le_bytes());
+        out.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        for v in &self.mean {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in self.gram.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Decode one accumulator from `buf` starting at `*pos`, advancing
+    /// `*pos` past it. Returns `None` on truncation — the caller treats
+    /// that as a corrupt cache entry.
+    pub fn decode_from(buf: &[u8], pos: &mut usize) -> Option<ActStats> {
+        let take = |pos: &mut usize, n: usize| -> Option<&[u8]> {
+            let s = buf.get(*pos..*pos + n)?;
+            *pos += n;
+            Some(s)
+        };
+        let h = u32::from_le_bytes(take(pos, 4)?.try_into().ok()?) as usize;
+        let rows = u64::from_le_bytes(take(pos, 8)?.try_into().ok()?) as usize;
+        let mut mean = Vec::with_capacity(h);
+        for _ in 0..h {
+            mean.push(f32::from_le_bytes(take(pos, 4)?.try_into().ok()?));
+        }
+        let mut gram = Vec::with_capacity(h * h);
+        for _ in 0..h * h {
+            gram.push(f32::from_le_bytes(take(pos, 4)?.try_into().ok()?));
+        }
+        Some(ActStats { gram: Tensor::from_vec(&[h, h], gram), mean, rows })
+    }
+
     /// Per-feature variance (uncentered moment minus squared mean,
     /// scaled by sample count) — FLAP's fluctuation signal.
     pub fn variance(&self) -> Vec<f32> {
@@ -111,6 +152,15 @@ impl ActStats {
             .map(|j| (self.gram.at2(j, j) / n - self.mean[j] * self.mean[j]).max(0.0))
             .collect()
     }
+}
+
+/// Trace of a (square) Gram matrix in f64 — `tr(G) = Σ x²` of the
+/// accumulated activations. Valid on un-finalized accumulators too
+/// (the diagonal lives in the upper triangle). Shared by the
+/// sensitivity allocator and the search's gram-sensitivity seed so
+/// both derive the identical signal from cached statistics.
+pub(crate) fn gram_trace(g: &Tensor) -> f64 {
+    (0..g.dim(0)).map(|i| g.at2(i, i) as f64).sum()
 }
 
 /// Compute the GRAIL reconstruction map `B: [h_feat, k_feat]` for a
@@ -348,6 +398,31 @@ mod tests {
                 (from_acts - from_gram).abs() < 1e-3 * (1.0 + from_acts),
                 "acts {from_acts} vs gram {from_gram}"
             );
+        }
+    }
+
+    #[test]
+    fn actstats_encode_decode_is_byte_exact() {
+        let x = correlated_acts(40, 6, 12);
+        let mut s = ActStats::new(6);
+        s.update(&x); // un-finalized: lower triangle still zero
+        let mut buf = Vec::new();
+        s.encode_into(&mut buf);
+        let mut pos = 0;
+        let d = ActStats::decode_from(&buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        assert_eq!(d.rows, s.rows);
+        assert_eq!(d.width(), s.width());
+        for (a, b) in s.gram.data().iter().zip(d.gram.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in s.mean.iter().zip(&d.mean) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Truncation at any boundary is a decode failure, not a panic.
+        for cut in [0, 3, 11, buf.len() - 1] {
+            let mut p = 0;
+            assert!(ActStats::decode_from(&buf[..cut], &mut p).is_none(), "cut={cut}");
         }
     }
 

@@ -199,10 +199,6 @@ fn candidate_err2(
     err2
 }
 
-fn trace(g: &Tensor) -> f64 {
-    (0..g.dim(0)).map(|i| g.at2(i, i) as f64).sum()
-}
-
 fn rel_err(err2: f64, denom2: f64) -> f64 {
     (err2.max(0.0) / denom2.max(1e-24)).sqrt()
 }
@@ -249,7 +245,7 @@ where
             i,
         )
     });
-    let denom2: f64 = cals.iter().map(|c| trace(&c.hold.gram)).sum();
+    let denom2: f64 = cals.iter().map(|c| super::gram_trace(&c.hold.gram)).sum();
     rel_err(err2.iter().sum(), denom2)
 }
 
@@ -311,7 +307,7 @@ where
             .map(|c| {
                 let rows = (c.train.rows + c.hold.rows).max(1) as f64;
                 let width = c.info.feat_width().max(1) as f64;
-                (trace(&c.train.gram) + trace(&c.hold.gram)) / (rows * width)
+                (super::gram_trace(&c.train.gram) + super::gram_trace(&c.hold.gram)) / (rows * width)
             })
             .collect();
         plan = spec.resolve(&sites, Some(&sens))?;
@@ -345,7 +341,7 @@ where
             i,
         )
     });
-    let denom2: f64 = cals.iter().map(|c| trace(&c.hold.gram)).sum();
+    let denom2: f64 = cals.iter().map(|c| super::gram_trace(&c.hold.gram)).sum();
     let initial_err = rel_err(err2.iter().sum::<f64>(), denom2);
     let seed_alphas: Vec<f32> = plan.sites.iter().map(|s| s.policy.alpha).collect();
     let mut evals = n;

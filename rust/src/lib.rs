@@ -38,5 +38,6 @@ pub mod nn;
 pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testing;

@@ -8,6 +8,10 @@
 //! grail run --spec spec.toml               execute a declarative spec
 //! grail batch <spec.toml>...               fan specs over the model zoo
 //! grail tune --spec spec.toml              calibration-driven plan search
+//! grail serve [--root dir] [--once]        job-queue daemon with stats cache
+//! grail submit <spec.toml> [--verb v]      enqueue a job for the daemon
+//! grail status <job-id>                    one job's state
+//! grail jobs                               all jobs in the queue
 //! grail info                               artifact / runtime inventory
 //! ```
 
@@ -29,6 +33,9 @@ fn run() -> Result<()> {
         "datagen" => {
             let art = Artifacts::at(args.opt_or("out", "artifacts"));
             generate_all(&art, &mut |m| println!("{m}"))?;
+            if args.has("dev-ckpts") {
+                grail::coordinator::write_dev_checkpoints(&art, &mut |m| println!("{m}"))?;
+            }
             Ok(())
         }
         "exp" => grail::exp::run_cli(&args),
@@ -37,6 +44,10 @@ fn run() -> Result<()> {
         "run" => grail::exp::runner::run_cli(&args),
         "batch" => grail::exp::runner::batch_cli(&args),
         "tune" => grail::exp::runner::tune_cli(&args),
+        "serve" => grail::serve::daemon::serve_cli(&args),
+        "submit" => grail::serve::daemon::submit_cli(&args),
+        "status" => grail::serve::daemon::status_cli(&args),
+        "jobs" => grail::serve::daemon::jobs_cli(&args),
         "info" => {
             let art = Artifacts::at(args.opt_or("out", "artifacts"));
             println!("artifacts root: {:?}", art.root);
@@ -65,7 +76,7 @@ const HELP: &str = "\
 grail — GRAIL post-hoc compensation coordinator
 
 USAGE:
-  grail datagen [--out artifacts]
+  grail datagen [--out artifacts] [--dev-ckpts]
   grail exp <fig2|fig3|fig5|fig6|fig7|table1|table2|table3|fig4|all>
             [--out results] [--artifacts artifacts] [--quick]
   grail compress --family <mlp|resnet|vit|lm> --ckpt <name>
@@ -77,6 +88,11 @@ USAGE:
   grail batch <spec.toml>... [--jobs N] [--out results]
   grail tune  --spec <spec.toml> [--family f] [--ckpt c] [--jobs N]
               [--out results] [--eval]
+  grail serve  [--root results/serve] [--jobs N] [--once] [--poll-ms 500]
+  grail submit <spec.toml> [--verb plan|run|tune] [--retries N]
+               [--family f] [--ckpt c] [--root results/serve]
+  grail status <job-id> [--root results/serve]
+  grail jobs   [--root results/serve]
   grail info
 
 SPEC FILES (TOML subset; full reference in EXPERIMENTS.md, commented
@@ -111,4 +127,19 @@ METHOD NAMES:
   selectors  mag-l1 mag-l2 prune-wanda gram random   (structured pruning)
   folding    fold random-fold
   baselines  wanda wanda++ slimgpt ziplm flap        (own recovery; bare
-             `wanda` is the baseline — `prune-wanda` forces the selector)";
+             `wanda` is the baseline — `prune-wanda` forces the selector)
+
+SERVE (EXPERIMENTS.md §Serve daemon):
+  `grail serve` drains a filesystem job queue under --root
+  (default <out>/serve): submit plan/run/tune specs with `grail submit`
+  (optionally a [job] section in the spec: verb, retries), poll with
+  `grail status <id>` / `grail jobs`. Job ids are content-addressed
+  (same spec+verb+target = same id; resubmitting a finished job
+  re-queues it). Results land in <root>/results/<id>/; failed jobs are
+  retried up to --retries times, then recorded with the error.
+  Calibration statistics are cached content-addressed in <root>/cache
+  (also usable outside the daemon via --cache <dir> on plan/run/
+  tune/batch): repeat jobs against the same (checkpoint, calibration
+  corpus) skip the forward pass entirely, bit-identically.
+  `grail datagen --dev-ckpts` seeds untrained zoo checkpoints so the
+  daemon can run without the Python training step.";

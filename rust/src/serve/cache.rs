@@ -1,0 +1,338 @@
+//! Content-addressed on-disk store for streamed calibration
+//! statistics.
+//!
+//! One cache entry holds the per-shard [`ActStats`] accumulators of a
+//! single site for one `(model, corpus, shard-split)` combination —
+//! the exact `Vec<ActStats>` a streamed open-loop pass produces for
+//! that site, byte for byte. Keys are deterministic 128-bit digests
+//! ([`super::digest`]) over (model weights, calibration-corpus
+//! identity, site id, shard count, format version); entries are
+//! immutable once written, so there is no invalidation — a new model
+//! or corpus simply addresses different files.
+//!
+//! On-disk format (all little-endian):
+//!
+//! ```text
+//! magic    u32   0x4753_5443 ("GSTC")
+//! version  u32   FORMAT_VERSION
+//! key      16 B  the entry's own digest (collision tripwire)
+//! n_shards u32
+//! shards   n_shards × ActStats::encode_into payloads
+//! checksum 16 B  digest of every preceding byte
+//! ```
+//!
+//! Robustness contract: a missing file, bad magic/version, truncation,
+//! or checksum mismatch is **corruption → a miss** (the entry is
+//! evicted, counted, and warned about; the caller recomputes and
+//! rewrites it). A file whose checksum is intact but whose embedded
+//! key differs from the requested key is a **digest collision or
+//! cross-wired cache root → fail loud** (panic): serving those
+//! statistics would silently corrupt downstream plans. Writes are
+//! atomic (unique temp file + rename), so a crashed writer can leave a
+//! stale temp file but never a half-written entry under a real key.
+
+use super::digest::{digest_bytes, Digest};
+use crate::grail::ActStats;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bump when the entry layout, [`ActStats`] encoding, or the digest
+/// function changes — the version participates in every key, so old
+/// entries become unreachable instead of misparsed.
+pub const FORMAT_VERSION: u32 = 1;
+
+const MAGIC: u32 = 0x4753_5443; // "GSTC"
+
+/// Hit/miss/evict counters of a cache (monotonic totals).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// A content-addressed statistics cache rooted at one directory.
+pub struct StatsCache {
+    root: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    write_nonce: AtomicU64,
+}
+
+impl std::fmt::Debug for StatsCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StatsCache")
+            .field("root", &self.root)
+            .field("counters", &self.counters())
+            .finish()
+    }
+}
+
+impl StatsCache {
+    /// Open (creating if needed) a cache rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<StatsCache> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating stats cache dir {root:?}"))?;
+        Ok(StatsCache {
+            root,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            write_nonce: AtomicU64::new(0),
+        })
+    }
+
+    /// Cache root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// File path of an entry.
+    pub fn entry_path(&self, key: &Digest) -> PathBuf {
+        self.root.join(format!("{}.stats", key.hex()))
+    }
+
+    /// Load one entry. `None` means miss — absent, or corrupt (in
+    /// which case the bad file is evicted and counted). Hit/miss
+    /// counters are **not** touched here;
+    /// [`count_hits`](StatsCache::count_hits) /
+    /// [`count_misses`](StatsCache::count_misses) belong to the
+    /// provider, which accounts whole statistics passes.
+    pub fn load(&self, key: &Digest) -> Option<Vec<ActStats>> {
+        let path = self.entry_path(key);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => return None,
+        };
+        match decode_entry(key, &bytes) {
+            DecodeOutcome::Ok(shards) => Some(shards),
+            DecodeOutcome::Corrupt(why) => {
+                eprintln!(
+                    "[serve] WARN: evicting corrupt stats cache entry {path:?} ({why}); \
+                     treating as a miss"
+                );
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                std::fs::remove_file(&path).ok();
+                None
+            }
+            DecodeOutcome::KeyMismatch(found) => panic!(
+                "stats cache entry {path:?} passes its checksum but embeds key {found} — \
+                 digest collision or a cache root shared across incompatible digest \
+                 versions; refusing to serve it (delete the file to recover)"
+            ),
+        }
+    }
+
+    /// Atomically write one entry (temp file + rename; concurrent
+    /// writers of the same key race benignly — identical content).
+    pub fn store(&self, key: &Digest, shards: &[ActStats]) -> Result<()> {
+        let bytes = encode_entry(key, shards);
+        let nonce = self.write_nonce.fetch_add(1, Ordering::Relaxed);
+        let tmp = self
+            .root
+            .join(format!(".{}.tmp.{}.{nonce}", key.hex(), std::process::id()));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+        let path = self.entry_path(key);
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {path:?}"))
+            .inspect_err(|_| {
+                std::fs::remove_file(&tmp).ok();
+            })?;
+        Ok(())
+    }
+
+    /// Record `n` entry hits (a fully cache-served statistics pass).
+    pub fn count_hits(&self, n: u64) {
+        self.hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` entry misses (a recomputed statistics pass).
+    pub fn count_misses(&self, n: u64) {
+        self.misses.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of all counters.
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits(),
+            misses: self.misses(),
+            evictions: self.evictions(),
+        }
+    }
+}
+
+/// Serialize an entry (header + per-shard payloads + checksum).
+fn encode_entry(key: &Digest, shards: &[ActStats]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&key.0);
+    out.extend_from_slice(&(shards.len() as u32).to_le_bytes());
+    for s in shards {
+        s.encode_into(&mut out);
+    }
+    let sum = digest_bytes(&out);
+    out.extend_from_slice(&sum.0);
+    out
+}
+
+enum DecodeOutcome {
+    Ok(Vec<ActStats>),
+    Corrupt(&'static str),
+    KeyMismatch(Digest),
+}
+
+fn decode_entry(expect_key: &Digest, bytes: &[u8]) -> DecodeOutcome {
+    use DecodeOutcome::Corrupt;
+    // Header (4 + 4 + 16 + 4) + trailing checksum (16).
+    if bytes.len() < 44 {
+        return Corrupt("truncated header");
+    }
+    let (body, sum) = bytes.split_at(bytes.len() - 16);
+    if digest_bytes(body).0 != sum {
+        return Corrupt("checksum mismatch");
+    }
+    let mut pos = 0usize;
+    let magic = u32::from_le_bytes(body[0..4].try_into().unwrap());
+    let version = u32::from_le_bytes(body[4..8].try_into().unwrap());
+    if magic != MAGIC {
+        return Corrupt("bad magic");
+    }
+    if version != FORMAT_VERSION {
+        return Corrupt("unsupported format version");
+    }
+    let mut key = [0u8; 16];
+    key.copy_from_slice(&body[8..24]);
+    if key != expect_key.0 {
+        // The checksum proved the file self-consistent, so this is not
+        // bit rot: the wrong content lives under this name.
+        return DecodeOutcome::KeyMismatch(Digest(key));
+    }
+    let n_shards = u32::from_le_bytes(body[24..28].try_into().unwrap()) as usize;
+    pos += 28;
+    let mut shards = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        match ActStats::decode_from(body, &mut pos) {
+            Some(s) => shards.push(s),
+            None => return Corrupt("truncated shard payload"),
+        }
+    }
+    if pos != body.len() {
+        return Corrupt("trailing bytes");
+    }
+    DecodeOutcome::Ok(shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::Tensor;
+
+    fn stats(h: usize, rows: usize, seed: u64) -> ActStats {
+        let mut rng = Pcg64::seed(seed);
+        let mut x = Tensor::zeros(&[rows, h]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut s = ActStats::new(h);
+        s.update(&x);
+        s
+    }
+
+    fn tmp_root(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("grail_cache_unit_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    #[test]
+    fn store_load_roundtrip_is_byte_exact() {
+        let root = tmp_root("roundtrip");
+        let cache = StatsCache::open(&root).unwrap();
+        let key = digest_bytes(b"site-0");
+        let shards: Vec<ActStats> = (0..3).map(|i| stats(5, 8 + i, i as u64)).collect();
+        cache.store(&key, &shards).unwrap();
+        let back = cache.load(&key).expect("entry present");
+        assert_eq!(back.len(), 3);
+        for (a, b) in shards.iter().zip(&back) {
+            assert_eq!(a.rows, b.rows);
+            for (x, y) in a.gram.data().iter().zip(b.gram.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in a.mean.iter().zip(&b.mean) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn absent_entry_is_a_miss() {
+        let root = tmp_root("absent");
+        let cache = StatsCache::open(&root).unwrap();
+        assert!(cache.load(&digest_bytes(b"nope")).is_none());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_entry_is_evicted_and_missed() {
+        let root = tmp_root("corrupt");
+        let cache = StatsCache::open(&root).unwrap();
+        let key = digest_bytes(b"site-1");
+        cache.store(&key, &[stats(4, 6, 1)]).unwrap();
+        let path = cache.entry_path(&key);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(cache.load(&key).is_none(), "flipped byte must fail the checksum");
+        assert_eq!(cache.evictions(), 1);
+        assert!(!path.exists(), "corrupt entry must be evicted from disk");
+        // And the next store/load cycle recovers.
+        cache.store(&key, &[stats(4, 6, 1)]).unwrap();
+        assert!(cache.load(&key).is_some());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn truncated_entry_is_rejected() {
+        let root = tmp_root("truncated");
+        let cache = StatsCache::open(&root).unwrap();
+        let key = digest_bytes(b"site-2");
+        cache.store(&key, &[stats(4, 6, 2), stats(4, 3, 3)]).unwrap();
+        let path = cache.entry_path(&key);
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [0, 10, 43, bytes.len() / 2, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(cache.load(&key).is_none(), "cut at {cut} must miss");
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "digest collision")]
+    fn key_mismatch_fails_loud() {
+        let root = tmp_root("mismatch");
+        let cache = StatsCache::open(&root).unwrap();
+        let key_a = digest_bytes(b"site-a");
+        let key_b = digest_bytes(b"site-b");
+        cache.store(&key_a, &[stats(4, 6, 4)]).unwrap();
+        // A self-consistent entry filed under the wrong name.
+        std::fs::rename(cache.entry_path(&key_a), cache.entry_path(&key_b)).unwrap();
+        let _ = cache.load(&key_b);
+    }
+}

@@ -1,0 +1,486 @@
+//! `grail serve`: a long-lived compression job queue over a
+//! filesystem spool.
+//!
+//! Layout under one serve root (default `<artifacts>/serve/`):
+//!
+//! ```text
+//! serve/
+//!   jobs/<id>/        submitted spec + status.toml + log.txt
+//!   results/<id>/     plans / reports of completed jobs
+//!   cache/            the shared content-addressed ActStats cache
+//! ```
+//!
+//! The queue is the set of jobs whose persisted state is `queued` —
+//! there is no separate queue file to drift out of sync, and a daemon
+//! restart resumes from whatever the disk says (stale `running`
+//! records from a killed daemon are re-queued on scan). Each drain
+//! cycle fans the queued jobs over
+//! [`run_grid`](crate::coordinator::scheduler::run_grid) workers, so
+//! every job inherits an equal share of the machine's thread budget
+//! for its own shard calibration. A failing job (bad spec, missing
+//! checkpoint, panic) lands in `failed` with the error captured in
+//! `status.toml`, after `1 + retries` observable attempts; the queue
+//! keeps draining around it.
+//!
+//! Job ids are content-derived (digest of verb + overrides + spec
+//! bytes), so resubmitting the same work collapses onto the same job
+//! and its already-computed result.
+
+use super::cache::StatsCache;
+use super::digest::digest_bytes;
+use super::job::{JobRecord, JobState, JobVerb};
+use super::provider;
+use crate::cli::Args;
+use crate::coordinator::scheduler::{default_threads, run_grid};
+use crate::exp::runner::{execute_job, resolve_job_plan, tune_job, SpecJob};
+use crate::exp::ExpOptions;
+use crate::grail::BudgetMode;
+use anyhow::{anyhow, bail, Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Resolved locations inside one serve root.
+#[derive(Clone, Debug)]
+pub struct ServeRoot {
+    pub root: PathBuf,
+}
+
+impl ServeRoot {
+    pub fn at(root: impl Into<PathBuf>) -> ServeRoot {
+        ServeRoot { root: root.into() }
+    }
+
+    /// Serve root for CLI verbs: `--root` wins, else
+    /// `<artifacts>/serve`.
+    pub fn from_args(args: &Args, opts: &ExpOptions) -> ServeRoot {
+        match args.opt("root") {
+            Some(r) => ServeRoot::at(r),
+            None => ServeRoot::at(opts.artifacts.serve_dir()),
+        }
+    }
+
+    pub fn jobs_dir(&self) -> PathBuf {
+        self.root.join("jobs")
+    }
+
+    pub fn results_dir(&self) -> PathBuf {
+        self.root.join("results")
+    }
+
+    pub fn cache_dir(&self) -> PathBuf {
+        self.root.join("cache")
+    }
+
+    pub fn job_dir(&self, id: &str) -> PathBuf {
+        self.jobs_dir().join(id)
+    }
+
+    pub fn result_dir(&self, id: &str) -> PathBuf {
+        self.results_dir().join(id)
+    }
+
+    /// Create the spool directories.
+    pub fn ensure(&self) -> Result<()> {
+        for d in [self.jobs_dir(), self.results_dir(), self.cache_dir()] {
+            std::fs::create_dir_all(&d).with_context(|| format!("creating {d:?}"))?;
+        }
+        Ok(())
+    }
+
+    /// All job records on disk, sorted by id (records that fail to
+    /// parse are reported and skipped, never fatal to the daemon).
+    pub fn scan(&self) -> Result<Vec<JobRecord>> {
+        let mut out = Vec::new();
+        let dir = self.jobs_dir();
+        if !dir.exists() {
+            return Ok(out);
+        }
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .with_context(|| format!("listing {dir:?}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.is_dir())
+            .collect();
+        entries.sort();
+        for p in entries {
+            match JobRecord::load(&p) {
+                Ok(rec) => out.push(rec),
+                Err(e) => eprintln!("[serve] WARN: skipping unreadable job at {p:?}: {e:#}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Content-derived job id: hex digest prefix of (verb, overrides, spec
+/// bytes). 16 hex chars = 64 bits — collision-safe at spool scale
+/// while keeping paths readable.
+pub fn job_id(verb: JobVerb, family: &str, ckpt: &str, spec_bytes: &[u8]) -> String {
+    let mut h = super::digest::Hasher128::new();
+    h.update(b"grail-job-v1");
+    h.update(verb.name().as_bytes());
+    h.update(&[0]);
+    h.update(family.as_bytes());
+    h.update(&[0]);
+    h.update(ckpt.as_bytes());
+    h.update(&[0]);
+    h.update(spec_bytes);
+    h.finish().hex()[..16].to_string()
+}
+
+/// Submit one spec file: persist it under `jobs/<id>/` in state
+/// `queued`. Returns `(id, resubmitted)`. Resubmitting an identical
+/// job that already finished resets it to `queued` (idempotent
+/// re-run); one that is still queued or running is left alone.
+pub fn submit_file(
+    root: &ServeRoot,
+    spec_path: &str,
+    verb: JobVerb,
+    retries: usize,
+    family: &str,
+    ckpt: &str,
+) -> Result<(String, bool)> {
+    root.ensure()?;
+    let bytes =
+        std::fs::read(spec_path).with_context(|| format!("reading spec {spec_path}"))?;
+    let id = job_id(verb, family, ckpt, &bytes);
+    let dir = root.job_dir(&id);
+    if let Ok(mut rec) = JobRecord::load(&dir) {
+        if rec.state == JobState::Queued || rec.state == JobState::Running {
+            return Ok((id, false));
+        }
+        rec.state = JobState::Queued;
+        rec.attempts = 0;
+        rec.retries = retries;
+        rec.error.clear();
+        rec.save(&dir)?;
+        rec.log(&dir)?;
+        return Ok((id, true));
+    }
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+    std::fs::write(dir.join("spec.toml"), &bytes)
+        .with_context(|| format!("writing {dir:?}/spec.toml"))?;
+    let rec = JobRecord::new(id.clone(), verb, retries, family, ckpt);
+    rec.save(&dir)?;
+    rec.log(&dir)?;
+    Ok((id, false))
+}
+
+/// Execute one job body. Returns the result path (relative to the
+/// serve root) on success.
+fn run_job_inner(
+    opts: &ExpOptions,
+    root: &ServeRoot,
+    rec: &JobRecord,
+) -> Result<String> {
+    let dir = root.job_dir(&rec.id);
+    let spec_path = dir.join("spec.toml");
+    let spec_str = spec_path
+        .to_str()
+        .ok_or_else(|| anyhow!("non-UTF8 job path {spec_path:?}"))?;
+    let mut sj = SpecJob::load(spec_str)?;
+    if !rec.family.is_empty() {
+        sj.family = crate::exp::runner::Family::from_name(&rec.family)
+            .ok_or_else(|| anyhow!("unknown family override `{}`", rec.family))?;
+    }
+    if !rec.ckpt.is_empty() {
+        sj.ckpt = Some(rec.ckpt.clone());
+    }
+    let ckpt = sj.ckpt_or_default();
+    let res_dir = root.result_dir(&rec.id);
+    std::fs::create_dir_all(&res_dir).with_context(|| format!("creating {res_dir:?}"))?;
+    // Jobs write into their own content-addressed results directory.
+    let job_opts = ExpOptions {
+        out_dir: res_dir.to_string_lossy().into_owned(),
+        ..opts.clone()
+    };
+    let rel = format!("results/{}", rec.id);
+    match rec.verb {
+        JobVerb::Plan => {
+            let plan = resolve_job_plan(&job_opts, sj.family, &ckpt, &sj.spec)?;
+            let out = res_dir.join("plan.toml");
+            std::fs::write(&out, plan.to_toml()).with_context(|| format!("writing {out:?}"))?;
+            Ok(format!("{rel}/plan.toml"))
+        }
+        JobVerb::Run => {
+            let out = execute_job(&job_opts, sj.family, &ckpt, &sj.spec, &rec.id)?;
+            let mut text = format!(
+                "{} {} [{}]: {} {:.4} -> {:.4}\n{}\n",
+                out.family.name(),
+                out.ckpt,
+                rec.id,
+                out.metric,
+                out.before,
+                out.after,
+                out.report.summary()
+            );
+            for s in &out.report.sites {
+                text.push_str(&format!(
+                    "{}: {} -> {} ({}), recon err {:.4}\n",
+                    s.id, s.units_before, s.units_after, s.method, s.recon_err
+                ));
+            }
+            let path = res_dir.join("report.txt");
+            std::fs::write(&path, text).with_context(|| format!("writing {path:?}"))?;
+            Ok(format!("{rel}/report.txt"))
+        }
+        JobVerb::Tune => {
+            if !matches!(sj.spec.budget, BudgetMode::Search { .. }) {
+                bail!(
+                    "tune job needs `[budget] mode = \"search\"` (got `{}`)",
+                    sj.spec.budget.name()
+                );
+            }
+            let out = tune_job(&job_opts, sj.family, &ckpt, &sj.spec, false)?;
+            let summary = format!(
+                "tune {} {}: held-out err {:.6} -> {:.6} (alpha_moves={} keep_moves={} evals={})\n",
+                out.family.name(),
+                out.ckpt,
+                out.search.initial_err,
+                out.search.final_err,
+                out.search.alpha_moves,
+                out.search.keep_moves,
+                out.search.evals,
+            );
+            let path = res_dir.join("tune.txt");
+            std::fs::write(&path, summary).with_context(|| format!("writing {path:?}"))?;
+            Ok(rel)
+        }
+    }
+}
+
+/// Run one attempt of a queued job: `queued → running → done`, or back
+/// to `queued` while attempts remain, else `failed`. Every transition
+/// is persisted and logged; panics inside the job body are captured as
+/// errors so one poisoned job cannot take the daemon down.
+fn execute_attempt(opts: &ExpOptions, root: &ServeRoot, rec: &JobRecord) -> JobState {
+    let dir = root.job_dir(&rec.id);
+    let mut rec = rec.clone();
+    rec.state = JobState::Running;
+    rec.attempts += 1;
+    rec.error.clear();
+    let _ = rec.save(&dir);
+    let _ = rec.log(&dir);
+    let t0 = Instant::now();
+    let (h0, m0) = provider::tally();
+    let outcome = catch_unwind(AssertUnwindSafe(|| run_job_inner(opts, root, &rec)));
+    let (h1, m1) = provider::tally();
+    rec.wall_seconds = t0.elapsed().as_secs_f64();
+    rec.cache_hits += h1 - h0;
+    rec.cache_misses += m1 - m0;
+    match outcome {
+        Ok(Ok(result)) => {
+            rec.state = JobState::Done;
+            rec.result = result;
+        }
+        Ok(Err(e)) => {
+            rec.error = format!("{e:#}");
+            rec.state =
+                if rec.attempts <= rec.retries { JobState::Queued } else { JobState::Failed };
+        }
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic (non-string payload)".to_string());
+            rec.error = format!("panic: {msg}");
+            rec.state =
+                if rec.attempts <= rec.retries { JobState::Queued } else { JobState::Failed };
+        }
+    }
+    let _ = rec.save(&dir);
+    let _ = rec.log(&dir);
+    rec.state
+}
+
+/// Daemon configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Concurrent jobs per drain cycle (each gets an equal share of
+    /// the thread budget).
+    pub jobs: usize,
+    /// Drain the queue (including retries) and exit instead of
+    /// polling forever.
+    pub once: bool,
+    /// Idle poll interval.
+    pub poll_ms: u64,
+}
+
+/// Run the daemon loop. Returns only in `--once` mode (after the queue
+/// drains) or on a spool-level I/O error.
+pub fn serve(opts: &ExpOptions, root: &ServeRoot, cfg: &ServeConfig) -> Result<()> {
+    root.ensure()?;
+    let cache = Arc::new(StatsCache::open(root.cache_dir())?);
+    let opts = ExpOptions { cache: Some(cache.clone()), ..opts.clone() };
+    println!(
+        "serve: root {} · {} concurrent jobs · cache {}",
+        root.root.display(),
+        cfg.jobs,
+        cache.root().display()
+    );
+    loop {
+        let mut queued: Vec<JobRecord> = Vec::new();
+        for mut rec in root.scan()? {
+            match rec.state {
+                JobState::Queued => queued.push(rec),
+                // A `running` record with no daemon working on it is a
+                // crash leftover; requeue it (attempts already spent
+                // stay counted, so the retry bound still holds).
+                JobState::Running => {
+                    rec.state = JobState::Queued;
+                    let dir = root.job_dir(&rec.id);
+                    let _ = rec.save(&dir);
+                    let _ = rec.log(&dir);
+                    queued.push(rec);
+                }
+                _ => {}
+            }
+        }
+        if queued.is_empty() {
+            if cfg.once {
+                let c = cache.counters();
+                println!(
+                    "serve: queue drained (cache: {} hits, {} misses, {} evictions)",
+                    c.hits, c.misses, c.evictions
+                );
+                return Ok(());
+            }
+            std::thread::sleep(std::time::Duration::from_millis(cfg.poll_ms));
+            continue;
+        }
+        let threads = cfg.jobs.clamp(1, queued.len());
+        let opts_ref = &opts;
+        run_grid(queued, threads, |_, rec| execute_attempt(opts_ref, root, rec));
+    }
+}
+
+/// `grail serve [--root dir] [--jobs N] [--once] [--poll-ms M]`.
+pub fn serve_cli(args: &Args) -> Result<()> {
+    let opts = ExpOptions::from_args(args)?;
+    let root = ServeRoot::from_args(args, &opts);
+    let cfg = ServeConfig {
+        jobs: args.opt_usize("jobs", default_threads().min(4))?,
+        once: args.has("once"),
+        poll_ms: args.opt_u64("poll-ms", 500)?,
+    };
+    serve(&opts, &root, &cfg)
+}
+
+/// `grail submit <spec.toml> [--verb plan|run|tune] [--retries N]
+/// [--family f] [--ckpt c] [--root dir]`.
+pub fn submit_cli(args: &Args) -> Result<()> {
+    let spec_path = args.pos(1, "spec file")?;
+    let opts = ExpOptions::from_args(args)?;
+    let root = ServeRoot::from_args(args, &opts);
+    // `[job]` section in the spec supplies defaults; flags win.
+    let cfg = crate::config::Config::load(spec_path).unwrap_or_default();
+    let verb_name = args.opt("verb").unwrap_or(cfg.str_or("job.verb", "run")).to_string();
+    let verb = JobVerb::from_name(&verb_name)
+        .ok_or_else(|| anyhow!("--verb: expected plan|run|tune, got `{verb_name}`"))?;
+    let retries = args.opt_usize("retries", cfg.usize_or("job.retries", 1))?;
+    let family = args.opt("family").unwrap_or("");
+    let ckpt = args.opt("ckpt").unwrap_or("");
+    let (id, resubmitted) = submit_file(&root, spec_path, verb, retries, family, ckpt)?;
+    println!(
+        "submitted {id} ({} {}){}",
+        verb.name(),
+        spec_path,
+        if resubmitted { " [re-queued]" } else { "" }
+    );
+    Ok(())
+}
+
+/// `grail status <id> [--root dir]` — print one job's record (and
+/// surface its result when done).
+pub fn status_cli(args: &Args) -> Result<()> {
+    let id = args.pos(1, "job id")?;
+    let opts = ExpOptions::from_args(args)?;
+    let root = ServeRoot::from_args(args, &opts);
+    let rec = JobRecord::load(&root.job_dir(id))
+        .with_context(|| format!("no job `{id}` under {:?}", root.jobs_dir()))?;
+    println!("{}", rec.log_line());
+    if rec.state == JobState::Done && !rec.result.is_empty() {
+        println!("result: {}", root.root.join(&rec.result).display());
+    }
+    Ok(())
+}
+
+/// `grail jobs [--root dir]` — list every job in the spool.
+pub fn jobs_cli(args: &Args) -> Result<()> {
+    let opts = ExpOptions::from_args(args)?;
+    let root = ServeRoot::from_args(args, &opts);
+    let recs = root.scan()?;
+    if recs.is_empty() {
+        println!("no jobs under {:?}", root.jobs_dir());
+        return Ok(());
+    }
+    let mut table = crate::exp::report::Table::new(&[
+        "id", "verb", "state", "attempts", "secs", "c_hit", "c_miss", "result/error",
+    ]);
+    for r in &recs {
+        let tail = if !r.error.is_empty() { r.error.clone() } else { r.result.clone() };
+        table.row(vec![
+            r.id.clone(),
+            r.verb.name().to_string(),
+            r.state.name().to_string(),
+            format!("{}/{}", r.attempts, 1 + r.retries),
+            format!("{:.2}", r.wall_seconds),
+            r.cache_hits.to_string(),
+            r.cache_misses.to_string(),
+            tail,
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_ids_are_content_derived() {
+        let a = job_id(JobVerb::Plan, "", "", b"[pipeline]\nratio = 0.5\n");
+        assert_eq!(a, job_id(JobVerb::Plan, "", "", b"[pipeline]\nratio = 0.5\n"));
+        assert_ne!(a, job_id(JobVerb::Run, "", "", b"[pipeline]\nratio = 0.5\n"));
+        assert_ne!(a, job_id(JobVerb::Plan, "mlp", "", b"[pipeline]\nratio = 0.5\n"));
+        assert_ne!(a, job_id(JobVerb::Plan, "", "mlp_dev", b"[pipeline]\nratio = 0.5\n"));
+        assert_ne!(a, job_id(JobVerb::Plan, "", "", b"[pipeline]\nratio = 0.4\n"));
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn submit_is_idempotent_until_terminal() {
+        let tmp =
+            std::env::temp_dir().join(format!("grail_daemon_submit_{}", std::process::id()));
+        std::fs::remove_dir_all(&tmp).ok();
+        std::fs::create_dir_all(&tmp).unwrap();
+        let spec = tmp.join("j.spec.toml");
+        std::fs::write(&spec, "[pipeline]\nratio = 0.5\n").unwrap();
+        let root = ServeRoot::at(tmp.join("serve"));
+        let (id, re) = submit_file(&root, spec.to_str().unwrap(), JobVerb::Plan, 1, "", "").unwrap();
+        assert!(!re);
+        // Same submission while queued: same id, untouched.
+        let (id2, re2) =
+            submit_file(&root, spec.to_str().unwrap(), JobVerb::Plan, 1, "", "").unwrap();
+        assert_eq!(id, id2);
+        assert!(!re2);
+        // Terminal job: resubmission re-queues it.
+        let dir = root.job_dir(&id);
+        let mut rec = JobRecord::load(&dir).unwrap();
+        rec.state = JobState::Failed;
+        rec.attempts = 2;
+        rec.save(&dir).unwrap();
+        let (id3, re3) =
+            submit_file(&root, spec.to_str().unwrap(), JobVerb::Plan, 1, "", "").unwrap();
+        assert_eq!(id, id3);
+        assert!(re3);
+        let rec = JobRecord::load(&dir).unwrap();
+        assert_eq!(rec.state, JobState::Queued);
+        assert_eq!(rec.attempts, 0);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

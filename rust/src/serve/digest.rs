@@ -1,0 +1,299 @@
+//! Deterministic 128-bit content digests for the statistics cache.
+//!
+//! Cache keys must be stable across processes, machines, and releases:
+//! the same (model bytes, corpus bytes, site, shard split) has to map
+//! to the same on-disk entry forever, or every upgrade silently turns
+//! into a cold cache. `std::hash` guarantees none of that (SipHash keys
+//! are randomized per process), so this module hand-rolls a small
+//! streaming hash: two independent 64-bit lanes absorbing little-endian
+//! 8-byte chunks through the SplitMix64 finalizer, combined with the
+//! total length at the end. Non-cryptographic — it defends against
+//! accidental collisions and format drift, not adversaries — which is
+//! exactly the content-addressing contract the cache needs.
+//!
+//! The unit tests pin exact digest values; if this function ever
+//! changes, those tests fail and the cache format version must be
+//! bumped (see [`super::cache`]).
+
+use anyhow::{Context, Result};
+use std::fmt;
+use std::io::Read;
+
+/// A 128-bit content digest.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Digest(pub [u8; 16]);
+
+impl Digest {
+    /// Lower-case 32-char hex form (stable file-name encoding).
+    pub fn hex(&self) -> String {
+        let mut s = String::with_capacity(32);
+        for b in self.0 {
+            s.push_str(&format!("{b:02x}"));
+        }
+        s
+    }
+
+    /// Parse the [`hex`](Digest::hex) form back.
+    pub fn parse_hex(s: &str) -> Option<Digest> {
+        let s = s.as_bytes();
+        if s.len() != 32 {
+            return None;
+        }
+        let nib = |c: u8| -> Option<u8> {
+            match c {
+                b'0'..=b'9' => Some(c - b'0'),
+                b'a'..=b'f' => Some(c - b'a' + 10),
+                _ => None,
+            }
+        };
+        let mut out = [0u8; 16];
+        for i in 0..16 {
+            out[i] = nib(s[2 * i])? << 4 | nib(s[2 * i + 1])?;
+        }
+        Some(Digest(out))
+    }
+}
+
+impl fmt::Debug for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Digest({})", self.hex())
+    }
+}
+
+impl fmt::Display for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+/// SplitMix64 finalizer: a full-avalanche 64-bit mixer.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Streaming 128-bit hasher. Incremental [`update`](Hasher128::update)
+/// calls produce the same digest as one call over the concatenation.
+pub struct Hasher128 {
+    lo: u64,
+    hi: u64,
+    /// Partial chunk carried across `update` boundaries.
+    buf: [u8; 8],
+    buf_len: usize,
+    total: u64,
+}
+
+impl Default for Hasher128 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher128 {
+    pub fn new() -> Self {
+        // Arbitrary distinct lane seeds (digits of π and e).
+        Hasher128 {
+            lo: 0x2436_3F84_A425_2210,
+            hi: 0xB7E1_5162_8AED_2A6A,
+            buf: [0u8; 8],
+            buf_len: 0,
+            total: 0,
+        }
+    }
+
+    #[inline]
+    fn absorb(&mut self, k: u64) {
+        self.lo = mix(self.lo ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        self.hi = mix(self.hi ^ k.rotate_left(32).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+    }
+
+    /// Absorb `bytes` (chunk boundaries do not affect the result).
+    pub fn update(&mut self, bytes: &[u8]) {
+        self.total = self.total.wrapping_add(bytes.len() as u64);
+        let mut rest = bytes;
+        if self.buf_len > 0 {
+            let need = 8 - self.buf_len;
+            let take = need.min(rest.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&rest[..take]);
+            self.buf_len += take;
+            rest = &rest[take..];
+            if self.buf_len == 8 {
+                self.absorb(u64::from_le_bytes(self.buf));
+                self.buf_len = 0;
+            }
+        }
+        let mut chunks = rest.chunks_exact(8);
+        for c in &mut chunks {
+            self.absorb(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let tail = chunks.remainder();
+        self.buf[..tail.len()].copy_from_slice(tail);
+        self.buf_len = tail.len();
+    }
+
+    /// Finish the stream and return the digest.
+    pub fn finish(mut self) -> Digest {
+        if self.buf_len > 0 {
+            // Zero-pad the final partial chunk; the length absorbed
+            // below disambiguates it from genuine trailing zeros.
+            for i in self.buf_len..8 {
+                self.buf[i] = 0;
+            }
+            let chunk = u64::from_le_bytes(self.buf);
+            self.absorb(chunk);
+        }
+        self.absorb(self.total ^ 0x1F0A_5C4D_3B2E_1908);
+        // Cross-mix the lanes so each output half depends on both.
+        let a = mix(self.lo.wrapping_add(self.hi.rotate_left(17)));
+        let b = mix(self.hi ^ self.lo.rotate_left(43));
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&a.to_le_bytes());
+        out[8..].copy_from_slice(&b.to_le_bytes());
+        Digest(out)
+    }
+}
+
+/// Digest of a byte slice.
+pub fn digest_bytes(bytes: &[u8]) -> Digest {
+    let mut h = Hasher128::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Digest of an f32 slice via the exact little-endian bit patterns
+/// (so `-0.0` ≠ `0.0` and NaN payloads are significant — byte
+/// identity, not numeric equality).
+pub fn digest_f32s(vals: &[f32]) -> Digest {
+    let mut h = Hasher128::new();
+    update_f32s(&mut h, vals);
+    h.finish()
+}
+
+/// Stream an f32 slice into an existing hasher.
+pub fn update_f32s(h: &mut Hasher128, vals: &[f32]) {
+    let mut buf = [0u8; 8 * 256];
+    for chunk in vals.chunks(2 * 256) {
+        let mut n = 0;
+        for v in chunk {
+            buf[n..n + 4].copy_from_slice(&v.to_le_bytes());
+            n += 4;
+        }
+        h.update(&buf[..n]);
+    }
+}
+
+/// Digest of a tensor: shape (as little-endian u64 dims) then data
+/// bits, so `[2,3]` and `[3,2]` views of the same buffer differ.
+pub fn digest_tensor(t: &crate::tensor::Tensor) -> Digest {
+    let mut h = Hasher128::new();
+    h.update(&(t.ndim() as u64).to_le_bytes());
+    for d in 0..t.ndim() {
+        h.update(&(t.dim(d) as u64).to_le_bytes());
+    }
+    update_f32s(&mut h, t.data());
+    h.finish()
+}
+
+/// Digest of a file's raw bytes (streamed; the file never loads whole).
+pub fn digest_file(path: &str) -> Result<Digest> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("digesting {path}"))?;
+    let mut h = Hasher128::new();
+    let mut buf = vec![0u8; 1 << 16];
+    loop {
+        let n = f.read(&mut buf).with_context(|| format!("digesting {path}"))?;
+        if n == 0 {
+            break;
+        }
+        h.update(&buf[..n]);
+    }
+    Ok(h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pinned values: the cache's on-disk keys derive from this exact
+    // function. If any of these change, bump `cache::FORMAT_VERSION`
+    // (old entries must not be served under new keys or vice versa).
+    #[test]
+    fn digests_are_pinned_against_drift() {
+        assert_eq!(digest_bytes(b"").hex(), "69340e35dec347fe3517bf37054718a9");
+        assert_eq!(digest_bytes(b"grail").hex(), "98b33e73a3b727d7b3862fd7fd7a44f3");
+        assert_eq!(
+            digest_bytes(b"the quick brown fox jumps over the lazy dog").hex(),
+            "a52347248a8332731776410e7f5e5497"
+        );
+        assert_eq!(
+            digest_f32s(&[0.0, 1.0, -1.0, 0.5]).hex(),
+            "88bb231e5eece4e2f65e21ca6fc05c87"
+        );
+    }
+
+    #[test]
+    fn incremental_equals_one_shot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let whole = digest_bytes(&data);
+        for split in [0usize, 1, 3, 7, 8, 9, 500, 999, 1000] {
+            let mut h = Hasher128::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finish(), whole, "split at {split}");
+        }
+        // Three-way split with awkward boundaries.
+        let mut h = Hasher128::new();
+        h.update(&data[..5]);
+        h.update(&data[5..13]);
+        h.update(&data[13..]);
+        assert_eq!(h.finish(), whole);
+    }
+
+    #[test]
+    fn content_sensitivity() {
+        let a = digest_bytes(b"abcdefgh");
+        let mut flipped = *b"abcdefgh";
+        flipped[7] ^= 1;
+        assert_ne!(a, digest_bytes(&flipped));
+        // Length is significant even when the tail pads with zeros.
+        assert_ne!(digest_bytes(&[0u8; 7]), digest_bytes(&[0u8; 8]));
+        assert_ne!(digest_bytes(&[]), digest_bytes(&[0u8]));
+    }
+
+    #[test]
+    fn float_digests_are_bit_exact() {
+        assert_ne!(digest_f32s(&[0.0]), digest_f32s(&[-0.0]));
+        assert_eq!(digest_f32s(&[f32::NAN]), digest_f32s(&[f32::NAN]));
+    }
+
+    #[test]
+    fn tensor_digest_includes_shape() {
+        use crate::tensor::Tensor;
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let a = Tensor::from_vec(&[2, 3], data.clone());
+        let b = Tensor::from_vec(&[3, 2], data.clone());
+        let c = Tensor::from_vec(&[6], data);
+        assert_ne!(digest_tensor(&a), digest_tensor(&b));
+        assert_ne!(digest_tensor(&a), digest_tensor(&c));
+        assert_eq!(digest_tensor(&a), digest_tensor(&a.clone()));
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let d = digest_bytes(b"roundtrip");
+        assert_eq!(Digest::parse_hex(&d.hex()), Some(d));
+        assert_eq!(Digest::parse_hex("zz"), None);
+        assert_eq!(Digest::parse_hex(&"0".repeat(31)), None);
+        assert_eq!(Digest::parse_hex(&"G".repeat(32)), None);
+    }
+
+    #[test]
+    fn file_digest_matches_bytes() {
+        let p = std::env::temp_dir().join("grail_digest_file_test.bin");
+        let data: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        std::fs::write(&p, &data).unwrap();
+        assert_eq!(digest_file(p.to_str().unwrap()).unwrap(), digest_bytes(&data));
+        std::fs::remove_file(&p).ok();
+    }
+}

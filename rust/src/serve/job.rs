@@ -1,0 +1,327 @@
+//! Persisted job records for the `grail serve` daemon.
+//!
+//! One job = one submitted spec file plus execution metadata, living
+//! at `<serve-root>/jobs/<id>/`:
+//!
+//! ```text
+//! jobs/<id>/spec.toml    the submitted spec, verbatim
+//! jobs/<id>/status.toml  this record (atomic rewrite on every change)
+//! jobs/<id>/log.txt      append-only structured per-attempt lines
+//! ```
+//!
+//! The state machine is `queued → running → done | failed`, with a
+//! bounded retry edge `running → queued` while `attempts ≤ retries`.
+//! `status.toml` is the single source of truth: the daemon's queue is
+//! simply "every job whose persisted state is `queued`", so a daemon
+//! restart resumes exactly where the disk says it was (a job killed
+//! mid-`running` is re-queued on startup, which the bounded attempt
+//! counter keeps finite).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// What the daemon does with a job's spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobVerb {
+    /// Resolve and persist the plan; mutate nothing.
+    Plan,
+    /// Compress + evaluate; persist the report.
+    Run,
+    /// Calibration-driven plan search; persist the winning plan.
+    Tune,
+}
+
+impl JobVerb {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobVerb::Plan => "plan",
+            JobVerb::Run => "run",
+            JobVerb::Tune => "tune",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobVerb> {
+        Some(match s {
+            "plan" => JobVerb::Plan,
+            "run" => JobVerb::Run,
+            "tune" => JobVerb::Tune,
+            _ => return None,
+        })
+    }
+}
+
+/// Lifecycle state of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobState> {
+        Some(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            _ => return None,
+        })
+    }
+
+    /// Whether the job has finished (successfully or not).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed)
+    }
+}
+
+/// One job's persisted record.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    /// Content-derived hex id (digest of verb + overrides + spec
+    /// bytes), so identical submissions collapse onto one job.
+    pub id: String,
+    pub verb: JobVerb,
+    /// `--family` override carried from submission ("" = none).
+    pub family: String,
+    /// `--ckpt` override carried from submission ("" = none).
+    pub ckpt: String,
+    pub state: JobState,
+    /// Execution attempts so far (0 until first pickup).
+    pub attempts: usize,
+    /// Extra attempts allowed after the first failure.
+    pub retries: usize,
+    /// Last error ("" when none).
+    pub error: String,
+    /// Result location relative to the serve root ("" until done).
+    pub result: String,
+    /// Wall time of the last attempt.
+    pub wall_seconds: f64,
+    /// Statistics-cache entry hits/misses across all attempts.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Collapse a free-form error message into the TOML-subset string
+/// grammar (one line, `'` for `"`).
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| match c {
+            '"' => '\'',
+            '\\' => '/',
+            '\n' | '\r' | '\t' => ' ',
+            c => c,
+        })
+        .collect()
+}
+
+impl JobRecord {
+    pub fn new(id: String, verb: JobVerb, retries: usize, family: &str, ckpt: &str) -> JobRecord {
+        JobRecord {
+            id,
+            verb,
+            family: family.to_string(),
+            ckpt: ckpt.to_string(),
+            state: JobState::Queued,
+            attempts: 0,
+            retries,
+            error: String::new(),
+            result: String::new(),
+            wall_seconds: 0.0,
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    /// Serialize as a `[job]` TOML section.
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[job]\nid = \"{}\"\nverb = \"{}\"\nfamily = \"{}\"\nckpt = \"{}\"\n\
+             state = \"{}\"\nattempts = {}\nretries = {}\nerror = \"{}\"\n\
+             result = \"{}\"\nwall_seconds = {:.6}\ncache_hits = {}\ncache_misses = {}\n",
+            sanitize(&self.id),
+            self.verb.name(),
+            sanitize(&self.family),
+            sanitize(&self.ckpt),
+            self.state.name(),
+            self.attempts,
+            self.retries,
+            sanitize(&self.error),
+            sanitize(&self.result),
+            self.wall_seconds,
+            self.cache_hits,
+            self.cache_misses,
+        )
+    }
+
+    /// Parse a `status.toml`.
+    pub fn parse(text: &str) -> Result<JobRecord> {
+        let cfg = crate::config::Config::parse(text)?;
+        let verb_name = cfg.str("job.verb")?;
+        let verb = JobVerb::from_name(verb_name)
+            .ok_or_else(|| anyhow!("job.verb: unknown verb `{verb_name}`"))?;
+        let state_name = cfg.str("job.state")?;
+        let state = JobState::from_name(state_name)
+            .ok_or_else(|| anyhow!("job.state: unknown state `{state_name}`"))?;
+        Ok(JobRecord {
+            id: cfg.str("job.id")?.to_string(),
+            verb,
+            family: cfg.str_or("job.family", "").to_string(),
+            ckpt: cfg.str_or("job.ckpt", "").to_string(),
+            state,
+            attempts: cfg.usize_or("job.attempts", 0),
+            retries: cfg.usize_or("job.retries", 0),
+            error: cfg.str_or("job.error", "").to_string(),
+            result: cfg.str_or("job.result", "").to_string(),
+            wall_seconds: cfg.f64_or("job.wall_seconds", 0.0),
+            cache_hits: cfg.usize_or("job.cache_hits", 0) as u64,
+            cache_misses: cfg.usize_or("job.cache_misses", 0) as u64,
+        })
+    }
+
+    /// Atomically rewrite `<dir>/status.toml` (temp file + rename, so
+    /// concurrent readers never see a torn record).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        let tmp = dir.join(format!(".status.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, self.to_toml()).with_context(|| format!("writing {tmp:?}"))?;
+        let path = dir.join("status.toml");
+        std::fs::rename(&tmp, &path).with_context(|| format!("publishing {path:?}"))
+    }
+
+    /// Load `<dir>/status.toml`.
+    pub fn load(dir: &Path) -> Result<JobRecord> {
+        let path = dir.join("status.toml");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        JobRecord::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    /// One structured log line describing the current state.
+    pub fn log_line(&self) -> String {
+        let mut line = format!(
+            "job={} verb={} state={} attempt={}/{}",
+            self.id,
+            self.verb.name(),
+            self.state.name(),
+            self.attempts,
+            1 + self.retries,
+        );
+        if !self.family.is_empty() {
+            line.push_str(&format!(" family={}", self.family));
+        }
+        if !self.ckpt.is_empty() {
+            line.push_str(&format!(" ckpt={}", self.ckpt));
+        }
+        if self.state.is_terminal() || self.wall_seconds > 0.0 {
+            line.push_str(&format!(
+                " secs={:.3} cache_hits={} cache_misses={}",
+                self.wall_seconds, self.cache_hits, self.cache_misses
+            ));
+        }
+        if !self.error.is_empty() {
+            line.push_str(&format!(" error=\"{}\"", sanitize(&self.error)));
+        }
+        line
+    }
+
+    /// Append the current [`log_line`](JobRecord::log_line) to
+    /// `<dir>/log.txt` and echo it to stdout.
+    pub fn log(&self, dir: &Path) -> Result<()> {
+        use std::io::Write;
+        let line = self.log_line();
+        println!("[serve] {line}");
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join("log.txt"))
+            .with_context(|| format!("opening {dir:?}/log.txt"))?;
+        writeln!(f, "{line}").with_context(|| format!("appending {dir:?}/log.txt"))
+    }
+}
+
+/// Round-trip sanity for the whole record (used by `status`/`jobs`).
+pub fn verbs_and_states() -> (Vec<JobVerb>, Vec<JobState>) {
+    (
+        vec![JobVerb::Plan, JobVerb::Run, JobVerb::Tune],
+        vec![JobState::Queued, JobState::Running, JobState::Done, JobState::Failed],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        let (verbs, states) = verbs_and_states();
+        for v in verbs {
+            assert_eq!(JobVerb::from_name(v.name()), Some(v));
+        }
+        for s in states {
+            assert_eq!(JobState::from_name(s.name()), Some(s));
+        }
+        assert!(JobVerb::from_name("nope").is_none());
+        assert!(JobState::from_name("nope").is_none());
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Done.is_terminal());
+        assert!(JobState::Failed.is_terminal());
+    }
+
+    #[test]
+    fn record_toml_roundtrips_including_hostile_error() {
+        let mut rec = JobRecord::new("abc123".into(), JobVerb::Tune, 2, "lm", "tinylm_gqa");
+        rec.state = JobState::Failed;
+        rec.attempts = 3;
+        rec.error = "boom: \"quoted\"\nwith\tnewline \\ backslash".into();
+        rec.result = "results/abc123".into();
+        rec.wall_seconds = 1.25;
+        rec.cache_hits = 7;
+        rec.cache_misses = 3;
+        let back = JobRecord::parse(&rec.to_toml()).unwrap();
+        assert_eq!(back.id, rec.id);
+        assert_eq!(back.verb, rec.verb);
+        assert_eq!(back.family, "lm");
+        assert_eq!(back.ckpt, "tinylm_gqa");
+        assert_eq!(back.state, JobState::Failed);
+        assert_eq!(back.attempts, 3);
+        assert_eq!(back.retries, 2);
+        assert_eq!(back.error, "boom: 'quoted' with newline / backslash");
+        assert_eq!(back.result, "results/abc123");
+        assert!((back.wall_seconds - 1.25).abs() < 1e-9);
+        assert_eq!((back.cache_hits, back.cache_misses), (7, 3));
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_log_append() {
+        let dir = std::env::temp_dir().join(format!("grail_job_unit_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut rec = JobRecord::new("deadbeef".into(), JobVerb::Plan, 1, "", "");
+        rec.save(&dir).unwrap();
+        assert_eq!(JobRecord::load(&dir).unwrap().state, JobState::Queued);
+        rec.state = JobState::Running;
+        rec.attempts = 1;
+        rec.save(&dir).unwrap();
+        rec.log(&dir).unwrap();
+        rec.state = JobState::Done;
+        rec.log(&dir).unwrap();
+        let log = std::fs::read_to_string(dir.join("log.txt")).unwrap();
+        assert_eq!(log.lines().count(), 2);
+        assert!(log.contains("state=running"));
+        assert!(log.contains("state=done"));
+        assert!(log.contains("attempt=1/2"));
+        assert_eq!(JobRecord::load(&dir).unwrap().state, JobState::Running);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

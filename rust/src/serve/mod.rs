@@ -1,0 +1,39 @@
+//! Compression-as-a-service: the statistics cache and the `grail
+//! serve` daemon.
+//!
+//! GRAIL's whole downstream pipeline — budget allocators, plan search,
+//! ridge compensation — consumes one sufficient statistic: the
+//! streamed per-site [`ActStats`](crate::grail::ActStats)/Gram pass
+//! over a `(model, calibration corpus)` pair. This module pays for
+//! that pass once and serves unlimited plan/run/tune traffic against
+//! it:
+//!
+//! - [`digest`] — deterministic 128-bit content digests (stable across
+//!   processes and releases; pinned unit tests catch drift).
+//! - [`cache`] — a content-addressed on-disk store of per-site,
+//!   per-shard `ActStats` in a versioned, checksummed binary format
+//!   with atomic writes and hit/miss/evict counters.
+//! - [`provider`] — a thread-ambient cache-aware statistics provider;
+//!   installing a [`provider::StatsContext`] makes
+//!   `grail plan`/`run`/`tune`/`batch` transparently skip the
+//!   calibration forward pass on a hit, bit-identically to the cold
+//!   path.
+//! - [`job`] / [`daemon`] — `grail serve`: a long-lived filesystem job
+//!   queue (`submit`/`status`/`jobs` client verbs) executing plan/run/
+//!   tune specs against zoo checkpoints with a persisted
+//!   queued → running → done/failed state machine, bounded retries,
+//!   and a content-addressed results directory.
+//!
+//! See EXPERIMENTS.md §Serve daemon for the on-disk layout and CLI
+//! walkthrough.
+
+pub mod cache;
+pub mod daemon;
+pub mod digest;
+pub mod job;
+pub mod provider;
+
+pub use cache::{CacheCounters, StatsCache};
+pub use digest::{digest_bytes, digest_file, digest_tensor, Digest, Hasher128};
+pub use job::{JobRecord, JobState, JobVerb};
+pub use provider::{CacheScope, StatsContext};

@@ -1,0 +1,255 @@
+//! Ambient cache-aware statistics provider.
+//!
+//! The entire open-loop statistics surface funnels through one choke
+//! point — `per_shard_site_stats` in `grail::pipeline` — which is
+//! generic over [`Compressible`](crate::compress::Compressible) and
+//! called from `plan`, `run`, `tune`, and `batch`. Threading an
+//! `Option<&StatsContext>` through every one of those generic
+//! signatures would churn the whole public API for what is a pure
+//! execution-environment concern, so the provider is *ambient*
+//! instead: [`install`] binds a [`StatsContext`] to the current thread
+//! (RAII scope, previous context restored on drop), and the choke
+//! point consults [`active`] on its calling thread. Inner `run_grid`
+//! worker threads never see the context — by the time shards fan out,
+//! the hit/miss decision has already been made on the caller.
+//!
+//! Correctness contract: a statistics pass is served from the cache
+//! only when **every** site of the pass hits, and the cached bytes are
+//! the verbatim un-finalized per-shard accumulators the cold path
+//! produced — so warm results are bit-identical to cold ones by
+//! construction, not by numerical accident (`rust/tests/serve.rs`).
+//!
+//! Accounting: the context keeps a **thread-local monotonic tally** of
+//! entry hits/misses in addition to the shared [`StatsCache`]
+//! counters. Consumers that need per-job numbers under concurrency
+//! (the daemon and `grail batch` run jobs on scheduler worker threads
+//! sharing one cache) snapshot [`tally`] before and after the job on
+//! their own thread and report the delta; the shared cache counters
+//! keep the global totals.
+
+use super::cache::StatsCache;
+use super::digest::{Digest, Hasher128};
+use crate::grail::ActStats;
+use std::cell::{Cell, RefCell};
+use std::sync::Arc;
+
+/// Key-derivation version: participates in every site key, so changing
+/// how keys are built (not just how entries are encoded) also retires
+/// the old entries.
+const KEY_VERSION: &str = "grail-stats-v1";
+
+/// Identity of one `(model, corpus)` calibration pairing plus the
+/// cache the statistics live in.
+#[derive(Clone)]
+pub struct StatsContext {
+    pub cache: Arc<StatsCache>,
+    /// Digest of the model weights (e.g. the checkpoint file bytes).
+    pub model: Digest,
+    /// Digest of the calibration corpus identity (e.g. the corpus file
+    /// bytes plus any slicing geometry).
+    pub corpus: Digest,
+}
+
+impl std::fmt::Debug for StatsContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StatsContext")
+            .field("model", &self.model)
+            .field("corpus", &self.corpus)
+            .field("cache", &self.cache.root())
+            .finish()
+    }
+}
+
+impl StatsContext {
+    pub fn new(cache: Arc<StatsCache>, model: Digest, corpus: Digest) -> StatsContext {
+        StatsContext { cache, model, corpus }
+    }
+
+    /// Cache key of one site's statistics. The *actual* shard count
+    /// (after the model clamps the requested split to the available
+    /// samples) is part of the key: different splits accumulate in
+    /// different float orders and must never alias.
+    pub fn site_key(&self, site_id: &str, site_idx: usize, n_shards: usize) -> Digest {
+        let mut h = Hasher128::new();
+        h.update(KEY_VERSION.as_bytes());
+        h.update(&super::cache::FORMAT_VERSION.to_le_bytes());
+        h.update(&self.model.0);
+        h.update(&self.corpus.0);
+        h.update(&(site_id.len() as u64).to_le_bytes());
+        h.update(site_id.as_bytes());
+        h.update(&(site_idx as u64).to_le_bytes());
+        h.update(&(n_shards as u64).to_le_bytes());
+        h.finish()
+    }
+
+    /// Try to serve a whole statistics pass from the cache. Returns the
+    /// shard-major `[shard][site]` layout `per_shard_site_stats`
+    /// produces, or `None` unless **every** site hits (partial hits
+    /// recompute everything: the pass is one streamed forward anyway,
+    /// so per-site salvage would complicate the bitwise contract for
+    /// zero saved work). `widths[si]` is the model's expected feature
+    /// width — a cached entry disagreeing with it is a fail-loud key
+    /// collision, not a miss.
+    pub fn load_pass(
+        &self,
+        site_ids: &[&str],
+        widths: &[usize],
+        n_shards: usize,
+    ) -> Option<Vec<Vec<ActStats>>> {
+        assert_eq!(site_ids.len(), widths.len());
+        let n_sites = site_ids.len();
+        let mut per_site: Vec<Vec<ActStats>> = Vec::with_capacity(n_sites);
+        for (si, id) in site_ids.iter().enumerate() {
+            let key = self.site_key(id, si, n_shards);
+            let Some(shards) = self.cache.load(&key) else {
+                // Cold pass: every site recomputes (and later
+                // re-stores), so the whole pass counts as misses.
+                self.cache.count_misses(n_sites as u64);
+                note(0, n_sites as u64);
+                return None;
+            };
+            assert_eq!(
+                shards.len(),
+                n_shards,
+                "stats cache entry {key} for site `{id}` holds {} shards, expected {n_shards} — \
+                 key collision (the shard split participates in the key)",
+                shards.len()
+            );
+            for s in &shards {
+                assert_eq!(
+                    s.gram.dim(0),
+                    widths[si],
+                    "stats cache entry {key} for site `{id}` has width {}, model expects {} — \
+                     key collision",
+                    s.gram.dim(0),
+                    widths[si]
+                );
+            }
+            per_site.push(shards);
+        }
+        self.cache.count_hits(n_sites as u64);
+        note(n_sites as u64, 0);
+        // Transpose site-major storage into the shard-major layout the
+        // pipeline consumes.
+        let mut out: Vec<Vec<ActStats>> = (0..n_shards).map(|_| Vec::with_capacity(n_sites)).collect();
+        for site_shards in per_site {
+            for (shard_idx, s) in site_shards.into_iter().enumerate() {
+                out[shard_idx].push(s);
+            }
+        }
+        Some(out)
+    }
+
+    /// Persist a freshly computed pass (shard-major input, one
+    /// site-major entry per site). Write failures are warned about and
+    /// swallowed: the computed statistics in hand are still valid, and
+    /// a read-only or full cache directory must not fail the job.
+    pub fn store_pass(&self, site_ids: &[&str], per_shard: &[Vec<ActStats>]) {
+        let n_shards = per_shard.len();
+        for (si, id) in site_ids.iter().enumerate() {
+            let key = self.site_key(id, si, n_shards);
+            let site_shards: Vec<ActStats> =
+                per_shard.iter().map(|shard| shard[si].clone()).collect();
+            if let Err(e) = self.cache.store(&key, &site_shards) {
+                eprintln!("[serve] WARN: failed to store stats cache entry {key}: {e:#}");
+            }
+        }
+    }
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Arc<StatsContext>>> = const { RefCell::new(None) };
+    /// Monotonic per-thread (entry hits, entry misses); consumers read
+    /// deltas, so it never resets.
+    static TALLY: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+}
+
+/// The context installed on the current thread, if any.
+pub fn active() -> Option<Arc<StatsContext>> {
+    ACTIVE.with(|a| a.borrow().clone())
+}
+
+/// Monotonic (hits, misses) of statistics-cache entries accounted on
+/// this thread. Snapshot before and after a job and subtract.
+pub fn tally() -> (u64, u64) {
+    TALLY.with(|t| t.get())
+}
+
+fn note(hits: u64, misses: u64) {
+    TALLY.with(|t| {
+        let (h, m) = t.get();
+        t.set((h + hits, m + misses));
+    });
+}
+
+/// Install `ctx` as the current thread's statistics provider for the
+/// lifetime of the returned scope. Nests: dropping the scope restores
+/// whatever was installed before.
+#[must_use = "the context is uninstalled when the scope drops"]
+pub fn install(ctx: StatsContext) -> CacheScope {
+    let prev = ACTIVE.with(|a| a.borrow_mut().replace(Arc::new(ctx)));
+    CacheScope { prev }
+}
+
+/// RAII guard for an installed [`StatsContext`].
+pub struct CacheScope {
+    prev: Option<Arc<StatsContext>>,
+}
+
+impl Drop for CacheScope {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        ACTIVE.with(|a| *a.borrow_mut() = prev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::digest::digest_bytes;
+
+    fn ctx(root: &std::path::Path) -> StatsContext {
+        StatsContext::new(
+            Arc::new(StatsCache::open(root).unwrap()),
+            digest_bytes(b"model"),
+            digest_bytes(b"corpus"),
+        )
+    }
+
+    #[test]
+    fn install_is_scoped_and_nests() {
+        let root = std::env::temp_dir().join(format!("grail_provider_unit_{}", std::process::id()));
+        assert!(active().is_none());
+        {
+            let _outer = install(ctx(&root));
+            let outer_model = active().unwrap().model;
+            {
+                let mut inner = ctx(&root);
+                inner.model = digest_bytes(b"other-model");
+                let _inner = install(inner);
+                assert_ne!(active().unwrap().model, outer_model);
+            }
+            assert_eq!(active().unwrap().model, outer_model);
+        }
+        assert!(active().is_none());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn site_keys_separate_every_identity_axis() {
+        let root = std::env::temp_dir().join(format!("grail_provider_keys_{}", std::process::id()));
+        let c = ctx(&root);
+        let base = c.site_key("fc1", 0, 16);
+        assert_eq!(base, c.site_key("fc1", 0, 16), "keys are deterministic");
+        assert_ne!(base, c.site_key("fc2", 0, 16), "site id");
+        assert_ne!(base, c.site_key("fc1", 1, 16), "site index");
+        assert_ne!(base, c.site_key("fc1", 0, 8), "shard split");
+        let mut other = ctx(&root);
+        other.model = digest_bytes(b"model2");
+        assert_ne!(base, other.site_key("fc1", 0, 16), "model identity");
+        let mut other = ctx(&root);
+        other.corpus = digest_bytes(b"corpus2");
+        assert_ne!(base, other.site_key("fc1", 0, 16), "corpus identity");
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

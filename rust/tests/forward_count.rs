@@ -13,6 +13,10 @@ use grail::grail::{
     compress_model, compress_model_rescan, plan_for_model, BudgetMode, CompressionSpec, Method,
     SearchSeed,
 };
+use grail::serve::digest::digest_bytes;
+use grail::serve::provider::{self, StatsContext};
+use grail::serve::StatsCache;
+use std::sync::Arc;
 
 #[test]
 fn closed_loop_layer_forwards_are_linear_in_depth() {
@@ -89,4 +93,37 @@ fn closed_loop_layer_forwards_are_linear_in_depth() {
         4 * (2 * n_sites - 1) as u64,
         "sensitivity-seeded search must reuse its single statistics pass"
     );
+
+    // Warm statistics cache: with a provider installed and the cache
+    // populated, plan resolution — both the gram-sensitivity allocator
+    // and the full search — performs ZERO calibration layer forwards;
+    // every statistic streams off disk, and the plans stay
+    // bit-identical to their cold counterparts.
+    let cache_root =
+        std::env::temp_dir().join(format!("grail_fwd_cache_{}", std::process::id()));
+    std::fs::remove_dir_all(&cache_root).ok();
+    let ctx = StatsContext::new(
+        Arc::new(StatsCache::open(&cache_root).unwrap()),
+        digest_bytes(b"lm-layers-3-11"),
+        digest_bytes(b"lm-calib-5-2000-16-8"),
+    );
+    let cold_sens = plan_for_model(&lm, &calib, &sens_cfg).unwrap();
+    {
+        // Populate: one miss pass per shard geometry.
+        let _scope = provider::install(ctx.clone());
+        plan_for_model(&lm, &calib, &sens_cfg).unwrap();
+        plan_for_model(&lm, &calib, &tune_cfg).unwrap();
+    }
+    layer_forwards_reset();
+    let _scope = provider::install(ctx);
+    let warm_sens = plan_for_model(&lm, &calib, &sens_cfg).unwrap();
+    let warm_tune = plan_for_model(&lm, &calib, &tune_cfg).unwrap();
+    assert_eq!(
+        layer_forwards(),
+        0,
+        "warm-cache plan resolution must skip every calibration layer forward"
+    );
+    assert_eq!(warm_sens.to_toml(), cold_sens.to_toml());
+    assert_eq!(warm_tune.to_toml(), plan.to_toml());
+    std::fs::remove_dir_all(&cache_root).ok();
 }

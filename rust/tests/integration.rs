@@ -169,6 +169,7 @@ method = "fold"
         artifacts: art,
         quick: true,
         seed: 0,
+        cache: None,
     };
     // Plan resolution is side-effect free and heterogeneous.
     let plan = resolve_job_plan(&opts, job.family, &job.ckpt_or_default(), &job.spec).unwrap();
@@ -197,6 +198,7 @@ fn exp_table3_smoke() {
         artifacts: art,
         quick: true,
         seed: 0,
+        cache: None,
     };
     grail::exp::table3::run(&opts).unwrap();
     assert!(out.join("table3.csv").exists());

@@ -1,0 +1,322 @@
+//! Serve subsystem acceptance tests: the content-addressed ActStats
+//! cache must be *bit-identical* to the cold path (the cached bytes
+//! are the verbatim un-finalized accumulators, so identity holds by
+//! construction — these tests prove the plumbing preserves it), the
+//! entry round trip must be byte-exact at every shard count and
+//! reject corruption, and the `grail serve` daemon must produce the
+//! same plan a direct `grail plan` resolves, survive a failing job
+//! with bounded observable retries, and account cache hits on
+//! resubmission.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use grail::compress::{Compressible, Selector};
+use grail::coordinator::{write_dev_checkpoints, Artifacts};
+use grail::data::SynthVision;
+use grail::exp::runner::{resolve_job_plan, Family, SpecJob};
+use grail::exp::ExpOptions;
+use grail::grail::{
+    compress_model, search_plan, ActStats, BudgetMode, CompressionPlan, CompressionSpec, Method,
+};
+use grail::rng::Pcg64;
+use grail::serve::daemon::{self, ServeConfig, ServeRoot};
+use grail::serve::digest::digest_bytes;
+use grail::serve::job::{JobRecord, JobState, JobVerb};
+use grail::serve::provider::{self, StatsContext};
+use grail::serve::StatsCache;
+use grail::tensor::Tensor;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("grail_serve_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn search_spec(ratio: f64) -> CompressionSpec {
+    let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), ratio, true);
+    spec.budget =
+        BudgetMode::Search { target_ratio: ratio, alpha_grid: vec![1e-4, 5e-3], rounds: 1 };
+    spec.shards = 4;
+    spec.workers = 1;
+    spec
+}
+
+fn ctx(cache: &Arc<StatsCache>, model: &[u8], corpus: &[u8]) -> StatsContext {
+    StatsContext::new(cache.clone(), digest_bytes(model), digest_bytes(corpus))
+}
+
+/// The tune winner from cached statistics is byte-equal to the
+/// fresh-pass winner — cold (no provider), miss (provider, empty
+/// cache), and warm (provider, populated cache) all serialize to
+/// identical plan TOML — and the warm path preserves the worker-count
+/// bit-invariance the search already guarantees cold.
+#[test]
+fn warm_tune_winner_is_bit_identical_to_cold() {
+    let m = common::mlp(51);
+    let x = common::vision_calib(52, 96);
+    let spec = search_spec(0.5);
+
+    // Cold: no provider installed anywhere on this thread.
+    let cold = search_plan(&m, &x, &spec).unwrap();
+
+    let root = tmp_dir("warm_tune");
+    let cache = Arc::new(StatsCache::open(root.join("cache")).unwrap());
+
+    // First provider pass misses, computes, and stores.
+    let miss = {
+        let _scope = provider::install(ctx(&cache, b"mlp-51", b"vision-52"));
+        search_plan(&m, &x, &spec).unwrap()
+    };
+    assert!(cache.misses() > 0 && cache.hits() == 0, "first pass must miss");
+
+    // Second provider pass serves every site from disk.
+    let warm = {
+        let _scope = provider::install(ctx(&cache, b"mlp-51", b"vision-52"));
+        search_plan(&m, &x, &spec).unwrap()
+    };
+    assert!(cache.hits() > 0, "second pass must hit");
+
+    assert_eq!(
+        miss.plan.to_toml().into_bytes(),
+        cold.plan.to_toml().into_bytes(),
+        "store-through pass diverged from cold"
+    );
+    assert_eq!(
+        warm.plan.to_toml().into_bytes(),
+        cold.plan.to_toml().into_bytes(),
+        "cache-served pass diverged from cold"
+    );
+    assert_eq!(warm.final_err.to_bits(), cold.final_err.to_bits());
+    assert_eq!(warm.initial_err.to_bits(), cold.initial_err.to_bits());
+
+    // Worker-count bit-invariance holds on the warm path too.
+    let warm_workers = |workers: usize| -> CompressionPlan {
+        let mut spec = search_spec(0.5);
+        spec.workers = workers;
+        let _scope = provider::install(ctx(&cache, b"mlp-51", b"vision-52"));
+        let mut plan = search_plan(&m, &x, &spec).unwrap().plan;
+        plan.workers = 0;
+        plan
+    };
+    let serial = warm_workers(1);
+    for workers in [2usize, 4] {
+        assert_eq!(warm_workers(workers), serial, "warm workers={workers}");
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Open-loop execution (the other consumer of the statistics choke
+/// point) is bit-identical warm vs cold, and the pipeline `Report`
+/// carries the per-run hit/miss counters.
+#[test]
+fn warm_open_loop_is_bit_identical_and_counted() {
+    let m = common::mlp(61);
+    let x = common::vision_calib(62, 64);
+    let mut spec = CompressionSpec::uniform(Method::Prune(Selector::Wanda), 0.5, true);
+    spec.closed_loop = false;
+    spec.shards = 4;
+    spec.workers = 1;
+    let n_sites = m.sites().len() as u64;
+
+    let mut cold_m = m.clone();
+    let cold_rep = compress_model(&mut cold_m, &x, &spec);
+    assert_eq!((cold_rep.cache_hits, cold_rep.cache_misses), (0, 0), "no provider, no traffic");
+
+    let root = tmp_dir("warm_open");
+    let cache = Arc::new(StatsCache::open(root.join("cache")).unwrap());
+
+    let mut miss_m = m.clone();
+    let miss_rep = {
+        let _scope = provider::install(ctx(&cache, b"mlp-61", b"vision-62"));
+        compress_model(&mut miss_m, &x, &spec)
+    };
+    assert_eq!((miss_rep.cache_hits, miss_rep.cache_misses), (0, n_sites));
+
+    let mut warm_m = m.clone();
+    let warm_rep = {
+        let _scope = provider::install(ctx(&cache, b"mlp-61", b"vision-62"));
+        compress_model(&mut warm_m, &x, &spec)
+    };
+    assert_eq!((warm_rep.cache_hits, warm_rep.cache_misses), (n_sites, 0));
+
+    common::assert_reports_identical(&cold_rep, &miss_rep);
+    common::assert_reports_identical(&cold_rep, &warm_rep);
+    // The compressed models themselves are bit-identical.
+    let (a, b) = (cold_m.forward(&x), warm_m.forward(&x));
+    assert_eq!(a.shape(), b.shape());
+    for (p, q) in a.data().iter().zip(b.data()) {
+        assert_eq!(p.to_bits(), q.to_bits(), "warm compressed model diverged");
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Fuzz the entry round trip: random widths/rows at every shard count
+/// the pipeline uses come back byte-identical; a flipped byte is
+/// evicted as a miss; truncated prefixes are rejected.
+#[test]
+fn actstats_entries_roundtrip_byte_exact_across_shard_counts() {
+    let root = tmp_dir("fuzz");
+    let cache = StatsCache::open(root.join("cache")).unwrap();
+    let mut rng = Pcg64::seed(0xF022);
+    for (case, &n_shards) in [1usize, 2, 3, 16].iter().enumerate() {
+        for rep in 0..4 {
+            let h = 2 + rng.below(9);
+            let shards: Vec<ActStats> = (0..n_shards)
+                .map(|_| {
+                    let rows = 1 + rng.below(12);
+                    let mut acts = Tensor::zeros(&[rows, h]);
+                    rng.fill_normal(acts.data_mut(), 1.0);
+                    let mut s = ActStats::new(h);
+                    s.update(&acts);
+                    s
+                })
+                .collect();
+            let key = digest_bytes(format!("fuzz-{case}-{rep}").as_bytes());
+            cache.store(&key, &shards).unwrap();
+            let back = cache.load(&key).expect("entry just stored");
+            assert_eq!(back.len(), n_shards);
+            for (a, b) in shards.iter().zip(&back) {
+                assert_eq!(a.rows, b.rows);
+                assert_eq!(a.width(), b.width());
+                for (x, y) in a.mean.iter().zip(&b.mean) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "mean bytes");
+                }
+                for (x, y) in a.gram.data().iter().zip(b.gram.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "gram bytes");
+                }
+            }
+
+            // Flip one random byte: the checksum fails and the entry
+            // is evicted from disk.
+            let path = cache.entry_path(&key);
+            let mut bytes = std::fs::read(&path).unwrap();
+            let evictions_before = cache.evictions();
+            let at = rng.below(bytes.len());
+            bytes[at] ^= 0x20;
+            std::fs::write(&path, &bytes).unwrap();
+            assert!(cache.load(&key).is_none(), "corrupt entry served (byte {at})");
+            assert_eq!(cache.evictions(), evictions_before + 1);
+            assert!(!path.exists(), "corrupt entry not deleted");
+
+            // Truncations of the intact bytes are rejected too.
+            bytes[at] ^= 0x20;
+            let cut = rng.below(bytes.len());
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(cache.load(&key).is_none(), "truncated at {cut} was served");
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Stand up a throwaway artifacts tree the daemon can serve from: dev
+/// checkpoints (untrained, seeded) plus the vision calibration file
+/// the mlp family reads.
+fn fake_artifacts(tmp: &std::path::Path) -> Artifacts {
+    let art = Artifacts::at(tmp.join("artifacts").to_str().unwrap());
+    let mut msgs: Vec<String> = Vec::new();
+    write_dev_checkpoints(&art, &mut |m| msgs.push(m.to_string())).unwrap();
+    assert!(msgs.iter().any(|m| m.contains("tinylm_mha")), "ensure_ready marker written");
+    std::fs::create_dir_all(art.data_dir()).unwrap();
+    let calib = SynthVision::new(42).generate_split(128, 2);
+    grail::data::io::write_images(&art.data("vision_calib.imgs"), &calib).unwrap();
+    art
+}
+
+/// End-to-end daemon contract: a submitted plan job produces exactly
+/// the plan a direct resolve produces; resubmitting it re-queues and
+/// serves the statistics from the cache; a job against a missing
+/// checkpoint retries the configured number of times, lands `failed`
+/// with the error captured, and never stalls the queue.
+#[test]
+fn daemon_plan_matches_direct_retries_bounded_and_caches() {
+    let tmp = tmp_dir("daemon");
+    let art = fake_artifacts(&tmp);
+    let opts = ExpOptions {
+        out_dir: tmp.join("out").to_string_lossy().into_owned(),
+        artifacts: art,
+        quick: true,
+        seed: 0,
+        cache: None,
+    };
+
+    // A statistics-hungry spec: the gram-sensitivity allocator runs a
+    // full calibration pass, so the cache has real traffic to account
+    // (a per-site budget would resolve with no statistics at all).
+    let spec_path = tmp.join("job.spec.toml");
+    std::fs::write(
+        &spec_path,
+        "[model]\nfamily = \"mlp\"\nckpt = \"mlp_dev\"\n\n\
+         [pipeline]\nmethod = \"mag-l2\"\nratio = 0.5\nshards = 4\nworkers = 1\n\n\
+         [budget]\nmode = \"gram-sensitivity\"\ntarget_ratio = 0.5\n",
+    )
+    .unwrap();
+    let spec_str = spec_path.to_str().unwrap();
+
+    // Direct, cold resolution — the reference output.
+    let sj = SpecJob::load(spec_str).unwrap();
+    assert_eq!(sj.family, Family::Mlp);
+    let direct = resolve_job_plan(&opts, sj.family, "mlp_dev", &sj.spec).unwrap();
+
+    let root = ServeRoot::at(tmp.join("serve"));
+    let cfg = ServeConfig { jobs: 1, once: true, poll_ms: 10 };
+
+    let (id, re) = daemon::submit_file(&root, spec_str, JobVerb::Plan, 1, "", "").unwrap();
+    assert!(!re);
+    daemon::serve(&opts, &root, &cfg).unwrap();
+
+    let rec = JobRecord::load(&root.job_dir(&id)).unwrap();
+    assert_eq!(rec.state, JobState::Done, "error: {}", rec.error);
+    assert_eq!(rec.attempts, 1);
+    assert_eq!(rec.result, format!("results/{id}/plan.toml"));
+    let daemon_plan = std::fs::read(root.root.join(&rec.result)).unwrap();
+    assert_eq!(
+        daemon_plan,
+        direct.to_toml().into_bytes(),
+        "daemon plan diverged from direct `grail plan`"
+    );
+    assert!(rec.cache_misses > 0, "sensitivity pass must populate the cache");
+    assert_eq!(rec.cache_hits, 0);
+
+    // Resubmit the finished job: re-queued, served warm.
+    let (id2, re2) = daemon::submit_file(&root, spec_str, JobVerb::Plan, 1, "", "").unwrap();
+    assert_eq!(id2, id);
+    assert!(re2, "terminal job must re-queue");
+    daemon::serve(&opts, &root, &cfg).unwrap();
+    let rec = JobRecord::load(&root.job_dir(&id)).unwrap();
+    assert_eq!(rec.state, JobState::Done, "error: {}", rec.error);
+    assert!(rec.cache_hits > 0, "warm re-run must hit the statistics cache");
+    let warm_plan = std::fs::read(root.root.join(&rec.result)).unwrap();
+    assert_eq!(warm_plan, direct.to_toml().into_bytes(), "warm daemon plan diverged");
+
+    // A poisoned job (missing checkpoint) fails after `1 + retries`
+    // observable attempts while a healthy job in the same drain cycle
+    // completes.
+    let (bad, _) =
+        daemon::submit_file(&root, spec_str, JobVerb::Plan, 1, "", "no_such_ckpt").unwrap();
+    assert_ne!(bad, id, "ckpt override participates in the job id");
+    let (good, good_re) = daemon::submit_file(&root, spec_str, JobVerb::Plan, 1, "", "").unwrap();
+    assert_eq!(good, id);
+    assert!(good_re);
+    daemon::serve(&opts, &root, &cfg).unwrap();
+
+    let bad_rec = JobRecord::load(&root.job_dir(&bad)).unwrap();
+    assert_eq!(bad_rec.state, JobState::Failed);
+    assert_eq!(bad_rec.attempts, 2, "retries = 1 means two attempts");
+    assert!(!bad_rec.error.is_empty(), "failure must capture the error");
+    let bad_log = std::fs::read_to_string(root.job_dir(&bad).join("log.txt")).unwrap();
+    assert_eq!(
+        bad_log.matches("state=running").count(),
+        2,
+        "both attempts must be observable in the job log:\n{bad_log}"
+    );
+    assert!(bad_log.contains("state=failed"), "terminal state logged:\n{bad_log}");
+
+    let good_rec = JobRecord::load(&root.job_dir(&good)).unwrap();
+    assert_eq!(good_rec.state, JobState::Done, "queue must drain around the failure");
+
+    std::fs::remove_dir_all(&tmp).ok();
+}
