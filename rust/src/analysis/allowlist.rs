@@ -1,0 +1,160 @@
+//! The committed lint allowlist (`analysis/allowlist.txt`).
+//!
+//! Line grammar (one entry per line; `#` comments and blanks ignored):
+//!
+//! ```text
+//! <lint-id> <path-glob> [allow=N] -- <one-line justification>
+//! ```
+//!
+//! The glob uses the spec matcher's `*`/`?` wildcards
+//! ([`crate::grail::spec::glob_match`]; `*` crosses `/`). `allow=N`
+//! ratchets the entry: it waives at most `N` findings, so new
+//! violations in an already-exempted file still fail `--deny` instead
+//! of hiding behind a blanket exemption. A missing justification is a
+//! configuration error — every exemption must say *why* — and an
+//! entry that matches nothing is reported as a `stale-allowlist`
+//! warning so dead exemptions get pruned.
+
+use crate::grail::spec::glob_match;
+use anyhow::{bail, Result};
+
+/// One parsed allowlist entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllowEntry {
+    pub lint: String,
+    pub glob: String,
+    /// Max findings this entry may waive (`None` = unbounded).
+    pub max: Option<usize>,
+    pub justification: String,
+    /// 1-based line in the allowlist file (for stale reports).
+    pub src_line: usize,
+    /// Findings waived so far (for the ratchet and staleness).
+    pub used: usize,
+}
+
+impl AllowEntry {
+    /// Whether this entry can waive one more `(lint, file)` finding.
+    fn covers(&self, lint: &str, file: &str) -> bool {
+        let budget_left = match self.max {
+            Some(m) => self.used < m,
+            None => true,
+        };
+        self.lint == lint && budget_left && glob_match(&self.glob, file)
+    }
+}
+
+/// Parse the allowlist text. Errors on malformed lines or entries
+/// without a justification.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>> {
+    let mut out = Vec::new();
+    for (ln0, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let src_line = ln0 + 1;
+        let Some((head, justification)) = line.split_once("--") else {
+            bail!("allowlist line {src_line}: missing `-- <justification>`: {line}");
+        };
+        let justification = justification.trim().to_string();
+        if justification.is_empty() {
+            bail!("allowlist line {src_line}: empty justification");
+        }
+        let fields: Vec<&str> = head.split_whitespace().collect();
+        let (lint, glob, rest) = match fields.as_slice() {
+            [lint, glob] => (*lint, *glob, None),
+            [lint, glob, rest] => (*lint, *glob, Some(*rest)),
+            _ => bail!("allowlist line {src_line}: expected `<lint> <glob> [allow=N]`: {line}"),
+        };
+        let max = match rest {
+            None => None,
+            Some(r) => {
+                let Some(n) = r.strip_prefix("allow=") else {
+                    bail!("allowlist line {src_line}: unknown field `{r}` (want allow=N)");
+                };
+                let n: usize = n
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("allowlist line {src_line}: bad allow count"))?;
+                Some(n)
+            }
+        };
+        out.push(AllowEntry {
+            lint: lint.to_string(),
+            glob: glob.to_string(),
+            max,
+            justification,
+            src_line,
+            used: 0,
+        });
+    }
+    Ok(out)
+}
+
+/// Apply the allowlist to findings (in their sorted order, so ratchet
+/// budgets are consumed deterministically). Returns the entries with
+/// their `used` counters updated; findings that matched get their
+/// `allowed` justification set.
+pub fn apply_allowlist(entries: &mut [AllowEntry], findings: &mut [super::report::Finding]) {
+    for f in findings.iter_mut() {
+        for e in entries.iter_mut() {
+            if e.covers(f.lint, &f.file) {
+                e.used += 1;
+                f.allowed = Some(e.justification.clone());
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::report::Finding;
+    use super::*;
+
+    #[test]
+    fn parses_entries_and_ratchets() {
+        let text = "\
+# comment
+forbidden-nondeterminism rust/src/serve/daemon.rs -- wall-clock is operator telemetry
+float-reduction-discipline rust/src/nn/*.rs allow=2 -- fold sums, fixed order
+";
+        let es = parse_allowlist(text).unwrap();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es[0].max, None);
+        assert_eq!(es[1].max, Some(2));
+        assert_eq!(es[1].src_line, 4);
+        assert!(es[1].justification.contains("fixed order"));
+    }
+
+    #[test]
+    fn missing_justification_is_an_error() {
+        assert!(parse_allowlist("undocumented-unsafe rust/src/a.rs\n").is_err());
+        assert!(parse_allowlist("undocumented-unsafe rust/src/a.rs --   \n").is_err());
+        assert!(parse_allowlist("undocumented-unsafe rust/src/a.rs allow=x -- y\n").is_err());
+        assert!(parse_allowlist("undocumented-unsafe rust/src/a.rs bogus=1 -- y\n").is_err());
+    }
+
+    #[test]
+    fn ratchet_waives_only_n_findings() {
+        let mut es =
+            parse_allowlist("lint-a rust/src/x.rs allow=1 -- one known site\n").unwrap();
+        let mut fs = vec![
+            Finding::new("lint-a", "rust/src/x.rs", 1, "m".into()),
+            Finding::new("lint-a", "rust/src/x.rs", 2, "m".into()),
+            Finding::new("lint-b", "rust/src/x.rs", 3, "m".into()),
+        ];
+        apply_allowlist(&mut es, &mut fs);
+        assert!(fs[0].allowed.is_some());
+        assert!(fs[1].allowed.is_none(), "ratchet exhausted after one waiver");
+        assert!(fs[2].allowed.is_none(), "different lint never matches");
+        assert_eq!(es[0].used, 1);
+    }
+
+    #[test]
+    fn globs_cross_directories() {
+        let mut es = parse_allowlist("lint-a rust/src/bench_util/* -- bench timing\n").unwrap();
+        let mut fs = vec![Finding::new("lint-a", "rust/src/bench_util/mod.rs", 5, "m".into())];
+        apply_allowlist(&mut es, &mut fs);
+        assert!(fs[0].allowed.is_some());
+    }
+}

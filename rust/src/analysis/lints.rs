@@ -1,0 +1,396 @@
+//! The five repo-specific lints behind `grail check`.
+//!
+//! Each lint is a pure function from scanned sources to [`Finding`]s;
+//! policy (which modules are blessed, which tokens are forbidden) is
+//! encoded in the `const` tables here so a reviewer can audit the
+//! whole ruleset in one screen. Exemptions for *specific sites* live
+//! in the committed allowlist (`analysis/allowlist.txt`), not here.
+//!
+//! What each lint protects (see `docs/INVARIANTS.md` for the map):
+//!
+//! - `undocumented-unsafe` — every `unsafe` keyword carries a
+//!   `// SAFETY:` contract (same line, or in the comment/attribute
+//!   block immediately above).
+//! - `forbidden-nondeterminism` — no wall clocks, `std::hash`
+//!   randomized containers, raw thread spawns, or env reads outside
+//!   the allowlisted modules; this is the lint that protects digest
+//!   stability and worker-count bit-invariance.
+//! - `float-reduction-discipline` — no `+=` accumulation over a loop
+//!   variable outside the blessed kernels (`tensor::ops`,
+//!   `tensor::gemm`, `linalg`), so every reduction flows through the
+//!   oracle-checked engine.
+//! - `wire-format-casts` — no bare `as` narrowing casts in the wire
+//!   format modules; lengths and geometry go through the checked
+//!   `wire_u32`/`wire_u64`/`try_from` helpers.
+//! - `oracle-pairing` — every `*_ref` oracle has a fast counterpart
+//!   and a test referencing it, and the known fast entry points keep
+//!   their oracles test-covered.
+
+use super::report::Finding;
+use super::scan::{has_word, is_word_byte, line_of, word_find_all, SourceFile};
+
+/// Tokens whose presence outside allowlisted modules breaks the
+/// determinism contract (wall clocks, randomized hashing, ad-hoc
+/// threads, environment reads).
+const FORBIDDEN_NONDET: &[&str] = &[
+    "Instant::now",
+    "SystemTime",
+    "thread::spawn",
+    "env::var",
+    "env::vars",
+    "env::var_os",
+    "HashMap",
+    "HashSet",
+    "RandomState",
+    "DefaultHasher",
+];
+
+/// Substrings marking an integer-typed accumulation (rescues `+=`
+/// counters from the float-reduction lint).
+const INT_HINTS: &[&str] = &[".len()", "usize", "u64", "u32", "i64", "i32", "u8", "count("];
+
+/// Modules whose reductions are the blessed, oracle-checked kernels.
+const FLOAT_BLESSED: &[&str] =
+    &["rust/src/tensor/ops.rs", "rust/src/tensor/gemm.rs", "rust/src/linalg/"];
+
+/// Wire-format modules where `as` narrowing casts are forbidden.
+const WIRE_MODULES: &[&str] =
+    &["rust/src/serve/digest.rs", "rust/src/serve/cache.rs", "rust/src/grail/mod.rs"];
+
+/// Integer target types of a narrowing/reinterpreting `as` cast.
+const INT_CAST_TARGETS: &[&str] =
+    &["u8", "u16", "u32", "u64", "usize", "i8", "i16", "i32", "i64", "isize"];
+
+/// Known fast entry point → oracle pairs, beyond the generic `*_ref`
+/// suffix rule (rescan oracles follow a different naming scheme).
+const ORACLE_PAIRS: &[(&str, &str)] = &[
+    ("gemm_acc", "gemm_acc_ref"),
+    ("gemm_nt_acc", "gemm_nt_acc_ref"),
+    ("syrk_upper_acc", "syrk_upper_acc_ref"),
+    ("solve_spd_multi", "solve_spd_multi_ref"),
+    ("forward", "forward_ref"),
+    ("generate", "generate_rescan"),
+    ("compress_model", "compress_model_rescan"),
+];
+
+/// `undocumented-unsafe`: every `unsafe` keyword needs a `SAFETY:`
+/// marker on the same line or in the contiguous comment/attribute
+/// block above it (`/// # Safety` doc sections count).
+pub fn lint_unsafe(f: &SourceFile) -> Vec<Finding> {
+    let raw_lines: Vec<&str> = f.raw.split('\n').collect();
+    let mut out = Vec::new();
+    for pos in word_find_all(&f.masked, "unsafe") {
+        let ln = line_of(&f.masked, pos);
+        if unsafe_is_documented(&raw_lines, ln) {
+            continue;
+        }
+        out.push(Finding::new(
+            "undocumented-unsafe",
+            &f.rel,
+            ln,
+            "`unsafe` without a `// SAFETY:` contract".to_string(),
+        ));
+    }
+    out
+}
+
+fn unsafe_is_documented(raw_lines: &[&str], ln: usize) -> bool {
+    if raw_lines[ln - 1].contains("SAFETY:") {
+        return true;
+    }
+    // Walk up through the contiguous comment/attribute/blank block.
+    let lo = ln.saturating_sub(31);
+    for up in (lo..ln.saturating_sub(1)).rev() {
+        let t = raw_lines[up].trim();
+        if t.starts_with("//") {
+            if t.contains("SAFETY:") || t.contains("# Safety") {
+                return true;
+            }
+        } else if !(t.starts_with("#[") || t.starts_with("#![") || t.is_empty()) {
+            break;
+        }
+    }
+    false
+}
+
+/// `forbidden-nondeterminism`: forbidden tokens outside test regions.
+/// Module-level exemptions go through the allowlist, not this lint.
+pub fn lint_nondet(f: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for tok in FORBIDDEN_NONDET {
+        for pos in word_find_all(&f.masked, tok) {
+            let ln = line_of(&f.masked, pos);
+            if f.in_test[ln - 1] {
+                continue;
+            }
+            out.push(Finding::new(
+                "forbidden-nondeterminism",
+                &f.rel,
+                ln,
+                format!("forbidden nondeterminism source `{tok}`"),
+            ));
+        }
+    }
+    out
+}
+
+/// `float-reduction-discipline`: a `+=` whose right-hand side varies
+/// with an enclosing loop variable while the target does not is a
+/// serial reduction — those belong in the blessed kernels where the
+/// `*_ref` oracles pin the summation order. Integer accumulations
+/// (literal RHS or `INT_HINTS` on either side) are rescued.
+pub fn lint_float_reduction(f: &SourceFile) -> Vec<Finding> {
+    if f.is_testfile || FLOAT_BLESSED.iter().any(|m| f.rel.starts_with(m)) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut loop_stack: Vec<(i64, String)> = Vec::new();
+    let mut depth = 0i64;
+    for (ln0, line) in f.masked.split('\n').enumerate() {
+        let opens = line.bytes().filter(|&c| c == b'{').count() as i64;
+        let closes = line.bytes().filter(|&c| c == b'}').count() as i64;
+        if opens > 0 {
+            if let Some(var) = for_loop_var(line) {
+                loop_stack.push((depth + 1, var));
+            }
+        }
+        depth += opens - closes;
+        while loop_stack.last().is_some_and(|(d, _)| depth < *d) {
+            loop_stack.pop();
+        }
+        if f.in_test[ln0] {
+            continue;
+        }
+        let Some(idx) = line.find("+=") else { continue };
+        let target = line[..idx].trim().trim_start_matches('*').trim();
+        let rhs = line[idx + 2..].split(';').next().unwrap_or("").trim();
+        if !rhs.is_empty() && rhs.bytes().all(|c| c.is_ascii_digit()) {
+            continue; // integer counter
+        }
+        if INT_HINTS.iter().any(|h| rhs.contains(h) || target.contains(h)) {
+            continue; // integer-typed accumulation
+        }
+        for (_, var) in &loop_stack {
+            if has_word(rhs, var) && !has_word(target, var) {
+                out.push(Finding::new(
+                    "float-reduction-discipline",
+                    &f.rel,
+                    ln0 + 1,
+                    format!("`+=` reduction over loop variable `{var}` outside blessed kernels"),
+                ));
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Extract the (first) binding of a `for` pattern on this masked line:
+/// `for x in`, `for (a, b) in` → `a`, `for &mut v in` → `v`.
+fn for_loop_var(line: &str) -> Option<String> {
+    let pos = *word_find_all(line, "for").first()?;
+    let mut rest = line[pos + 3..].trim_start();
+    rest = rest.strip_prefix('(').unwrap_or(rest).trim_start();
+    rest = rest.strip_prefix('&').unwrap_or(rest).trim_start();
+    if let Some(r) = rest.strip_prefix("mut ") {
+        rest = r.trim_start();
+    }
+    let end = rest.bytes().position(|c| !is_word_byte(c)).unwrap_or(rest.len());
+    let ident = &rest[..end];
+    if ident.is_empty() || ident.bytes().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    Some(ident.to_string())
+}
+
+/// `wire-format-casts`: `as <int>` in the wire modules, outside test
+/// regions. Wire lengths and geometry must go through checked
+/// conversions (`serve::digest::wire_u32`/`wire_u64`, `try_from`).
+pub fn lint_wire_casts(f: &SourceFile) -> Vec<Finding> {
+    if !WIRE_MODULES.iter().any(|m| f.rel.starts_with(m)) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (ln0, line) in f.masked.split('\n').enumerate() {
+        if f.in_test[ln0] {
+            continue;
+        }
+        for pos in word_find_all(line, "as") {
+            let rest = line[pos + 2..].trim_start();
+            let end = rest.bytes().position(|c| !is_word_byte(c)).unwrap_or(rest.len());
+            let ty = &rest[..end];
+            if INT_CAST_TARGETS.contains(&ty) {
+                out.push(Finding::new(
+                    "wire-format-casts",
+                    &f.rel,
+                    ln0 + 1,
+                    format!("unchecked `as {ty}` cast in a wire-format module"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `oracle-pairing` over the whole source set: the generic `*_ref`
+/// rule (every oracle defined outside a test region needs a fast
+/// counterpart and a test reference) plus the configured
+/// [`ORACLE_PAIRS`]. `test_text` is the concatenated masked text of
+/// every test region and test/bench file.
+pub fn lint_oracles(files: &[SourceFile], test_text: &str) -> Vec<Finding> {
+    let mut defs: Vec<(String, String, usize)> = Vec::new(); // (name, file, line)
+    for f in files {
+        if f.is_testfile || !f.rel.starts_with("rust/src") {
+            continue;
+        }
+        for pos in word_find_all(&f.masked, "fn") {
+            let ln = line_of(&f.masked, pos);
+            if f.in_test[ln - 1] {
+                continue;
+            }
+            let rest = f.masked[pos + 2..].trim_start();
+            let end = rest.bytes().position(|c| !is_word_byte(c)).unwrap_or(rest.len());
+            let name = &rest[..end];
+            if !name.is_empty() && !defs.iter().any(|(n, _, _)| n == name) {
+                defs.push((name.to_string(), f.rel.clone(), ln));
+            }
+        }
+    }
+    let lookup = |name: &str| defs.iter().find(|(n, _, _)| n == name);
+    let mut out = Vec::new();
+    for (name, file, ln) in &defs {
+        let Some(stem) = name.strip_suffix("_ref") else { continue };
+        if lookup(stem).is_none() {
+            out.push(Finding::new(
+                "oracle-pairing",
+                file,
+                *ln,
+                format!("oracle `{name}` has no fast counterpart `{stem}`"),
+            ));
+        }
+        if !has_word(test_text, name) {
+            out.push(Finding::new(
+                "oracle-pairing",
+                file,
+                *ln,
+                format!("oracle `{name}` is not referenced by any test"),
+            ));
+        }
+    }
+    for (fast, oracle) in ORACLE_PAIRS {
+        let Some((_, file, ln)) = lookup(fast) else { continue };
+        if lookup(oracle).is_none() {
+            out.push(Finding::new(
+                "oracle-pairing",
+                file,
+                *ln,
+                format!("fast entry `{fast}` has no oracle `{oracle}`"),
+            ));
+        } else if !has_word(test_text, oracle) {
+            out.push(Finding::new(
+                "oracle-pairing",
+                file,
+                *ln,
+                format!("oracle `{oracle}` for `{fast}` is not referenced by any test"),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(rel: &str, text: &str) -> SourceFile {
+        SourceFile::new(rel.to_string(), text.to_string())
+    }
+
+    #[test]
+    fn unsafe_lint_requires_safety_contract() {
+        let bad = src("rust/src/x.rs", "fn f() {\n    unsafe { g() }\n}\n");
+        assert_eq!(lint_unsafe(&bad).len(), 1);
+        assert_eq!(lint_unsafe(&bad)[0].line, 2);
+        let good = src(
+            "rust/src/x.rs",
+            "fn f() {\n    // SAFETY: g is sound.\n    unsafe { g() }\n}\n",
+        );
+        assert!(lint_unsafe(&good).is_empty());
+        let doc = src(
+            "rust/src/x.rs",
+            "/// # Safety\n/// Caller checks cpu features.\nunsafe fn g() {}\n",
+        );
+        assert!(lint_unsafe(&doc).is_empty());
+        let masked = src("rust/src/x.rs", "let s = \"unsafe\"; // unsafe in comment\n");
+        assert!(lint_unsafe(&masked).is_empty(), "strings and comments are masked");
+    }
+
+    #[test]
+    fn nondet_lint_flags_tokens_outside_tests() {
+        let bad = src("rust/src/x.rs", "use std::collections::HashMap;\n");
+        let f = lint_nondet(&bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 1);
+        let in_test = src(
+            "rust/src/x.rs",
+            "fn a() {}\n#[cfg(test)]\nmod tests {\n    use std::time::Instant;\n}\n",
+        );
+        assert!(lint_nondet(&in_test).is_empty(), "test regions are exempt");
+    }
+
+    #[test]
+    fn float_reduction_lint_flags_loop_accumulation() {
+        let bad = src(
+            "rust/src/nn/x.rs",
+            "fn s(x: &[f32]) -> f32 {\n    let mut s = 0.0;\n    for v in x {\n        s += v;\n    }\n    s\n}\n",
+        );
+        let f = lint_float_reduction(&bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 4);
+        // Integer counters and .len()-typed sums are rescued.
+        let ok = src(
+            "rust/src/nn/x.rs",
+            "fn c(x: &[Vec<u8>]) -> usize {\n    let mut n = 0usize;\n    for v in x {\n        n += v.len();\n    }\n    n\n}\n",
+        );
+        assert!(lint_float_reduction(&ok).is_empty());
+        // Blessed kernels are exempt wholesale.
+        let blessed = src(
+            "rust/src/tensor/ops.rs",
+            "fn s(x: &[f32]) -> f32 {\n    let mut s = 0.0;\n    for v in x {\n        s += v;\n    }\n    s\n}\n",
+        );
+        assert!(lint_float_reduction(&blessed).is_empty());
+    }
+
+    #[test]
+    fn wire_cast_lint_scoped_to_wire_modules() {
+        let bad = src("rust/src/serve/cache.rs", "let n = shards.len() as u32;\n");
+        let f = lint_wire_casts(&bad);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("as u32"));
+        let outside = src("rust/src/nn/x.rs", "let n = shards.len() as u32;\n");
+        assert!(lint_wire_casts(&outside).is_empty());
+        let float = src("rust/src/serve/cache.rs", "let x = n as f64;\n");
+        assert!(lint_wire_casts(&float).is_empty(), "float casts are not wire narrowing");
+    }
+
+    #[test]
+    fn oracle_lint_pairs_refs_with_fast_paths() {
+        let files = vec![
+            src("rust/src/a.rs", "pub fn lonely_ref() {}\n"),
+            src("rust/src/b.rs", "pub fn fast() {}\npub fn fast_ref() {}\n"),
+        ];
+        let f = lint_oracles(&files, "fn t() { fast_ref(); }");
+        assert!(f.iter().any(|x| x.message.contains("`lonely_ref` has no fast counterpart")));
+        assert!(f.iter().any(|x| x.message.contains("`lonely_ref` is not referenced")));
+        assert!(!f.iter().any(|x| x.message.contains("`fast_ref`")));
+    }
+
+    #[test]
+    fn for_loop_var_parses_common_patterns() {
+        assert_eq!(for_loop_var("for i in 0..n {").as_deref(), Some("i"));
+        assert_eq!(for_loop_var("for (h, k) in xs.iter() {").as_deref(), Some("h"));
+        assert_eq!(for_loop_var("for &mut v in xs {").as_deref(), Some("v"));
+        assert_eq!(for_loop_var("let x = 1;"), None);
+        assert_eq!(for_loop_var("for ((a, b), c) in xs {"), None, "nested tuples give up");
+    }
+}

@@ -1,0 +1,132 @@
+//! `grail check` — the repo-native static-analysis pass.
+//!
+//! A dependency-free, comment/string-aware token scanner over
+//! `rust/src`, `rust/tests`, and `benches` that enforces the crate's
+//! determinism and oracle invariants as lints (see [`lints`]), with a
+//! committed allowlist ([`allowlist`], `analysis/allowlist.txt`) and
+//! both a human table and a JSON report ([`report`]). CI runs
+//! `grail check --deny` on every push; the committed tree must come
+//! back clean (every exemption justified in the allowlist), so a PR
+//! that introduces a stray `HashMap` iteration, an unannotated
+//! `unsafe`, or an un-oracled reduction fails loudly at the source
+//! line instead of silently weakening a bit-identity guarantee.
+//!
+//! The runtime half of the same story — the scheduler write-set race
+//! auditor — lives in [`crate::coordinator::scheduler::audit`].
+
+pub mod allowlist;
+pub mod lints;
+pub mod report;
+pub mod scan;
+
+use allowlist::{apply_allowlist, parse_allowlist, AllowEntry};
+use anyhow::{bail, Context, Result};
+use report::CheckReport;
+use scan::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// Directories scanned, relative to the repo root.
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "benches"];
+
+/// Default allowlist path, relative to the repo root.
+pub const DEFAULT_ALLOWLIST: &str = "analysis/allowlist.txt";
+
+/// Run every lint over the tree at `root` and apply the allowlist at
+/// `allowlist_path` (relative paths resolve against `root`; a missing
+/// file means an empty allowlist). This is the library entry the CLI
+/// verb and the self-tests share.
+pub fn run_check(root: &Path, allowlist_path: &Path) -> Result<CheckReport> {
+    let files = collect_sources(root)?;
+    let mut findings = Vec::new();
+    let mut test_text = String::new();
+    for f in &files {
+        test_text.push_str(&f.test_text());
+        test_text.push('\n');
+        findings.extend(lints::lint_unsafe(f));
+        findings.extend(lints::lint_nondet(f));
+        findings.extend(lints::lint_float_reduction(f));
+        findings.extend(lints::lint_wire_casts(f));
+    }
+    findings.extend(lints::lint_oracles(&files, &test_text));
+    findings.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+
+    let alist = if allowlist_path.is_absolute() {
+        allowlist_path.to_path_buf()
+    } else {
+        root.join(allowlist_path)
+    };
+    let mut entries: Vec<AllowEntry> = match std::fs::read_to_string(&alist) {
+        Ok(text) => parse_allowlist(&text)
+            .with_context(|| format!("parsing allowlist {}", alist.display()))?,
+        Err(_) => Vec::new(),
+    };
+    apply_allowlist(&mut entries, &mut findings);
+    let stale: Vec<AllowEntry> = entries.into_iter().filter(|e| e.used == 0).collect();
+    Ok(CheckReport { findings, stale, files_scanned: files.len() })
+}
+
+/// Collect every `.rs` file under [`SCAN_DIRS`], sorted by relative
+/// path so findings, ratchet consumption, and reports are
+/// deterministic. Missing directories are skipped (the self-test
+/// builds minimal temp trees).
+fn collect_sources(root: &Path) -> Result<Vec<SourceFile>> {
+    let mut paths: Vec<(String, PathBuf)> = Vec::new();
+    for base in SCAN_DIRS {
+        let dir = root.join(base);
+        if dir.is_dir() {
+            walk(&dir, &mut |p| {
+                if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+                    let rel = p
+                        .strip_prefix(root)
+                        .unwrap_or(p)
+                        .components()
+                        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                        .collect::<Vec<_>>()
+                        .join("/");
+                    paths.push((rel, p.to_path_buf()));
+                }
+            })?;
+        }
+    }
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for (rel, p) in paths {
+        let raw = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        out.push(SourceFile::new(rel, raw));
+    }
+    Ok(out)
+}
+
+fn walk(dir: &Path, visit: &mut dyn FnMut(&Path)) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("scanning {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, visit)?;
+        } else {
+            visit(&p);
+        }
+    }
+    Ok(())
+}
+
+/// `grail check [--root DIR] [--allowlist FILE] [--json FILE] [--deny]`
+pub fn check_cli(args: &crate::cli::Args) -> Result<()> {
+    let root = PathBuf::from(args.opt_or("root", "."));
+    let alist = PathBuf::from(args.opt_or("allowlist", DEFAULT_ALLOWLIST));
+    let report = run_check(&root, &alist)?;
+    print!("{}", report.render_table());
+    if let Some(json_path) = args.opt("json") {
+        std::fs::write(json_path, report.render_json())
+            .with_context(|| format!("writing {json_path}"))?;
+        println!("json report: {json_path}");
+    }
+    if args.has("deny") && report.denied_count() > 0 {
+        bail!("grail check: {} denied finding(s)", report.denied_count());
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Findings, the check report, and its human/JSON renderings.
+
+use super::allowlist::AllowEntry;
+
+/// One lint finding at a source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Lint id (`undocumented-unsafe`, `forbidden-nondeterminism`, …).
+    pub lint: &'static str,
+    /// Repo-relative file path (`/` separators).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+    /// Justification of the allowlist entry that waived this finding
+    /// (`None` = denied).
+    pub allowed: Option<String>,
+}
+
+impl Finding {
+    pub fn new(lint: &'static str, file: &str, line: usize, message: String) -> Finding {
+        Finding { lint, file: file.to_string(), line, message, allowed: None }
+    }
+}
+
+/// The result of one `grail check` run.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    /// All findings, sorted by (file, line, lint).
+    pub findings: Vec<Finding>,
+    /// Allowlist entries that matched nothing (`stale-allowlist`
+    /// warnings — reported, never denied).
+    pub stale: Vec<AllowEntry>,
+    /// Files scanned.
+    pub files_scanned: usize,
+}
+
+impl CheckReport {
+    /// Findings not waived by the allowlist.
+    pub fn denied(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.allowed.is_none())
+    }
+
+    pub fn denied_count(&self) -> usize {
+        self.denied().count()
+    }
+
+    pub fn allowed_count(&self) -> usize {
+        self.findings.len() - self.denied_count()
+    }
+
+    /// Human-readable table (one line per finding, denied first).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let mut rows: Vec<&Finding> = self.findings.iter().collect();
+        rows.sort_by(|a, b| {
+            (a.allowed.is_some(), &a.file, a.line, a.lint)
+                .cmp(&(b.allowed.is_some(), &b.file, b.line, b.lint))
+        });
+        for f in rows {
+            let mark = if f.allowed.is_some() { "allow" } else { "DENY " };
+            out.push_str(&format!(
+                "{mark} {:<28} {}:{}  {}\n",
+                f.lint,
+                f.file,
+                f.line,
+                f.message
+            ));
+            if let Some(why) = &f.allowed {
+                out.push_str(&format!("      └─ allowlisted: {why}\n"));
+            }
+        }
+        for e in &self.stale {
+            out.push_str(&format!(
+                "warn  stale-allowlist            {} `{}` (line {}) matched nothing\n",
+                e.lint, e.glob, e.src_line
+            ));
+        }
+        out.push_str(&format!(
+            "grail check: {} file(s), {} finding(s) — {} denied, {} allowlisted, {} stale entr{}\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.denied_count(),
+            self.allowed_count(),
+            self.stale.len(),
+            if self.stale.len() == 1 { "y" } else { "ies" }
+        ));
+        out
+    }
+
+    /// Machine-readable report (schema `grail-check-v1`).
+    pub fn render_json(&self) -> String {
+        let mut s = String::from("{\n  \"schema\": \"grail-check-v1\",\n");
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str(&format!(
+            "  \"counts\": {{\"total\": {}, \"denied\": {}, \"allowed\": {}}},\n",
+            self.findings.len(),
+            self.denied_count(),
+            self.allowed_count()
+        ));
+        s.push_str("  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            let sep = if i + 1 == self.findings.len() { "" } else { "," };
+            let allowed = match &f.allowed {
+                Some(why) => format!("\"{}\"", json_escape(why)),
+                None => "null".to_string(),
+            };
+            s.push_str(&format!(
+                "    {{\"lint\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+                 \"message\": \"{}\", \"allowed\": {}}}{sep}\n",
+                f.lint,
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.message),
+                allowed
+            ));
+        }
+        s.push_str("  ],\n  \"stale_allowlist\": [\n");
+        for (i, e) in self.stale.iter().enumerate() {
+            let sep = if i + 1 == self.stale.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"lint\": \"{}\", \"glob\": \"{}\", \"line\": {}}}{sep}\n",
+                json_escape(&e.lint),
+                json_escape(&e.glob),
+                e.src_line
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> CheckReport {
+        let mut denied = Finding::new("undocumented-unsafe", "rust/src/a.rs", 3, "x".into());
+        denied.message = "`unsafe` without contract".into();
+        let mut allowed = Finding::new("forbidden-nondeterminism", "rust/src/b.rs", 7, "y".into());
+        allowed.allowed = Some("wall-clock is report-only".into());
+        CheckReport { findings: vec![denied, allowed], stale: Vec::new(), files_scanned: 2 }
+    }
+
+    #[test]
+    fn table_marks_denied_and_allowed() {
+        let t = report().render_table();
+        assert!(t.contains("DENY  undocumented-unsafe"));
+        assert!(t.contains("allow forbidden-nondeterminism"));
+        assert!(t.contains("rust/src/a.rs:3"));
+        assert!(t.contains("1 denied, 1 allowlisted"));
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let j = report().render_json();
+        assert!(j.contains("\"schema\": \"grail-check-v1\""));
+        assert!(j.contains("\"denied\": 1"));
+        assert!(j.contains("\"line\": 3"));
+        assert!(j.contains("\"allowed\": null"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

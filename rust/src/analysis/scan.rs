@@ -1,0 +1,298 @@
+//! Comment/string-aware lexical scanning for [`super`] (`grail check`).
+//!
+//! The lints operate on a *masked* view of each source file: comments,
+//! string literals (plain, byte, raw), and char literals are blanked
+//! with spaces (newlines preserved), so a `HashMap` mentioned in a doc
+//! comment or an `unsafe` inside a test-fixture string never trips a
+//! lint. Masking is a small hand-rolled byte scanner — no dependencies
+//! — that understands nested block comments, escape sequences, raw
+//! strings (`r#"…"#`), and the `'a` lifetime vs `'a'` char-literal
+//! ambiguity.
+//!
+//! The scanner also tracks `#[cfg(test)] mod …` regions by brace depth
+//! so lints can treat in-file unit tests like integration tests
+//! (nondeterminism in test scaffolding is fine; the production paths
+//! are what the lints protect).
+
+/// One scanned source file.
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators (stable report keys).
+    pub rel: String,
+    /// Raw text (comment contents stay visible — SAFETY markers live
+    /// here).
+    pub raw: String,
+    /// Comment/string/char-masked text, newline-aligned with `raw`.
+    pub masked: String,
+    /// Per line (0-based): inside a `#[cfg(test)] mod` region, or in a
+    /// test/bench file entirely.
+    pub in_test: Vec<bool>,
+    /// Whole file is test scaffolding (`rust/tests/`, `benches/`).
+    pub is_testfile: bool,
+}
+
+impl SourceFile {
+    pub fn new(rel: String, raw: String) -> SourceFile {
+        let masked = mask_source(&raw);
+        let is_testfile = rel.starts_with("rust/tests/") || rel.starts_with("benches/");
+        let mut in_test = test_region_lines(&masked);
+        if is_testfile {
+            in_test.iter_mut().for_each(|t| *t = true);
+        }
+        SourceFile { rel, raw, masked, in_test, is_testfile }
+    }
+
+    /// The masked text of only the test-region lines (newline-joined)
+    /// — what counts as "referenced by a test" for the oracle lint.
+    pub fn test_text(&self) -> String {
+        self.masked
+            .lines()
+            .zip(&self.in_test)
+            .filter(|(_, &t)| t)
+            .map(|(l, _)| l)
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Blank comments and string/char literals with spaces, preserving
+/// newlines (so line numbers in `masked` match `raw`).
+pub fn mask_source(src: &str) -> String {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let blank = |out: &mut [u8], a: usize, end: usize| {
+        for v in out[a..end.min(n)].iter_mut() {
+            if *v != b'\n' {
+                *v = b' ';
+            }
+        }
+    };
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // Block comments nest in Rust.
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if j + 1 < n && b[j] == b'/' && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if j + 1 < n && b[j] == b'*' && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            // Plain or byte string; honour escapes.
+            let mut j = if c == b'"' { i + 1 } else { i + 2 };
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if let Some(end) = raw_string_end(b, i) {
+            blank(&mut out, i, end);
+            i = end;
+        } else if c == b'\'' {
+            // Char literal vs lifetime.
+            if i + 1 < n && b[i + 1] == b'\\' {
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                let j = (j + 1).min(n);
+                blank(&mut out, i, j);
+                i = j;
+            } else if i + 2 < n && b[i + 2] == b'\'' {
+                blank(&mut out, i, i + 3);
+                i += 3;
+            } else {
+                i += 1; // lifetime
+            }
+        } else {
+            i += 1;
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// If a raw (byte) string literal `r#*"` / `br#*"` starts at `i`,
+/// return the byte index one past its closing `"#*`.
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let n = b.len();
+    let mut j = i;
+    if j < n && b[j] == b'b' {
+        j += 1;
+    }
+    if j >= n || b[j] != b'r' {
+        return None;
+    }
+    // A raw string must not be the tail of an identifier (`for`,
+    // `attr`…): the byte before `i` must be a non-word boundary.
+    if i > 0 && is_word_byte(b[i - 1]) {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < n && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    // Find `"` followed by `hashes` `#`s.
+    while j < n {
+        let close_ok = b[j] == b'"'
+            && j + 1 + hashes <= n
+            && b[j + 1..j + 1 + hashes].iter().all(|&h| h == b'#');
+        if close_ok {
+            return Some(j + 1 + hashes);
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// Per masked line: is it inside a `#[cfg(test)] mod …` block?
+pub fn test_region_lines(masked: &str) -> Vec<bool> {
+    let lines: Vec<&str> = masked.split('\n').collect();
+    let mut in_test = vec![false; lines.len()];
+    let mut pending_cfg = false;
+    let mut depth = 0i64;
+    let mut test_until_depth: Option<i64> = None;
+    for (ln, line) in lines.iter().enumerate() {
+        let t = line.trim();
+        if test_until_depth.is_none() && pending_cfg && t.starts_with("mod ") {
+            test_until_depth = Some(depth);
+        }
+        if t.starts_with("#[cfg(test)]") || t.starts_with("#[cfg(all(test") {
+            pending_cfg = true;
+        } else if !t.is_empty()
+            && !t.starts_with("#[")
+            && test_until_depth.is_none()
+            && !t.starts_with("mod ")
+        {
+            pending_cfg = false;
+        }
+        if test_until_depth.is_some() {
+            in_test[ln] = true;
+        }
+        let opens = line.bytes().filter(|&c| c == b'{').count() as i64;
+        let closes = line.bytes().filter(|&c| c == b'}').count() as i64;
+        depth += opens - closes;
+        if let Some(td) = test_until_depth {
+            if closes > 0 && depth <= td {
+                test_until_depth = None;
+                pending_cfg = false;
+            }
+        }
+    }
+    in_test
+}
+
+pub fn is_word_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of word-bounded occurrences of `needle` in `text`.
+pub fn word_find_all(text: &str, needle: &str) -> Vec<usize> {
+    let t = text.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(off) = text[start..].find(needle) {
+        let i = start + off;
+        let before_ok = i == 0 || !is_word_byte(t[i - 1]);
+        let after = i + needle.len();
+        let after_ok = after >= t.len() || !is_word_byte(t[after]);
+        if before_ok && after_ok {
+            out.push(i);
+        }
+        start = i + 1;
+    }
+    out
+}
+
+/// Whether `text` contains a word-bounded occurrence of `needle`.
+pub fn has_word(text: &str, needle: &str) -> bool {
+    !word_find_all(text, needle).is_empty()
+}
+
+/// 1-based line number of byte offset `pos`.
+pub fn line_of(text: &str, pos: usize) -> usize {
+    text.as_bytes()[..pos].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_line_and_block_comments() {
+        let m = mask_source("let a = 1; // HashMap here\n/* unsafe\n nested /* x */ */ let b;");
+        assert!(!m.contains("HashMap"));
+        assert!(!m.contains("unsafe"));
+        assert!(m.contains("let a = 1;"));
+        assert!(m.contains("let b;"));
+        assert_eq!(m.matches('\n').count(), 2, "newlines survive masking");
+    }
+
+    #[test]
+    fn masks_strings_and_chars_but_not_lifetimes() {
+        let m = mask_source(r#"let s = "unsafe \" HashMap"; let c = '"'; fn f<'a>(x: &'a u8) {}"#);
+        assert!(!m.contains("unsafe"));
+        assert!(!m.contains("HashMap"));
+        assert!(m.contains("<'a>"), "lifetimes are not char literals: {m}");
+        assert!(m.contains("&'a u8"));
+    }
+
+    #[test]
+    fn masks_raw_strings() {
+        let src = "let s = r#\"has \"quotes\" and unsafe\"#; let t = r\"x\"; keep();";
+        let m = mask_source(src);
+        assert!(!m.contains("unsafe"));
+        assert!(!m.contains("quotes"));
+        assert!(m.contains("keep();"));
+        // `r` as an identifier tail must not start a raw string.
+        let m2 = mask_source("for x in y {} attr\"s\"");
+        assert!(m2.contains("for x in y {}"));
+    }
+
+    #[test]
+    fn test_regions_track_brace_depth() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let m = mask_source(src);
+        let t = test_region_lines(&m);
+        assert!(!t[0], "fn a is production code");
+        assert!(t[2] && t[3] && t[4], "mod tests body is a test region");
+        assert!(!t[5], "fn c after the closing brace is production code");
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        assert_eq!(word_find_all("HashMap HashMapX XHashMap", "HashMap"), vec![0]);
+        assert!(has_word("let x: HashMap<u32,u32>;", "HashMap"));
+        assert!(!has_word("let map = my_HashMap;", "HashMap"));
+        assert_eq!(line_of("a\nb\nc", 4), 3);
+    }
+}

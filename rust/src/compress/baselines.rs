@@ -151,7 +151,7 @@ fn flap_plan(
     } else {
         select::top_k(&scores, k_units)
     };
-    let keep_feats: std::collections::HashSet<usize> =
+    let keep_feats: std::collections::BTreeSet<usize> =
         keep.iter().flat_map(|&u| (u * dh)..(u + 1) * dh).collect();
     // Bias compensation: the removed features' mean contribution is
     // baked into the consumer bias, Δ = Σ_{j removed} W[:,j]·mean_j.

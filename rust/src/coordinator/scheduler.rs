@@ -148,6 +148,114 @@ pub fn default_threads() -> usize {
     THREAD_BUDGET.with(|c| c.get()).unwrap_or_else(machine_threads)
 }
 
+/// Write-set race auditor for disjoint-output fan-outs.
+///
+/// The crate's parallel kernels (gemm C row panels, the attention
+/// head-major scatter, the blocked solver's RHS panels) rely on a
+/// *structural* guarantee: every [`run_grid_mut`] / [`run_grid`] job
+/// writes a distinct range of the output buffer, and the ranges tile
+/// it exactly. That property is what makes worker-count
+/// bit-invariance trivially true — no output element has two writers,
+/// at any parallelism. The auditor turns the guarantee into a runtime
+/// assertion: each job *claims* the `(start, len)` range it is about
+/// to write, and [`WriteSet::verify`] panics unless the claims are
+/// pairwise disjoint and cover `[0, total)` with no gaps.
+///
+/// Enabled under `cfg(debug_assertions)` or the `audit` cargo
+/// feature; otherwise [`WriteSet`] is a zero-sized no-op and the
+/// claims compile away, so release kernels pay nothing.
+pub mod audit {
+    #[cfg(any(debug_assertions, feature = "audit"))]
+    mod imp {
+        use std::sync::Mutex;
+
+        /// Collects per-job write claims for one fan-out; see the
+        /// [module docs](super).
+        pub struct WriteSet {
+            label: &'static str,
+            total: usize,
+            /// `(start, len, job)` claims, in claim order.
+            claims: Mutex<Vec<(usize, usize, usize)>>,
+        }
+
+        impl WriteSet {
+            /// New auditor for an output buffer of `total` elements.
+            pub fn new(label: &'static str, total: usize) -> WriteSet {
+                WriteSet { label, total, claims: Mutex::new(Vec::new()) }
+            }
+
+            /// Record that job `job` writes `[start, start + len)`.
+            /// Panics immediately if the range exceeds the buffer.
+            pub fn claim(&self, job: usize, start: usize, len: usize) {
+                assert!(
+                    start + len <= self.total,
+                    "write-set audit [{}]: job {job} claim {start}..{} exceeds \
+                     buffer of {} elements",
+                    self.label,
+                    start + len,
+                    self.total
+                );
+                self.claims.lock().unwrap().push((start, len, job));
+            }
+
+            /// Assert the claims tile `[0, total)` exactly: pairwise
+            /// disjoint, no gaps, full coverage. Call after the
+            /// fan-out joins.
+            pub fn verify(&self) {
+                let mut claims = self.claims.lock().unwrap().clone();
+                claims.sort_unstable();
+                let mut covered = 0usize;
+                let mut prev_job = usize::MAX;
+                for &(start, len, job) in &claims {
+                    assert!(
+                        start >= covered,
+                        "write-set audit [{}]: jobs {prev_job} and {job} overlap at \
+                         element {start} (prior claims cover 0..{covered})",
+                        self.label
+                    );
+                    assert!(
+                        start <= covered,
+                        "write-set audit [{}]: elements {covered}..{start} are uncovered \
+                         (no job claimed them before job {job})",
+                        self.label
+                    );
+                    covered = start + len;
+                    prev_job = job;
+                }
+                assert!(
+                    covered == self.total,
+                    "write-set audit [{}]: elements {covered}..{} are uncovered \
+                     (tail past the last claim)",
+                    self.label,
+                    self.total
+                );
+            }
+        }
+    }
+
+    #[cfg(not(any(debug_assertions, feature = "audit")))]
+    mod imp {
+        /// Zero-cost stand-in: without `debug_assertions` or the
+        /// `audit` feature, claims and verification compile away.
+        pub struct WriteSet;
+
+        impl WriteSet {
+            #[inline(always)]
+            pub fn new(_label: &'static str, _total: usize) -> WriteSet {
+                WriteSet
+            }
+
+            #[inline(always)]
+            pub fn claim(&self, _job: usize, _start: usize, _len: usize) {}
+
+            #[inline(always)]
+            pub fn verify(&self) {}
+        }
+    }
+
+    pub use imp::WriteSet;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,5 +336,142 @@ mod tests {
         assert!(out.is_empty());
         let mut one = vec![7u8];
         assert_eq!(run_grid_mut(&mut one, 8, |_, j| *j + 1), vec![8]);
+    }
+
+    #[test]
+    fn run_grid_remainder_ordering() {
+        // n not divisible by threads: outputs must still land at
+        // their job index, for several awkward (n, threads) pairs.
+        for (n, threads) in [(7usize, 3usize), (5, 4), (9, 2), (11, 8)] {
+            let jobs: Vec<usize> = (0..n).collect();
+            let out = run_grid(jobs, threads, |i, &j| {
+                assert_eq!(i, j, "worker sees its own job");
+                j * 10 + 1
+            });
+            let want: Vec<usize> = (0..n).map(|j| j * 10 + 1).collect();
+            assert_eq!(out, want, "n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_grid_mut_remainder_ordering() {
+        // The chunked fan-out: the last chunk is short when
+        // threads ∤ n; index arithmetic must still line up jobs,
+        // outputs, and mutations.
+        for (n, threads) in [(7usize, 3usize), (5, 4), (23, 4), (10, 7)] {
+            let mut jobs: Vec<usize> = (0..n).collect();
+            let out = run_grid_mut(&mut jobs, threads, |i, j| {
+                assert_eq!(i, *j, "chunk offset arithmetic");
+                *j += 1000;
+                i
+            });
+            assert_eq!(out, (0..n).collect::<Vec<_>>(), "n={n} threads={threads}");
+            assert_eq!(jobs, (1000..1000 + n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn run_grid_panic_propagates_without_dropping_siblings() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::atomic::AtomicUsize;
+        let completed = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            run_grid((0..16).collect::<Vec<usize>>(), 4, |i, _| {
+                if i == 7 {
+                    panic!("worker 7 exploded");
+                }
+                completed.fetch_add(1, Ordering::SeqCst);
+                i
+            })
+        }));
+        assert!(result.is_err(), "the worker panic must propagate to the caller");
+        // The panicking thread dies, but the cursor keeps serving the
+        // remaining jobs to its siblings: nothing is silently dropped.
+        assert_eq!(completed.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn run_grid_mut_panic_propagates_without_dropping_siblings() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::atomic::AtomicUsize;
+        let completed = AtomicUsize::new(0);
+        let mut jobs: Vec<usize> = (0..8).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            run_grid_mut(&mut jobs, 4, |i, j| {
+                if i == 3 {
+                    panic!("worker on job 3 exploded");
+                }
+                *j += 100;
+                completed.fetch_add(1, Ordering::SeqCst);
+            })
+        }));
+        assert!(result.is_err(), "the worker panic must propagate to the caller");
+        // Chunks are [0,1] [2,3] [4,5] [6,7]: the panicking chunk
+        // loses only the job that panicked; every other chunk drains.
+        assert_eq!(completed.load(Ordering::SeqCst), 7);
+        assert_eq!(jobs[2], 102, "the panicking chunk's earlier job still ran");
+        assert_eq!(jobs[3], 3, "the panicking job left its input untouched");
+        for (i, &j) in jobs.iter().enumerate() {
+            if i != 3 {
+                assert_eq!(j, i + 100, "sibling job {i} completed");
+            }
+        }
+    }
+}
+
+#[cfg(all(test, any(debug_assertions, feature = "audit")))]
+mod audit_tests {
+    use super::audit::WriteSet;
+    use super::run_grid_mut;
+
+    #[test]
+    fn disjoint_full_cover_passes() {
+        let ws = WriteSet::new("unit", 10);
+        ws.claim(0, 0, 4);
+        ws.claim(1, 4, 6);
+        ws.verify();
+        // Claim order must not matter.
+        let ws = WriteSet::new("unit-rev", 10);
+        ws.claim(1, 6, 4);
+        ws.claim(0, 0, 6);
+        ws.verify();
+        // Empty buffer, no claims.
+        WriteSet::new("empty", 0).verify();
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn overlapping_claims_panic() {
+        // The deliberately-overlapping negative case from ISSUE 8:
+        // two workers claiming intersecting output ranges must die in
+        // verify, not silently race.
+        let ws = WriteSet::new("overlap", 12);
+        let mut jobs: Vec<(usize, usize)> = vec![(0, 8), (4, 8)];
+        run_grid_mut(&mut jobs, 2, |ji, job| ws.claim(ji, job.0, job.1));
+        ws.verify();
+    }
+
+    #[test]
+    #[should_panic(expected = "uncovered")]
+    fn coverage_gap_panics() {
+        let ws = WriteSet::new("gap", 10);
+        ws.claim(0, 0, 4);
+        ws.claim(1, 6, 4);
+        ws.verify();
+    }
+
+    #[test]
+    #[should_panic(expected = "uncovered")]
+    fn uncovered_tail_panics() {
+        let ws = WriteSet::new("tail", 10);
+        ws.claim(0, 0, 4);
+        ws.verify();
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn claim_past_end_panics() {
+        let ws = WriteSet::new("oob", 10);
+        ws.claim(0, 8, 4);
     }
 }

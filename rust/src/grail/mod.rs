@@ -27,6 +27,7 @@ pub use spec::{
 
 use crate::compress::Reducer;
 use crate::linalg::{mean_diag, ridge_reconstruction_with};
+use crate::serve::digest::{wire_u32, wire_u64};
 use crate::tensor::{ops, Tensor};
 
 /// Default ridge scale α — the top of the paper’s range (α ∈
@@ -112,8 +113,8 @@ impl ActStats {
     /// ([`crate::serve::cache`]).
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         let h = self.width();
-        out.extend_from_slice(&(h as u32).to_le_bytes());
-        out.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        out.extend_from_slice(&wire_u32(h, "ActStats width"));
+        out.extend_from_slice(&wire_u64(self.rows, "ActStats rows"));
         for v in &self.mean {
             out.extend_from_slice(&v.to_le_bytes());
         }
@@ -131,8 +132,11 @@ impl ActStats {
             *pos += n;
             Some(s)
         };
-        let h = u32::from_le_bytes(take(pos, 4)?.try_into().ok()?) as usize;
-        let rows = u64::from_le_bytes(take(pos, 8)?.try_into().ok()?) as usize;
+        // Checked narrowing: geometry this machine cannot index (u64
+        // rows on a 32-bit target) decodes as `None` → the caller's
+        // corrupt-entry path, never a silent wrap.
+        let h = usize::try_from(u32::from_le_bytes(take(pos, 4)?.try_into().ok()?)).ok()?;
+        let rows = usize::try_from(u64::from_le_bytes(take(pos, 8)?.try_into().ok()?)).ok()?;
         let mut mean = Vec::with_capacity(h);
         for _ in 0..h {
             mean.push(f32::from_le_bytes(take(pos, 4)?.try_into().ok()?));

@@ -23,7 +23,11 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::manual_memcpy)]
 #![allow(clippy::uninlined_format_args)]
+// Every `unsafe` operation inside an `unsafe fn` must carry its own
+// `unsafe {}` block (and, by `grail check`, its own SAFETY comment).
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod analysis;
 pub mod bench_util;
 pub mod cli;
 pub mod compress;

@@ -28,7 +28,7 @@
 //! [`super::solve_spd_multi_ref`] for equivalence tests); only the
 //! summation order differs.
 
-use crate::coordinator::scheduler::{default_threads, run_grid};
+use crate::coordinator::scheduler::{audit::WriteSet, default_threads, run_grid};
 use crate::tensor::{ops, Tensor};
 use anyhow::{bail, Result};
 
@@ -190,15 +190,27 @@ impl BlockedCholesky {
             // the result is bit-identical either way.
             default_threads()
         };
+        // Each job owns the RHS columns `[c0, c0 + pw)` exclusively;
+        // the write-set auditor asserts the panels tile `0..m` in both
+        // the serial and the parallel branch (debug/audit builds only).
+        let ws = WriteSet::new("blocked-solver RHS panels", m);
         if threads <= 1 || jobs.len() <= 1 {
-            return jobs
+            let out: Vec<((usize, usize), Vec<f64>)> = jobs
                 .into_iter()
-                .map(|(c0, pw)| ((c0, pw), self.solve_one_panel(b, c0, pw)))
+                .enumerate()
+                .map(|(ji, (c0, pw))| {
+                    ws.claim(ji, c0, pw);
+                    ((c0, pw), self.solve_one_panel(b, c0, pw))
+                })
                 .collect();
+            ws.verify();
+            return out;
         }
-        let solved = run_grid(jobs.clone(), threads, |_, &(c0, pw)| {
+        let solved = run_grid(jobs.clone(), threads, |ji, &(c0, pw)| {
+            ws.claim(ji, c0, pw);
             self.solve_one_panel(b, c0, pw)
         });
+        ws.verify();
         jobs.into_iter().zip(solved).collect()
     }
 

@@ -12,6 +12,7 @@
 //! grail submit <spec.toml> [--verb v]      enqueue a job for the daemon
 //! grail status <job-id>                    one job's state
 //! grail jobs                               all jobs in the queue
+//! grail check [--deny] [--json file]       repo-native static analysis
 //! grail info                               artifact / runtime inventory
 //! ```
 
@@ -48,6 +49,7 @@ fn run() -> Result<()> {
         "submit" => grail::serve::daemon::submit_cli(&args),
         "status" => grail::serve::daemon::status_cli(&args),
         "jobs" => grail::serve::daemon::jobs_cli(&args),
+        "check" => grail::analysis::check_cli(&args),
         "info" => {
             let art = Artifacts::at(args.opt_or("out", "artifacts"));
             println!("artifacts root: {:?}", art.root);
@@ -93,6 +95,7 @@ USAGE:
                [--family f] [--ckpt c] [--root results/serve]
   grail status <job-id> [--root results/serve]
   grail jobs   [--root results/serve]
+  grail check  [--root .] [--deny] [--json file] [--allowlist file]
   grail info
 
 SPEC FILES (TOML subset; full reference in EXPERIMENTS.md, commented

@@ -8,7 +8,7 @@
 //! [`MultiHeadAttention::forward`] exposes as a tap.
 
 use super::{Linear, Tensor};
-use crate::coordinator::scheduler::{default_threads, run_grid_mut};
+use crate::coordinator::scheduler::{audit::WriteSet, default_threads, run_grid_mut};
 use crate::rng::Pcg64;
 use crate::tensor::gemm::Epilogue;
 use crate::tensor::ops;
@@ -231,12 +231,16 @@ impl MultiHeadAttention {
         }
         // One job per (batch, head): disjoint output panels whose
         // values depend only on that job's own input panels — the
-        // worker count can never change the bits.
+        // worker count can never change the bits. The write-set
+        // auditor asserts the head-major scatter panels tile `ctx`
+        // (debug/audit builds only).
         let mut ctx = vec![0.0f32; b * nh * hd];
+        let ws = WriteSet::new("attention context head panels", ctx.len());
         let (qg, kg, vg) = (&qg, &kg, &vg);
         let mut jobs: Vec<(usize, &mut [f32])> = ctx.chunks_mut(hd).enumerate().collect();
         let workers = default_threads().clamp(1, jobs.len());
         run_grid_mut(&mut jobs, workers, |_, job| {
+            ws.claim(job.0, job.0 * hd, job.1.len());
             let (bi, h) = (job.0 / nh, job.0 % nh);
             let qp = &qg[(bi * nh + h) * hd..(bi * nh + h + 1) * hd];
             let kp = &kg[(bi * nkv + h / gs) * hd..(bi * nkv + h / gs + 1) * hd];
@@ -244,6 +248,7 @@ impl MultiHeadAttention {
             let cp: &mut [f32] = &mut *job.1;
             attend_cached(qp, kp, vp, t, t, dh, 0, self.causal, cp);
         });
+        ws.verify();
         for bi in 0..b {
             for h in 0..nh {
                 let src = &ctx[(bi * nh + h) * hd..(bi * nh + h + 1) * hd];

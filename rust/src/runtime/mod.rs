@@ -9,20 +9,20 @@
 use crate::coordinator::paths::Artifacts;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// A PJRT CPU client plus a cache of compiled executables.
 pub struct Runtime {
     client: xla::PjRtClient,
     art: Artifacts,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
     /// Create a CPU runtime over an artifacts directory.
     pub fn cpu(art: Artifacts) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, art, cache: HashMap::new() })
+        Ok(Runtime { client, art, cache: BTreeMap::new() })
     }
 
     /// Platform string (diagnostics).

@@ -31,7 +31,7 @@
 //! atomic (unique temp file + rename), so a crashed writer can leave a
 //! stale temp file but never a half-written entry under a real key.
 
-use super::digest::{digest_bytes, Digest};
+use super::digest::{digest_bytes, wire_u32, Digest};
 use crate::grail::ActStats;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -182,7 +182,7 @@ fn encode_entry(key: &Digest, shards: &[ActStats]) -> Vec<u8> {
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
     out.extend_from_slice(&key.0);
-    out.extend_from_slice(&(shards.len() as u32).to_le_bytes());
+    out.extend_from_slice(&wire_u32(shards.len(), "stats shard count"));
     for s in shards {
         s.encode_into(&mut out);
     }
@@ -223,8 +223,19 @@ fn decode_entry(expect_key: &Digest, bytes: &[u8]) -> DecodeOutcome {
         // bit rot: the wrong content lives under this name.
         return DecodeOutcome::KeyMismatch(Digest(key));
     }
-    let n_shards = u32::from_le_bytes(body[24..28].try_into().unwrap()) as usize;
+    let n_shards = match usize::try_from(u32::from_le_bytes(body[24..28].try_into().unwrap())) {
+        Ok(n) => n,
+        // u32 → usize can only fail on <32-bit targets; a count this
+        // machine cannot even index is corruption, not a panic.
+        Err(_) => return Corrupt("shard count exceeds usize"),
+    };
     pos += 28;
+    // A shard payload is at least 12 bytes (width u32 + rows u64); a
+    // count larger than the remaining payload could ever hold is
+    // corrupt geometry — reject it *before* reserving memory for it.
+    if n_shards > (body.len() - pos) / 12 {
+        return Corrupt("shard count exceeds payload");
+    }
     let mut shards = Vec::with_capacity(n_shards);
     for _ in 0..n_shards {
         match ActStats::decode_from(body, &mut pos) {
@@ -320,6 +331,29 @@ mod tests {
             std::fs::write(&path, &bytes[..cut]).unwrap();
             assert!(cache.load(&key).is_none(), "cut at {cut} must miss");
         }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn oversize_shard_count_is_rejected_not_wrapped() {
+        // Rewrite a valid entry's shard-count field to u32::MAX and
+        // re-sign the checksum: geometry the payload cannot hold must
+        // decode as corruption (→ evicted miss), never allocate for
+        // 4 billion shards or wrap into a wrong small count.
+        let root = tmp_root("oversize");
+        let cache = StatsCache::open(&root).unwrap();
+        let key = digest_bytes(b"site-3");
+        cache.store(&key, &[stats(4, 6, 5)]).unwrap();
+        let path = cache.entry_path(&key);
+        let bytes = std::fs::read(&path).unwrap();
+        let mut body = bytes[..bytes.len() - 16].to_vec();
+        body[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        let sum = digest_bytes(&body);
+        body.extend_from_slice(&sum.0);
+        std::fs::write(&path, &body).unwrap();
+        assert!(cache.load(&key).is_none(), "oversize geometry must miss");
+        assert_eq!(cache.evictions(), 1);
+        assert!(!path.exists(), "the corrupt entry must be evicted");
         std::fs::remove_dir_all(&root).ok();
     }
 

@@ -66,6 +66,27 @@ impl fmt::Display for Digest {
     }
 }
 
+/// Checked usize → u32 little-endian wire field. Panics — rather than
+/// silently wrapping into a wrong-but-plausible on-disk value — when
+/// `v` does not fit; `what` names the field in the panic message.
+/// The wire-format modules must use this (or [`wire_u64`] /
+/// `try_from`) instead of `as` casts; `grail check`'s
+/// `wire-format-casts` lint enforces it.
+pub fn wire_u32(v: usize, what: &str) -> [u8; 4] {
+    u32::try_from(v)
+        .unwrap_or_else(|_| panic!("{what} ({v}) exceeds the u32 wire field"))
+        .to_le_bytes()
+}
+
+/// Checked usize → u64 little-endian wire field (see [`wire_u32`];
+/// infallible on ≤ 64-bit targets, checked everywhere by
+/// construction).
+pub fn wire_u64(v: usize, what: &str) -> [u8; 8] {
+    u64::try_from(v)
+        .unwrap_or_else(|_| panic!("{what} ({v}) exceeds the u64 wire field"))
+        .to_le_bytes()
+}
+
 /// SplitMix64 finalizer: a full-avalanche 64-bit mixer.
 #[inline]
 fn mix(mut z: u64) -> u64 {
@@ -111,7 +132,8 @@ impl Hasher128 {
 
     /// Absorb `bytes` (chunk boundaries do not affect the result).
     pub fn update(&mut self, bytes: &[u8]) {
-        self.total = self.total.wrapping_add(bytes.len() as u64);
+        let len = u64::try_from(bytes.len()).expect("slice length exceeds u64");
+        self.total = self.total.wrapping_add(len);
         let mut rest = bytes;
         if self.buf_len > 0 {
             let need = 8 - self.buf_len;
@@ -188,9 +210,9 @@ pub fn update_f32s(h: &mut Hasher128, vals: &[f32]) {
 /// bits, so `[2,3]` and `[3,2]` views of the same buffer differ.
 pub fn digest_tensor(t: &crate::tensor::Tensor) -> Digest {
     let mut h = Hasher128::new();
-    h.update(&(t.ndim() as u64).to_le_bytes());
+    h.update(&wire_u64(t.ndim(), "tensor rank"));
     for d in 0..t.ndim() {
-        h.update(&(t.dim(d) as u64).to_le_bytes());
+        h.update(&wire_u64(t.dim(d), "tensor dimension"));
     }
     update_f32s(&mut h, t.data());
     h.finish()
@@ -291,9 +313,33 @@ mod tests {
     #[test]
     fn file_digest_matches_bytes() {
         let p = std::env::temp_dir().join("grail_digest_file_test.bin");
-        let data: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        // Miri interprets every byte; keep its copy of the fixture
+        // small (the digest math is identical at any length).
+        #[cfg(miri)]
+        let count = 64u32;
+        #[cfg(not(miri))]
+        let count = 10_000u32;
+        let data: Vec<u8> = (0..count).flat_map(|i| i.to_le_bytes()).collect();
         std::fs::write(&p, &data).unwrap();
         assert_eq!(digest_file(p.to_str().unwrap()).unwrap(), digest_bytes(&data));
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn wire_fields_roundtrip() {
+        assert_eq!(wire_u32(0, "x"), 0u32.to_le_bytes());
+        assert_eq!(wire_u32(77, "x"), 77u32.to_le_bytes());
+        assert_eq!(wire_u64(1 << 20, "x"), (1u64 << 20).to_le_bytes());
+        assert_eq!(u32::from_le_bytes(wire_u32(12345, "x")), 12345);
+    }
+
+    // Oversize geometry must be *rejected*, not wrapped into a small,
+    // plausible-looking wire value (a wrapped shard count or row count
+    // would silently poison every digest derived from it).
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    #[should_panic(expected = "exceeds the u32 wire field")]
+    fn oversize_u32_wire_field_panics() {
+        let _ = wire_u32(u32::MAX as usize + 1, "shard count");
     }
 }

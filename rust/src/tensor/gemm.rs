@@ -56,7 +56,7 @@
 //! `benches/hotpath.rs` asserts the packed path wins (and by ≥ 2× on
 //! 512-dim GEMM) on every CI run.
 
-use crate::coordinator::scheduler::{default_threads, run_grid_mut};
+use crate::coordinator::scheduler::{audit::WriteSet, default_threads, run_grid_mut};
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Microkernel row count (rows of `C` held in registers).
@@ -229,7 +229,17 @@ fn microkernel_generic(kl: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; 
 /// `mul_add`, so LLVM emits 256-bit `vfmadd` instructions.
 ///
 /// # Safety
-/// Callers must have verified `avx2` and `fma` via runtime detection.
+///
+/// - The caller must have verified `avx2` **and** `fma` via runtime
+///   feature detection ([`fma_available`]); calling this on a CPU
+///   without them is undefined behavior (illegal instruction at
+///   best).
+/// - `kl ≤ KC` (one packed strip depth), `ap.len() ≥ kl * MR`, and
+///   `bp.len() ≥ kl * NR` — the packed-panel preconditions
+///   [`microkernel_body`] indexes under. These are slice-checked in
+///   debug builds (the body is safe code), so the contract exists to
+///   keep release-mode bounds-check elision honest, not to permit
+///   unchecked access.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn microkernel_avx2(kl: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
@@ -553,13 +563,17 @@ fn gemm_with_packed_b(
     let workers = resolve_workers(workers, m, k, n);
     // Fixed MC-row jobs with disjoint C panels: job boundaries are a
     // function of the shape alone, so any worker count produces the
-    // same bits.
+    // same bits. The write-set auditor asserts the panels really are
+    // disjoint and cover C (debug/audit builds only).
+    let ws = WriteSet::new("gemm C row panels", c.len());
     let mut jobs: Vec<(usize, &mut [f32])> = c.chunks_mut(MC * n).enumerate().collect();
     run_grid_mut(&mut jobs, workers, |_, job| {
+        ws.claim(job.0, job.0 * MC * n, job.1.len());
         let i0 = job.0 * MC;
         let cblk: &mut [f32] = &mut *job.1;
         gemm_block(a, k, n, alpha, i0, cblk, bpack, kc_strips, nblk, ep, use_fma);
     });
+    ws.verify();
 }
 
 /// Compute one MC-row panel of `C += alpha·A·op(B)` from the shared
@@ -646,12 +660,18 @@ pub fn syrk_upper_packed(x: &[f32], g: &mut [f32], rows: usize, h: usize, worker
     let workers = resolve_workers(workers, h, rows, h);
     let bpack_ref = &bpack;
     let kc_ref = &kc_strips;
+    // Each job owns one MC-row panel of G exclusively (it only writes
+    // the panel's upper-triangle lanes, but no other job may touch the
+    // panel at all) — claimed and verified like the GEMM fan-out.
+    let ws = WriteSet::new("syrk G row panels", g.len());
     let mut jobs: Vec<(usize, &mut [f32])> = g.chunks_mut(MC * h).enumerate().collect();
     run_grid_mut(&mut jobs, workers, |_, job| {
+        ws.claim(job.0, job.0 * MC * h, job.1.len());
         let i0 = job.0 * MC;
         let gblk: &mut [f32] = &mut *job.1;
         syrk_block(x, h, i0, gblk, bpack_ref, kc_ref, nblk, use_fma);
     });
+    ws.verify();
 }
 
 /// One MC-row panel of the upper-triangular SYRK update.

@@ -1,0 +1,128 @@
+//! Self-test for `grail check` (rust/src/analysis/).
+//!
+//! Two halves:
+//!   1. The committed tree must come back clean under the committed
+//!      allowlist — exactly what CI's `grail check --deny` enforces —
+//!      with no stale allowlist entries.
+//!   2. A synthetic tree with one injected violation per lint class
+//!      must be caught at the exact file:line, and `--deny` must turn
+//!      that into a CLI error (process exit 1 via main).
+//!
+//! The injected violations live inside string literals below, so the
+//! real scan over this very file masks them out — the committed-tree
+//! half stays clean.
+
+use grail::analysis::{check_cli, run_check, DEFAULT_ALLOWLIST};
+use grail::cli::Args;
+use std::path::{Path, PathBuf};
+
+#[test]
+fn committed_tree_is_clean_under_committed_allowlist() {
+    // Cargo runs integration tests with cwd = the package root.
+    let report = run_check(Path::new("."), Path::new(DEFAULT_ALLOWLIST)).unwrap();
+    let denied: Vec<String> = report
+        .denied()
+        .map(|f| format!("{} {}:{}  {}", f.lint, f.file, f.line, f.message))
+        .collect();
+    assert!(
+        denied.is_empty(),
+        "denied findings on the committed tree:\n{}",
+        denied.join("\n")
+    );
+    assert!(
+        report.stale.is_empty(),
+        "stale allowlist entries (prune them): {:?}",
+        report.stale
+    );
+    assert!(report.files_scanned > 40, "scanned only {} files", report.files_scanned);
+    assert!(report.allowed_count() > 0, "the committed allowlist should be waiving findings");
+}
+
+fn write(root: &Path, rel: &str, text: &str) {
+    let p = root.join(rel);
+    std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+    std::fs::write(p, text).unwrap();
+}
+
+fn synthetic_tree(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("grail-check-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    // One violation per lint class, at a known line.
+    let bad_lines = [
+        "use std::collections::HashMap;", // 1: forbidden-nondeterminism
+        "",
+        "pub unsafe fn no_contract() {}", // 3: undocumented-unsafe
+        "",
+        "pub fn total(xs: &[f32]) -> f32 {",
+        "    let mut s = 0.0;",
+        "    for x in xs {",
+        "        s += *x;", // 8: float-reduction-discipline
+        "    }",
+        "    s",
+        "}",
+        "",
+        "pub fn lonely_ref() {}", // 13: oracle-pairing (no fast twin, untested)
+    ];
+    write(&root, "rust/src/bad.rs", &bad_lines.join("\n"));
+    // A narrowing `as` cast in a wire-format module path.
+    write(
+        &root,
+        "rust/src/serve/cache.rs",
+        "pub fn encode_len(n: usize) -> u32 {\n    n as u32\n}\n", // 2: wire-format-casts
+    );
+    root
+}
+
+#[test]
+fn injected_violations_are_reported_at_their_lines() {
+    let root = synthetic_tree("lines");
+    // Nonexistent allowlist = empty allowlist: everything is denied.
+    let report = run_check(&root, Path::new("no-such-allowlist.txt")).unwrap();
+    let has = |lint: &str, file: &str, line: usize| {
+        report.denied().any(|f| f.lint == lint && f.file == file && f.line == line)
+    };
+    let table = report.render_table();
+    assert!(has("forbidden-nondeterminism", "rust/src/bad.rs", 1), "nondet missed:\n{table}");
+    assert!(has("undocumented-unsafe", "rust/src/bad.rs", 3), "unsafe missed:\n{table}");
+    assert!(has("float-reduction-discipline", "rust/src/bad.rs", 8), "float missed:\n{table}");
+    assert!(has("oracle-pairing", "rust/src/bad.rs", 13), "oracle missed:\n{table}");
+    assert!(has("wire-format-casts", "rust/src/serve/cache.rs", 2), "cast missed:\n{table}");
+    assert!(report.denied_count() >= 5, "expected >= 5 denied, got:\n{table}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn deny_flag_fails_the_cli_and_json_report_is_written() {
+    let root = synthetic_tree("cli");
+    let json = root.join("lint-report.json");
+    let argv = [
+        "check".to_string(),
+        format!("--root={}", root.display()),
+        "--allowlist=no-such-allowlist.txt".to_string(),
+        format!("--json={}", json.display()),
+        "--deny".to_string(),
+    ];
+    let args = Args::parse(argv.into_iter()).unwrap();
+    let err = check_cli(&args).expect_err("--deny must fail on a dirty tree");
+    assert!(err.to_string().contains("denied"), "unexpected error: {err:#}");
+    let body = std::fs::read_to_string(&json).expect("json report written before the deny error");
+    assert!(body.contains("\"schema\": \"grail-check-v1\""));
+    assert!(body.contains("wire-format-casts"));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn allowlist_ratchet_waives_exactly_n_then_denies() {
+    let root = synthetic_tree("ratchet");
+    // Waive the nondet finding (unbounded) and nothing else.
+    write(
+        &root,
+        "analysis/allowlist.txt",
+        "forbidden-nondeterminism rust/src/bad.rs -- synthetic fixture\n",
+    );
+    let report = run_check(&root, Path::new("analysis/allowlist.txt")).unwrap();
+    assert_eq!(report.allowed_count(), 1, "exactly the nondet finding is waived");
+    assert!(report.denied().all(|f| f.lint != "forbidden-nondeterminism"));
+    assert!(report.stale.is_empty());
+    let _ = std::fs::remove_dir_all(&root);
+}
