@@ -4,24 +4,28 @@
 //! through: fused GEMM epilogues vs unfused bias/activation sweeps,
 //! prepacked vs per-call weight packing at decode row counts, batched
 //! vs reference attention, KV-cache decode vs full-forward rescan
-//! generation, and a concurrent prefill+decode fleet that pushes many
-//! requests through the scheduler's divided thread budget for dense vs
-//! 50%-kept compressed TinyLm. Every fast path is first asserted
-//! bit-identical to (or token-identical with) its reference, then the
-//! speed claims are *asserted* so CI fails on a serving regression.
-//! Results land machine-readably in `BENCH_serve.json`
-//! (schema `grail-serve-v1`); reproduction steps in EXPERIMENTS.md
-//! §Serving.
+//! generation, a concurrent prefill+decode fleet (one thread per
+//! request, the PR-6 path), and the continuous-batching scheduler —
+//! closed-batch against the fleet baseline and under a deterministic
+//! **open-loop** arrival process (arrivals are fixed in scheduler-step
+//! units, never derived from the wall clock, so the workload replays
+//! identically; the clock only timestamps it). Every fast path is
+//! first asserted bit-identical to (or token-identical with) its
+//! reference, then the speed claims are *asserted* so CI fails on a
+//! serving regression. Results land machine-readably in
+//! `BENCH_serve.json` (schema `grail-serve-v1`); reproduction steps in
+//! EXPERIMENTS.md §Serving.
 
 use std::time::Instant;
 
-use grail::bench_util::{bench, Recorder};
+use grail::bench_util::{bench, pct, Recorder};
 use grail::compress::Selector;
 use grail::coordinator::scheduler::{default_threads, run_grid};
 use grail::grail::{compress_model, CompressionSpec, Method};
 use grail::nn::models::{LmBatch, LmConfig, TinyLm};
 use grail::nn::{Activation, Linear, MultiHeadAttention};
 use grail::rng::Pcg64;
+use grail::serve::BatchScheduler;
 use grail::tensor::gemm::Epilogue;
 use grail::tensor::{ops, Tensor};
 
@@ -58,11 +62,6 @@ fn prompt(id: usize, len: usize) -> Vec<u16> {
     (0..len).map(|i| ((id * 13 + i * 7 + 3) % grail::data::text::VOCAB) as u16).collect()
 }
 
-/// Percentile over an already-sorted sample.
-fn pct(sorted: &[f64], p: f64) -> f64 {
-    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
-}
-
 /// Push `requests` prefill+decode generations through the scheduler and
 /// return (requests/sec, sorted per-request latencies in ms).
 fn serve_fleet(m: &TinyLm, requests: usize, p_len: usize, n_new: usize) -> (f64, Vec<f64>) {
@@ -77,6 +76,54 @@ fn serve_fleet(m: &TinyLm, requests: usize, p_len: usize, n_new: usize) -> (f64,
     let wall = t0.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.total_cmp(b));
     (requests as f64 / wall, lat)
+}
+
+/// Exact worst-case page budget for `requests` concurrent generations
+/// of `positions` total positions each, at page size `ps` — what the
+/// continuous-batching scheduler's admission accounting reserves.
+fn pool_pages_for(m: &TinyLm, requests: usize, positions: usize, ps: usize) -> usize {
+    requests * 2 * m.cfg.n_layers * m.cfg.n_kv * ((positions + ps - 1) / ps)
+}
+
+/// Drive `requests` generations through the continuous-batching
+/// scheduler. `arrive_every == 0` submits everything up front (closed
+/// batch); `k > 0` admits one request every `k` scheduler steps — an
+/// open-loop arrival process that is deterministic in step units (the
+/// wall clock only timestamps the workload, never shapes it). Returns
+/// (requests/sec over the whole run, sorted per-request latencies in
+/// ms, mean coalesced rows per decode step).
+fn serve_batched(
+    m: &TinyLm,
+    requests: usize,
+    p_len: usize,
+    n_new: usize,
+    arrive_every: usize,
+) -> (f64, Vec<f64>, f64) {
+    let ps = 8usize;
+    let prompts: Vec<Vec<u16>> = (0..requests).map(|i| prompt(i, p_len)).collect();
+    let pages = pool_pages_for(m, requests, p_len + n_new, ps);
+    let mut sched = BatchScheduler::new(m, ps, pages, requests);
+    let mut start_ms = vec![0.0f64; requests];
+    let mut lat = vec![0.0f64; requests];
+    let (mut submitted, mut completed, mut step_no) = (0usize, 0usize, 0usize);
+    let t0 = Instant::now();
+    while completed < requests {
+        while submitted < requests && (arrive_every == 0 || step_no >= submitted * arrive_every) {
+            let id = sched.submit(&prompts[submitted], n_new);
+            start_ms[id] = t0.elapsed().as_secs_f64() * 1e3;
+            submitted += 1;
+        }
+        for c in sched.step() {
+            lat[c.id] = t0.elapsed().as_secs_f64() * 1e3 - start_ms[c.id];
+            completed += 1;
+        }
+        step_no += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = sched.stats();
+    let occupancy = st.coalesced_rows as f64 / st.decode_steps.max(1) as f64;
+    lat.sort_by(|a, b| a.total_cmp(b));
+    (requests as f64 / wall, lat, occupancy)
 }
 
 fn main() {
@@ -233,44 +280,158 @@ fn main() {
     // --- Concurrent prefill+decode fleet: many requests fanned over
     // the scheduler's divided thread budget. The compressed model's
     // smaller GEMMs and K/V caches must buy real throughput.
+    let (requests, fleet_new) = (32usize, 24usize);
+    // Warm (page in caches, settle the pool), then measure twice
+    // and keep the better run per model to damp scheduler noise.
+    serve_fleet(&dense, requests, p_len, fleet_new);
+    let (dense_rps, dense_lat) = {
+        let a = serve_fleet(&dense, requests, p_len, fleet_new);
+        let b = serve_fleet(&dense, requests, p_len, fleet_new);
+        if a.0 >= b.0 { a } else { b }
+    };
+    serve_fleet(&compressed, requests, p_len, fleet_new);
+    let (comp_rps, comp_lat) = {
+        let a = serve_fleet(&compressed, requests, p_len, fleet_new);
+        let b = serve_fleet(&compressed, requests, p_len, fleet_new);
+        if a.0 >= b.0 { a } else { b }
+    };
+    println!(
+        "{:<44} {dense_rps:.1} req/s  p50 {:.2} ms  p99 {:.2} ms",
+        format!("fleet dense {requests} req"),
+        pct(&dense_lat, 0.5),
+        pct(&dense_lat, 0.99)
+    );
+    println!(
+        "{:<44} {comp_rps:.1} req/s  p50 {:.2} ms  p99 {:.2} ms",
+        format!("fleet compressed {requests} req"),
+        pct(&comp_lat, 0.5),
+        pct(&comp_lat, 0.99)
+    );
+    rec.metric("fleet_dense_rps", dense_rps);
+    rec.metric("fleet_dense_p50_ms", pct(&dense_lat, 0.5));
+    rec.metric("fleet_dense_p99_ms", pct(&dense_lat, 0.99));
+    rec.metric("fleet_compressed_rps", comp_rps);
+    rec.metric("fleet_compressed_p50_ms", pct(&comp_lat, 0.5));
+    rec.metric("fleet_compressed_p99_ms", pct(&comp_lat, 0.99));
+    rec.metric("fleet_compressed_rps_gain", comp_rps / dense_rps);
+    assert!(
+        comp_rps > dense_rps,
+        "50%-kept compressed TinyLm must out-serve dense: {comp_rps:.1} vs {dense_rps:.1} req/s"
+    );
+
+    // --- Continuous batching, token-exactness first: every stream the
+    // scheduler emits must equal its solo `generate` run before any
+    // timing happens (admission, coalescing, and eviction are not
+    // allowed to reach the tokens).
+    for (m, label) in [(&dense, "dense"), (&compressed, "compressed")] {
+        let pages = pool_pages_for(m, 6, p_len + fleet_new, 8);
+        let mut sched = BatchScheduler::new(m, 8, pages, 3);
+        let ids: Vec<usize> =
+            (0..6).map(|i| sched.submit(&prompt(i, p_len), fleet_new)).collect();
+        let done = sched.run_to_completion();
+        for (i, id) in ids.iter().enumerate() {
+            let c = done.iter().find(|c| c.id == *id).unwrap();
+            assert_eq!(
+                c.tokens,
+                m.generate(&prompt(i, p_len), fleet_new),
+                "{label}: scheduler stream {i} must match solo generate"
+            );
+        }
+        println!("{:<44} ok", format!("continuous-batching token exactness ({label})"));
+    }
+
+    // --- Closed batch: the same 32-request workload as the fleet, but
+    // coalesced into multi-row steps by the scheduler instead of one
+    // thread per request. Coalescing amortizes every per-layer GEMM
+    // dispatch across the whole batch, so it must at least match the
+    // fleet path on the same hardware.
     {
-        let (requests, fleet_new) = (32usize, 24usize);
-        // Warm (page in caches, settle the pool), then measure twice
-        // and keep the better run per model to damp scheduler noise.
-        serve_fleet(&dense, requests, p_len, fleet_new);
-        let (dense_rps, dense_lat) = {
-            let a = serve_fleet(&dense, requests, p_len, fleet_new);
-            let b = serve_fleet(&dense, requests, p_len, fleet_new);
+        serve_batched(&dense, requests, p_len, fleet_new, 0);
+        let (batch_dense_rps, _, occ_dense) = {
+            let a = serve_batched(&dense, requests, p_len, fleet_new, 0);
+            let b = serve_batched(&dense, requests, p_len, fleet_new, 0);
             if a.0 >= b.0 { a } else { b }
         };
-        serve_fleet(&compressed, requests, p_len, fleet_new);
-        let (comp_rps, comp_lat) = {
-            let a = serve_fleet(&compressed, requests, p_len, fleet_new);
-            let b = serve_fleet(&compressed, requests, p_len, fleet_new);
+        serve_batched(&compressed, requests, p_len, fleet_new, 0);
+        let (batch_comp_rps, _, _) = {
+            let a = serve_batched(&compressed, requests, p_len, fleet_new, 0);
+            let b = serve_batched(&compressed, requests, p_len, fleet_new, 0);
             if a.0 >= b.0 { a } else { b }
         };
         println!(
-            "{:<44} {dense_rps:.1} req/s  p50 {:.2} ms  p99 {:.2} ms",
-            format!("fleet dense {requests} req"),
-            pct(&dense_lat, 0.5),
-            pct(&dense_lat, 0.99)
+            "{:<44} {batch_dense_rps:.1} req/s  (occupancy {occ_dense:.1} rows/step)",
+            format!("batched dense {requests} req")
         );
         println!(
-            "{:<44} {comp_rps:.1} req/s  p50 {:.2} ms  p99 {:.2} ms",
-            format!("fleet compressed {requests} req"),
-            pct(&comp_lat, 0.5),
-            pct(&comp_lat, 0.99)
+            "{:<44} {batch_comp_rps:.1} req/s",
+            format!("batched compressed {requests} req")
         );
-        rec.metric("fleet_dense_rps", dense_rps);
-        rec.metric("fleet_dense_p50_ms", pct(&dense_lat, 0.5));
-        rec.metric("fleet_dense_p99_ms", pct(&dense_lat, 0.99));
-        rec.metric("fleet_compressed_rps", comp_rps);
-        rec.metric("fleet_compressed_p50_ms", pct(&comp_lat, 0.5));
-        rec.metric("fleet_compressed_p99_ms", pct(&comp_lat, 0.99));
-        rec.metric("fleet_compressed_rps_gain", comp_rps / dense_rps);
+        rec.metric("batch_dense_rps", batch_dense_rps);
+        rec.metric("batch_dense_occupancy", occ_dense);
+        rec.metric("batch_compressed_rps", batch_comp_rps);
+        rec.metric("batch_vs_fleet_gain_dense", batch_dense_rps / dense_rps);
         assert!(
-            comp_rps > dense_rps,
-            "50%-kept compressed TinyLm must out-serve dense: {comp_rps:.1} vs {dense_rps:.1} req/s"
+            batch_dense_rps >= dense_rps,
+            "coalesced batching must not lose to the per-thread fleet: \
+             {batch_dense_rps:.1} vs {dense_rps:.1} req/s"
+        );
+    }
+
+    // --- Open-loop load: one arrival every 2 scheduler steps (fixed
+    // in step units, replayable), so the batch fills and drains the
+    // way live traffic would instead of starting full. Sustained
+    // throughput and tail latency under load are the serving numbers
+    // that matter at scale.
+    for (m, label) in [(&dense, "dense"), (&compressed, "compressed")] {
+        serve_batched(m, requests, p_len, fleet_new, 2);
+        let (rps, lat, occ) = {
+            let a = serve_batched(m, requests, p_len, fleet_new, 2);
+            let b = serve_batched(m, requests, p_len, fleet_new, 2);
+            if a.0 >= b.0 { a } else { b }
+        };
+        let (p50, p99) = (pct(&lat, 0.5), pct(&lat, 0.99));
+        println!(
+            "{:<44} {rps:.1} req/s  p50 {p50:.2} ms  p99 {p99:.2} ms  occ {occ:.1}",
+            format!("open-loop {label} {requests} req / every 2 steps")
+        );
+        rec.metric(&format!("openloop_{label}_rps"), rps);
+        rec.metric(&format!("openloop_{label}_p50_ms"), p50);
+        rec.metric(&format!("openloop_{label}_p99_ms"), p99);
+        assert!(
+            occ > 1.0,
+            "{label}: open-loop arrivals must actually coalesce (occupancy {occ:.2})"
+        );
+    }
+
+    // --- Paged-KV capacity: under the same cache-memory budget (two
+    // per-request max_seq slabs' worth of floats), short requests must
+    // pack >= 4x more concurrent streams into the page pool than the
+    // slab-per-request layout could ever hold.
+    {
+        let ps = 8usize;
+        let slab_requests = 2usize;
+        let d_head = dense.cfg.d_model / dense.cfg.n_heads;
+        let slab_elems = 2 * dense.cfg.n_layers * dense.cfg.n_kv * dense.cfg.max_seq * d_head;
+        let pool_pages = slab_requests * slab_elems / (ps * d_head);
+        let n_req = 16usize;
+        let mut sched = BatchScheduler::new(&dense, ps, pool_pages, n_req);
+        let ids: Vec<usize> = (0..n_req).map(|i| sched.submit(&prompt(i, 4), 4)).collect();
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), n_req);
+        for (i, id) in ids.iter().enumerate() {
+            let c = done.iter().find(|c| c.id == *id).unwrap();
+            assert_eq!(c.tokens, dense.generate(&prompt(i, 4), 4), "capacity request {i}");
+        }
+        let gain = sched.stats().peak_active as f64 / slab_requests as f64;
+        println!(
+            "{:<44} {gain:.1}x ({} live vs {slab_requests} slabs)",
+            "paged-KV concurrent capacity gain",
+            sched.stats().peak_active
+        );
+        rec.metric("paged_kv_capacity_gain", gain);
+        assert!(
+            gain >= 4.0,
+            "paged KV must hold >= 4x the slab-equivalent request count, got {gain:.1}x"
         );
     }
 

@@ -47,6 +47,35 @@ impl BenchResult {
     }
 }
 
+/// Percentile `p ∈ [0, 1]` of an ascending-sorted sample set, with
+/// linear interpolation between adjacent order statistics (the
+/// "type 7" estimator). This is the *single* percentile definition for
+/// every bench target: the previous state of the world had two — a
+/// truncating index here and a rounding index in `benches/serve.rs` —
+/// which disagreed on the same data and biased p99 low on small
+/// samples (on 10 samples, truncation turned "p99" into p0 of the top
+/// decile).
+///
+/// Panics on an empty slice, `p` outside `[0, 1]`, or unsorted input —
+/// a silent garbage percentile must not make it into a trajectory
+/// file.
+pub fn pct(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "pct of an empty sample set");
+    assert!((0.0..=1.0).contains(&p), "percentile {p} outside [0, 1]");
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "pct input must be ascending-sorted"
+    );
+    let idx = (sorted.len() - 1) as f64 * p;
+    let lo = idx.floor() as usize;
+    let frac = idx - lo as f64;
+    if frac == 0.0 {
+        sorted[lo]
+    } else {
+        sorted[lo] + frac * (sorted[lo + 1] - sorted[lo])
+    }
+}
+
 /// Time `f` adaptively: warm up, then run enough iterations to spend
 /// ~`budget_ms`, reporting percentile stats over per-iteration times.
 pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchResult {
@@ -63,12 +92,11 @@ pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchRe
         samples.push(t.elapsed().as_nanos() as f64);
     }
     samples.sort_by(|a, b| a.total_cmp(b));
-    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
     let r = BenchResult {
         name: name.to_string(),
-        median_ns: pct(0.5),
-        p10_ns: pct(0.1),
-        p90_ns: pct(0.9),
+        median_ns: pct(&samples, 0.5),
+        p10_ns: pct(&samples, 0.1),
+        p90_ns: pct(&samples, 0.9),
         iters: samples.len(),
     };
     println!(
@@ -180,6 +208,46 @@ mod tests {
         assert!(r.median_ns > 0.0);
         assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn pct_interpolates_between_order_statistics() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(pct(&s, 0.0), 10.0);
+        assert_eq!(pct(&s, 1.0), 40.0);
+        assert_eq!(pct(&s, 0.5), 25.0);
+        // idx = 3 * 0.25 = 0.75 → 10 + 0.75 * 10.
+        assert!((pct(&s, 0.25) - 17.5).abs() < 1e-12);
+        // Single sample: every percentile is that sample.
+        assert_eq!(pct(&[7.0], 0.0), 7.0);
+        assert_eq!(pct(&[7.0], 0.99), 7.0);
+        assert_eq!(pct(&[7.0], 1.0), 7.0);
+    }
+
+    #[test]
+    fn pct_p99_not_biased_low_on_small_samples() {
+        // 10 samples 0..90: the old truncating definition returned
+        // s[(9 * 0.99) as usize] = s[8] = 80 — p99 reported as p89.
+        // The interpolating estimator lands between s[8] and s[9].
+        let s: Vec<f64> = (0..10).map(|i| (i * 10) as f64).collect();
+        let p99 = pct(&s, 0.99);
+        assert!((p99 - 89.1).abs() < 1e-9, "{p99}");
+        // And the rounding definition from the old serve bench
+        // (s[round(idx)] = s[9] = 90) disagreed with it; both now
+        // route through this one function.
+        assert!(p99 > 80.0 && p99 < 90.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample set")]
+    fn pct_rejects_empty() {
+        pct(&[], 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0, 1]")]
+    fn pct_rejects_out_of_range() {
+        pct(&[1.0], 1.5);
     }
 
     #[test]

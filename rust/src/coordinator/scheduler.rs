@@ -9,7 +9,9 @@
 //! thread carries a budget of worker threads its nested fan-outs may
 //! use (the whole machine for fresh threads; `GRAIL_THREADS` caps it).
 //! When a fan-out actually goes parallel, each worker inherits an
-//! equal share `max(1, budget / workers)` of its caller's budget, so
+//! equal-as-possible share of its caller's budget (`budget / workers`,
+//! with the first `budget % workers` workers carrying one extra — see
+//! [`budget_shares`]), so
 //! auto-sized nested parallelism — shard calibration inside `grail
 //! batch` jobs, the packed GEMM/SYRK engine
 //! ([`crate::tensor::gemm`]), the blocked solver's RHS fan-out —
@@ -51,6 +53,20 @@ pub struct GridResult<T> {
     pub value: T,
 }
 
+/// Equal-as-possible split of `budget` across `workers` parallel
+/// fan-out workers: every worker gets `budget / workers`, and the
+/// first `budget % workers` workers carry one extra share, so a
+/// non-dividing budget (7 threads over 4 workers) keeps all 7 shares
+/// usable instead of dropping the integer-division remainder on the
+/// floor. Every worker keeps a ≥ 1 floor; whenever `budget ≥ workers`
+/// the shares sum to exactly `budget` — the no-oversubscription
+/// invariant.
+fn budget_shares(budget: usize, workers: usize) -> Vec<usize> {
+    debug_assert!(workers > 0, "budget_shares needs at least one worker");
+    let (base, extra) = (budget / workers, budget % workers);
+    (0..workers).map(|w| (base + usize::from(w < extra)).max(1)).collect()
+}
+
 /// Run `jobs` through `worker` on `threads` scoped threads. Results
 /// come back sorted by job index. Panics in workers propagate.
 pub fn run_grid<J, T, F>(jobs: Vec<J>, threads: usize, worker: F) -> Vec<T>
@@ -67,15 +83,18 @@ where
         // for its own kernels).
         return jobs.iter().enumerate().map(|(i, j)| worker(i, j)).collect();
     }
-    // Each worker gets an equal share of this thread's budget for its
-    // own nested fan-outs (kernels, solves, deeper grids).
-    let share = (default_threads() / threads).max(1);
+    // Each worker gets an equal-as-possible share of this thread's
+    // budget for its own nested fan-outs (kernels, solves, deeper
+    // grids); a non-dividing budget spreads its remainder over the
+    // first workers instead of idling it.
+    let shares = budget_shares(default_threads(), threads);
     let cursor = AtomicUsize::new(0);
     let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
     let jobs_ref = &jobs;
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
+        for &share in &shares {
+            let (cursor, results, worker) = (&cursor, &results, &worker);
+            scope.spawn(move || {
                 THREAD_BUDGET.with(|c| c.set(Some(share)));
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -117,13 +136,14 @@ where
         return jobs.iter_mut().enumerate().map(|(i, j)| worker(i, j)).collect();
     }
     let chunk = (n + threads - 1) / threads;
-    let share = (default_threads() / threads).max(1);
+    let shares = budget_shares(default_threads(), threads);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
         for (ci, (job_chunk, out_chunk)) in
             jobs.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate()
         {
             let worker = &worker;
+            let share = shares[ci];
             scope.spawn(move || {
                 THREAD_BUDGET.with(|c| c.set(Some(share)));
                 for (off, (j, o)) in
@@ -139,8 +159,8 @@ where
 
 /// Worker-thread count for auto-sized fan-outs: the current thread's
 /// budget — the machine-level count (`GRAIL_THREADS` env or available
-/// parallelism) on fresh threads, an equal share of the caller's
-/// budget inside [`run_grid`] / [`run_grid_mut`] workers. Nested
+/// parallelism) on fresh threads, an equal-as-possible share of the
+/// caller's budget inside [`run_grid`] / [`run_grid_mut`] workers. Nested
 /// fan-outs thus fill the machine without oversubscribing it (see the
 /// module docs). Scheduling only: all consumers are worker-count
 /// invariant.
@@ -305,20 +325,63 @@ mod tests {
     }
 
     #[test]
+    fn budget_shares_distribute_remainder() {
+        // Dividing budgets stay uniform.
+        assert_eq!(budget_shares(8, 4), vec![2, 2, 2, 2]);
+        // Non-dividing budgets hand the remainder to the first workers
+        // instead of idling it: 7 over 4 used to yield [1,1,1,1] (4
+        // usable threads, 3 permanently idle).
+        assert_eq!(budget_shares(7, 4), vec![2, 2, 2, 1]);
+        assert_eq!(budget_shares(5, 4), vec![2, 1, 1, 1]);
+        assert_eq!(budget_shares(9, 2), vec![5, 4]);
+        // Budget below the worker count: the ≥ 1 floor keeps every
+        // worker runnable.
+        assert_eq!(budget_shares(3, 4), vec![1, 1, 1, 1]);
+        assert_eq!(budget_shares(1, 8), vec![1; 8]);
+        // No oversubscription: whenever budget >= workers the shares
+        // sum to exactly the budget, and shares are within 1 of each
+        // other (equal-as-possible).
+        for budget in 1..=24usize {
+            for workers in 1..=8usize {
+                let s = budget_shares(budget, workers);
+                assert_eq!(s.len(), workers);
+                if budget >= workers {
+                    assert_eq!(s.iter().sum::<usize>(), budget, "budget={budget} workers={workers}");
+                }
+                let (mn, mx) = (s.iter().min().unwrap(), s.iter().max().unwrap());
+                assert!(mx - mn <= 1, "budget={budget} workers={workers}: {s:?}");
+                assert!(*mn >= 1);
+            }
+        }
+    }
+
+    #[test]
     fn thread_budget_divides_across_parallel_workers() {
         let total = default_threads();
         assert!(total >= 1, "fresh test thread owns the machine budget");
-        // Parallel fan-outs hand each worker an equal budget share…
-        let expect = (total / 4).max(1);
+        // Parallel fan-outs hand each worker an equal-as-possible
+        // budget share. run_grid's job→worker mapping is cursor-based
+        // (nondeterministic), so each observation must be *some*
+        // worker's share; run_grid_mut with jobs == threads maps chunk
+        // ci → worker ci deterministically, so the observed vector is
+        // exactly the share vector.
+        let shares = budget_shares(total, 4);
         let inner = run_grid(vec![(); 8], 4, |_, _| default_threads());
-        assert!(inner.iter().all(|&t| t == expect), "{inner:?} vs share {expect}");
-        // …so workers × nested budget never oversubscribes (beyond the
-        // ≥ 1-thread floor each worker keeps).
-        assert!(4 * expect <= total.max(4));
-        let expect_mut = (total / 3).max(1);
-        let mut jobs = [0u8; 6];
-        let inner = run_grid_mut(&mut jobs, 3, |_, _| default_threads());
-        assert!(inner.iter().all(|&t| t == expect_mut));
+        assert!(
+            inner.iter().all(|&t| shares.contains(&t)),
+            "{inner:?} not drawn from shares {shares:?}"
+        );
+        // No oversubscription beyond the ≥ 1-thread floor each worker
+        // keeps: the shares sum to the budget whenever it divides out.
+        if total >= 4 {
+            assert_eq!(shares.iter().sum::<usize>(), total);
+        }
+        // Non-dividing budgets must not strand the remainder: with
+        // total = 7 over 4 workers the old truncating split left 3
+        // threads permanently idle.
+        let mut jobs = [0u8; 3];
+        let observed = run_grid_mut(&mut jobs, 3, |_, _| default_threads());
+        assert_eq!(observed, budget_shares(total, 3), "chunked fan-out share vector");
         // Serial fan-outs inherit the caller's full budget…
         let inner = run_grid(vec![(); 3], 1, |_, _| default_threads());
         assert!(inner.iter().all(|&t| t == total));
@@ -327,6 +390,28 @@ mod tests {
         assert!(inner.iter().all(|&t| t == total));
         // …and the caller's own budget is never touched.
         assert_eq!(default_threads(), total);
+    }
+
+    #[test]
+    fn nested_budget_shares_cover_non_dividing_budgets() {
+        // Pin a synthetic budget on this thread (exactly what run_grid
+        // workers do for their nested fan-outs), then fan out a
+        // non-dividing grid and check the remainder is distributed,
+        // not dropped.
+        for (budget, workers) in [(7usize, 4usize), (5, 2), (11, 3), (2, 4)] {
+            THREAD_BUDGET.with(|c| c.set(Some(budget)));
+            let mut jobs = vec![0u8; workers];
+            let observed = run_grid_mut(&mut jobs, workers, |_, _| default_threads());
+            THREAD_BUDGET.with(|c| c.set(None));
+            assert_eq!(
+                observed,
+                budget_shares(budget, workers),
+                "budget={budget} workers={workers}"
+            );
+            if budget >= workers {
+                assert_eq!(observed.iter().sum::<usize>(), budget, "no stranded remainder");
+            }
+        }
     }
 
     #[test]

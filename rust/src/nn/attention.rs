@@ -62,7 +62,18 @@ pub(crate) fn scatter_block(
 /// contributes nothing to the max or the sum, and the zeroed tail is
 /// exactly what those entries normalized to.
 pub(crate) fn softmax_row_masked(row: &mut [f32], lim: usize, scale: f32) {
-    debug_assert!(lim > 0 && lim <= row.len());
+    // Hard contract, not a debug_assert: with `lim == 0` the
+    // normalizer `z` is 0.0 and a release build would silently divide
+    // the row into NaNs that flow straight into the context product.
+    // An empty live prefix is reachable the moment a zero-length
+    // request slips through batch admission, so it dies loudly in
+    // every profile.
+    assert!(lim > 0, "softmax_row_masked: empty live prefix (lim == 0) would emit a NaN row");
+    assert!(
+        lim <= row.len(),
+        "softmax_row_masked: live prefix {lim} exceeds row of {} scores",
+        row.len()
+    );
     let mut mx = f32::NEG_INFINITY;
     for v in row[..lim].iter_mut() {
         *v *= scale;
@@ -115,6 +126,61 @@ pub(crate) fn attend_cached(
         softmax_row_masked(row, lim, scale);
     }
     ops::gemm_nn_serve(&scores, vc, ctx, t, len, dh);
+}
+
+/// Gather a paged K or V position stream into a contiguous `[len, dh]`
+/// panel. `page(i)` returns the backing slice of the stream's `i`-th
+/// page (a fixed-size pool page of `page_positions * dh` elements);
+/// cached position `p` lives in page `p / page_positions` at row
+/// `p % page_positions`, row-major over `dh`. The panel is rebuilt in
+/// position order, so downstream attention sees exactly the layout the
+/// slab decode path stores directly.
+pub(crate) fn gather_paged<'p>(
+    page: impl Fn(usize) -> &'p [f32],
+    page_positions: usize,
+    len: usize,
+    dh: usize,
+    dst: &mut Vec<f32>,
+) {
+    dst.clear();
+    dst.reserve(len * dh);
+    let (mut pos, mut pi) = (0usize, 0usize);
+    while pos < len {
+        let take = page_positions.min(len - pos);
+        let pg = page(pi);
+        debug_assert!(pg.len() >= take * dh, "page {pi} shorter than its live rows");
+        dst.extend_from_slice(&pg[..take * dh]);
+        pos += take;
+        pi += 1;
+    }
+    debug_assert_eq!(dst.len(), len * dh);
+}
+
+/// [`attend_cached`] against *paged* K/V streams: gather the first
+/// `len` cached positions of each stream into contiguous scratch
+/// panels (`kbuf`/`vbuf`, reused across calls by the decode paths),
+/// then delegate to [`attend_cached`] verbatim. Paged storage changes
+/// where the cache bytes live, never what attention computes — the
+/// paged decode path is bitwise identical to the slab path by
+/// construction.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_paged<'p>(
+    qp: &[f32],
+    k_page: impl Fn(usize) -> &'p [f32],
+    v_page: impl Fn(usize) -> &'p [f32],
+    page_positions: usize,
+    t: usize,
+    len: usize,
+    dh: usize,
+    p0: usize,
+    causal: bool,
+    kbuf: &mut Vec<f32>,
+    vbuf: &mut Vec<f32>,
+    ctx: &mut [f32],
+) {
+    gather_paged(k_page, page_positions, len, dh, kbuf);
+    gather_paged(v_page, page_positions, len, dh, vbuf);
+    attend_cached(qp, kbuf, vbuf, t, len, dh, p0, causal, ctx);
 }
 
 /// Self-attention block. Weight layout (matching the Python side):
@@ -433,6 +499,99 @@ mod tests {
             softmax_row_masked(&mut row, lim, scale);
             for (f, o) in row.iter().zip(old.data()) {
                 assert_eq!(f.to_bits(), o.to_bits(), "lim={lim}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty live prefix")]
+    fn softmax_empty_prefix_panics_in_every_profile() {
+        // Regression for the release-build NaN row: lim == 0 used to
+        // be guarded only by a debug_assert, so optimized builds
+        // divided by z = 0 and emitted NaNs silently. The contract is
+        // now a hard assert — this test runs in the release CI pass.
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        softmax_row_masked(&mut row, 0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds row")]
+    fn softmax_oversized_prefix_panics() {
+        let mut row = vec![1.0f32, 2.0];
+        softmax_row_masked(&mut row, 3, 1.0);
+    }
+
+    #[test]
+    fn gather_paged_reassembles_slab_layout() {
+        // Chop a [len, dh] slab into fixed-size position pages, then
+        // gather them back: the panel must equal the slab prefix for
+        // every (len, page_positions) shape, including partial tails.
+        let dh = 3usize;
+        let slab: Vec<f32> = (0..13 * dh).map(|i| i as f32).collect();
+        for ps in [1usize, 2, 4, 5, 16] {
+            let pages: Vec<Vec<f32>> = slab
+                .chunks(ps * dh)
+                .map(|c| {
+                    // Pool pages are fixed-size; the tail page's dead
+                    // rows hold garbage the gather must never read.
+                    let mut p = vec![f32::NAN; ps * dh];
+                    p[..c.len()].copy_from_slice(c);
+                    p
+                })
+                .collect();
+            for len in [0usize, 1, 4, 7, 13] {
+                let mut panel = Vec::new();
+                gather_paged(|i| pages[i].as_slice(), ps, len, dh, &mut panel);
+                assert_eq!(panel.len(), len * dh, "ps={ps} len={len}");
+                for (a, b) in panel.iter().zip(&slab[..len * dh]) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "ps={ps} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attend_paged_matches_attend_cached_bitwise() {
+        let (t, len, dh, ps) = (2usize, 11usize, 4usize, 4usize);
+        let mut rng = Pcg64::seed(33);
+        let mut qp = vec![0.0f32; t * dh];
+        let mut kc = vec![0.0f32; len * dh];
+        let mut vc = vec![0.0f32; len * dh];
+        rng.fill_normal(&mut qp, 1.0);
+        rng.fill_normal(&mut kc, 1.0);
+        rng.fill_normal(&mut vc, 1.0);
+        let page_of = |slab: &[f32]| -> Vec<Vec<f32>> {
+            slab.chunks(ps * dh)
+                .map(|c| {
+                    let mut p = vec![0.0f32; ps * dh];
+                    p[..c.len()].copy_from_slice(c);
+                    p
+                })
+                .collect()
+        };
+        let (kp, vp) = (page_of(&kc), page_of(&vc));
+        for causal in [true, false] {
+            let p0 = len - t;
+            let mut want = vec![0.0f32; t * dh];
+            attend_cached(&qp, &kc, &vc, t, len, dh, p0, causal, &mut want);
+            let mut got = vec![0.0f32; t * dh];
+            let (mut kbuf, mut vbuf) = (Vec::new(), Vec::new());
+            attend_paged(
+                &qp,
+                |i| kp[i].as_slice(),
+                |i| vp[i].as_slice(),
+                ps,
+                t,
+                len,
+                dh,
+                p0,
+                causal,
+                &mut kbuf,
+                &mut vbuf,
+                &mut got,
+            );
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "causal={causal}");
             }
         }
     }

@@ -6,11 +6,13 @@
 //! `w_proj` inputs, and sequential closed-loop compensation over depth.
 
 use crate::compress::{Compressible, ReductionPlan, Reducer, SiteInfo, SiteKind};
+use crate::coordinator::scheduler::{audit::WriteSet, default_threads, run_grid_mut};
 use crate::data::TokenSet;
-use crate::nn::attention::{attend_cached, gather_block, scatter_block};
+use crate::nn::attention::{attend_cached, attend_paged, gather_block, scatter_block};
 use crate::nn::weights::WeightBundle;
 use crate::nn::{argmax_rows, Activation, LayerNorm, Linear, MultiHeadAttention};
 use crate::rng::Pcg64;
+use crate::serve::batch::KvPagePool;
 use crate::tensor::gemm::PackedB;
 use crate::tensor::{ops, Tensor};
 use anyhow::Result;
@@ -390,6 +392,263 @@ impl TinyLm {
         }
         out
     }
+
+    /// Prepack the model's serving weights **once** for all requests.
+    ///
+    /// [`Self::decode_state`] prepacks per request — fine for one
+    /// stream, wasteful for a fleet. The pack also records the KV
+    /// layout (per-block KV head counts as flat stream offsets, the
+    /// uniform head width) that [`PagedKv`] page tables and the page
+    /// budget arithmetic are indexed by.
+    pub fn serve_pack(&self) -> LmServePack {
+        let dh = self.cfg.d_head();
+        let mut kv_off = Vec::with_capacity(self.blocks.len() + 1);
+        kv_off.push(0usize);
+        let mut packs = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            assert_eq!(
+                blk.attn.d_head, dh,
+                "paged KV assumes the uniform head width compression preserves"
+            );
+            kv_off.push(kv_off.last().unwrap() + blk.attn.n_kv);
+            packs.push(BlockPack {
+                wq: blk.attn.wq.prepack(),
+                wk: blk.attn.wk.prepack(),
+                wv: blk.attn.wv.prepack(),
+                wo: blk.attn.wo.prepack(),
+                fc: blk.fc.prepack(),
+                proj: blk.proj.prepack(),
+            });
+        }
+        LmServePack { packs, head_pack: self.lm_head.prepack(), kv_off, dh }
+    }
+
+    /// Run the prompt through the model once, appending its K/V rows
+    /// to pool pages. Paged twin of [`Self::prefill`]: logits are
+    /// bit-identical to it (and to [`Self::forward`]) over the same
+    /// tokens.
+    pub fn paged_prefill(
+        &self,
+        pack: &LmServePack,
+        pool: &mut KvPagePool,
+        kv: &mut PagedKv,
+        prompt: &[u16],
+    ) -> Tensor {
+        assert!(kv.is_empty(), "prefill on a used PagedKv");
+        self.paged_append(pack, pool, kv, prompt)
+    }
+
+    /// Append one token against paged K/V storage. Paged twin of
+    /// [`Self::decode_step`], bit-identical to it.
+    pub fn paged_decode_step(
+        &self,
+        pack: &LmServePack,
+        pool: &mut KvPagePool,
+        kv: &mut PagedKv,
+        token: u16,
+    ) -> Tensor {
+        self.paged_append(pack, pool, kv, &[token])
+    }
+
+    /// [`Self::decode_append`] with the K/V caches living in fixed-size
+    /// pool pages instead of a per-request `max_seq` slab: identical
+    /// embed/GEMM/residual structure, K/V rows appended through the
+    /// request's page tables, attention gathering each paged prefix
+    /// into a contiguous panel before the shared
+    /// [`attend_cached`] math
+    /// ([`attend_paged`](crate::nn::attention)). Bitwise equality with
+    /// the slab path is by construction and asserted across model
+    /// variants in `rust/tests/decode.rs`.
+    fn paged_append(
+        &self,
+        pack: &LmServePack,
+        pool: &mut KvPagePool,
+        kv: &mut PagedKv,
+        tokens: &[u16],
+    ) -> Tensor {
+        let t = tokens.len();
+        assert!(t > 0, "paged_append needs at least one token");
+        let p0 = kv.len();
+        let len = p0 + t;
+        assert!(len <= kv.capacity(), "decode past cache capacity {}", kv.capacity());
+        assert_eq!(pack.packs.len(), self.blocks.len(), "LmServePack from another model");
+        let d = self.cfg.d_model;
+        let ps = pool.page_positions();
+        let mut cur = Tensor::zeros(&[t, d]);
+        for (r, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            assert!(tok < self.embed.dim(0), "token out of vocab");
+            let dst = cur.row_mut(r);
+            let e = self.embed.row(tok);
+            let p = self.pos.row(p0 + r);
+            for j in 0..d {
+                dst[j] = e[j] + p[j];
+            }
+        }
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let bp = &pack.packs[bi];
+            let (nh, nkv, dh) = (blk.attn.n_heads, blk.attn.n_kv, blk.attn.d_head);
+            let gs = blk.attn.group_size();
+            let off = pack.kv_off[bi];
+            let normed = blk.ln1.forward(&cur);
+            let q = blk.attn.wq.forward_prepacked(bp.wq.as_ref(), &normed, Activation::Identity);
+            let k = blk.attn.wk.forward_prepacked(bp.wk.as_ref(), &normed, Activation::Identity);
+            let v = blk.attn.wv.forward_prepacked(bp.wv.as_ref(), &normed, Activation::Identity);
+            for r in 0..t {
+                let krow = &k.data()[r * nkv * dh..(r + 1) * nkv * dh];
+                let vrow = &v.data()[r * nkv * dh..(r + 1) * nkv * dh];
+                kv.append_block_row(pool, off, nkv, dh, p0 + r, krow, vrow);
+            }
+            let mut tap = Tensor::zeros(&[t, nh * dh]);
+            let mut qp = vec![0.0f32; t * dh];
+            let mut ctx = vec![0.0f32; t * dh];
+            let (mut kbuf, mut vbuf) = (Vec::new(), Vec::new());
+            for h in 0..nh {
+                gather_block(q.data(), nh * dh, 0, h * dh, t, dh, &mut qp);
+                let flat = off + h / gs;
+                ctx.fill(0.0);
+                attend_paged(
+                    &qp,
+                    |i| pool.page(kv.k_page(flat, i)),
+                    |i| pool.page(kv.v_page(flat, i)),
+                    ps,
+                    t,
+                    len,
+                    dh,
+                    p0,
+                    blk.attn.causal,
+                    &mut kbuf,
+                    &mut vbuf,
+                    &mut ctx,
+                );
+                scatter_block(&ctx, tap.data_mut(), nh * dh, 0, h * dh, t, dh);
+            }
+            let attn_out = blk.attn.wo.forward_prepacked(bp.wo.as_ref(), &tap, Activation::Identity);
+            ops::axpy(&mut cur, 1.0, &attn_out);
+            let normed = blk.ln2.forward(&cur);
+            let hid = blk.fc.forward_prepacked(bp.fc.as_ref(), &normed, Activation::Gelu);
+            let mlp_out = blk.proj.forward_prepacked(bp.proj.as_ref(), &hid, Activation::Identity);
+            ops::axpy(&mut cur, 1.0, &mlp_out);
+        }
+        kv.advance(t);
+        let normed = self.ln_f.forward(&cur);
+        self.lm_head.forward_prepacked(pack.head_pack.as_ref(), &normed, Activation::Identity)
+    }
+
+    /// One **coalesced** decode step for `m` in-flight requests: embed
+    /// each request's token at its own absolute position, then run the
+    /// layers once with `m`-row GEMMs instead of `m` separate 1-row
+    /// passes. Returns logits `[m, vocab]`, row `r` bit-identical to a
+    /// solo [`Self::paged_decode_step`] (and hence to the slab
+    /// [`Self::decode_step`]) for request `r` — at any batch
+    /// composition and any worker count.
+    ///
+    /// Why the bits match: every stage is row-local and row-count
+    /// invariant. Embedding and the residual adds are elementwise per
+    /// row; LayerNorm normalizes each row from its own mean/variance;
+    /// the serving GEMMs dispatch on `(k, n)` only
+    /// ([`use_packed_cols`](crate::tensor::gemm::use_packed_cols) has
+    /// no `m` argument) and compute each output row from row-local
+    /// accumulator state in the same `k` order; and attention runs per
+    /// `(request, head)` against that request's own paged prefix via
+    /// the exact solo-path math. Appends happen serially (the page
+    /// pool hands out pages under `&mut`), then the per-`(request,
+    /// head)` attention jobs fan out over disjoint context panels.
+    pub fn decode_batch_step(
+        &self,
+        pack: &LmServePack,
+        pool: &mut KvPagePool,
+        states: &mut [&mut PagedKv],
+        tokens: &[u16],
+    ) -> Tensor {
+        let m = states.len();
+        assert!(m > 0, "decode_batch_step needs at least one request");
+        assert_eq!(tokens.len(), m, "one token per in-flight request");
+        assert_eq!(pack.packs.len(), self.blocks.len(), "LmServePack from another model");
+        let d = self.cfg.d_model;
+        let ps = pool.page_positions();
+        let p0s: Vec<usize> = states.iter().map(|s| s.len()).collect();
+        for (r, s) in states.iter().enumerate() {
+            assert!(!s.is_empty(), "batch decode needs prefilled states");
+            assert!(p0s[r] < s.capacity(), "decode past cache capacity {}", s.capacity());
+        }
+        let mut cur = Tensor::zeros(&[m, d]);
+        for (r, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            assert!(tok < self.embed.dim(0), "token out of vocab");
+            let dst = cur.row_mut(r);
+            let e = self.embed.row(tok);
+            let p = self.pos.row(p0s[r]);
+            for j in 0..d {
+                dst[j] = e[j] + p[j];
+            }
+        }
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let bp = &pack.packs[bi];
+            let (nh, nkv, dh) = (blk.attn.n_heads, blk.attn.n_kv, blk.attn.d_head);
+            let gs = blk.attn.group_size();
+            let off = pack.kv_off[bi];
+            let normed = blk.ln1.forward(&cur);
+            let q = blk.attn.wq.forward_prepacked(bp.wq.as_ref(), &normed, Activation::Identity);
+            let k = blk.attn.wk.forward_prepacked(bp.wk.as_ref(), &normed, Activation::Identity);
+            let v = blk.attn.wv.forward_prepacked(bp.wv.as_ref(), &normed, Activation::Identity);
+            // Serial append phase: page allocation needs `&mut` pool.
+            for r in 0..m {
+                let krow = &k.data()[r * nkv * dh..(r + 1) * nkv * dh];
+                let vrow = &v.data()[r * nkv * dh..(r + 1) * nkv * dh];
+                states[r].append_block_row(pool, off, nkv, dh, p0s[r], krow, vrow);
+            }
+            // Parallel attend phase: one job per (request, query head),
+            // each writing a disjoint `dh`-wide context panel and
+            // reading only its own request's paged prefix — worker
+            // count can never change the bits. The `[request][head]
+            // [dh]` panel order *is* the row-major `[m, nh*dh]` tap,
+            // so no scatter pass is needed.
+            let mut ctx = vec![0.0f32; m * nh * dh];
+            let ws = WriteSet::new("batch decode context head panels", ctx.len());
+            let states_ro: Vec<&PagedKv> = states.iter().map(|s| &**s).collect();
+            let pool_ro: &KvPagePool = pool;
+            let qd = q.data();
+            let mut jobs: Vec<(usize, &mut [f32])> = ctx.chunks_mut(dh).enumerate().collect();
+            let workers = default_threads().clamp(1, jobs.len());
+            run_grid_mut(&mut jobs, workers, |_, job| {
+                ws.claim(job.0, job.0 * dh, job.1.len());
+                let (r, h) = (job.0 / nh, job.0 % nh);
+                let s = states_ro[r];
+                let flat = off + h / gs;
+                let qp = &qd[(r * nh + h) * dh..(r * nh + h + 1) * dh];
+                let (mut kbuf, mut vbuf) = (Vec::new(), Vec::new());
+                let cp: &mut [f32] = &mut *job.1;
+                attend_paged(
+                    qp,
+                    |i| pool_ro.page(s.k_page(flat, i)),
+                    |i| pool_ro.page(s.v_page(flat, i)),
+                    ps,
+                    1,
+                    p0s[r] + 1,
+                    dh,
+                    p0s[r],
+                    blk.attn.causal,
+                    &mut kbuf,
+                    &mut vbuf,
+                    cp,
+                );
+            });
+            ws.verify();
+            let tap = Tensor::from_vec(&[m, nh * dh], ctx);
+            let attn_out = blk.attn.wo.forward_prepacked(bp.wo.as_ref(), &tap, Activation::Identity);
+            ops::axpy(&mut cur, 1.0, &attn_out);
+            let normed = blk.ln2.forward(&cur);
+            let hid = blk.fc.forward_prepacked(bp.fc.as_ref(), &normed, Activation::Gelu);
+            let mlp_out = blk.proj.forward_prepacked(bp.proj.as_ref(), &hid, Activation::Identity);
+            ops::axpy(&mut cur, 1.0, &mlp_out);
+        }
+        for s in states.iter_mut() {
+            s.advance(1);
+        }
+        let normed = self.ln_f.forward(&cur);
+        self.lm_head.forward_prepacked(pack.head_pack.as_ref(), &normed, Activation::Identity)
+    }
 }
 
 /// Greedy pick from the last row of a logits tensor.
@@ -439,6 +698,167 @@ impl DecodeState {
     /// `max_seq` — the positional table is the binding limit).
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+}
+
+/// The model's serving weights prepacked **once and shared by every
+/// request** (unlike [`DecodeState`], which prepacks per request),
+/// plus the KV layout the paged cache is indexed by: each block's KV
+/// heads get consecutive *flat stream indices* (`kv_off[bi] + h`), and
+/// every stream stores `d_head`-wide position rows. Build with
+/// [`TinyLm::serve_pack`]; consumed by [`TinyLm::paged_prefill`],
+/// [`TinyLm::decode_batch_step`], and the continuous-batching
+/// scheduler ([`crate::serve::batch::BatchScheduler`]).
+pub struct LmServePack {
+    packs: Vec<BlockPack>,
+    head_pack: Option<PackedB>,
+    /// Flat KV-stream offsets: block `bi`'s KV head `h` is stream
+    /// `kv_off[bi] + h`; `kv_off[n_layers]` is the total stream count.
+    kv_off: Vec<usize>,
+    dh: usize,
+}
+
+impl LmServePack {
+    /// Total number of K (equivalently V) position streams across all
+    /// blocks — pruned/folded KV heads shrink this with the model.
+    pub fn total_kv_streams(&self) -> usize {
+        *self.kv_off.last().unwrap()
+    }
+
+    /// Uniform per-position row width of every stream.
+    pub fn d_head(&self) -> usize {
+        self.dh
+    }
+
+    /// Pool pages one request holding `positions` cached positions
+    /// occupies: each of its K and V streams rounds up to whole pages.
+    /// This is the scheduler's admission-accounting unit.
+    pub fn pages_needed(&self, positions: usize, page_positions: usize) -> usize {
+        assert!(page_positions > 0, "pages must hold at least one position");
+        let per_stream = (positions + page_positions - 1) / page_positions;
+        2 * self.total_kv_streams() * per_stream
+    }
+
+    /// Cache elements one per-request slab path ([`DecodeState`])
+    /// allocates: every stream owns `max_seq` positions up front,
+    /// live or not. The paged-vs-slab capacity comparison in
+    /// `rust/tests/decode.rs` and `benches/serve.rs` is against this.
+    pub fn slab_elems(&self, max_seq: usize) -> usize {
+        2 * self.total_kv_streams() * max_seq * self.dh
+    }
+}
+
+/// Per-request paged K/V cache state: a length plus one page table per
+/// (K|V, flat KV stream), mapping position chunks to fixed-size
+/// [`KvPagePool`] pages. Requests allocate pages as they grow and
+/// return them on [`PagedKv::release`], so thousands of concurrent
+/// states share a fixed pool budget instead of each owning `max_seq`
+/// slots the way [`DecodeState`] does.
+pub struct PagedKv {
+    len: usize,
+    cap: usize,
+    /// `k_pages[stream][i]` = pool page holding positions
+    /// `[i*page_positions, (i+1)*page_positions)` of K stream `stream`.
+    k_pages: Vec<Vec<usize>>,
+    v_pages: Vec<Vec<usize>>,
+}
+
+impl PagedKv {
+    /// Empty state for one request against `pack`'s KV layout, capped
+    /// at `cap` positions (the model's `max_seq`).
+    pub fn new(pack: &LmServePack, cap: usize) -> PagedKv {
+        let streams = pack.total_kv_streams();
+        PagedKv {
+            len: 0,
+            cap,
+            k_pages: vec![Vec::new(); streams],
+            v_pages: vec![Vec::new(); streams],
+        }
+    }
+
+    /// Number of positions currently cached.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True until the first prefill.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this request may cache.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Pool pages this request currently holds across all streams.
+    pub fn pages_held(&self) -> usize {
+        self.k_pages.iter().map(Vec::len).sum::<usize>()
+            + self.v_pages.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Return every held page to the pool and reset to empty.
+    pub fn release(&mut self, pool: &mut KvPagePool) {
+        for table in self.k_pages.iter_mut().chain(self.v_pages.iter_mut()) {
+            for id in table.drain(..) {
+                pool.release(id);
+            }
+        }
+        self.len = 0;
+    }
+
+    /// Page id of chunk `i` of K stream `stream`.
+    pub(crate) fn k_page(&self, stream: usize, i: usize) -> usize {
+        self.k_pages[stream][i]
+    }
+
+    /// Page id of chunk `i` of V stream `stream`.
+    pub(crate) fn v_page(&self, stream: usize, i: usize) -> usize {
+        self.v_pages[stream][i]
+    }
+
+    /// Write one position's projected K/V rows (`[n_kv, dh]` each,
+    /// row-major) into the page tables of block streams
+    /// `off..off + nkv`, allocating fresh pool pages at chunk
+    /// boundaries. `pos` must be the next unwritten position of this
+    /// block's streams; the request-level length only advances via
+    /// [`Self::advance`] once *all* blocks have appended the position.
+    pub(crate) fn append_block_row(
+        &mut self,
+        pool: &mut KvPagePool,
+        off: usize,
+        nkv: usize,
+        dh: usize,
+        pos: usize,
+        krow: &[f32],
+        vrow: &[f32],
+    ) {
+        debug_assert_eq!(krow.len(), nkv * dh);
+        debug_assert_eq!(vrow.len(), nkv * dh);
+        let ps = pool.page_positions();
+        let (pi, po) = (pos / ps, pos % ps);
+        for h in 0..nkv {
+            let kt = &mut self.k_pages[off + h];
+            debug_assert!(kt.len() >= pi, "K stream {off}+{h} skipped a position chunk");
+            if kt.len() == pi {
+                kt.push(pool.alloc());
+            }
+            pool.page_mut(kt[pi])[po * dh..(po + 1) * dh]
+                .copy_from_slice(&krow[h * dh..(h + 1) * dh]);
+            let vt = &mut self.v_pages[off + h];
+            if vt.len() == pi {
+                vt.push(pool.alloc());
+            }
+            pool.page_mut(vt[pi])[po * dh..(po + 1) * dh]
+                .copy_from_slice(&vrow[h * dh..(h + 1) * dh]);
+        }
+    }
+
+    /// Commit `t` appended positions (call once per append pass, after
+    /// every block has written its rows).
+    pub(crate) fn advance(&mut self, t: usize) {
+        self.len += t;
+        debug_assert!(self.len <= self.cap);
     }
 }
 

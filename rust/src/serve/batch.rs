@@ -1,0 +1,456 @@
+//! Continuous-batching decode scheduler with paged KV storage.
+//!
+//! PR 6's serving primitives step one request at a time: every
+//! in-flight stream pays its own 1-row GEMM per layer and owns a full
+//! `max_seq` cache slab. This module adds the two serving-scale
+//! levers on top of that path:
+//!
+//! - [`KvPagePool`] — a fixed budget of fixed-size *position pages*
+//!   shared by all requests. A request's K/V streams grow page by page
+//!   through per-request page tables
+//!   ([`PagedKv`](crate::nn::models::PagedKv)) and return their pages
+//!   on completion, so concurrent capacity is bounded by *live*
+//!   positions, not by `requests × max_seq`. Exhaustion panics loudly;
+//!   the scheduler's admission accounting makes it unreachable from
+//!   scheduled traffic.
+//! - [`BatchScheduler`] — cross-request **continuous batching**:
+//!   queued requests are admitted mid-flight whenever batch room and
+//!   page budget allow (FIFO, head-of-line), every scheduler step runs
+//!   *one* coalesced multi-row
+//!   [`decode_batch_step`](crate::nn::models::TinyLm::decode_batch_step)
+//!   for all active requests, and completed requests are evicted at
+//!   the step they finish, freeing their pages for the queue.
+//!
+//! The whole point of coalescing is that it is **free of numerical
+//! consequence**: the serving GEMMs dispatch on `(k, n)` only
+//! ([`use_packed_cols`](crate::tensor::gemm::use_packed_cols) has no
+//! row-count argument) and every other stage is row-local, so an
+//! m-row coalesced step is bitwise equal to m solo 1-row steps. Each
+//! request's token stream is therefore bit-identical to its solo
+//! [`generate`](crate::nn::models::TinyLm::generate) run at any batch
+//! composition, admission order, and worker count —
+//! `rust/tests/decode.rs` asserts all three.
+//!
+//! Determinism: admission is FIFO in submit order, steps are explicit
+//! (no wall-clock anywhere), and page ids come off a LIFO free list —
+//! a replayed workload reproduces the exact same schedule.
+
+use std::collections::VecDeque;
+
+use crate::nn::argmax_rows;
+use crate::nn::models::{LmServePack, PagedKv, TinyLm};
+
+/// A fixed budget of fixed-size K/V position pages shared by every
+/// in-flight request. One page holds `page_positions` cache rows of
+/// one (K|V, KV-head) stream, `d_head` floats each; all pages live in
+/// one flat allocation made up front, so serving never allocates on
+/// the decode path beyond page-table bookkeeping.
+pub struct KvPagePool {
+    data: Vec<f32>,
+    page_positions: usize,
+    dh: usize,
+    /// LIFO free list: deterministic page handout, hot pages reused
+    /// first.
+    free: Vec<usize>,
+    total_pages: usize,
+    peak_in_use: usize,
+}
+
+impl KvPagePool {
+    /// Pool of `total_pages` pages, each holding `page_positions`
+    /// rows of `dh` floats.
+    pub fn new(page_positions: usize, dh: usize, total_pages: usize) -> KvPagePool {
+        assert!(page_positions > 0, "pages must hold at least one position");
+        assert!(dh > 0, "zero-width cache rows");
+        assert!(total_pages > 0, "a pool needs at least one page");
+        KvPagePool {
+            data: vec![0.0f32; total_pages * page_positions * dh],
+            page_positions,
+            dh,
+            free: (0..total_pages).rev().collect(),
+            total_pages,
+            peak_in_use: 0,
+        }
+    }
+
+    /// Positions per page.
+    pub fn page_positions(&self) -> usize {
+        self.page_positions
+    }
+
+    /// Floats per page (`page_positions * d_head`).
+    pub fn page_elems(&self) -> usize {
+        self.page_positions * self.dh
+    }
+
+    /// Total page budget.
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Pages currently free.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages currently held by requests.
+    pub fn pages_in_use(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    /// High-water mark of [`Self::pages_in_use`] over the pool's life.
+    pub fn peak_pages_in_use(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Backing slice of page `id`.
+    pub fn page(&self, id: usize) -> &[f32] {
+        let pe = self.page_elems();
+        &self.data[id * pe..(id + 1) * pe]
+    }
+
+    pub(crate) fn page_mut(&mut self, id: usize) -> &mut [f32] {
+        let pe = self.page_elems();
+        &mut self.data[id * pe..(id + 1) * pe]
+    }
+
+    /// Take a free page. Panics loudly on exhaustion — silent
+    /// truncation of a KV cache would corrupt every later token of the
+    /// affected request, so an over-committed pool is a hard error;
+    /// [`BatchScheduler`] admission accounting keeps scheduled traffic
+    /// strictly inside the budget.
+    pub(crate) fn alloc(&mut self) -> usize {
+        let id = self.free.pop().unwrap_or_else(|| {
+            panic!(
+                "KV page pool exhausted: all {} pages ({} positions each) are live — \
+                 admit fewer concurrent requests or grow the pool budget",
+                self.total_pages, self.page_positions
+            )
+        });
+        self.peak_in_use = self.peak_in_use.max(self.pages_in_use());
+        id
+    }
+
+    /// Return a page to the free list.
+    pub(crate) fn release(&mut self, id: usize) {
+        debug_assert!(id < self.total_pages, "foreign page id {id}");
+        debug_assert!(!self.free.contains(&id), "double free of page {id}");
+        self.free.push(id);
+    }
+}
+
+/// One finished request: its id (from [`BatchScheduler::submit`]) and
+/// the full token stream, prompt included — exactly what the solo
+/// [`generate`](crate::nn::models::TinyLm::generate) returns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Completion {
+    pub id: usize,
+    pub tokens: Vec<u16>,
+}
+
+/// Scheduler counters, for tests, benches, and capacity accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Requests accepted by [`BatchScheduler::submit`].
+    pub submitted: usize,
+    /// Requests completed and evicted.
+    pub completed: usize,
+    /// Coalesced decode steps executed.
+    pub decode_steps: usize,
+    /// Total rows across all coalesced steps (`/ decode_steps` =
+    /// mean batch occupancy).
+    pub coalesced_rows: usize,
+    /// High-water mark of concurrently active requests.
+    pub peak_active: usize,
+}
+
+struct Pending {
+    id: usize,
+    prompt: Vec<u16>,
+    n_new: usize,
+}
+
+struct Active {
+    id: usize,
+    kv: PagedKv,
+    out: Vec<u16>,
+    n_new: usize,
+    emitted: usize,
+    last: u16,
+    /// Worst-case page count reserved at admission.
+    worst_pages: usize,
+}
+
+/// Continuous-batching greedy-decode scheduler over one model. See
+/// the [module docs](self) for the design; driving protocol:
+///
+/// 1. [`Self::submit`] any number of requests (FIFO queue).
+/// 2. Call [`Self::step`] repeatedly — each step admits whatever fits,
+///    prefills newcomers, runs one coalesced decode step over all
+///    active requests, and returns the requests that completed.
+/// 3. [`Self::run_to_completion`] loops until idle.
+pub struct BatchScheduler<'m> {
+    model: &'m TinyLm,
+    pack: LmServePack,
+    pool: KvPagePool,
+    queue: VecDeque<Pending>,
+    active: Vec<Active>,
+    max_batch: usize,
+    /// Σ worst-case pages over active requests — admission headroom.
+    committed_pages: usize,
+    next_id: usize,
+    stats: BatchStats,
+}
+
+impl<'m> BatchScheduler<'m> {
+    /// Scheduler over `model` with a pool of `pool_pages` pages of
+    /// `page_positions` positions each, coalescing at most `max_batch`
+    /// requests per step. Weights are prepacked once, here.
+    pub fn new(
+        model: &'m TinyLm,
+        page_positions: usize,
+        pool_pages: usize,
+        max_batch: usize,
+    ) -> BatchScheduler<'m> {
+        assert!(max_batch >= 1, "a batch must admit at least one request");
+        let pack = model.serve_pack();
+        let pool = KvPagePool::new(page_positions, pack.d_head(), pool_pages);
+        BatchScheduler {
+            model,
+            pack,
+            pool,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            max_batch,
+            committed_pages: 0,
+            next_id: 0,
+            stats: BatchStats::default(),
+        }
+    }
+
+    /// Enqueue a greedy-generation request (prompt plus `n_new` new
+    /// tokens); returns its completion id. Panics if the request could
+    /// *never* be admitted (worst-case pages exceed the whole pool) —
+    /// queueing it would deadlock the FIFO.
+    pub fn submit(&mut self, prompt: &[u16], n_new: usize) -> usize {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(n_new >= 1, "a request must generate at least one token");
+        assert!(
+            prompt.len() + n_new <= self.model.cfg.max_seq,
+            "generation would exceed max_seq"
+        );
+        let worst = self.pack.pages_needed(prompt.len() + n_new, self.pool.page_positions());
+        assert!(
+            worst <= self.pool.total_pages(),
+            "request needs {worst} pages at full length but the pool holds only {} — \
+             it can never be admitted",
+            self.pool.total_pages()
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Pending { id, prompt: prompt.to_vec(), n_new });
+        self.stats.submitted += 1;
+        id
+    }
+
+    /// True when no work remains (empty queue, empty batch).
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// Requests currently in the coalesced batch.
+    pub fn active_requests(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Requests waiting for admission.
+    pub fn queued_requests(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Scheduler counters so far.
+    pub fn stats(&self) -> BatchStats {
+        self.stats
+    }
+
+    /// The shared page pool (for capacity accounting in tests and
+    /// benches).
+    pub fn pool(&self) -> &KvPagePool {
+        &self.pool
+    }
+
+    /// One scheduler step: admit, prefill, coalesce-decode, evict.
+    /// Returns the requests that completed during this step, in
+    /// completion order.
+    ///
+    /// Admission is FIFO with head-of-line blocking, reserving each
+    /// request's **worst-case** page count (`pages_needed(prompt +
+    /// n_new)`) up front, so an admitted request can always grow to
+    /// its full length — mid-decode pool exhaustion is structurally
+    /// unreachable.
+    pub fn step(&mut self) -> Vec<Completion> {
+        let mut done = Vec::new();
+        while self.active.len() < self.max_batch {
+            let fits = self.queue.front().is_some_and(|p| {
+                let worst =
+                    self.pack.pages_needed(p.prompt.len() + p.n_new, self.pool.page_positions());
+                self.committed_pages + worst <= self.pool.total_pages()
+            });
+            if !fits {
+                break;
+            }
+            let p = self.queue.pop_front().unwrap();
+            let worst =
+                self.pack.pages_needed(p.prompt.len() + p.n_new, self.pool.page_positions());
+            self.committed_pages += worst;
+            let mut kv = PagedKv::new(&self.pack, self.model.cfg.max_seq);
+            let logits = self.model.paged_prefill(&self.pack, &mut self.pool, &mut kv, &p.prompt);
+            let first = argmax_rows(&logits)[logits.dim(0) - 1] as u16;
+            let mut out = p.prompt;
+            out.push(first);
+            self.active.push(Active {
+                id: p.id,
+                kv,
+                out,
+                n_new: p.n_new,
+                emitted: 1,
+                last: first,
+                worst_pages: worst,
+            });
+        }
+        self.stats.peak_active = self.stats.peak_active.max(self.active.len());
+        // n_new == 1 requests finish at prefill, before any decode.
+        self.evict_completed(&mut done);
+        if !self.active.is_empty() {
+            let tokens: Vec<u16> = self.active.iter().map(|a| a.last).collect();
+            let mut refs: Vec<&mut PagedKv> =
+                self.active.iter_mut().map(|a| &mut a.kv).collect();
+            let logits =
+                self.model.decode_batch_step(&self.pack, &mut self.pool, &mut refs, &tokens);
+            drop(refs);
+            let picks = argmax_rows(&logits);
+            for (r, a) in self.active.iter_mut().enumerate() {
+                let next = picks[r] as u16;
+                a.out.push(next);
+                a.emitted += 1;
+                a.last = next;
+            }
+            self.stats.decode_steps += 1;
+            self.stats.coalesced_rows += tokens.len();
+            self.evict_completed(&mut done);
+        }
+        done
+    }
+
+    /// Drive [`Self::step`] until idle; completions in completion
+    /// order (ties within a step in admission order).
+    pub fn run_to_completion(&mut self) -> Vec<Completion> {
+        let mut done = Vec::new();
+        while !self.is_idle() {
+            done.extend(self.step());
+        }
+        done
+    }
+
+    fn evict_completed(&mut self, done: &mut Vec<Completion>) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].emitted >= self.active[i].n_new {
+                let mut a = self.active.remove(i);
+                a.kv.release(&mut self.pool);
+                self.committed_pages -= a.worst_pages;
+                self.stats.completed += 1;
+                done.push(Completion { id: a.id, tokens: a.out });
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models::LmConfig;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn pool_alloc_release_accounting() {
+        let mut pool = KvPagePool::new(4, 8, 3);
+        assert_eq!(pool.free_pages(), 3);
+        assert_eq!(pool.page_elems(), 32);
+        let a = pool.alloc();
+        let b = pool.alloc();
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.peak_pages_in_use(), 2);
+        pool.release(a);
+        assert_eq!(pool.pages_in_use(), 1);
+        // LIFO: the page released last comes back first.
+        assert_eq!(pool.alloc(), a);
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.free_pages(), 3);
+        assert_eq!(pool.peak_pages_in_use(), 2, "peak survives release");
+    }
+
+    #[test]
+    #[should_panic(expected = "KV page pool exhausted")]
+    fn pool_exhaustion_panics() {
+        let mut pool = KvPagePool::new(4, 8, 2);
+        let _ = pool.alloc();
+        let _ = pool.alloc();
+        let _ = pool.alloc();
+    }
+
+    #[test]
+    fn pages_needed_rounds_up_per_stream() {
+        let mut rng = Pcg64::seed(3);
+        let m = TinyLm::init(LmConfig::default(), &mut rng);
+        let pack = m.serve_pack();
+        // Default config: 4 blocks × 8 KV heads = 32 streams, K and V.
+        assert_eq!(pack.total_kv_streams(), 32);
+        assert_eq!(pack.pages_needed(1, 16), 64, "one position still takes a page per stream");
+        assert_eq!(pack.pages_needed(16, 16), 64);
+        assert_eq!(pack.pages_needed(17, 16), 128);
+        // Slab comparison baseline: every stream owns max_seq rows.
+        assert_eq!(pack.slab_elems(64), 2 * 32 * 64 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "can never be admitted")]
+    fn oversized_request_rejected_at_submit() {
+        let mut rng = Pcg64::seed(4);
+        let m = TinyLm::init(LmConfig::default(), &mut rng);
+        // 64 streams × 2 needed pages each at ps=16 for len 17 — give
+        // the pool less than that.
+        let mut sched = BatchScheduler::new(&m, 16, 64, 8);
+        sched.submit(&[1; 9], 8); // len 17 → 128 pages > 64
+    }
+
+    #[test]
+    fn scheduler_matches_solo_generate_and_frees_pages() {
+        let mut rng = Pcg64::seed(5);
+        let m = TinyLm::init(LmConfig::default(), &mut rng);
+        let prompts: Vec<Vec<u16>> = (0..3)
+            .map(|i| (0..4 + i).map(|j| ((i * 7 + j * 3) % 60) as u16).collect())
+            .collect();
+        let n_new = [5usize, 1, 3];
+        let mut sched = BatchScheduler::new(&m, 8, 512, 8);
+        let ids: Vec<usize> =
+            prompts.iter().zip(n_new).map(|(p, n)| sched.submit(p, n)).collect();
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), 3);
+        for (i, id) in ids.iter().enumerate() {
+            let c = done.iter().find(|c| c.id == *id).unwrap();
+            assert_eq!(c.tokens, m.generate(&prompts[i], n_new[i]), "request {i}");
+        }
+        // Everything evicted: all pages back in the pool.
+        assert!(sched.is_idle());
+        assert_eq!(sched.pool().pages_in_use(), 0, "completed requests leak no pages");
+        let st = sched.stats();
+        assert_eq!(st.submitted, 3);
+        assert_eq!(st.completed, 3);
+        assert!(st.peak_active >= 2, "requests actually coalesced: {st:?}");
+        assert!(st.coalesced_rows >= st.decode_steps);
+    }
+}

@@ -8,6 +8,10 @@
 //! that pass once and serves unlimited plan/run/tune traffic against
 //! it:
 //!
+//! - [`batch`] — token-serving scale-out: the continuous-batching
+//!   decode scheduler and the shared KV page pool that let many
+//!   in-flight generation requests share coalesced GEMMs and a fixed
+//!   cache budget.
 //! - [`digest`] — deterministic 128-bit content digests (stable across
 //!   processes and releases; pinned unit tests catch drift).
 //! - [`cache`] — a content-addressed on-disk store of per-site,
@@ -27,12 +31,14 @@
 //! See EXPERIMENTS.md §Serve daemon for the on-disk layout and CLI
 //! walkthrough.
 
+pub mod batch;
 pub mod cache;
 pub mod daemon;
 pub mod digest;
 pub mod job;
 pub mod provider;
 
+pub use batch::{BatchScheduler, BatchStats, Completion, KvPagePool};
 pub use cache::{CacheCounters, StatsCache};
 pub use digest::{digest_bytes, digest_file, digest_tensor, Digest, Hasher128};
 pub use job::{JobRecord, JobState, JobVerb};

@@ -505,6 +505,16 @@ pub fn gemm_nt_packed_ep(
 /// (not per step), and the compute body is the same
 /// [`gemm_with_packed_b`] the per-call entries use, so results are
 /// bit-identical to [`gemm_nt_packed_ep`].
+///
+/// **Coalescing contract** (what continuous batching leans on): the
+/// dispatch rule [`use_packed_cols`] has no `m` argument, and every
+/// output row is computed from row-local accumulator state in the same
+/// `k` order regardless of `m` — so one m-row call against a shared
+/// pack is bitwise equal to m separate 1-row calls. The decode
+/// scheduler ([`crate::serve::batch`]) coalesces the per-layer GEMMs
+/// of all in-flight requests into single calls on exactly this
+/// guarantee (asserted by `prepacked_m_rows_equal_m_single_rows`
+/// below and end-to-end in `rust/tests/decode.rs`).
 pub fn gemm_nt_prepacked(
     a: &[f32],
     pb: &PackedB,
@@ -822,6 +832,39 @@ mod tests {
         let mut r = vals.clone();
         Epilogue::None.apply(3, &mut r);
         assert_eq!(r, vals);
+    }
+
+    #[test]
+    fn prepacked_m_rows_equal_m_single_rows() {
+        // The coalescing contract behind continuous batching
+        // (`serve::batch`): one m-row prepacked GEMM must be bitwise
+        // equal to m separate 1-row calls against the same pack, for
+        // every epilogue. Shapes straddle packing block edges, and the
+        // fan-out path is exercised with several worker counts.
+        let (m, k, n) = (7usize, KC + 3, NR + 5);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 29 % 23) as f32) * 0.37 - 4.0).collect();
+        let b: Vec<f32> = (0..n * k).map(|i| ((i * 41 % 17) as f32) * 0.21 - 2.0).collect();
+        let bias: Vec<f32> = (0..n).map(|i| 0.11 * i as f32 - 0.6).collect();
+        let pb = PackedB::pack_nt(&b, k, n);
+        let eps: [Epilogue<'_>; 4] = [
+            Epilogue::None,
+            Epilogue::Bias(&bias),
+            Epilogue::BiasRelu(&bias),
+            Epilogue::BiasGelu(&bias),
+        ];
+        for ep in eps {
+            let mut solo = vec![0.0f32; m * n];
+            for r in 0..m {
+                gemm_nt_prepacked(&a[r * k..(r + 1) * k], &pb, &mut solo[r * n..(r + 1) * n], 1, ep, 1);
+            }
+            for workers in [1usize, 2, 4] {
+                let mut coalesced = vec![0.0f32; m * n];
+                gemm_nt_prepacked(&a, &pb, &mut coalesced, m, ep, workers);
+                for (i, (x, y)) in coalesced.iter().zip(&solo).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "elem {i} workers={workers}");
+                }
+            }
+        }
     }
 
     #[test]

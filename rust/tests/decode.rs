@@ -14,7 +14,8 @@ mod common;
 
 use grail::compress::{Compressible, ReductionPlan, Reducer};
 use grail::coordinator::scheduler::run_grid;
-use grail::nn::models::{LmBatch, LmConfig, TinyLm};
+use grail::nn::models::{LmBatch, LmConfig, PagedKv, TinyLm};
+use grail::serve::{BatchScheduler, KvPagePool};
 use grail::tensor::Tensor;
 
 /// Single-sequence batch (targets unused by `forward`).
@@ -136,4 +137,233 @@ fn prefill_twice_panics() {
     let mut state = m.decode_state();
     m.prefill(&mut state, &prompt(4));
     m.prefill(&mut state, &prompt(4));
+}
+
+// ---------------------------------------------------------------------
+// Paged KV + continuous batching (`serve::batch`). The contract is the
+// same bitwise one as above, extended across requests: paged storage
+// must reproduce the slab path exactly, and an m-row coalesced batch
+// step must reproduce m solo steps exactly — at any batch composition,
+// admission order, and worker count.
+// ---------------------------------------------------------------------
+
+#[test]
+fn paged_decode_matches_slab_decode_bitwise() {
+    // A page size that divides nothing (5) exercises partial tail
+    // pages on every variant's stream layout.
+    for (name, m) in variants() {
+        let pack = m.serve_pack();
+        let mut pool = KvPagePool::new(5, pack.d_head(), 4096);
+        let mut kv = PagedKv::new(&pack, m.cfg.max_seq);
+        let mut slab = m.decode_state();
+        let toks = prompt(7);
+        let paged = m.paged_prefill(&pack, &mut pool, &mut kv, &toks);
+        let flat = m.prefill(&mut slab, &toks);
+        for r in 0..toks.len() {
+            assert_rows_bits_eq(&paged, r, &flat, r, &format!("{name}: paged prefill row {r}"));
+        }
+        assert_eq!(
+            kv.pages_held(),
+            pack.pages_needed(toks.len(), pool.page_positions()),
+            "{name}: page accounting after prefill"
+        );
+        for (step, &tok) in prompt(12).iter().enumerate().take(9) {
+            let p = m.paged_decode_step(&pack, &mut pool, &mut kv, tok);
+            let s = m.decode_step(&mut slab, tok);
+            assert_rows_bits_eq(&p, 0, &s, 0, &format!("{name}: paged decode step {step}"));
+            assert_eq!(kv.len(), slab.len(), "{name}: cache lengths agree");
+        }
+    }
+}
+
+#[test]
+fn one_request_batch_is_bitwise_equal_to_solo_decode_step() {
+    for (name, m) in variants() {
+        let pack = m.serve_pack();
+        let mut pool_a = KvPagePool::new(8, pack.d_head(), 2048);
+        let mut pool_b = KvPagePool::new(8, pack.d_head(), 2048);
+        let mut kv_batch = PagedKv::new(&pack, m.cfg.max_seq);
+        let mut kv_solo = PagedKv::new(&pack, m.cfg.max_seq);
+        let toks = prompt(6);
+        m.paged_prefill(&pack, &mut pool_a, &mut kv_batch, &toks);
+        m.paged_prefill(&pack, &mut pool_b, &mut kv_solo, &toks);
+        let mut tok = 3u16;
+        for step in 0..5 {
+            let mut refs = [&mut kv_batch];
+            let batched = m.decode_batch_step(&pack, &mut pool_a, &mut refs, &[tok]);
+            let solo = m.paged_decode_step(&pack, &mut pool_b, &mut kv_solo, tok);
+            assert_rows_bits_eq(
+                &batched,
+                0,
+                &solo,
+                0,
+                &format!("{name}: 1-request batch step {step}"),
+            );
+            tok = (tok + 7) % 60;
+        }
+    }
+}
+
+#[test]
+fn batched_decode_matches_solo_streams_at_any_worker_count() {
+    // Three requests at different positions coalesced into one batch:
+    // every row must be bitwise equal to the request's solo paged
+    // stream, and worker count must not matter (the per-(request,
+    // head) fan-out writes disjoint panels).
+    let m = common::lm(LmConfig::default(), 36);
+    let pack = m.serve_pack();
+    let prompts: [Vec<u16>; 3] =
+        [prompt(3), (0..5).map(|i| ((i * 11 + 1) % 64) as u16).collect(), prompt(8)];
+    let run = || {
+        let mut pool_b = KvPagePool::new(4, pack.d_head(), 4096);
+        let mut pool_s = KvPagePool::new(4, pack.d_head(), 4096);
+        let mut batch: Vec<PagedKv> =
+            prompts.iter().map(|_| PagedKv::new(&pack, m.cfg.max_seq)).collect();
+        let mut solo: Vec<PagedKv> =
+            prompts.iter().map(|_| PagedKv::new(&pack, m.cfg.max_seq)).collect();
+        let mut toks: Vec<u16> = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let lb = m.paged_prefill(&pack, &mut pool_b, &mut batch[i], p);
+            m.paged_prefill(&pack, &mut pool_s, &mut solo[i], p);
+            toks.push(grail::nn::argmax_rows(&lb)[lb.dim(0) - 1] as u16);
+        }
+        let mut stream: Vec<Vec<u16>> = toks.iter().map(|&t| vec![t]).collect();
+        for step in 0..6 {
+            let mut refs: Vec<&mut PagedKv> = batch.iter_mut().collect();
+            let bl = m.decode_batch_step(&pack, &mut pool_b, &mut refs, &toks);
+            // Every coalesced row == its request's solo paged step.
+            for (r, kv) in solo.iter_mut().enumerate() {
+                let sl = m.paged_decode_step(&pack, &mut pool_s, kv, toks[r]);
+                assert_rows_bits_eq(&bl, r, &sl, 0, &format!("row {r} step {step}"));
+            }
+            let picks = grail::nn::argmax_rows(&bl);
+            for (r, &p) in picks.iter().enumerate() {
+                toks[r] = p as u16;
+                stream[r].push(toks[r]);
+            }
+        }
+        stream
+    };
+    let baseline = run();
+    // Re-run under fanned-out workers: each worker thread carries a
+    // different nested thread-budget share, and the batch step's
+    // per-(request, head) fan-out must not let that reach the bits.
+    for workers in [2usize, 4, 8] {
+        for stream in run_grid(vec![(); workers], workers, |_, _| run()) {
+            assert_eq!(stream, baseline, "token streams drifted at {workers} workers");
+        }
+    }
+}
+
+#[test]
+fn scheduler_admission_and_eviction_keep_survivors_bit_identical() {
+    // max_batch 2 over 5 requests with staggered lengths forces
+    // mid-flight admission and eviction; every completed stream must
+    // still equal its solo `generate` run, and submission order must
+    // not change any request's tokens.
+    let m = common::lm(LmConfig::default(), 37);
+    let reqs: Vec<(Vec<u16>, usize)> = (0..5)
+        .map(|i| {
+            let p: Vec<u16> = (0..3 + (i % 3)).map(|j| ((i * 13 + j * 5 + 1) % 64) as u16).collect();
+            (p, 2 + (i * 3) % 7)
+        })
+        .collect();
+    let solo: Vec<Vec<u16>> = reqs.iter().map(|(p, n)| m.generate(p, *n)).collect();
+    for order in [[0usize, 1, 2, 3, 4], [4, 2, 0, 3, 1]] {
+        let mut sched = BatchScheduler::new(&m, 8, 4096, 2);
+        let ids: Vec<(usize, usize)> =
+            order.iter().map(|&i| (sched.submit(&reqs[i].0, reqs[i].1), i)).collect();
+        let done = sched.run_to_completion();
+        assert_eq!(done.len(), reqs.len());
+        for (id, i) in ids {
+            let c = done.iter().find(|c| c.id == id).unwrap();
+            assert_eq!(c.tokens, solo[i], "request {i} (order {order:?})");
+        }
+        let st = sched.stats();
+        assert_eq!(st.completed, reqs.len());
+        assert!(st.peak_active <= 2, "max_batch respected: {st:?}");
+        // Each request takes its first token from prefill and exactly
+        // one coalesced decode row per token after that, no matter how
+        // the schedule staggered it.
+        let decode_rows: usize = reqs.iter().map(|(_, n)| n - 1).sum();
+        assert_eq!(st.coalesced_rows, decode_rows, "{st:?}");
+        // 21 decode rows at <= 2 per step means the batch turned over
+        // several generations of requests.
+        assert!(st.decode_steps >= decode_rows / 2, "{st:?}");
+        assert_eq!(sched.pool().pages_in_use(), 0, "evicted requests returned every page");
+    }
+}
+
+#[test]
+#[should_panic(expected = "KV page pool exhausted")]
+fn page_pool_exhaustion_panics_loudly() {
+    // Driving the paged path directly (bypassing scheduler admission)
+    // past the page budget must die with a clear message — silent
+    // truncation would corrupt every later token.
+    let m = common::lm(LmConfig::default(), 38);
+    let pack = m.serve_pack();
+    // A 7-token prompt at ps=4 needs 2 pages per stream = 128 total.
+    let mut pool = KvPagePool::new(4, pack.d_head(), 32);
+    let mut kv = PagedKv::new(&pack, m.cfg.max_seq);
+    m.paged_prefill(&pack, &mut pool, &mut kv, &prompt(7));
+}
+
+#[test]
+fn paged_pool_holds_4x_more_concurrent_requests_than_slabs() {
+    // Same memory budget, measured in cache floats: two per-request
+    // max_seq slabs' worth of pool pages. Short requests (8 live
+    // positions of max_seq = 64) pack 8× more streams into it — the
+    // scheduler must actually hold ≥ 4× the slab count in flight at
+    // once, and still produce solo-identical tokens.
+    let m = common::lm(LmConfig::default(), 39);
+    let pack = m.serve_pack();
+    let ps = 8usize;
+    let slab_requests = 2usize;
+    let budget_elems = slab_requests * pack.slab_elems(m.cfg.max_seq);
+    let pool_pages = budget_elems / (ps * pack.d_head());
+    let n_req = 16usize;
+    let mut sched = BatchScheduler::new(&m, ps, pool_pages, n_req);
+    let reqs: Vec<Vec<u16>> = (0..n_req)
+        .map(|i| (0..4).map(|j| ((i * 7 + j * 3 + 2) % 64) as u16).collect())
+        .collect();
+    let ids: Vec<usize> = reqs.iter().map(|p| sched.submit(p, 4)).collect();
+    let done = sched.run_to_completion();
+    let st = sched.stats();
+    assert!(
+        st.peak_active >= 4 * slab_requests,
+        "paged pool must hold >= 4x the slab-equivalent request count, got {st:?}"
+    );
+    assert_eq!(st.peak_active, n_req, "every short request fits the pool at once");
+    for (i, id) in ids.iter().enumerate() {
+        let c = done.iter().find(|c| c.id == *id).unwrap();
+        assert_eq!(c.tokens, m.generate(&reqs[i], 4), "request {i}");
+    }
+}
+
+#[test]
+fn scheduler_tokens_invariant_under_thread_env() {
+    // GRAIL_THREADS caps the machine-level budget that the batch
+    // step's per-(request, head) fan-out divides up; the token streams
+    // must be bit-identical at every setting.
+    let m = common::lm(LmConfig::default(), 40);
+    let reqs: Vec<(Vec<u16>, usize)> =
+        (0..3).map(|i| (prompt(4 + i), 3 + i)).collect();
+    let run = || {
+        let mut sched = BatchScheduler::new(&m, 8, 2048, 4);
+        let ids: Vec<usize> = reqs.iter().map(|(p, n)| sched.submit(p, *n)).collect();
+        let done = sched.run_to_completion();
+        ids.iter()
+            .map(|id| done.iter().find(|c| c.id == *id).unwrap().tokens.clone())
+            .collect::<Vec<_>>()
+    };
+    let baseline = run();
+    for (i, (p, n)) in reqs.iter().enumerate() {
+        assert_eq!(baseline[i], m.generate(p, *n), "baseline request {i} vs solo generate");
+    }
+    for threads in ["1", "2", "4", "8"] {
+        std::env::set_var("GRAIL_THREADS", threads);
+        let got = run();
+        std::env::remove_var("GRAIL_THREADS");
+        assert_eq!(got, baseline, "token streams drifted at GRAIL_THREADS={threads}");
+    }
 }
