@@ -9,12 +9,16 @@
 //! closed-batch against the fleet baseline and under a deterministic
 //! **open-loop** arrival process (arrivals are fixed in scheduler-step
 //! units, never derived from the wall clock, so the workload replays
-//! identically; the clock only timestamps it). Every fast path is
-//! first asserted bit-identical to (or token-identical with) its
-//! reference, then the speed claims are *asserted* so CI fails on a
-//! serving regression. Results land machine-readably in
-//! `BENCH_serve.json` (schema `grail-serve-v1`); reproduction steps in
-//! EXPERIMENTS.md §Serving.
+//! identically; the clock only timestamps it), plus a **long-prompt
+//! chunked-prefill scenario** (one 8x-length prompt arriving
+//! mid-stream) whose head-of-line gate is measured in deterministic
+//! pass-row units. Every fast path is first asserted bit-identical to
+//! (or token-identical with) its reference, then the speed claims are
+//! *asserted* so CI fails on a serving regression. Results land
+//! machine-readably in `BENCH_serve.json` (schema `grail-serve-v2` —
+//! bumped from v1 when chunked prefill added the `prefill_*`,
+//! `mixed_steps`, occupancy, stall, and `lm_head_rows_saved`
+//! metrics); reproduction steps in EXPERIMENTS.md §Serving.
 
 use std::time::Instant;
 
@@ -25,7 +29,7 @@ use grail::grail::{compress_model, CompressionSpec, Method};
 use grail::nn::models::{LmBatch, LmConfig, TinyLm};
 use grail::nn::{Activation, Linear, MultiHeadAttention};
 use grail::rng::Pcg64;
-use grail::serve::BatchScheduler;
+use grail::serve::{BatchScheduler, BatchStats, DEFAULT_PREFILL_CHUNK};
 use grail::tensor::gemm::Epilogue;
 use grail::tensor::{ops, Tensor};
 
@@ -89,20 +93,23 @@ fn pool_pages_for(m: &TinyLm, requests: usize, positions: usize, ps: usize) -> u
 /// scheduler. `arrive_every == 0` submits everything up front (closed
 /// batch); `k > 0` admits one request every `k` scheduler steps — an
 /// open-loop arrival process that is deterministic in step units (the
-/// wall clock only timestamps the workload, never shapes it). Returns
-/// (requests/sec over the whole run, sorted per-request latencies in
-/// ms, mean coalesced rows per decode step).
+/// wall clock only timestamps the workload, never shapes it). `chunk`
+/// is the per-step prefill row budget (`usize::MAX` reproduces the
+/// unchunked one-shot-prefill schedule). Returns (requests/sec over
+/// the whole run, sorted per-request latencies in ms, final scheduler
+/// stats).
 fn serve_batched(
     m: &TinyLm,
     requests: usize,
     p_len: usize,
     n_new: usize,
     arrive_every: usize,
-) -> (f64, Vec<f64>, f64) {
+    chunk: usize,
+) -> (f64, Vec<f64>, BatchStats) {
     let ps = 8usize;
     let prompts: Vec<Vec<u16>> = (0..requests).map(|i| prompt(i, p_len)).collect();
     let pages = pool_pages_for(m, requests, p_len + n_new, ps);
-    let mut sched = BatchScheduler::new(m, ps, pages, requests);
+    let mut sched = BatchScheduler::new(m, ps, pages, requests).with_prefill_chunk(chunk);
     let mut start_ms = vec![0.0f64; requests];
     let mut lat = vec![0.0f64; requests];
     let (mut submitted, mut completed, mut step_no) = (0usize, 0usize, 0usize);
@@ -121,9 +128,74 @@ fn serve_batched(
     }
     let wall = t0.elapsed().as_secs_f64();
     let st = sched.stats();
-    let occupancy = st.coalesced_rows as f64 / st.decode_steps.max(1) as f64;
     lat.sort_by(|a, b| a.total_cmp(b));
-    (requests as f64 / wall, lat, occupancy)
+    (requests as f64 / wall, lat, st)
+}
+
+/// Mean coalesced decode rows per decode-bearing step — the PR-9
+/// occupancy figure, kept for cross-schema comparability.
+fn decode_occupancy(st: &BatchStats) -> f64 {
+    st.coalesced_rows as f64 / st.decode_steps.max(1) as f64
+}
+
+const LONG_SHORTS: usize = 24;
+const LONG_AT: usize = 12;
+const LONG_SHORT_LEN: usize = 6;
+const LONG_LONG_LEN: usize = 48;
+const LONG_N_NEW: usize = 8;
+
+/// The long-prompt head-of-line scenario: [`LONG_SHORTS`] short
+/// requests arrive open-loop every 2 scheduler steps, with a single
+/// 8x-length prompt injected mid-stream (arrival index [`LONG_AT`]).
+/// The workload is deterministic in step units; the per-token *stall*
+/// proxy for a decode token is the number of rows in the pass that
+/// produced it (every row in a coalesced pass shares that pass's wall
+/// time), also deterministic. Returns (per-request token streams,
+/// sorted stall trace in pass rows, final stats, p99 per-step wall ms
+/// — reported, never gated).
+fn long_prompt_run(m: &TinyLm, chunk: usize) -> (Vec<Vec<u16>>, Vec<f64>, BatchStats, f64) {
+    let total = LONG_SHORTS + 1;
+    let prompts: Vec<Vec<u16>> = (0..total)
+        .map(|i| {
+            if i == LONG_AT { prompt(999, LONG_LONG_LEN) } else { prompt(i, LONG_SHORT_LEN) }
+        })
+        .collect();
+    let ps = 8usize;
+    let pages: usize =
+        prompts.iter().map(|p| pool_pages_for(m, 1, p.len() + LONG_N_NEW, ps)).sum();
+    let mut sched = BatchScheduler::new(m, ps, pages, 8).with_prefill_chunk(chunk);
+    let mut streams: Vec<Vec<u16>> = vec![Vec::new(); total];
+    let mut stalls: Vec<f64> = Vec::new();
+    let mut step_ms: Vec<f64> = Vec::new();
+    let (mut submitted, mut completed, mut step_no) = (0usize, 0usize, 0usize);
+    while completed < total {
+        while submitted < total && step_no >= submitted * 2 {
+            let id = sched.submit(&prompts[submitted], LONG_N_NEW);
+            assert_eq!(id, submitted, "scheduler ids must track submission order");
+            submitted += 1;
+        }
+        let before = sched.stats();
+        let t = Instant::now();
+        let done = sched.step();
+        step_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        let after = sched.stats();
+        let rows = (after.pass_rows - before.pass_rows) as f64;
+        // One stall sample per decode token emitted by this pass; a
+        // token's stall is the whole pass's row count (every row in a
+        // coalesced pass shares its wall time).
+        for _ in 0..(after.coalesced_rows - before.coalesced_rows) {
+            stalls.push(rows);
+        }
+        for c in done {
+            streams[c.id] = c.tokens;
+            completed += 1;
+        }
+        step_no += 1;
+    }
+    stalls.sort_by(|a, b| a.total_cmp(b));
+    step_ms.sort_by(|a, b| a.total_cmp(b));
+    let p99_ms = pct(&step_ms, 0.99);
+    (streams, stalls, sched.stats(), p99_ms)
 }
 
 fn main() {
@@ -346,16 +418,18 @@ fn main() {
     // dispatch across the whole batch, so it must at least match the
     // fleet path on the same hardware.
     {
-        serve_batched(&dense, requests, p_len, fleet_new, 0);
-        let (batch_dense_rps, _, occ_dense) = {
-            let a = serve_batched(&dense, requests, p_len, fleet_new, 0);
-            let b = serve_batched(&dense, requests, p_len, fleet_new, 0);
+        let ch = DEFAULT_PREFILL_CHUNK;
+        serve_batched(&dense, requests, p_len, fleet_new, 0, ch);
+        let (batch_dense_rps, _, dense_st) = {
+            let a = serve_batched(&dense, requests, p_len, fleet_new, 0, ch);
+            let b = serve_batched(&dense, requests, p_len, fleet_new, 0, ch);
             if a.0 >= b.0 { a } else { b }
         };
-        serve_batched(&compressed, requests, p_len, fleet_new, 0);
+        let occ_dense = decode_occupancy(&dense_st);
+        serve_batched(&compressed, requests, p_len, fleet_new, 0, ch);
         let (batch_comp_rps, _, _) = {
-            let a = serve_batched(&compressed, requests, p_len, fleet_new, 0);
-            let b = serve_batched(&compressed, requests, p_len, fleet_new, 0);
+            let a = serve_batched(&compressed, requests, p_len, fleet_new, 0, ch);
+            let b = serve_batched(&compressed, requests, p_len, fleet_new, 0, ch);
             if a.0 >= b.0 { a } else { b }
         };
         println!(
@@ -383,12 +457,14 @@ fn main() {
     // throughput and tail latency under load are the serving numbers
     // that matter at scale.
     for (m, label) in [(&dense, "dense"), (&compressed, "compressed")] {
-        serve_batched(m, requests, p_len, fleet_new, 2);
-        let (rps, lat, occ) = {
-            let a = serve_batched(m, requests, p_len, fleet_new, 2);
-            let b = serve_batched(m, requests, p_len, fleet_new, 2);
+        let ch = DEFAULT_PREFILL_CHUNK;
+        serve_batched(m, requests, p_len, fleet_new, 2, ch);
+        let (rps, lat, st) = {
+            let a = serve_batched(m, requests, p_len, fleet_new, 2, ch);
+            let b = serve_batched(m, requests, p_len, fleet_new, 2, ch);
             if a.0 >= b.0 { a } else { b }
         };
+        let occ = decode_occupancy(&st);
         let (p50, p99) = (pct(&lat, 0.5), pct(&lat, 0.99));
         println!(
             "{:<44} {rps:.1} req/s  p50 {p50:.2} ms  p99 {p99:.2} ms  occ {occ:.1}",
@@ -397,9 +473,22 @@ fn main() {
         rec.metric(&format!("openloop_{label}_rps"), rps);
         rec.metric(&format!("openloop_{label}_p50_ms"), p50);
         rec.metric(&format!("openloop_{label}_p99_ms"), p99);
+        rec.metric(&format!("openloop_{label}_prefill_rows"), st.prefill_rows as f64);
+        rec.metric(&format!("openloop_{label}_prefill_chunks"), st.prefill_chunks as f64);
+        rec.metric(&format!("openloop_{label}_mixed_steps"), st.mixed_steps as f64);
+        rec.metric(&format!("openloop_{label}_pass_occupancy"), st.occupancy());
+        rec.metric(
+            &format!("openloop_{label}_lm_head_rows_saved"),
+            st.lm_head_rows_saved as f64,
+        );
         assert!(
             occ > 1.0,
             "{label}: open-loop arrivals must actually coalesce (occupancy {occ:.2})"
+        );
+        assert_eq!(
+            st.lm_head_rows_saved,
+            requests * (p_len - 1),
+            "{label}: lazy prefill lm_head must skip every non-final prompt row"
         );
     }
 
@@ -435,6 +524,64 @@ fn main() {
         );
     }
 
-    rec.write_json("BENCH_serve.json", "grail-serve-v1");
+    // --- Chunked prefill vs head-of-line blocking: an 8x-length
+    // prompt lands mid-stream in otherwise-short open-loop traffic.
+    // Unchunked (budget = usize::MAX), its whole 48-row prefill rides
+    // one pass and every concurrent decode token stalls behind it;
+    // chunked (budget 8), the prefill is spread over small mixed
+    // passes. Token streams are asserted bit-equal across both
+    // schedules and against solo `generate` BEFORE any timing; the
+    // gate compares p99 per-token stall in deterministic pass-row
+    // units (wall-clock stall is reported, never gated).
+    {
+        let chunk = 8usize;
+        let (streams_c, stalls_c, st_c, _) = long_prompt_run(&dense, chunk);
+        let (streams_u, stalls_u, st_u, _) = long_prompt_run(&dense, usize::MAX);
+        assert_eq!(
+            streams_c, streams_u,
+            "chunked and unchunked schedules must emit bit-equal token streams"
+        );
+        for (i, s) in streams_c.iter().enumerate() {
+            let p = if i == LONG_AT {
+                prompt(999, LONG_LONG_LEN)
+            } else {
+                prompt(i, LONG_SHORT_LEN)
+            };
+            assert_eq!(s, &dense.generate(&p, LONG_N_NEW), "long-prompt stream {i} vs solo");
+        }
+        // Second (warm) runs for the reported wall-clock figures.
+        let (_, _, _, wall_p99_c) = long_prompt_run(&dense, chunk);
+        let (_, _, _, wall_p99_u) = long_prompt_run(&dense, usize::MAX);
+        let (p99_c, p99_u) = (pct(&stalls_c, 0.99), pct(&stalls_u, 0.99));
+        let saved = LONG_SHORTS * (LONG_SHORT_LEN - 1) + (LONG_LONG_LEN - 1);
+        assert_eq!(st_c.lm_head_rows_saved, saved, "chunked lm_head row savings");
+        assert_eq!(st_u.lm_head_rows_saved, saved, "unchunked lm_head row savings");
+        assert!(st_c.mixed_steps > 0, "chunked prefill must overlap decode in mixed passes");
+        assert!(
+            p99_c < p99_u,
+            "chunked prefill must strictly cut the p99 decode-token stall: \
+             {p99_c:.0} vs {p99_u:.0} pass rows"
+        );
+        println!(
+            "{:<44} p99 {p99_c:.0} vs {p99_u:.0} pass rows ({:.2} ms vs {:.2} ms/step wall)",
+            "long-prompt stall, chunked vs unchunked", wall_p99_c, wall_p99_u
+        );
+        println!(
+            "{:<44} {saved} rows ({} prefill chunks, {} mixed steps)",
+            "lm_head rows saved by lazy prefill", st_c.prefill_chunks, st_c.mixed_steps
+        );
+        rec.metric("longprompt_chunked_p99_stall_rows", p99_c);
+        rec.metric("longprompt_unchunked_p99_stall_rows", p99_u);
+        rec.metric("longprompt_stall_reduction", p99_u / p99_c.max(1.0));
+        rec.metric("longprompt_chunked_wall_p99_ms", wall_p99_c);
+        rec.metric("longprompt_unchunked_wall_p99_ms", wall_p99_u);
+        rec.metric("longprompt_lm_head_rows_saved", saved as f64);
+        rec.metric("longprompt_chunked_prefill_chunks", st_c.prefill_chunks as f64);
+        rec.metric("longprompt_chunked_mixed_steps", st_c.mixed_steps as f64);
+        rec.metric("longprompt_chunked_pass_occupancy", st_c.occupancy());
+        rec.metric("longprompt_unchunked_pass_occupancy", st_u.occupancy());
+    }
+
+    rec.write_json("BENCH_serve.json", "grail-serve-v2");
     println!("\ndone");
 }

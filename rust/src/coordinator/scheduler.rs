@@ -171,10 +171,13 @@ pub fn default_threads() -> usize {
 /// Write-set race auditor for disjoint-output fan-outs.
 ///
 /// The crate's parallel kernels (gemm C row panels, the attention
-/// head-major scatter, the blocked solver's RHS panels) rely on a
-/// *structural* guarantee: every [`run_grid_mut`] / [`run_grid`] job
-/// writes a distinct range of the output buffer, and the ranges tile
-/// it exactly. That property is what makes worker-count
+/// head-major scatter, the blocked solver's RHS panels, the mixed
+/// decode+prefill batch step's per-`(span, head)` context panels —
+/// these are *variable-width*: a decode span claims one `d_head` row
+/// while a prefill chunk claims `rows · d_head`, and the claims must
+/// still tile the pass exactly) rely on a *structural* guarantee:
+/// every [`run_grid_mut`] / [`run_grid`] job writes a distinct range
+/// of the output buffer, and the ranges tile it exactly. That property is what makes worker-count
 /// bit-invariance trivially true — no output element has two writers,
 /// at any parallelism. The auditor turns the guarantee into a runtime
 /// assertion: each job *claims* the `(start, len)` range it is about

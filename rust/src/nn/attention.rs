@@ -597,6 +597,49 @@ mod tests {
     }
 
     #[test]
+    fn chunked_attend_rows_match_one_shot_bitwise() {
+        // The chunked-prefill primitive: attending rows [p0, p0+tc)
+        // with len = p0+tc (causal) must reproduce those rows of the
+        // one-shot t = len pass exactly. The trailing keys the one-shot
+        // pass scores for these rows are causally masked to exact 0.0
+        // weights, and the scalar context dot's trailing += 0.0·v
+        // terms cannot change finite sums.
+        let (len, dh) = (13usize, 8usize);
+        let mut rng = Pcg64::seed(44);
+        let mut qp = vec![0.0f32; len * dh];
+        let mut kc = vec![0.0f32; len * dh];
+        let mut vc = vec![0.0f32; len * dh];
+        rng.fill_normal(&mut qp, 1.0);
+        rng.fill_normal(&mut kc, 1.0);
+        rng.fill_normal(&mut vc, 1.0);
+        let mut want = vec![0.0f32; len * dh];
+        attend_cached(&qp, &kc, &vc, len, len, dh, 0, true, &mut want);
+        for chunk in [1usize, 4, 5, 13] {
+            let mut got = vec![0.0f32; len * dh];
+            let mut p0 = 0usize;
+            while p0 < len {
+                let tc = chunk.min(len - p0);
+                let seen = p0 + tc;
+                attend_cached(
+                    &qp[p0 * dh..seen * dh],
+                    &kc[..seen * dh],
+                    &vc[..seen * dh],
+                    tc,
+                    seen,
+                    dh,
+                    p0,
+                    true,
+                    &mut got[p0 * dh..seen * dh],
+                );
+                p0 = seen;
+            }
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk={chunk} elem={i}");
+            }
+        }
+    }
+
+    #[test]
     fn gather_scatter_roundtrip() {
         let stride = 6usize;
         let src: Vec<f32> = (0..5 * stride).map(|i| i as f32).collect();

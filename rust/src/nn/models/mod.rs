@@ -17,7 +17,9 @@ mod mlp;
 mod resnet;
 mod vit;
 
-pub use lm::{LmBatch, LmCalibState, LmConfig, LmServePack, PagedKv, TinyLm};
+pub use lm::{
+    BatchScratch, LmBatch, LmCalibState, LmConfig, LmServePack, PagedKv, RowSpan, TinyLm,
+};
 pub use mlp::{MlpCalibState, MlpNet};
 pub use resnet::{MiniResNet, ResNetCalibState};
 pub use vit::{TinyViT, VitCalibState, VitConfig};

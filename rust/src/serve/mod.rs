@@ -38,7 +38,7 @@ pub mod digest;
 pub mod job;
 pub mod provider;
 
-pub use batch::{BatchScheduler, BatchStats, Completion, KvPagePool};
+pub use batch::{BatchScheduler, BatchStats, Completion, KvPagePool, DEFAULT_PREFILL_CHUNK};
 pub use cache::{CacheCounters, StatsCache};
 pub use digest::{digest_bytes, digest_file, digest_tensor, Digest, Hasher128};
 pub use job::{JobRecord, JobState, JobVerb};

@@ -114,6 +114,13 @@ pub(crate) fn use_packed(m: usize, k: usize, n: usize) -> bool {
 /// Row-count-invariant dispatch for the serving path: packed iff the
 /// `k·n` weight volume is large enough, regardless of how many rows
 /// are being pushed through. See [`PACKED_MIN_COLS`].
+///
+/// Chunked prefill leans on the missing `m` here: splitting a prompt
+/// across `batch_step` passes only changes row counts, never `(k, n)`,
+/// so no chunk size can flip a layer between the packed and scalar
+/// kernels. (At serving *attention* shapes, `k·n = d_head · len` sits
+/// below [`PACKED_MIN_COLS`] anyway, so those products always take the
+/// scalar path regardless of how the prompt is chunked.)
 pub fn use_packed_cols(k: usize, n: usize) -> bool {
     packed_enabled() && k != 0 && n != 0 && k.saturating_mul(n) >= PACKED_MIN_COLS
 }

@@ -8,13 +8,18 @@
 //! chain that makes this hold (row-count-invariant GEMM dispatch,
 //! prepacked weights sharing the per-call compute body, shared
 //! `attend_cached`/fused-softmax kernels) is documented on
-//! `TinyLm::decode_append`; these tests are the enforcement.
+//! `TinyLm::decode_append`; these tests are the enforcement. The lazy
+//! prefill `lm_head` (last-row-only logits) is checked against the
+//! `prefill_full`/`paged_prefill_full` full-logits oracles, and
+//! chunked prefill (`TinyLm::batch_step` spans, scheduler
+//! `with_prefill_chunk`) is checked bit-identical to one-shot prefill
+//! at every chunk-boundary shape.
 
 mod common;
 
 use grail::compress::{Compressible, ReductionPlan, Reducer};
 use grail::coordinator::scheduler::run_grid;
-use grail::nn::models::{LmBatch, LmConfig, PagedKv, TinyLm};
+use grail::nn::models::{BatchScratch, LmBatch, LmConfig, PagedKv, RowSpan, TinyLm};
 use grail::serve::{BatchScheduler, KvPagePool};
 use grail::tensor::Tensor;
 
@@ -62,12 +67,19 @@ fn prefill_matches_full_forward_bitwise() {
         let toks = prompt(12);
         let full = m.forward(&batch_of(&toks));
         let mut state = m.decode_state();
-        let pre = m.prefill(&mut state, &toks);
+        let pre = m.prefill_full(&mut state, &toks);
         assert_eq!(state.len(), toks.len(), "{name}: cached length");
         assert_eq!(pre.shape(), full.shape(), "{name}: logits shape");
         for r in 0..toks.len() {
             assert_rows_bits_eq(&pre, r, &full, r, &format!("{name}: prefill row {r}"));
         }
+        // The serving entry projects only the last row — bitwise the
+        // same row, one vocab-GEMM row instead of prompt_len.
+        let mut lazy_state = m.decode_state();
+        let lazy = m.prefill(&mut lazy_state, &toks);
+        assert_eq!(lazy.shape(), &[1, m.cfg.vocab], "{name}: lazy prefill shape");
+        assert_rows_bits_eq(&lazy, 0, &full, toks.len() - 1, &format!("{name}: lazy last row"));
+        assert_eq!(lazy_state.len(), toks.len(), "{name}: lazy cached length");
     }
 }
 
@@ -157,11 +169,17 @@ fn paged_decode_matches_slab_decode_bitwise() {
         let mut kv = PagedKv::new(&pack, m.cfg.max_seq);
         let mut slab = m.decode_state();
         let toks = prompt(7);
-        let paged = m.paged_prefill(&pack, &mut pool, &mut kv, &toks);
-        let flat = m.prefill(&mut slab, &toks);
+        let paged = m.paged_prefill_full(&pack, &mut pool, &mut kv, &toks);
+        let flat = m.prefill_full(&mut slab, &toks);
         for r in 0..toks.len() {
             assert_rows_bits_eq(&paged, r, &flat, r, &format!("{name}: paged prefill row {r}"));
         }
+        // The lazy paged entry matches the oracle's last row bitwise.
+        let mut pool_l = KvPagePool::new(5, pack.d_head(), 4096);
+        let mut kv_l = PagedKv::new(&pack, m.cfg.max_seq);
+        let lazy = m.paged_prefill(&pack, &mut pool_l, &mut kv_l, &toks);
+        assert_eq!(lazy.shape(), &[1, m.cfg.vocab], "{name}: lazy paged prefill shape");
+        assert_rows_bits_eq(&lazy, 0, &paged, toks.len() - 1, &format!("{name}: lazy paged row"));
         assert_eq!(
             kv.pages_held(),
             pack.pages_needed(toks.len(), pool.page_positions()),
@@ -189,8 +207,12 @@ fn one_request_batch_is_bitwise_equal_to_solo_decode_step() {
         m.paged_prefill(&pack, &mut pool_b, &mut kv_solo, &toks);
         let mut tok = 3u16;
         for step in 0..5 {
-            let mut refs = [&mut kv_batch];
-            let batched = m.decode_batch_step(&pack, &mut pool_a, &mut refs, &[tok]);
+            let batched = m.decode_batch_step(
+                &pack,
+                &mut pool_a,
+                std::slice::from_mut(&mut kv_batch),
+                &[tok],
+            );
             let solo = m.paged_decode_step(&pack, &mut pool_b, &mut kv_solo, tok);
             assert_rows_bits_eq(
                 &batched,
@@ -229,8 +251,7 @@ fn batched_decode_matches_solo_streams_at_any_worker_count() {
         }
         let mut stream: Vec<Vec<u16>> = toks.iter().map(|&t| vec![t]).collect();
         for step in 0..6 {
-            let mut refs: Vec<&mut PagedKv> = batch.iter_mut().collect();
-            let bl = m.decode_batch_step(&pack, &mut pool_b, &mut refs, &toks);
+            let bl = m.decode_batch_step(&pack, &mut pool_b, &mut batch, &toks);
             // Every coalesced row == its request's solo paged step.
             for (r, kv) in solo.iter_mut().enumerate() {
                 let sl = m.paged_decode_step(&pack, &mut pool_s, kv, toks[r]);
@@ -344,12 +365,15 @@ fn paged_pool_holds_4x_more_concurrent_requests_than_slabs() {
 fn scheduler_tokens_invariant_under_thread_env() {
     // GRAIL_THREADS caps the machine-level budget that the batch
     // step's per-(request, head) fan-out divides up; the token streams
-    // must be bit-identical at every setting.
+    // must be bit-identical at every setting — with chunked prefill
+    // active (chunk 3 splits the length-20 prompt across many mixed
+    // steps, so prefill-span attention jobs fan out too).
     let m = common::lm(LmConfig::default(), 40);
-    let reqs: Vec<(Vec<u16>, usize)> =
+    let mut reqs: Vec<(Vec<u16>, usize)> =
         (0..3).map(|i| (prompt(4 + i), 3 + i)).collect();
+    reqs.push((prompt(20), 4));
     let run = || {
-        let mut sched = BatchScheduler::new(&m, 8, 2048, 4);
+        let mut sched = BatchScheduler::new(&m, 8, 2048, 4).with_prefill_chunk(3);
         let ids: Vec<usize> = reqs.iter().map(|(p, n)| sched.submit(p, *n)).collect();
         let done = sched.run_to_completion();
         ids.iter()
@@ -365,5 +389,145 @@ fn scheduler_tokens_invariant_under_thread_env() {
         let got = run();
         std::env::remove_var("GRAIL_THREADS");
         assert_eq!(got, baseline, "token streams drifted at GRAIL_THREADS={threads}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chunked prefill (`TinyLm::batch_step` multi-row spans + the
+// scheduler's `with_prefill_chunk`). The contract: ANY chunking of a
+// prompt writes the same K/V content and final logits as the one-shot
+// prefill, and mixed prefill+decode scheduling never reaches any
+// request's tokens.
+// ---------------------------------------------------------------------
+
+/// Prefill `toks` into `kv` through `batch_step` in chunks of at most
+/// `chunk` rows, returning the final chunk's logits. Interior chunks
+/// must return zero-row logits (their vocab projection is skipped).
+fn chunked_prefill(
+    m: &TinyLm,
+    pack: &grail::nn::models::LmServePack,
+    pool: &mut KvPagePool,
+    kvs: &mut [PagedKv],
+    toks: &[u16],
+    chunk: usize,
+) -> Tensor {
+    let mut scratch = BatchScratch::new();
+    let mut filled = 0usize;
+    let mut logits = Tensor::zeros(&[0, m.cfg.vocab]);
+    while filled < toks.len() {
+        let rows = chunk.min(toks.len() - filled);
+        let last = filled + rows == toks.len();
+        let spans = [RowSpan { slot: 0, rows, want_logits: last }];
+        let out = m.batch_step(pack, pool, kvs, &spans, &toks[filled..filled + rows], &mut scratch);
+        if last {
+            logits = out;
+        } else {
+            assert_eq!(out.shape(), &[0, m.cfg.vocab], "interior chunk must skip lm_head");
+        }
+        filled += rows;
+    }
+    logits
+}
+
+#[test]
+fn chunked_prefill_matches_one_shot_bitwise() {
+    // Page size 8; prompt lengths straddle the page boundary (7, 8, 9)
+    // plus a multi-page length; chunk sizes hit every boundary shape:
+    // 1, ps-1, ps, the whole prompt, and past the prompt.
+    let ps = 8usize;
+    for (name, m) in variants() {
+        let pack = m.serve_pack();
+        for plen in [7usize, 8, 9, 19] {
+            let toks = prompt(plen);
+            let mut pool_os = KvPagePool::new(ps, pack.d_head(), 4096);
+            let mut kv_os = PagedKv::new(&pack, m.cfg.max_seq);
+            let one_shot = m.paged_prefill(&pack, &mut pool_os, &mut kv_os, &toks);
+            for chunk in [1usize, ps - 1, ps, plen, plen + 5] {
+                let tag = format!("{name} plen={plen} chunk={chunk}");
+                let mut pool = KvPagePool::new(ps, pack.d_head(), 4096);
+                let mut kv = vec![PagedKv::new(&pack, m.cfg.max_seq)];
+                let logits = chunked_prefill(&m, &pack, &mut pool, &mut kv, &toks, chunk);
+                assert_eq!(logits.shape(), &[1, m.cfg.vocab], "{tag}: final logits shape");
+                assert_rows_bits_eq(&logits, 0, &one_shot, 0, &tag);
+                // Page *ids* legitimately differ between chunkings
+                // (allocation order interleaves); the content at every
+                // (stream, position) must not.
+                assert_eq!(kv[0].len(), kv_os.len(), "{tag}: cached length");
+                for s in 0..pack.total_kv_streams() {
+                    let (kc, ko) = (
+                        kv[0].gather_k(&pool, s, pack.d_head()),
+                        kv_os.gather_k(&pool_os, s, pack.d_head()),
+                    );
+                    let (vc, vo) = (
+                        kv[0].gather_v(&pool, s, pack.d_head()),
+                        kv_os.gather_v(&pool_os, s, pack.d_head()),
+                    );
+                    for (a, b) in kc.iter().zip(&ko) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: K stream {s}");
+                    }
+                    for (a, b) in vc.iter().zip(&vo) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: V stream {s}");
+                    }
+                }
+                // Decode continuations from the chunked cache stay on
+                // the one-shot stream.
+                let mut tok = grail::nn::argmax_rows(&logits)[0] as u16;
+                let mut tok_os = tok;
+                for step in 0..3 {
+                    let dc = m.paged_decode_step(&pack, &mut pool, &mut kv[0], tok);
+                    let dos = m.paged_decode_step(&pack, &mut pool_os, &mut kv_os, tok_os);
+                    assert_rows_bits_eq(&dc, 0, &dos, 0, &format!("{tag}: decode step {step}"));
+                    tok = grail::nn::argmax_rows(&dc)[0] as u16;
+                    tok_os = grail::nn::argmax_rows(&dos)[0] as u16;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_scheduler_streams_match_solo_and_unchunked_any_order() {
+    // Mixed prefill+decode survivor bit-identity: four requests
+    // (including a 20-token and a 13-token prompt that must chunk),
+    // two admission orders, three chunk budgets including the
+    // one-shot `usize::MAX` schedule. Every completed stream equals
+    // its solo `generate` run in every configuration.
+    let m = common::lm(LmConfig::default(), 41);
+    let reqs: Vec<(Vec<u16>, usize)> = vec![
+        (prompt(20), 5),
+        ((0..4).map(|j| ((j * 9 + 3) % 64) as u16).collect(), 7),
+        (prompt(13), 3),
+        ((0..6).map(|j| ((j * 17 + 1) % 64) as u16).collect(), 6),
+    ];
+    let solo: Vec<Vec<u16>> = reqs.iter().map(|(p, n)| m.generate(p, *n)).collect();
+    for chunk in [3usize, 8, usize::MAX] {
+        for order in [[0usize, 1, 2, 3], [3, 1, 0, 2]] {
+            let mut sched = BatchScheduler::new(&m, 8, 4096, 3).with_prefill_chunk(chunk);
+            let ids: Vec<(usize, usize)> =
+                order.iter().map(|&i| (sched.submit(&reqs[i].0, reqs[i].1), i)).collect();
+            let done = sched.run_to_completion();
+            assert_eq!(done.len(), reqs.len());
+            for (id, i) in ids {
+                let c = done.iter().find(|c| c.id == id).unwrap();
+                assert_eq!(c.tokens, solo[i], "request {i} chunk={chunk} order={order:?}");
+            }
+            let st = sched.stats();
+            // First token always comes from the prefill-final pass, so
+            // decode rows are exactly n_new - 1 per request at ANY
+            // chunk size — and the lazy lm_head skips exactly the
+            // interior prompt rows.
+            let decode_rows: usize = reqs.iter().map(|(_, n)| n - 1).sum();
+            assert_eq!(st.coalesced_rows, decode_rows, "chunk={chunk} {st:?}");
+            assert_eq!(st.prefill_rows, reqs.iter().map(|(p, _)| p.len()).sum::<usize>());
+            assert_eq!(
+                st.lm_head_rows_saved,
+                reqs.iter().map(|(p, _)| p.len() - 1).sum::<usize>(),
+                "chunk={chunk} {st:?}"
+            );
+            if chunk == 3 {
+                assert!(st.mixed_steps > 0, "small chunks must overlap decode: {st:?}");
+            }
+            assert_eq!(sched.pool().pages_in_use(), 0, "all pages returned");
+        }
     }
 }
